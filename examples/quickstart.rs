@@ -1,0 +1,67 @@
+//! Quickstart: train a Nyström kernel SVM (formulation (4)) on a small
+//! synthetic dataset with the full three-layer stack (PJRT artifacts if
+//! available, native fallback otherwise) and print the accuracy.
+//!
+//! Run: cargo run --release --example quickstart
+
+use std::rc::Rc;
+
+use dkm::cluster::CostModel;
+use dkm::config::settings::{Backend, Settings};
+use dkm::coordinator::train;
+use dkm::data::synth;
+use dkm::runtime::make_backend;
+
+fn main() -> dkm::Result<()> {
+    // 1. A Covtype-like workload, scaled to run in seconds.
+    let mut spec = synth::spec("covtype_like");
+    spec.n_train = 4_000;
+    spec.n_test = 1_000;
+    let (train_ds, test_ds) = synth::generate(&spec, 42);
+    println!(
+        "dataset: {} (n={}, d={}, test={})",
+        train_ds.name,
+        train_ds.n(),
+        train_ds.d(),
+        test_ds.n()
+    );
+
+    // 2. Settings: m basis points, p simulated nodes, paper hyper-params.
+    let settings = Settings {
+        m: 512,
+        nodes: 8,
+        max_iters: 150,
+        ..Settings::default().with_dataset_defaults("covtype_like")
+    };
+
+    // 3. Backend: the AOT JAX+Pallas artifacts through PJRT when built
+    //    (`make artifacts`), pure-Rust math otherwise.
+    let backend = match make_backend(Backend::Pjrt, "artifacts") {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("PJRT unavailable ({e}); falling back to native");
+            make_backend(Backend::Native, "artifacts")?
+        }
+    };
+    println!("backend: {}", backend.name());
+
+    // 4. Train (Algorithm 1) and evaluate.
+    let out = train(&settings, &train_ds, Rc::clone(&backend), CostModel::hadoop_crude())?;
+    let acc = out.model.accuracy(backend.as_ref(), &test_ds)?;
+
+    println!(
+        "trained m={} in {} TRON iterations ({} f/g evals, {} Hd evals)",
+        settings.m,
+        out.stats.iterations,
+        out.fg_evals,
+        out.hd_evals
+    );
+    println!(
+        "objective: {:.2} -> {:.2}",
+        out.stats.f_history.first().unwrap(),
+        out.stats.final_f
+    );
+    println!("test accuracy: {acc:.4}");
+    println!("\nsimulated 8-node ledger:\n{}", out.sim.report());
+    Ok(())
+}

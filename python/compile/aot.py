@@ -1,0 +1,155 @@
+"""AOT lowering: every L2 module -> HLO text + manifest.json in artifacts/.
+
+This is the single build-time Python entry point (`make artifacts`). After it
+runs, the Rust binary is self-contained: it loads the HLO text via
+`xla::HloModuleProto::from_text_file`, compiles on the PJRT CPU client and
+executes on the training hot path.
+
+Interchange format is HLO **text**, NOT `lowered.compile().serialize()` /
+serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction
+ids which xla_extension 0.5.1 (the version the published `xla` 0.1.6 crate
+binds) rejects with `proto.id() <= INT_MAX`. The text parser reassigns ids,
+so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# --------------------------------------------------------------------------
+# Tile-shape grid (shared contract with rust/src/runtime/tiles.rs).
+#
+# HLO modules have static shapes: the Rust runtime zero-pads each dataset to
+# this grid and loops tiles. TB/TM are the row/basis tile edges; D is the
+# padded feature width (zero feature padding is exact for the RBF kernel:
+# padded coordinates contribute 0 to ||x - z||^2).
+# --------------------------------------------------------------------------
+TB = 256
+TM = 256
+DS = [32, 64, 128, 256, 512, 1024]
+LOSSES = list(model.LOSSES)
+
+F32 = jnp.float32
+
+
+def _s(*dims):
+    return jax.ShapeDtypeStruct(tuple(dims), F32)
+
+
+def module_specs():
+    """(name, fn, example_args) for every AOT module."""
+    specs = []
+    for d in DS:
+        specs.append(
+            (f"kernel_block_d{d}", model.kernel_block, [_s(TB, d), _s(TM, d), _s(1)])
+        )
+        specs.append((f"dist2_block_d{d}", model.dist2_block, [_s(TB, d), _s(TM, d)]))
+        specs.append(
+            (
+                f"kmeans_assign_d{d}",
+                model.kmeans_assign,
+                [_s(TB, d), _s(TM, d), _s(TM), _s(TB)],
+            )
+        )
+        specs.append(
+            (
+                f"predict_block_d{d}",
+                model.predict_block,
+                [_s(TB, d), _s(TM, d), _s(1), _s(TM)],
+            )
+        )
+    specs.append(("matvec", model.matvec, [_s(TB, TM), _s(TM)]))
+    specs.append(("matvec_t", model.matvec_t, [_s(TB, TM), _s(TB)]))
+    specs.append(("hd_tile", model.hd_tile, [_s(TB, TM), _s(TM), _s(TB)]))
+    specs.append(("mask_mul", model.mask_mul, [_s(TB), _s(TB)]))
+    for name in LOSSES:
+        specs.append((f"loss_{name}", model.loss_stage(name), [_s(TB), _s(TB), _s(TB)]))
+        specs.append(
+            (
+                f"fgrad_{name}",
+                model.fgrad_tile(name),
+                [_s(TB, TM), _s(TM), _s(TB), _s(TB)],
+            )
+        )
+    return specs
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_tag(sds):
+    return {"float32": "f32", "int32": "i32"}[str(sds.dtype)]
+
+
+def lower_one(name, fn, args):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    out_tree = jax.eval_shape(fn, *args)
+    outputs = [
+        {"shape": list(o.shape), "dtype": _dtype_tag(o)}
+        for o in jax.tree_util.tree_leaves(out_tree)
+    ]
+    inputs = [{"shape": list(a.shape), "dtype": _dtype_tag(a)} for a in args]
+    return text, inputs, outputs
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated module-name filter (debug)"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {
+        "version": 1,
+        "tb": TB,
+        "tm": TM,
+        "ds": DS,
+        "losses": LOSSES,
+        "modules": [],
+    }
+    for name, fn, eargs in module_specs():
+        if only and name not in only:
+            continue
+        text, inputs, outputs = lower_one(name, fn, eargs)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["modules"].append(
+            {
+                "name": name,
+                "file": fname,
+                "sha256_16": digest,
+                "inputs": inputs,
+                "outputs": outputs,
+            }
+        )
+        print(f"  lowered {name:24s} -> {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['modules'])} modules + manifest.json to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""L1 Pallas kernels: the block matrix-vector products of Algorithm 1 step 4.
+
+TRON's distributed part "consists of only matrix-vector products" (paper
+section 1): o = C beta per row block, and grad pieces C^T (D (C beta - y)).
+These are the per-node compute of steps 4a-4c.
+
+matvec keeps the full operand row-panel in VMEM and contracts against the
+vector; matvec_t runs the transposed contraction block-column-wise. Both are
+interpret=True for the same reason as rbf.py (CPU PJRT cannot run Mosaic).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .rbf import BLOCK
+
+
+def _matvec_kernel(c_ref, v_ref, o_ref):
+    c = c_ref[...]  # (block_b, tm)
+    v = v_ref[...]  # (tm,)
+    o_ref[...] = jax.lax.dot_general(
+        c, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def _matvec_t_kernel(c_ref, r_ref, o_ref):
+    c = c_ref[...]  # (tb, block_m)
+    r = r_ref[...]  # (tb,)
+    o_ref[...] = jax.lax.dot_general(
+        c, r, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def matvec(c, v, *, block_b=BLOCK):
+    """(tb, tm) @ (tm,) -> (tb,), row-panel grid."""
+    tb, tm = c.shape
+    assert v.shape == (tm,)
+    assert tb % block_b == 0
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=(tb // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, tm), lambda i: (i, 0)),
+            pl.BlockSpec((tm,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((tb,), jnp.float32),
+        interpret=True,
+    )(c, v)
+
+
+def matvec_t(c, r, *, block_m=BLOCK):
+    """(tb, tm)^T @ (tb,) -> (tm,), column-panel grid."""
+    tb, tm = c.shape
+    assert r.shape == (tb,)
+    assert tm % block_m == 0
+    return pl.pallas_call(
+        _matvec_t_kernel,
+        grid=(tm // block_m,),
+        in_specs=[
+            pl.BlockSpec((tb, block_m), lambda j: (0, j)),
+            pl.BlockSpec((tb,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_m,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((tm,), jnp.float32),
+        interpret=True,
+    )(c, r)

@@ -1,0 +1,92 @@
+"""Pure-jnp correctness oracles for every L1 Pallas kernel.
+
+These are the reference semantics the pytest suite (and hypothesis sweeps)
+check the Pallas kernels against with assert_allclose. Keep them naive and
+obviously correct -- no tiling, no tricks.
+"""
+
+import jax.numpy as jnp
+
+
+def rbf_block(x, z, gamma):
+    """exp(-gamma * ||x_i - z_k||^2), computed from explicit differences."""
+    diff = x[:, None, :] - z[None, :, :]  # (tb, tm, d)
+    d2 = jnp.sum(diff * diff, axis=2)
+    return jnp.exp(-gamma[0] * d2)
+
+
+def dist2_block(x, z):
+    diff = x[:, None, :] - z[None, :, :]
+    return jnp.sum(diff * diff, axis=2)
+
+
+def matvec(c, v):
+    return c @ v
+
+
+def matvec_t(c, r):
+    return c.T @ r
+
+
+def loss_sqhinge(o, y, mask):
+    """Squared hinge: l = 0.5 * max(1 - y o, 0)^2 summed over valid rows.
+
+    Returns (loss_sum, resid, dcoef) with resid = dl/do = D (o - y) and
+    dcoef the Gauss-Newton diagonal D_ii (1 if 1 - y_i o_i > 0 else 0).
+    """
+    margin = 1.0 - y * o
+    active = jnp.where((margin > 0) & (mask > 0), 1.0, 0.0)
+    loss = 0.5 * jnp.sum(active * margin * margin)
+    resid = active * (o - y)
+    return loss, resid, active
+
+
+def loss_logistic(o, y, mask):
+    """Logistic loss (kernel logistic regression): l = log(1 + exp(-y o)).
+
+    resid = dl/do = -y * sigma(-y o); dcoef = d2l/do2 = sigma (1 - sigma).
+    """
+    m = y * o
+    loss = jnp.sum(mask * jnp.logaddexp(0.0, -m))
+    sig = 1.0 / (1.0 + jnp.exp(m))  # sigma(-y o)
+    resid = mask * (-y * sig)
+    dcoef = mask * sig * (1.0 - sig)
+    return loss, resid, dcoef
+
+
+def loss_squared(o, y, mask):
+    """Squared loss (kernel ridge regression): l = 0.5 (o - y)^2."""
+    r = mask * (o - y)
+    loss = 0.5 * jnp.sum(r * r)
+    return loss, r, mask
+
+
+def kmeans_assign(x, cent, cmask, rmask):
+    """Nearest valid centroid per row; returns (idx, counts, sums, inertia).
+
+    cmask is (tm,) with 1.0 for live centroids; dead (padding) centroids are
+    pushed to +inf distance. rmask is (tb,) with 1.0 for live rows; padding
+    rows contribute nothing. counts/sums are the per-centroid accumulators a
+    node contributes to the centroid-update AllReduce.
+    """
+    d2 = dist2_block(x, cent)
+    d2 = d2 + (1.0 - cmask)[None, :] * 1e30
+    idx = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    onehot = (idx[:, None] == jnp.arange(cent.shape[0])[None, :]).astype(
+        jnp.float32
+    ) * rmask[:, None]
+    counts = jnp.sum(onehot, axis=0)
+    sums = onehot.T @ x
+    inertia = jnp.sum(jnp.min(d2, axis=1) * rmask)
+    return idx, counts, sums, inertia
+
+
+def fgrad_tile(c, beta, y, mask, loss_fn):
+    """Fused per-row-tile f/grad when m fits one basis tile.
+
+    Returns (loss_sum, grad) with grad = C^T resid (the loss part of the
+    gradient row block; the lambda W beta part is assembled by the caller).
+    """
+    o = c @ beta
+    loss, resid, _ = loss_fn(o, y, mask)
+    return loss, c.T @ resid

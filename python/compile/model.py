@@ -1,0 +1,151 @@
+"""L2: the per-node compute graphs of Algorithm 1, built on the L1 kernels.
+
+Each public function here is one AOT module: `aot.py` lowers it (for the
+tile-shape grid in `aot.SHAPES`) to HLO text that the Rust runtime loads via
+PJRT and calls on the training hot path. Python never runs at training time.
+
+Functions return TUPLES (even singletons) because the lowering pipeline uses
+return_tuple=True and the Rust side unwraps with to_tuple1/2/3.
+
+Conventions shared with rust/src/runtime:
+  * all floats are f32; kmeans assignment indices are i32;
+  * `mask` vectors carry 1.0 for real rows and 0.0 for padding, so padded
+    tiles contribute exactly zero to losses, gradients and AllReduce sums;
+  * gamma = 1 / (2 sigma^2) arrives as a (1,) f32 array.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import linops, rbf
+
+
+# --------------------------------------------------------------------------
+# Step 3: kernel-matrix row block (the compute hot spot; L1 Pallas inside).
+# --------------------------------------------------------------------------
+def kernel_block(x, z, gamma):
+    """C tile: (tb, d) x (tm, d) -> (tb, tm) Gaussian kernel values."""
+    return (rbf.rbf_block(x, z, gamma),)
+
+
+def dist2_block(x, z):
+    """Squared-distance tile (K-means seeding / diagnostics)."""
+    return (rbf.dist2_block(x, z),)
+
+
+# --------------------------------------------------------------------------
+# Step 4 (TRON): block matrix-vector products + loss stages.
+# --------------------------------------------------------------------------
+def matvec(c, v):
+    """o tile: (tb, tm) @ (tm,) -> (tb,). One summand of o = C beta."""
+    return (linops.matvec(c, v),)
+
+
+def matvec_t(c, r):
+    """grad tile: (tb, tm)^T @ (tb,) -> (tm,). One summand of C^T resid."""
+    return (linops.matvec_t(c, r),)
+
+
+def _loss_sqhinge(o, y, mask):
+    margin = 1.0 - y * o
+    active = jnp.where((margin > 0) & (mask > 0), 1.0, 0.0)
+    loss = 0.5 * jnp.sum(active * margin * margin)
+    resid = active * (o - y)
+    return loss, resid, active
+
+
+def _loss_logistic(o, y, mask):
+    m = y * o
+    loss = jnp.sum(mask * jnp.logaddexp(0.0, -m))
+    sig = 1.0 / (1.0 + jnp.exp(m))
+    resid = mask * (-y * sig)
+    dcoef = mask * sig * (1.0 - sig)
+    return loss, resid, dcoef
+
+
+def _loss_squared(o, y, mask):
+    r = mask * (o - y)
+    loss = 0.5 * jnp.sum(r * r)
+    return loss, r, mask
+
+
+LOSSES = {
+    "sqhinge": _loss_sqhinge,
+    "logistic": _loss_logistic,
+    "squared": _loss_squared,
+}
+
+
+def loss_stage(name):
+    """(o, y, mask) -> (loss_sum, resid, dcoef) for the named loss."""
+    fn = LOSSES[name]
+
+    def stage(o, y, mask):
+        return fn(o, y, mask)
+
+    stage.__name__ = f"loss_{name}"
+    return stage
+
+
+def fgrad_tile(name):
+    """Fused f/grad for one row tile when m fits a single basis tile.
+
+    (c, beta, y, mask) -> (loss_sum, grad, dcoef). Saves two PJRT dispatches
+    per row tile versus matvec + loss_stage + matvec_t when m <= TM.
+    """
+    fn = LOSSES[name]
+
+    def stage(c, beta, y, mask):
+        o = linops.matvec(c, beta)
+        loss, resid, dcoef = fn(o, y, mask)
+        grad = linops.matvec_t(c, resid)
+        return loss, grad, dcoef
+
+    stage.__name__ = f"fgrad_{name}"
+    return stage
+
+
+def hd_tile(c, d, dcoef):
+    """Fused Hd loss term for one row tile when m fits a single basis tile.
+
+    (c, d, dcoef) -> (C^T (D (C d)),). D is the cached Gauss-Newton diagonal
+    from the last f/grad evaluation at the current beta.
+    """
+    z = linops.matvec(c, d)
+    return (linops.matvec_t(c, dcoef * z),)
+
+
+def mask_mul(z, dcoef):
+    """(tb,), (tb,) -> elementwise product (the D z step of 4c)."""
+    return (z * dcoef,)
+
+
+# --------------------------------------------------------------------------
+# Basis selection: distributed K-means assignment step.
+# --------------------------------------------------------------------------
+def kmeans_assign(x, cent, cmask, rmask):
+    """(idx, counts, sums, inertia) for one row tile against all centroids.
+
+    Distances run through the L1 dist2 tile; the one-hot contraction that
+    builds per-centroid sums is another MXU-shaped matmul. `cmask` marks
+    live centroids (dead ones pushed to +inf distance); `rmask` marks live
+    rows (padding rows contribute nothing to counts/sums/inertia).
+    """
+    d2 = rbf.dist2_block(x, cent)
+    d2 = d2 + (1.0 - cmask)[None, :] * 1e30
+    idx = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    onehot = (idx[:, None] == jnp.arange(cent.shape[0])[None, :]).astype(
+        jnp.float32
+    ) * rmask[:, None]
+    counts = jnp.sum(onehot, axis=0)
+    sums = onehot.T @ x
+    inertia = jnp.sum(jnp.min(d2, axis=1) * rmask)
+    return idx, counts, sums, inertia
+
+
+# --------------------------------------------------------------------------
+# Prediction: o tile for test rows = kernel_block + matvec fused.
+# --------------------------------------------------------------------------
+def predict_block(x, z, gamma, beta):
+    """(tb, d) test rows -> (tb,) decision values C(x, Z) beta."""
+    c = rbf.rbf_block(x, z, gamma)
+    return (linops.matvec(c, beta),)

@@ -1,0 +1,133 @@
+"""L1 Pallas kernels vs pure-jnp oracles -- the CORE correctness signal.
+
+Every kernel is checked with assert_allclose against ref.py on fixed seeds,
+plus hypothesis sweeps over shapes, scales and gamma.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import linops, rbf, ref
+
+RTOL = 2e-5
+ATOL = 2e-6
+
+
+def _rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# RBF / dist2 tiles
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("d", [32, 64, 128, 256])
+def test_rbf_block_matches_ref(d):
+    x = _rand(0, (256, d))
+    z = _rand(1, (256, d))
+    gamma = jnp.array([0.37], jnp.float32)
+    got = rbf.rbf_block(x, z, gamma)
+    want = ref.rbf_block(x, z, gamma)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("d", [32, 128])
+def test_dist2_block_matches_ref(d):
+    x = _rand(2, (256, d))
+    z = _rand(3, (256, d))
+    got = rbf.dist2_block(x, z)
+    want = ref.dist2_block(x, z)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=RTOL, atol=1e-4)
+
+
+def test_rbf_identical_points_give_one():
+    x = _rand(4, (128, 32))
+    gamma = jnp.array([1.3], jnp.float32)
+    k = rbf.rbf_block(x, x, gamma)
+    np.testing.assert_allclose(np.array(jnp.diag(k)), 1.0, rtol=1e-5, atol=1e-5)
+
+
+def test_rbf_zero_feature_padding_is_exact():
+    """Zero-padding features must not change kernel values (runtime contract)."""
+    x = _rand(5, (128, 32))
+    z = _rand(6, (128, 32))
+    gamma = jnp.array([0.21], jnp.float32)
+    xp = jnp.pad(x, ((0, 0), (0, 32)))
+    zp = jnp.pad(z, ((0, 0), (0, 32)))
+    np.testing.assert_allclose(
+        np.array(rbf.rbf_block(xp, zp, gamma)),
+        np.array(rbf.rbf_block(x, z, gamma)),
+        rtol=RTOL,
+        atol=ATOL,
+    )
+
+
+def test_rbf_values_in_unit_interval():
+    x = _rand(7, (128, 64), scale=5.0)
+    z = _rand(8, (128, 64), scale=5.0)
+    k = np.array(rbf.rbf_block(x, z, jnp.array([0.9], jnp.float32)))
+    assert k.min() >= 0.0 and k.max() <= 1.0 + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bb=st.sampled_from([128, 256]),
+    bm=st.sampled_from([128, 256]),
+    d=st.sampled_from([32, 64, 128]),
+    gamma=st.floats(1e-3, 10.0),
+    scale=st.floats(0.1, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rbf_block_hypothesis(bb, bm, d, gamma, scale, seed):
+    x = _rand(seed, (bb, d), scale)
+    z = _rand(seed + 1, (bm, d), scale)
+    g = jnp.array([gamma], jnp.float32)
+    got = rbf.rbf_block(x, z, g)
+    want = ref.rbf_block(x, z, g)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# matvec / matvec_t tiles
+# --------------------------------------------------------------------------
+def test_matvec_matches_ref():
+    c = _rand(10, (256, 256))
+    v = _rand(11, (256,))
+    np.testing.assert_allclose(
+        np.array(linops.matvec(c, v)), np.array(ref.matvec(c, v)), rtol=RTOL, atol=1e-4
+    )
+
+
+def test_matvec_t_matches_ref():
+    c = _rand(12, (256, 256))
+    r = _rand(13, (256,))
+    np.testing.assert_allclose(
+        np.array(linops.matvec_t(c, r)),
+        np.array(ref.matvec_t(c, r)),
+        rtol=RTOL,
+        atol=1e-4,
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    tb=st.sampled_from([128, 256, 512]),
+    tm=st.sampled_from([128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matvec_roundtrip_hypothesis(tb, tm, seed):
+    """<C v, r> == <v, C^T r> (adjoint identity ties both kernels together)."""
+    c = _rand(seed, (tb, tm))
+    v = _rand(seed + 1, (tm,))
+    r = _rand(seed + 2, (tb,))
+    lhs = float(jnp.dot(linops.matvec(c, v), r))
+    rhs = float(jnp.dot(v, linops.matvec_t(c, r)))
+    assert abs(lhs - rhs) <= 1e-2 * max(1.0, abs(lhs))
+
+
+def test_matvec_zero_vector():
+    c = _rand(14, (256, 256))
+    out = np.array(linops.matvec(c, jnp.zeros((256,), jnp.float32)))
+    assert np.all(out == 0.0)

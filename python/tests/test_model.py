@@ -1,0 +1,194 @@
+"""L2 model graphs: loss stages, fused fgrad/hd tiles, kmeans, prediction.
+
+Checks loss stages against jax.grad/Gauss-Newton semantics and the fused
+modules against their unfused composition.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def _labels(key, n):
+    bits = jax.random.bernoulli(jax.random.PRNGKey(key), 0.5, (n,))
+    return jnp.where(bits, 1.0, -1.0).astype(jnp.float32)
+
+
+LOSS_NAMES = ["sqhinge", "logistic", "squared"]
+
+
+# --------------------------------------------------------------------------
+# Loss stages: value/resid/dcoef consistency with autodiff.
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("name", LOSS_NAMES)
+def test_loss_resid_is_autodiff_gradient(name):
+    o = _rand(0, (256,), 2.0)
+    y = _labels(1, 256)
+    mask = jnp.ones((256,), jnp.float32)
+    stage = model.loss_stage(name)
+    loss, resid, dcoef = stage(o, y, mask)
+
+    def scalar_loss(o_):
+        return stage(o_, y, mask)[0]
+
+    g = jax.grad(scalar_loss)(o)
+    np.testing.assert_allclose(np.array(resid), np.array(g), rtol=1e-4, atol=1e-5)
+    assert np.all(np.array(dcoef) >= 0.0)
+
+
+@pytest.mark.parametrize("name", LOSS_NAMES)
+def test_loss_mask_zeroes_padding(name):
+    o = _rand(2, (256,), 2.0)
+    y = _labels(3, 256)
+    mask = jnp.concatenate([jnp.ones((100,)), jnp.zeros((156,))]).astype(jnp.float32)
+    stage = model.loss_stage(name)
+    loss_m, resid_m, dcoef_m = stage(o, y, mask)
+    loss_t, resid_t, _ = stage(o[:100], y[:100], jnp.ones((100,), jnp.float32))
+    np.testing.assert_allclose(float(loss_m), float(loss_t), rtol=1e-5)
+    assert np.all(np.array(resid_m)[100:] == 0.0)
+    assert np.all(np.array(dcoef_m)[100:] == 0.0)
+    np.testing.assert_allclose(
+        np.array(resid_m)[:100], np.array(resid_t), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_sqhinge_matches_paper_definition():
+    """D_ii = 1 iff 1 - y_i o_i > 0; resid = D (o - y) (paper section 3)."""
+    o = jnp.array([2.0, 0.5, -2.0, -0.5], jnp.float32)
+    y = jnp.array([1.0, 1.0, -1.0, -1.0], jnp.float32)
+    mask = jnp.ones((4,), jnp.float32)
+    loss, resid, dcoef = model.loss_stage("sqhinge")(o, y, mask)
+    # margins: 1-2=-1 (off), 1-0.5=0.5 (on), 1-2=-1 (off), 1-0.5=0.5 (on)
+    np.testing.assert_allclose(np.array(dcoef), [0.0, 1.0, 0.0, 1.0])
+    np.testing.assert_allclose(np.array(resid), [0.0, -0.5, 0.0, 0.5])
+    np.testing.assert_allclose(float(loss), 0.5 * (0.25 + 0.25), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# Fused tiles == unfused composition.
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("name", LOSS_NAMES)
+def test_fgrad_tile_matches_composition(name):
+    c = _rand(4, (256, 256))
+    beta = _rand(5, (256,), 0.1)
+    y = _labels(6, 256)
+    mask = jnp.ones((256,), jnp.float32)
+    loss_f, grad_f, dcoef_f = model.fgrad_tile(name)(c, beta, y, mask)
+    o = c @ beta
+    loss_u, resid_u, dcoef_u = model.loss_stage(name)(o, y, mask)
+    np.testing.assert_allclose(float(loss_f), float(loss_u), rtol=1e-4)
+    np.testing.assert_allclose(
+        np.array(grad_f), np.array(c.T @ resid_u), rtol=1e-3, atol=1e-3
+    )
+    np.testing.assert_allclose(np.array(dcoef_f), np.array(dcoef_u), atol=1e-6)
+
+
+def test_hd_tile_matches_composition():
+    c = _rand(7, (256, 256))
+    d = _rand(8, (256,), 0.3)
+    dcoef = jnp.abs(_rand(9, (256,))) > 0.5
+    dcoef = dcoef.astype(jnp.float32)
+    (got,) = model.hd_tile(c, d, dcoef)
+    want = c.T @ (dcoef * (c @ d))
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), name=st.sampled_from(LOSS_NAMES))
+def test_hd_is_gauss_newton_quadratic_form(seed, name):
+    """d^T (C^T D C) d >= 0: the loss Hessian term is PSD for every loss."""
+    c = _rand(seed, (128, 128))
+    beta = _rand(seed + 1, (128,), 0.2)
+    y = _labels(seed + 2, 128)
+    mask = jnp.ones((128,), jnp.float32)
+    _, _, dcoef = model.fgrad_tile(name)(c, beta, y, mask)
+    d = _rand(seed + 3, (128,))
+    quad = float(jnp.dot(d, jnp.asarray(model.hd_tile(c, d, dcoef)[0])))
+    assert quad >= -1e-3
+
+
+# --------------------------------------------------------------------------
+# K-means assignment.
+# --------------------------------------------------------------------------
+def test_kmeans_assign_matches_ref():
+    x = _rand(10, (256, 64))
+    cent = _rand(11, (256, 64))
+    cmask = jnp.concatenate([jnp.ones((40,)), jnp.zeros((216,))]).astype(jnp.float32)
+    rmask = jnp.ones((256,), jnp.float32)
+    idx, counts, sums, inertia = model.kmeans_assign(x, cent, cmask, rmask)
+    idx_r, counts_r, sums_r, inertia_r = ref.kmeans_assign(x, cent, cmask, rmask)
+    np.testing.assert_array_equal(np.array(idx), np.array(idx_r))
+    np.testing.assert_allclose(np.array(counts), np.array(counts_r))
+    np.testing.assert_allclose(np.array(sums), np.array(sums_r), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(inertia), float(inertia_r), rtol=1e-4)
+
+
+def test_kmeans_assign_never_picks_dead_centroid():
+    x = _rand(12, (256, 32), 3.0)
+    cent = _rand(13, (256, 32), 3.0)
+    live = 17
+    cmask = jnp.concatenate([jnp.ones((live,)), jnp.zeros((256 - live,))]).astype(
+        jnp.float32
+    )
+    rmask = jnp.ones((256,), jnp.float32)
+    idx, counts, _, _ = model.kmeans_assign(x, cent, cmask, rmask)
+    assert int(np.array(idx).max()) < live
+    assert float(np.array(counts)[live:].sum()) == 0.0
+    assert float(np.array(counts).sum()) == 256.0
+
+
+def test_kmeans_counts_sums_consistent():
+    x = _rand(14, (256, 32))
+    cent = _rand(15, (256, 32))
+    cmask = jnp.ones((256,), jnp.float32)
+    rmask = jnp.ones((256,), jnp.float32)
+    idx, counts, sums, _ = model.kmeans_assign(x, cent, cmask, rmask)
+    np.testing.assert_allclose(
+        np.array(sums).sum(axis=0), np.array(x).sum(axis=0), rtol=1e-3, atol=1e-3
+    )
+    assert float(np.array(counts).sum()) == 256.0
+
+
+def test_kmeans_row_mask_excludes_padding():
+    x = _rand(20, (256, 32))
+    cent = _rand(21, (256, 32))
+    cmask = jnp.ones((256,), jnp.float32)
+    live = 100
+    rmask = jnp.concatenate([jnp.ones((live,)), jnp.zeros((256 - live,))]).astype(
+        jnp.float32
+    )
+    _, counts, sums, inertia = model.kmeans_assign(x, cent, cmask, rmask)
+    assert float(np.array(counts).sum()) == float(live)
+    np.testing.assert_allclose(
+        np.array(sums).sum(axis=0),
+        np.array(x)[:live].sum(axis=0),
+        rtol=1e-3,
+        atol=1e-3,
+    )
+    # inertia only over live rows
+    _, _, _, inertia_full = model.kmeans_assign(
+        x, cent, cmask, jnp.ones((256,), jnp.float32)
+    )
+    assert float(inertia) < float(inertia_full)
+
+
+# --------------------------------------------------------------------------
+# Prediction tile.
+# --------------------------------------------------------------------------
+def test_predict_block_matches_ref():
+    x = _rand(16, (256, 64))
+    z = _rand(17, (256, 64))
+    beta = _rand(18, (256,), 0.1)
+    gamma = jnp.array([0.4], jnp.float32)
+    (got,) = model.predict_block(x, z, gamma, beta)
+    want = ref.rbf_block(x, z, gamma) @ beta
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-4)

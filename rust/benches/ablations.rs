@@ -1,0 +1,115 @@
+//! Ablations over DESIGN.md-called-out choices:
+//!   A. AllReduce tree arity (comm rounds vs fan-out)
+//!   B. Latency sensitivity (the C in C + D·B) — the Fig-2 mechanism knob
+//!   C. Fused fgrad tile vs unfused matvec+loss+matvec_t (m <= TM case)
+//!   D. P-packSVM packing size r (accuracy & simulated time)
+
+#[path = "common/mod.rs"]
+mod common;
+
+use dkm::baselines::{train_ppacksvm, PPackOptions};
+use dkm::cluster::{Cluster, CostModel};
+use dkm::coordinator::train;
+use dkm::metrics::{Step, Table};
+use std::rc::Rc;
+
+fn main() {
+    common::header("ABLATIONS", "design choices called out in DESIGN.md");
+
+    // --- A: tree arity ---
+    println!("\nA. AllReduce tree arity (p=64, priced rounds for a 4 KiB vector):");
+    let mut table = Table::new(&["arity", "depth", "sim comm s/call"]);
+    for arity in [2usize, 4, 8, 16] {
+        let mut cl = Cluster::new(vec![(); 64], arity, CostModel::hadoop_crude());
+        let partials: Vec<Vec<f32>> = vec![vec![1.0; 1024]; 64];
+        cl.allreduce_sum(Step::Tron, partials);
+        table.row(&[
+            arity.to_string(),
+            cl.tree().depth().to_string(),
+            format!("{:.4}", cl.clock.comm_secs(Step::Tron)),
+        ]);
+    }
+    print!("{}", table.render());
+
+    // --- B: latency sensitivity ---
+    println!("\nB. latency sensitivity (covtype_like n=4000 m=256 p=8):");
+    let (train_ds, _) = common::dataset("covtype_like", 4_000, 500, 42);
+    let backend = common::backend();
+    let mut table = Table::new(&["latency C", "sim total s", "tron comm s", "comm share"]);
+    for (label, lat) in [("1 ms", 1e-3), ("30 ms (hadoop)", 30e-3), ("100 ms", 100e-3)] {
+        let cost = CostModel {
+            latency_s: lat,
+            per_byte_s: 1e-8,
+        };
+        let s = common::settings("covtype_like", 256, 8);
+        let out = train(&s, &train_ds, Rc::clone(&backend), cost).unwrap();
+        let total = out.sim.total_secs();
+        let comm = out.sim.comm_secs(Step::Tron);
+        table.row(&[
+            label.into(),
+            format!("{total:.2}"),
+            format!("{comm:.2}"),
+            format!("{:.2}", comm / total),
+        ]);
+    }
+    print!("{}", table.render());
+
+    // --- C: fused vs unfused f/g tiles ---
+    println!("\nC. fused fgrad tile vs unfused 3-op pipeline (m=256 fits one tile):");
+    use dkm::rng::Rng;
+    use dkm::runtime::tiles::{TB, TM};
+    let mut rng = Rng::new(3);
+    let c: Vec<f32> = (0..TB * TM).map(|_| rng.normal_f32()).collect();
+    let beta: Vec<f32> = (0..TM).map(|_| 0.1 * rng.normal_f32()).collect();
+    let y: Vec<f32> = (0..TB).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    let mask = vec![1.0f32; TB];
+    let loss = dkm::config::settings::Loss::SqHinge;
+    let reps = 200;
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(backend.fgrad(loss, &c, &beta, &y, &mask).unwrap());
+    }
+    let fused = t0.elapsed().as_secs_f64() / reps as f64;
+    let t1 = std::time::Instant::now();
+    for _ in 0..reps {
+        let o = backend.matvec(&c, &beta).unwrap();
+        let st = backend.loss_stage(loss, &o, &y, &mask).unwrap();
+        std::hint::black_box(backend.matvec_t(&c, &st.vec).unwrap());
+    }
+    let unfused = t1.elapsed().as_secs_f64() / reps as f64;
+    println!(
+        "fused: {:.1} us   unfused: {:.1} us   saving: {:.1}%",
+        fused * 1e6,
+        unfused * 1e6,
+        (1.0 - fused / unfused) * 100.0
+    );
+
+    // --- D: P-packSVM pack size ---
+    println!("\nD. P-packSVM pack size r (mnist8m_like n=3000, hadoop pricing):");
+    let (tr, te) = common::dataset("mnist8m_like", 3_000, 600, 42);
+    let gamma = 1.0 / (2.0 * 18.0f32 * 18.0);
+    let mut table = Table::new(&["r", "rounds", "accuracy", "sim comm s", "wall s"]);
+    for pack in [10usize, 100, 500] {
+        let opts = PPackOptions {
+            pack,
+            epochs: 1,
+            lambda: 1e-4,
+            seed: 42,
+            nodes: 8,
+        };
+        let t0 = std::time::Instant::now();
+        let out = train_ppacksvm(&tr, gamma, &opts, CostModel::hadoop_crude()).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let acc = out.model.accuracy(backend.as_ref(), &te).unwrap();
+        table.row(&[
+            pack.to_string(),
+            out.rounds.to_string(),
+            format!("{acc:.4}"),
+            format!("{:.1}", out.sim.comm_secs(Step::Tron)),
+            format!("{wall:.1}"),
+        ]);
+        println!("  done r={pack}");
+    }
+    print!("{}", table.render());
+    println!("(larger r cuts communication rounds at O(r²) extra master work — §1.1)");
+}

@@ -1,0 +1,68 @@
+//! Shared helpers for the paper-table benches (no criterion offline; each
+//! bench is a `harness = false` binary that prints the paper-style table).
+
+use std::rc::Rc;
+
+use dkm::cluster::CostModel;
+use dkm::config::settings::{Backend, Settings};
+use dkm::data::{synth, Dataset};
+use dkm::runtime::{make_backend, Compute};
+
+/// Scale factor for bench sizes: DKM_BENCH_SCALE=0.25 quarters every n.
+pub fn scale() -> f64 {
+    std::env::var("DKM_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0)
+}
+
+pub fn scaled(n: usize) -> usize {
+    ((n as f64 * scale()) as usize).max(64)
+}
+
+/// Generate a dataset from its Table-3 spec with scaled sizes.
+pub fn dataset(name: &str, n_train: usize, n_test: usize, seed: u64) -> (Dataset, Dataset) {
+    let mut spec = synth::spec(name);
+    spec.n_train = scaled(n_train);
+    spec.n_test = scaled(n_test);
+    synth::generate(&spec, seed)
+}
+
+/// Settings preset from the dataset spec.
+pub fn settings(name: &str, m: usize, nodes: usize) -> Settings {
+    Settings {
+        m,
+        nodes,
+        max_iters: 150,
+        ..Settings::default().with_dataset_defaults(name)
+    }
+}
+
+/// Default backend for benches: PJRT when artifacts exist, else native.
+pub fn backend() -> Rc<dyn Compute> {
+    match make_backend(Backend::Pjrt, "artifacts") {
+        Ok(b) => b,
+        Err(_) => make_backend(Backend::Native, "artifacts").expect("native backend"),
+    }
+}
+
+pub fn native_backend() -> Rc<dyn Compute> {
+    make_backend(Backend::Native, "artifacts").expect("native backend")
+}
+
+pub fn free() -> CostModel {
+    CostModel::free()
+}
+
+pub fn header(title: &str, paper: &str) {
+    println!("\n================================================================");
+    println!("{title}");
+    println!("paper reference: {paper}");
+    println!("bench scale: {} (set DKM_BENCH_SCALE to adjust)", scale());
+    println!("================================================================");
+}
+
+/// Clamp a basis size to the (scaled) training size.
+pub fn clamp_m(m: usize, n_train: usize) -> usize {
+    m.min(n_train / 2).max(16)
+}

@@ -1,0 +1,80 @@
+//! Figure 2: parallel speed-up versus node count, Covtype-like (left) and
+//! MNIST8m-like (right).
+//!
+//! Paper: on the crude Hadoop AllReduce, Covtype's *Total time* speed-up
+//! flattens (the 5N·C latency term is independent of p and dominates when
+//! local compute is small), while *Other time* (everything but TRON)
+//! scales well; MNIST8m's heavy kernel compute makes even Total time scale
+//! near-linearly. p is swept on the simulated-time ledger: per-node
+//! compute is measured, communication is priced C + D·B per tree level.
+//! Covtype used 25 nodes as reference in the paper; MNIST8m used 100.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use dkm::cluster::CostModel;
+use dkm::coordinator::train;
+use dkm::metrics::{Step, Table};
+use std::rc::Rc;
+
+/// The crude-Hadoop latency scaled by the same ~10x factor as the
+/// workloads (DESIGN.md §2: the observable is the compute:latency ratio;
+/// keeping the paper's absolute 30 ms against 100x-smaller datasets would
+/// put EVERY dataset in the latency-collapse regime, not just Covtype).
+fn scaled_hadoop() -> CostModel {
+    CostModel {
+        latency_s: 3e-3,
+        per_byte_s: 1.0 / 100e6,
+    }
+}
+
+fn run(name: &str, n: usize, ntest: usize, m: usize, ps: &[usize]) {
+    let (train_ds, _) = common::dataset(name, n, ntest, 42);
+    let m = common::clamp_m(m, train_ds.n());
+    let backend = common::backend();
+    let mut rows = Vec::new();
+    for &p in ps {
+        let s = common::settings(name, m, p);
+        let out = train(&s, &train_ds, Rc::clone(&backend), scaled_hadoop()).unwrap();
+        rows.push((
+            p,
+            out.sim.total_secs(),
+            out.sim.other_secs(),
+            out.sim.comm_secs(Step::Tron),
+            out.stats.iterations,
+        ));
+        println!("  done {name} p={p}");
+    }
+    let (_, t_ref, o_ref, _, _) = rows[0];
+    println!("\n--- {name} (n={}, m={m}; reference p={}) ---", train_ds.n(), ps[0]);
+    let mut table = Table::new(&[
+        "nodes", "total_s", "other_s", "tron_comm_s", "speedup total", "speedup other", "iters",
+    ]);
+    for &(p, total, other, comm, iters) in &rows {
+        table.row(&[
+            p.to_string(),
+            format!("{total:.2}"),
+            format!("{other:.2}"),
+            format!("{comm:.2}"),
+            format!("{:.2}", t_ref / total * ps[0] as f64),
+            format!("{:.2}", o_ref / other * ps[0] as f64),
+            iters.to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+}
+
+fn main() {
+    common::header(
+        "FIGURE 2 — parallel speed-up vs nodes (simulated-time ledger)",
+        "Fig 2 (§4.4): latency accumulation flattens Covtype's total-time speed-up",
+    );
+    run("covtype_like", 8_000, 1_000, 512, &[1, 2, 4, 8, 16, 32]);
+    run("mnist8m_like", 16_000, 1_000, 1600, &[1, 2, 4, 8, 16, 32]);
+    println!(
+        "\nshape check vs paper: covtype_like total-time speed-up flattens\n\
+         (comm ≈ constant in p, local compute small); its other-time\n\
+         speed-up stays near-linear. mnist8m_like's kernel compute\n\
+         dominates, so total-time speed-up is near-linear (Fig 2 right)."
+    );
+}

@@ -1,0 +1,158 @@
+//! Micro benchmarks: the building-block costs behind every table —
+//! AllReduce round-trips, kernel-tile throughput (PJRT vs native), tile
+//! dispatch overhead, TRON op latency.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use dkm::cluster::{Cluster, CostModel};
+use dkm::metrics::{Step, Table};
+use dkm::rng::Rng;
+use dkm::runtime::tiles::{TB, TM};
+
+fn time<T>(reps: usize, mut f: impl FnMut() -> T) -> f64 {
+    // one warmup
+    std::hint::black_box(f());
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(f());
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() {
+    common::header("MICRO — building-block costs", "§3.1 cost analysis");
+    let mut rng = Rng::new(1);
+
+    // --- AllReduce round trip (data movement, not the priced ledger) ---
+    println!("\nallreduce wall time per call (in-process tree):");
+    let mut table = Table::new(&["p", "len", "usec/call"]);
+    for p in [4usize, 16, 64] {
+        for len in [256usize, 4096, 65536] {
+            let partials: Vec<Vec<f32>> = (0..p)
+                .map(|_| (0..len).map(|_| rng.normal_f32()).collect())
+            .collect();
+            let secs = time(20, || {
+                let mut cl = Cluster::new(vec![(); p], 2, CostModel::free());
+                cl.allreduce_sum(Step::Tron, partials.clone())
+            });
+            table.row(&[p.to_string(), len.to_string(), format!("{:.1}", secs * 1e6)]);
+        }
+    }
+    print!("{}", table.render());
+
+    // --- kernel tile throughput: PJRT vs native ---
+    println!("\nRBF kernel tile (TB x TM), GFLOP/s (2*TB*TM*D flops):");
+    let pjrt = common::backend();
+    let native = common::native_backend();
+    let mut table = Table::new(&["D", "pjrt ms", "pjrt GF/s", "native ms", "native GF/s"]);
+    for d in [64usize, 256, 1024] {
+        let x: Vec<f32> = (0..TB * d).map(|_| rng.normal_f32()).collect();
+        let z: Vec<f32> = (0..TM * d).map(|_| rng.normal_f32()).collect();
+        let flops = (2 * TB * TM * d) as f64;
+        let sp = time(10, || pjrt.kernel_block(&x, &z, d, 0.5).unwrap());
+        let sn = time(10, || native.kernel_block(&x, &z, d, 0.5).unwrap());
+        table.row(&[
+            d.to_string(),
+            format!("{:.2}", sp * 1e3),
+            format!("{:.2}", flops / sp / 1e9),
+            format!("{:.2}", sn * 1e3),
+            format!("{:.2}", flops / sn / 1e9),
+        ]);
+    }
+    print!("{}", table.render());
+
+    // --- dispatch overhead: smallest op round trip ---
+    let o: Vec<f32> = (0..TB).map(|_| rng.normal_f32()).collect();
+    let y = vec![1.0f32; TB];
+    let mask = vec![1.0f32; TB];
+    let s_pjrt = time(
+        50,
+        || pjrt.loss_stage(dkm::config::settings::Loss::SqHinge, &o, &y, &mask).unwrap(),
+    );
+    let s_nat = time(
+        50,
+        || native.loss_stage(dkm::config::settings::Loss::SqHinge, &o, &y, &mask).unwrap(),
+    );
+    println!(
+        "\nsmallest-op dispatch (loss tile): pjrt {:.1} us, native {:.1} us -> \
+         PJRT per-call overhead ≈ {:.1} us",
+        s_pjrt * 1e6,
+        s_nat * 1e6,
+        (s_pjrt - s_nat) * 1e6
+    );
+
+    // --- matvec family per-tile ---
+    let c: Vec<f32> = (0..TB * TM).map(|_| rng.normal_f32()).collect();
+    let v: Vec<f32> = (0..TM).map(|_| rng.normal_f32()).collect();
+    let r: Vec<f32> = (0..TB).map(|_| rng.normal_f32()).collect();
+    let mut table = Table::new(&["op", "pjrt us", "native us"]);
+    table.row(&[
+        "matvec".into(),
+        format!("{:.1}", time(50, || pjrt.matvec(&c, &v).unwrap()) * 1e6),
+        format!("{:.1}", time(50, || native.matvec(&c, &v).unwrap()) * 1e6),
+    ]);
+    table.row(&[
+        "matvec_t".into(),
+        format!("{:.1}", time(50, || pjrt.matvec_t(&c, &r).unwrap()) * 1e6),
+        format!("{:.1}", time(50, || native.matvec_t(&c, &r).unwrap()) * 1e6),
+    ]);
+    table.row(&[
+        "fgrad fused".into(),
+        format!(
+            "{:.1}",
+            time(50, || pjrt
+                .fgrad(dkm::config::settings::Loss::SqHinge, &c, &v, &y, &mask)
+                .unwrap())
+                * 1e6
+        ),
+        format!(
+            "{:.1}",
+            time(50, || native
+                .fgrad(dkm::config::settings::Loss::SqHinge, &c, &v, &y, &mask)
+                .unwrap())
+                * 1e6
+        ),
+    ]);
+    print!("{}", table.render());
+
+    // --- prepared-operand (persistent device buffer) hot path ---
+    println!("\nprepared-operand path (C tile uploaded once — the §Perf optimization):");
+    let loss = dkm::config::settings::Loss::SqHinge;
+    let cp = pjrt.prepare(&c, &[TB, TM]).unwrap();
+    let yp = pjrt.prepare(&y, &[TB]).unwrap();
+    let mp = pjrt.prepare(&mask, &[TB]).unwrap();
+    let cn = native.prepare(&c, &[TB, TM]).unwrap();
+    let yn = native.prepare(&y, &[TB]).unwrap();
+    let mn = native.prepare(&mask, &[TB]).unwrap();
+    let mut table = Table::new(&["op", "pjrt us", "native us", "pjrt speedup vs unprepared"]);
+    let un_mv = time(50, || pjrt.matvec(&c, &v).unwrap());
+    let p_mv = time(50, || pjrt.matvec_p(&cp, &v).unwrap());
+    table.row(&[
+        "matvec_p".into(),
+        format!("{:.1}", p_mv * 1e6),
+        format!("{:.1}", time(50, || native.matvec_p(&cn, &v).unwrap()) * 1e6),
+        format!("{:.1}x", un_mv / p_mv),
+    ]);
+    let un_fg = time(50, || pjrt.fgrad(loss, &c, &v, &y, &mask).unwrap());
+    let p_fg = time(50, || pjrt.fgrad_p(loss, &cp, &v, &yp, &mp).unwrap());
+    table.row(&[
+        "fgrad_p".into(),
+        format!("{:.1}", p_fg * 1e6),
+        format!(
+            "{:.1}",
+            time(50, || native.fgrad_p(loss, &cn, &v, &yn, &mn).unwrap()) * 1e6
+        ),
+        format!("{:.1}x", un_fg / p_fg),
+    ]);
+    let dcoef = vec![1.0f32; TB];
+    let un_hd = time(50, || pjrt.hd_tile(&c, &v, &dcoef).unwrap());
+    let p_hd = time(50, || pjrt.hd_p(&cp, &v, &dcoef).unwrap());
+    table.row(&[
+        "hd_p".into(),
+        format!("{:.1}", p_hd * 1e6),
+        format!("{:.1}", time(50, || native.hd_p(&cn, &v, &dcoef).unwrap()) * 1e6),
+        format!("{:.1}x", un_hd / p_hd),
+    ]);
+    print!("{}", table.render());
+}

@@ -1,0 +1,314 @@
+//! Formulation (3): the linearized kernel machine of Zhang et al. [29].
+//!
+//! ```text
+//! W = U Λ Uᵀ  (eigendecomposition, O(m³))
+//! A = C U Λ^{-1/2}  (O(nm²))
+//! min_w  λ/2 ‖w‖² + L(A w, y)  (linear machine, TRON)
+//! ```
+//!
+//! Mathematically equivalent to formulation (4) — same kernel, same m, same
+//! model class, different parameterization (w = Λ^{1/2} Uᵀ β). The paper's
+//! Table 1 measures exactly the setup costs this route pays and (4) avoids:
+//! we expose `eig_secs`, `a_secs` and `Fraction of time for A` so the bench
+//! regenerates the table's rows.
+//!
+//! Eigenvalues below `EIG_FLOOR · λ_max` are dropped (W is often numerically
+//! rank-deficient for clustered basis points) — this is the pseudo-inverse
+//! semantics of the Nyström literature.
+
+use crate::config::settings::{Loss, Settings};
+use crate::data::Dataset;
+use crate::linalg::{sym_eig, Mat};
+use crate::metrics::accuracy;
+use crate::rng::Rng;
+use crate::runtime::native;
+use crate::Result;
+
+use crate::coordinator::tron::{self, Objective, TronOptions, TronStats};
+
+const EIG_FLOOR: f64 = 1e-10;
+
+/// Timing breakdown + model for one formulation-(3) run.
+pub struct LinearizedOutput {
+    /// Basis points used (m × d).
+    pub basis: Mat,
+    /// Linear weights in the A-feature space (length = retained rank).
+    pub w: Vec<f32>,
+    /// U Λ^{-1/2} (m × rank): maps kernel columns to features at predict.
+    pub proj: Mat,
+    pub gamma: f32,
+    pub loss: Loss,
+    pub stats: TronStats,
+    /// Kernel (C and W) computation seconds.
+    pub kernel_secs: f64,
+    /// Eigen-decomposition seconds (the O(m³) part).
+    pub eig_secs: f64,
+    /// A = C U Λ^{-1/2} formation seconds (the O(nm²) part).
+    pub a_secs: f64,
+    pub tron_secs: f64,
+    pub total_secs: f64,
+    pub rank: usize,
+}
+
+impl LinearizedOutput {
+    /// Fraction of total time spent forming A (Table 1's last row).
+    pub fn a_fraction(&self) -> f64 {
+        self.a_secs / self.total_secs.max(1e-12)
+    }
+
+    /// Decision values: o = A(x) w where A(x) = k(x, Z) proj.
+    pub fn predict(&self, x: &Mat) -> Vec<f32> {
+        let c = rbf_matrix(x, &self.basis, self.gamma);
+        let feats = c.gemm_nn(&self.proj);
+        let mut o = vec![0.0f32; x.rows()];
+        feats.matvec(&self.w, &mut o);
+        o
+    }
+
+    pub fn accuracy(&self, test: &Dataset) -> f64 {
+        accuracy(&self.predict(&test.x), &test.y)
+    }
+}
+
+/// Dense RBF kernel matrix (rows of `x` vs rows of `z`).
+pub fn rbf_matrix(x: &Mat, z: &Mat, gamma: f32) -> Mat {
+    let mut out = Mat::zeros(x.rows(), z.rows());
+    let xsq: Vec<f32> = (0..x.rows())
+        .map(|i| crate::linalg::mat::dot(x.row(i), x.row(i)))
+        .collect();
+    let zsq: Vec<f32> = (0..z.rows())
+        .map(|k| crate::linalg::mat::dot(z.row(k), z.row(k)))
+        .collect();
+    for i in 0..x.rows() {
+        let xi = x.row(i);
+        let orow = out.row_mut(i);
+        for k in 0..z.rows() {
+            let d2 = (xsq[i] + zsq[k] - 2.0 * crate::linalg::mat::dot(xi, z.row(k))).max(0.0);
+            orow[k] = (-gamma * d2).exp();
+        }
+    }
+    out
+}
+
+/// The linear objective λ/2‖w‖² + L(Aw, y) for TRON.
+struct LinearProblem<'a> {
+    a: &'a Mat,
+    y: &'a [f32],
+    lambda: f32,
+    loss: Loss,
+    dcoef: Vec<f32>,
+}
+
+impl Objective for LinearProblem<'_> {
+    fn dim(&self) -> usize {
+        self.a.cols()
+    }
+
+    fn eval_fg(&mut self, w: &[f32]) -> Result<(f64, Vec<f32>)> {
+        let n = self.a.rows();
+        let mut o = vec![0.0f32; n];
+        self.a.matvec(w, &mut o);
+        let mask = vec![1.0f32; n];
+        let stage = native::loss_stage(self.loss, &o, self.y, &mask);
+        self.dcoef = stage.dcoef;
+        let mut grad = vec![0.0f32; w.len()];
+        self.a.matvec_t(&stage.vec, &mut grad);
+        let mut wtw = 0.0f64;
+        for (gi, wi) in grad.iter_mut().zip(w) {
+            *gi += self.lambda * wi;
+            wtw += (*wi as f64) * (*wi as f64);
+        }
+        let f = 0.5 * self.lambda as f64 * wtw + stage.loss as f64;
+        Ok((f, grad))
+    }
+
+    fn eval_hd(&mut self, d: &[f32]) -> Result<Vec<f32>> {
+        let n = self.a.rows();
+        let mut z = vec![0.0f32; n];
+        self.a.matvec(d, &mut z);
+        for (zi, dc) in z.iter_mut().zip(&self.dcoef) {
+            *zi *= dc;
+        }
+        let mut hd = vec![0.0f32; d.len()];
+        self.a.matvec_t(&z, &mut hd);
+        for (hi, di) in hd.iter_mut().zip(d) {
+            *hi += self.lambda * di;
+        }
+        Ok(hd)
+    }
+}
+
+/// Train formulation (3) end to end on a single machine (the configuration
+/// the paper's Table 1 uses), timing each phase.
+pub fn train_linearized(
+    settings: &Settings,
+    train_ds: &Dataset,
+) -> Result<LinearizedOutput> {
+    let total_start = std::time::Instant::now();
+    let m = settings.m;
+    let gamma = settings.gamma();
+    anyhow::ensure!(m <= train_ds.n(), "m={m} > n={}", train_ds.n());
+
+    // Basis: random training rows (same policy as formulation (4) random).
+    let mut rng = Rng::new(settings.seed ^ 0xBA515);
+    let idx = rng.sample_indices(train_ds.n(), m);
+    let basis = train_ds.x.gather_rows(&idx);
+
+    // Kernel matrices C (n × m) and W (m × m).
+    let kstart = std::time::Instant::now();
+    let c = rbf_matrix(&train_ds.x, &basis, gamma);
+    let w_mat = rbf_matrix(&basis, &basis, gamma);
+    let kernel_secs = kstart.elapsed().as_secs_f64();
+
+    // Eigen-decomposition of W — the O(m³) cost formulation (4) avoids.
+    let estart = std::time::Instant::now();
+    let w64: Vec<f64> = w_mat.as_slice().iter().map(|&v| v as f64).collect();
+    let (evals, evecs) = sym_eig(&w64, m);
+    let eig_secs = estart.elapsed().as_secs_f64();
+
+    // Retained spectrum & projection U Λ^{-1/2}.
+    let emax = evals.iter().cloned().fold(0.0f64, f64::max);
+    let keep: Vec<usize> = (0..m)
+        .filter(|&j| evals[j] > EIG_FLOOR * emax.max(1e-300))
+        .collect();
+    let rank = keep.len();
+    let mut proj = Mat::zeros(m, rank);
+    for (col_new, &j) in keep.iter().enumerate() {
+        let s = 1.0 / evals[j].sqrt();
+        for i in 0..m {
+            *proj.at_mut(i, col_new) = (evecs[i * m + j] * s) as f32;
+        }
+    }
+
+    // A = C proj — the O(nm²) (here O(nm·rank)) transformed design matrix.
+    let astart = std::time::Instant::now();
+    let a = c.gemm_nn(&proj);
+    let a_secs = astart.elapsed().as_secs_f64();
+
+    // Linear TRON.
+    let tstart = std::time::Instant::now();
+    let mut problem = LinearProblem {
+        a: &a,
+        y: &train_ds.y,
+        lambda: settings.lambda,
+        loss: settings.loss,
+        dcoef: Vec::new(),
+    };
+    let opts = TronOptions {
+        tol: settings.tol,
+        max_iters: settings.max_iters,
+        ..TronOptions::default()
+    };
+    let (w, stats) = tron::minimize(&mut problem, &vec![0.0f32; rank], &opts)?;
+    let tron_secs = tstart.elapsed().as_secs_f64();
+
+    Ok(LinearizedOutput {
+        basis,
+        w,
+        proj,
+        gamma,
+        loss: settings.loss,
+        stats,
+        kernel_secs,
+        eig_secs,
+        a_secs,
+        tron_secs,
+        total_secs: total_start.elapsed().as_secs_f64(),
+        rank,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::settings::{Backend, BasisSelection};
+    use crate::data::synth;
+
+    fn settings(m: usize) -> Settings {
+        Settings {
+            m,
+            nodes: 1,
+            lambda: 0.01,
+            sigma: 0.7,
+            loss: Loss::SqHinge,
+            basis: BasisSelection::Random,
+            backend: Backend::Native,
+            max_iters: 60,
+            tol: 1e-3,
+            seed: 42,
+            ..Settings::default()
+        }
+    }
+
+    fn tiny() -> (Dataset, Dataset) {
+        let mut spec = synth::spec("covtype_like");
+        spec.n_train = 900;
+        spec.n_test = 300;
+        synth::generate(&spec, 5)
+    }
+
+    #[test]
+    fn trains_and_predicts_above_chance() {
+        let (train_ds, test_ds) = tiny();
+        let out = train_linearized(&settings(64), &train_ds).unwrap();
+        let acc = out.accuracy(&test_ds);
+        assert!(acc > 0.55, "accuracy {acc}");
+        assert!(out.rank <= 64 && out.rank > 0);
+        assert!(out.eig_secs >= 0.0 && out.a_secs >= 0.0);
+    }
+
+    /// The paper's Table-1 claim in miniature: (3) and (4) give the same
+    /// accuracy at the same m (they are the same model reparameterized).
+    #[test]
+    fn matches_formulation_4_accuracy() {
+        use crate::cluster::CostModel;
+        use crate::runtime::make_backend;
+        let (train_ds, test_ds) = tiny();
+        let s = settings(96);
+        let lin = train_linearized(&s, &train_ds).unwrap();
+        let backend = make_backend(Backend::Native, "artifacts").unwrap();
+        let f4 = crate::coordinator::train(
+            &s,
+            &train_ds,
+            std::rc::Rc::clone(&backend),
+            CostModel::free(),
+        )
+        .unwrap();
+        let acc3 = lin.accuracy(&test_ds);
+        let acc4 = f4.model.accuracy(backend.as_ref(), &test_ds).unwrap();
+        assert!(
+            (acc3 - acc4).abs() < 0.04,
+            "formulation (3): {acc3} vs (4): {acc4}"
+        );
+    }
+
+    #[test]
+    fn eig_time_grows_superlinearly_with_m() {
+        let (train_ds, _) = tiny();
+        let t64 = train_linearized(&settings(64), &train_ds).unwrap();
+        let t256 = train_linearized(&settings(256), &train_ds).unwrap();
+        // 4x m should be >> 4x eig time (O(m³)); allow noise with 6x.
+        if t64.eig_secs > 1e-4 {
+            assert!(
+                t256.eig_secs > 6.0 * t64.eig_secs,
+                "eig {} -> {}",
+                t64.eig_secs,
+                t256.eig_secs
+            );
+        }
+    }
+
+    #[test]
+    fn degenerate_duplicate_basis_is_handled() {
+        // Duplicate rows make W singular; the eigen floor must drop the
+        // null directions instead of producing NaNs.
+        let (mut train_ds, _) = tiny();
+        for i in 0..50 {
+            let row: Vec<f32> = train_ds.x.row(0).to_vec();
+            train_ds.x.row_mut(i + 1).copy_from_slice(&row);
+        }
+        let out = train_linearized(&settings(48), &train_ds).unwrap();
+        assert!(out.w.iter().all(|v| v.is_finite()));
+        assert!(out.rank <= 48);
+    }
+}

@@ -1,0 +1,13 @@
+//! The paper's comparators, implemented on the same substrates:
+//!
+//! * [`linearized`] — formulation (3) (Zhang et al. 2012): eigendecompose
+//!   W, form A = C U Λ^{-1/2}, train a *linear* machine on A. This is what
+//!   Table 1 shows blowing up with m (O(m³) eig + O(nm²) for A).
+//! * [`ppacksvm`] — P-packSVM (Zhu et al. 2009): distributed primal kernel
+//!   SGD with iteration packing, the full-kernel comparator of Table 5.
+
+pub mod linearized;
+pub mod ppacksvm;
+
+pub use linearized::{train_linearized, LinearizedOutput};
+pub use ppacksvm::{train_ppacksvm, PPackOptions, PPackOutput};

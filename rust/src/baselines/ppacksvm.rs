@@ -1,0 +1,316 @@
+//! P-packSVM (Zhu et al., ICDM 2009): distributed primal stochastic
+//! gradient descent for the *full* (non-approximated) kernel SVM, with
+//! iteration packing — the paper's Table-5 comparator.
+//!
+//! The solver is Pegasos-style SGD in the kernel feature space, w = s·Σ
+//! α_j φ(x_j). Training rows (and their α entries) are partitioned over p
+//! nodes. Each round processes a **pack** of r examples:
+//!
+//! 1. the pack's features are broadcast to all nodes;
+//! 2. every node computes the pack outputs restricted to its local support
+//!    vectors; an AllReduce sums the r outputs (one communication instance
+//!    per pack — this is the packing trick: r iterations, one round-trip);
+//! 3. the master replays the r SGD steps sequentially, correcting later
+//!    pack members' outputs with the pack's r × r kernel matrix (the
+//!    O(r²) term the paper mentions, which is why r stays ~100);
+//! 4. the α updates are scattered back to the owner nodes.
+//!
+//! The number of rounds is n/r per epoch — still O(n) communication
+//! instances, which is exactly why the paper's §4.5 notes it "will be
+//! hugely inefficient" on a high-latency AllReduce: the same `C + D·B`
+//! ledger that prices our TRON rounds prices these.
+
+use crate::cluster::{Cluster, CostModel};
+use crate::config::settings::Loss;
+use crate::coordinator::TrainedModel;
+use crate::data::{shard_rows, Dataset};
+use crate::linalg::Mat;
+use crate::metrics::Step;
+use crate::rng::Rng;
+use crate::Result;
+
+#[derive(Clone, Debug)]
+pub struct PPackOptions {
+    /// Pack size r (paper: ~100).
+    pub pack: usize,
+    /// Number of epochs (Table 5 runs 1).
+    pub epochs: usize,
+    /// SVM regularization λ (Pegasos step schedule η_t = 1/(λ t)).
+    pub lambda: f32,
+    pub seed: u64,
+    /// Nodes p.
+    pub nodes: usize,
+}
+
+impl Default for PPackOptions {
+    fn default() -> Self {
+        PPackOptions {
+            pack: 100,
+            epochs: 1,
+            lambda: 1e-4,
+            seed: 42,
+            nodes: 8,
+        }
+    }
+}
+
+/// One P-packSVM node: a row shard and its α coefficients.
+pub struct PPackNode {
+    x: Mat,
+    alpha: Vec<f32>,
+    /// Local indices with α ≠ 0 (the node's support vectors).
+    active: Vec<usize>,
+}
+
+pub struct PPackOutput {
+    pub model: TrainedModel,
+    /// Simulated cluster ledger (same cost model semantics as the trainer).
+    pub sim: crate::cluster::SimClock,
+    pub wall_secs: f64,
+    pub rounds: usize,
+    pub n_support: usize,
+}
+
+/// RBF between one vector and one matrix row.
+#[inline]
+fn rbf(a: &[f32], b: &[f32], gamma: f32) -> f32 {
+    let mut d2 = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        let diff = x - y;
+        d2 += diff * diff;
+    }
+    (-gamma * d2).exp()
+}
+
+/// Train a full-kernel SVM with P-packSVM on the simulated cluster.
+pub fn train_ppacksvm(
+    train_ds: &Dataset,
+    gamma: f32,
+    opts: &PPackOptions,
+    cost: CostModel,
+) -> Result<PPackOutput> {
+    anyhow::ensure!(opts.pack >= 1, "pack size must be >= 1");
+    let wall_start = std::time::Instant::now();
+    let n = train_ds.n();
+    let shards = shard_rows(n, opts.nodes);
+    let nodes: Vec<PPackNode> = shards
+        .iter()
+        .map(|r| {
+            let idx: Vec<usize> = r.clone().collect();
+            PPackNode {
+                x: train_ds.x.gather_rows(&idx),
+                alpha: vec![0.0; r.len()],
+                active: Vec::new(),
+            }
+        })
+        .collect();
+    let mut cluster = Cluster::new(nodes, 2, cost);
+    let shard_starts: Vec<usize> = shards.iter().map(|r| r.start).collect();
+    let owner_of = |global: usize| -> (usize, usize) {
+        // Contiguous shards: find the owning node by range.
+        let j = match shard_starts.binary_search(&global) {
+            Ok(j) => j,
+            Err(j) => j - 1,
+        };
+        (j, global - shard_starts[j])
+    };
+
+    let mut rng = Rng::new(opts.seed);
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut scale = 1.0f32; // the s in w = s·Σ α φ(x)
+    let mut t: u64 = 0; // SGD step counter
+    let mut rounds = 0usize;
+
+    for _epoch in 0..opts.epochs {
+        rng.shuffle(&mut order);
+        for pack_rows in order.chunks(opts.pack) {
+            let r = pack_rows.len();
+            // 1. Broadcast the pack (features + labels).
+            let pack_x = train_ds.x.gather_rows(pack_rows);
+            let pack_y: Vec<f32> = pack_rows.iter().map(|&i| train_ds.y[i]).collect();
+            cluster.broadcast_meter(Step::Tron, r * (train_ds.d() + 1) * 4);
+
+            // 2. Distributed pack outputs over local supports.
+            let partials = cluster.par_compute(Step::Tron, |_, node| {
+                let mut o = vec![0.0f32; r];
+                for &l in &node.active {
+                    let a = node.alpha[l];
+                    let xr = node.x.row(l);
+                    for (oi, pi) in o.iter_mut().zip(0..r) {
+                        *oi += a * rbf(xr, pack_x.row(pi), gamma);
+                    }
+                }
+                o
+            });
+            let mut o = cluster.allreduce_sum(Step::Tron, partials);
+            for oi in o.iter_mut() {
+                *oi *= scale;
+            }
+
+            // 3. Master: replay r sequential Pegasos steps with intra-pack
+            //    corrections from the pack kernel (the O(r²) work).
+            let mut q = vec![0.0f32; r * r];
+            for a in 0..r {
+                for b in 0..r {
+                    q[a * r + b] = rbf(pack_x.row(a), pack_x.row(b), gamma);
+                }
+            }
+            let mut updates: Vec<(usize, f32)> = Vec::new(); // (global, Δα unscaled)
+            for i in 0..r {
+                t += 1;
+                let eta = 1.0 / (opts.lambda * t as f32);
+                let shrink = 1.0 - eta * opts.lambda; // = 1 - 1/t
+                // Shrink applies to w, i.e. to the scale.
+                scale *= shrink.max(1e-9);
+                for u in o.iter_mut().take(r).skip(i) {
+                    *u *= shrink.max(1e-9);
+                }
+                if pack_y[i] * o[i] < 1.0 {
+                    // Margin violation: α_i += η y_i (unscaled: η y / s).
+                    let delta_unscaled = eta * pack_y[i] / scale;
+                    updates.push((pack_rows[i], delta_unscaled));
+                    // Correct the not-yet-processed pack outputs.
+                    for jj in (i + 1)..r {
+                        o[jj] += eta * pack_y[i] * q[i * r + jj];
+                    }
+                }
+            }
+
+            // 4. Scatter α updates to owners (metered as one tree pass).
+            cluster.broadcast_meter(Step::Tron, updates.len() * 8);
+            for (global, delta) in updates {
+                let (j, local) = owner_of(global);
+                let node = cluster.node_mut(j);
+                if node.alpha[local] == 0.0 {
+                    node.active.push(local);
+                }
+                node.alpha[local] += delta;
+            }
+            rounds += 1;
+        }
+    }
+
+    // Assemble the model: support vectors with scaled α as a basis-β pair
+    // (prediction shares the formulation-(4) predict path).
+    let mut sv_rows: Vec<usize> = Vec::new();
+    let mut beta: Vec<f32> = Vec::new();
+    for (j, start) in shard_starts.iter().enumerate() {
+        let node = cluster.node(j);
+        for &l in &node.active {
+            let a = node.alpha[l] * scale;
+            if a != 0.0 {
+                sv_rows.push(start + l);
+                beta.push(a);
+            }
+        }
+    }
+    let n_support = sv_rows.len();
+    let basis = train_ds.x.gather_rows(&sv_rows);
+    Ok(PPackOutput {
+        model: TrainedModel {
+            basis,
+            beta,
+            gamma,
+            loss: Loss::SqHinge,
+        },
+        sim: cluster.clock,
+        wall_secs: wall_start.elapsed().as_secs_f64(),
+        rounds,
+        n_support,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::settings::Backend;
+    use crate::data::synth;
+    use crate::runtime::make_backend;
+
+    fn tiny() -> (Dataset, Dataset) {
+        let mut spec = synth::spec("mnist8m_like");
+        spec.n_train = 800;
+        spec.n_test = 200;
+        synth::generate(&spec, 9)
+    }
+
+    #[test]
+    fn learns_separable_clusters() {
+        let (train_ds, test_ds) = tiny();
+        let gamma = 1.0 / (2.0 * 18.0f32 * 18.0);
+        let opts = PPackOptions {
+            pack: 50,
+            epochs: 1,
+            lambda: 1e-4,
+            seed: 1,
+            nodes: 4,
+        };
+        let out = train_ppacksvm(&train_ds, gamma, &opts, CostModel::free()).unwrap();
+        let backend = make_backend(Backend::Native, "artifacts").unwrap();
+        let acc = out.model.accuracy(backend.as_ref(), &test_ds).unwrap();
+        assert!(acc > 0.80, "accuracy {acc}");
+        assert!(out.n_support > 0);
+        assert_eq!(out.rounds, 800usize.div_ceil(50));
+    }
+
+    #[test]
+    fn rounds_scale_with_n_over_r() {
+        let (train_ds, _) = tiny();
+        let gamma = 0.002;
+        for (pack, want) in [(100, 8), (200, 4)] {
+            let opts = PPackOptions {
+                pack,
+                epochs: 1,
+                lambda: 1e-3,
+                seed: 2,
+                nodes: 2,
+            };
+            let out = train_ppacksvm(&train_ds, gamma, &opts, CostModel::free()).unwrap();
+            assert_eq!(out.rounds, want);
+        }
+    }
+
+    #[test]
+    fn comm_instances_are_o_n_over_r() {
+        // The paper's point: P-pack pays ~n/r AllReduce rounds; on a
+        // high-latency tree that dominates.
+        let (train_ds, _) = tiny();
+        let opts = PPackOptions {
+            pack: 100,
+            epochs: 1,
+            lambda: 1e-3,
+            seed: 3,
+            nodes: 8,
+        };
+        let crude = train_ppacksvm(&train_ds, 0.002, &opts, CostModel::hadoop_crude()).unwrap();
+        let mpi = train_ppacksvm(&train_ds, 0.002, &opts, CostModel::mpi()).unwrap();
+        let crude_comm = crude.sim.comm_secs(Step::Tron);
+        let mpi_comm = mpi.sim.comm_secs(Step::Tron);
+        assert!(
+            crude_comm > 50.0 * mpi_comm,
+            "crude {crude_comm} vs mpi {mpi_comm}"
+        );
+    }
+
+    #[test]
+    fn node_count_invariance_of_model() {
+        let (train_ds, test_ds) = tiny();
+        let gamma = 1.0 / (2.0 * 18.0f32 * 18.0);
+        let backend = make_backend(Backend::Native, "artifacts").unwrap();
+        let mut accs = Vec::new();
+        for nodes in [1, 5] {
+            let opts = PPackOptions {
+                pack: 50,
+                epochs: 1,
+                lambda: 1e-4,
+                seed: 4,
+                nodes,
+            };
+            let out = train_ppacksvm(&train_ds, gamma, &opts, CostModel::free()).unwrap();
+            accs.push(out.model.accuracy(backend.as_ref(), &test_ds).unwrap());
+        }
+        // The algorithm is sequential-equivalent: same seed → same updates
+        // regardless of p (up to fp reassociation in the AllReduce).
+        assert!((accs[0] - accs[1]).abs() < 0.02, "{accs:?}");
+    }
+}

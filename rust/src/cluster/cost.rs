@@ -1,0 +1,73 @@
+//! The paper's communication cost model (§4.4): "Let us write one instance
+//! communication cost in the form C + DB where C is communication latency,
+//! D is the cost of communication per byte after leaving out latency, and B
+//! is the number of bytes transferred."
+
+/// Per-instance communication cost parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// C: latency per communication instance, seconds.
+    pub latency_s: f64,
+    /// D: per-byte transfer cost, seconds/byte.
+    pub per_byte_s: f64,
+}
+
+impl CostModel {
+    /// One communication instance of `bytes` bytes: C + D·B.
+    pub fn instance(&self, bytes: usize) -> f64 {
+        self.latency_s + self.per_byte_s * bytes as f64
+    }
+
+    /// The paper's *crude* Hadoop AllReduce: high per-call latency — the
+    /// regime where "the term 5NC dominates" and Covtype speed-up collapses
+    /// (Fig 2 left).
+    pub fn hadoop_crude() -> CostModel {
+        CostModel {
+            latency_s: 30e-3,     // ~30 ms per hop-round on the crude tree
+            per_byte_s: 1.0 / 100e6, // ~100 MB/s commodity network
+        }
+    }
+
+    /// A professional MPI cluster (what P-packSVM ran on): "negligible
+    /// latency" per the paper.
+    pub fn mpi() -> CostModel {
+        CostModel {
+            latency_s: 50e-6,     // ~50 µs
+            per_byte_s: 1.0 / 1e9, // ~1 GB/s
+        }
+    }
+
+    /// Zero-cost model (pure-algorithm runs / unit tests).
+    pub fn free() -> CostModel {
+        CostModel {
+            latency_s: 0.0,
+            per_byte_s: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn instance_is_affine_in_bytes() {
+        let c = CostModel {
+            latency_s: 0.01,
+            per_byte_s: 1e-6,
+        };
+        assert!((c.instance(0) - 0.01).abs() < 1e-12);
+        assert!((c.instance(1000) - 0.011).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hadoop_latency_dominates_small_messages() {
+        let h = CostModel::hadoop_crude();
+        // A beta broadcast of m=1600 floats is latency-bound on crude Hadoop.
+        let bytes = 1600 * 4;
+        assert!(h.latency_s > h.per_byte_s * bytes as f64);
+        // ...but not on MPI.
+        let m = CostModel::mpi();
+        assert!(m.instance(bytes) < h.instance(bytes) / 100.0);
+    }
+}

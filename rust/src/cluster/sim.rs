@@ -1,0 +1,126 @@
+//! Simulated-time ledger: per-step compute and communication seconds.
+//!
+//! `compute` entries are MEASURED single-node wall times (max over nodes per
+//! phase — the synchronous bulk model); `comm` entries come from the
+//! `C + D·B` cost model. Their sum is the simulated end-to-end time a run
+//! would take on a real p-node cluster with those link parameters, which is
+//! what the Fig-2 speed-up plots sweep.
+
+use std::collections::BTreeMap;
+
+use super::cost::CostModel;
+use crate::metrics::Step;
+
+#[derive(Clone, Debug)]
+pub struct SimClock {
+    cost: CostModel,
+    compute: BTreeMap<Step, f64>,
+    comm: BTreeMap<Step, f64>,
+    comm_instances: u64,
+    comm_bytes: u64,
+}
+
+impl SimClock {
+    pub fn new(cost: CostModel) -> Self {
+        SimClock {
+            cost,
+            compute: BTreeMap::new(),
+            comm: BTreeMap::new(),
+            comm_instances: 0,
+            comm_bytes: 0,
+        }
+    }
+
+    pub fn cost(&self) -> CostModel {
+        self.cost
+    }
+
+    pub fn add_compute(&mut self, step: Step, secs: f64) {
+        *self.compute.entry(step).or_default() += secs;
+    }
+
+    /// `rounds` sequential tree levels, each one communication instance of
+    /// `bytes` (edges within a level run in parallel).
+    pub fn add_comm_rounds(&mut self, step: Step, rounds: usize, bytes: usize) {
+        let secs = rounds as f64 * self.cost.instance(bytes);
+        *self.comm.entry(step).or_default() += secs;
+        self.comm_instances += rounds as u64;
+        self.comm_bytes += (rounds * bytes) as u64;
+    }
+
+    pub fn compute_secs(&self, step: Step) -> f64 {
+        self.compute.get(&step).copied().unwrap_or(0.0)
+    }
+
+    pub fn comm_secs(&self, step: Step) -> f64 {
+        self.comm.get(&step).copied().unwrap_or(0.0)
+    }
+
+    pub fn step_secs(&self, step: Step) -> f64 {
+        self.compute_secs(step) + self.comm_secs(step)
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        Step::all().iter().map(|s| self.step_secs(*s)).sum()
+    }
+
+    /// Everything except TRON — the paper's "Other time" (Fig 2).
+    pub fn other_secs(&self) -> f64 {
+        self.total_secs() - self.step_secs(Step::Tron)
+    }
+
+    pub fn comm_instances(&self) -> u64 {
+        self.comm_instances
+    }
+
+    pub fn comm_bytes(&self) -> u64 {
+        self.comm_bytes
+    }
+
+    /// Render a per-step breakdown (Table-4 style).
+    pub fn report(&self) -> String {
+        let mut t = crate::metrics::Table::new(&["step", "compute_s", "comm_s", "total_s"]);
+        for s in Step::all() {
+            if self.step_secs(s) > 0.0 {
+                t.row(&[
+                    s.name().to_string(),
+                    format!("{:.4}", self.compute_secs(s)),
+                    format!("{:.4}", self.comm_secs(s)),
+                    format!("{:.4}", self.step_secs(s)),
+                ]);
+            }
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_accumulates_by_step() {
+        let mut c = SimClock::new(CostModel {
+            latency_s: 0.5,
+            per_byte_s: 0.0,
+        });
+        c.add_compute(Step::Kernel, 2.0);
+        c.add_compute(Step::Kernel, 1.0);
+        c.add_comm_rounds(Step::Tron, 4, 100);
+        assert!((c.compute_secs(Step::Kernel) - 3.0).abs() < 1e-12);
+        assert!((c.comm_secs(Step::Tron) - 2.0).abs() < 1e-12);
+        assert!((c.total_secs() - 5.0).abs() < 1e-12);
+        assert!((c.other_secs() - 3.0).abs() < 1e-12);
+        assert_eq!(c.comm_instances(), 4);
+        assert_eq!(c.comm_bytes(), 400);
+    }
+
+    #[test]
+    fn report_lists_active_steps() {
+        let mut c = SimClock::new(CostModel::free());
+        c.add_compute(Step::Load, 1.0);
+        let r = c.report();
+        assert!(r.contains("load"));
+        assert!(!r.contains("predict"));
+    }
+}

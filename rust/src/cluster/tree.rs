@@ -1,0 +1,144 @@
+//! Arity-k reduction tree over node ids 0..p (heap numbering: node 0 is
+//! the root/master; parent(j) = (j-1)/k). Used by every collective.
+
+/// Tree topology.
+#[derive(Clone, Debug)]
+pub struct Tree {
+    p: usize,
+    arity: usize,
+    depth: usize,
+    bottom_up: Vec<usize>,
+}
+
+impl Tree {
+    pub fn new(p: usize, arity: usize) -> Self {
+        assert!(p > 0, "empty tree");
+        assert!(arity >= 2, "tree arity must be >= 2");
+        // depth = number of edge levels = max over nodes of level(j).
+        let mut depth = 0;
+        for j in 0..p {
+            depth = depth.max(Self::level_of(j, arity));
+        }
+        // Heap numbering gives parent(j) < j, so descending id order is a
+        // valid bottom-up (children-before-parents) schedule.
+        let bottom_up: Vec<usize> = (1..p).rev().collect();
+        Tree {
+            p,
+            arity,
+            depth,
+            bottom_up,
+        }
+    }
+
+    fn level_of(mut j: usize, arity: usize) -> usize {
+        let mut level = 0;
+        while j > 0 {
+            j = (j - 1) / arity;
+            level += 1;
+        }
+        level
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    pub fn arity(&self) -> usize {
+        self.arity
+    }
+
+    /// Number of edge levels (0 for a single node).
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn parent(&self, j: usize) -> Option<usize> {
+        if j == 0 {
+            None
+        } else {
+            Some((j - 1) / self.arity)
+        }
+    }
+
+    pub fn children(&self, j: usize) -> Vec<usize> {
+        (0..self.arity)
+            .map(|c| j * self.arity + 1 + c)
+            .filter(|&c| c < self.p)
+            .collect()
+    }
+
+    /// Node ids in children-before-parents order (root excluded).
+    pub fn bottom_up_order(&self) -> &[usize] {
+        &self.bottom_up
+    }
+
+    /// Level (distance from root) of node j.
+    pub fn level(&self, j: usize) -> usize {
+        Self::level_of(j, self.arity)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binary_tree_structure() {
+        let t = Tree::new(7, 2);
+        assert_eq!(t.parent(0), None);
+        assert_eq!(t.parent(1), Some(0));
+        assert_eq!(t.parent(2), Some(0));
+        assert_eq!(t.parent(5), Some(2));
+        assert_eq!(t.children(0), vec![1, 2]);
+        assert_eq!(t.children(2), vec![5, 6]);
+        assert_eq!(t.depth(), 2);
+    }
+
+    #[test]
+    fn depth_is_logarithmic() {
+        assert_eq!(Tree::new(1, 2).depth(), 0);
+        assert_eq!(Tree::new(2, 2).depth(), 1);
+        assert_eq!(Tree::new(4, 2).depth(), 2);
+        assert_eq!(Tree::new(200, 2).depth(), 7);
+        assert_eq!(Tree::new(200, 4).depth(), 4);
+    }
+
+    #[test]
+    fn every_non_root_has_parent_below_it() {
+        let t = Tree::new(33, 3);
+        for j in 1..33 {
+            assert!(t.parent(j).unwrap() < j);
+        }
+    }
+
+    #[test]
+    fn children_parent_consistency() {
+        let t = Tree::new(20, 3);
+        for j in 0..20 {
+            for c in t.children(j) {
+                assert_eq!(t.parent(c), Some(j));
+            }
+        }
+    }
+
+    #[test]
+    fn bottom_up_visits_children_first() {
+        let t = Tree::new(15, 2);
+        let order = t.bottom_up_order();
+        assert_eq!(order.len(), 14);
+        for (pos, &j) in order.iter().enumerate() {
+            if let Some(parent) = t.parent(j) {
+                if parent != 0 {
+                    let ppos = order.iter().position(|&x| x == parent).unwrap();
+                    assert!(ppos > pos, "parent {parent} before child {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn rejects_unary_tree() {
+        Tree::new(4, 1);
+    }
+}

@@ -1,0 +1,154 @@
+//! Tiny CLI argument parser: `--key value`, `--key=value` and `--flag`
+//! forms, with typed accessors and "unknown flag" validation against a
+//! declared set (no clap offline).
+
+use std::collections::BTreeMap;
+
+use crate::Result;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // "--" terminator: rest is positional
+                    out.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(body.to_string(), v);
+                } else {
+                    out.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Error if any flag is not in the allowed set (catches typos).
+    pub fn validate(&self, allowed: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !allowed.contains(&k.as_str()) {
+                anyhow::bail!(
+                    "unknown flag --{k}; allowed: {}",
+                    allowed
+                        .iter()
+                        .map(|a| format!("--{a}"))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.str_opt(key), Some("true" | "1" | "yes"))
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key} {s:?}: {e}")),
+        }
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> Result<f32> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key} {s:?}: {e}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key} {s:?}: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_key_value_forms() {
+        let a = args(&["--m", "1600", "--dataset=covtype_like", "--verbose"]);
+        assert_eq!(a.usize_or("m", 0).unwrap(), 1600);
+        assert_eq!(a.str_or("dataset", ""), "covtype_like");
+        assert!(a.bool("verbose"));
+        assert!(!a.bool("quiet"));
+    }
+
+    #[test]
+    fn positional_and_terminator() {
+        let a = args(&["train", "--m", "8", "--", "--not-a-flag"]);
+        assert_eq!(a.positional(), &["train", "--not-a-flag"]);
+        assert_eq!(a.usize_or("m", 0).unwrap(), 8);
+    }
+
+    #[test]
+    fn validate_catches_typos() {
+        let a = args(&["--mm", "1600"]);
+        assert!(a.validate(&["m"]).is_err());
+        assert!(a.validate(&["mm"]).is_ok());
+    }
+
+    #[test]
+    fn typed_parse_errors() {
+        let a = args(&["--m", "abc"]);
+        assert!(a.usize_or("m", 0).is_err());
+    }
+
+    #[test]
+    fn defaults_used_when_absent() {
+        let a = args(&[]);
+        assert_eq!(a.usize_or("m", 7).unwrap(), 7);
+        assert_eq!(a.f32_or("lambda", 0.5).unwrap(), 0.5);
+    }
+}

@@ -1,0 +1,11 @@
+//! Configuration substrate: a minimal JSON parser (for the artifact
+//! manifest), a flat `key = value` config-file format for experiments, and
+//! a CLI argument parser (no serde/clap offline).
+
+pub mod args;
+pub mod json;
+pub mod settings;
+
+pub use args::Args;
+pub use json::Json;
+pub use settings::Settings;

@@ -1,0 +1,265 @@
+//! Experiment settings: a typed bundle of everything a training run needs,
+//! loadable from a flat `key = value` file (TOML-subset) and overridable
+//! from CLI flags. This is the single config object threaded through the
+//! launcher, trainer, and benches.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::Result;
+
+/// Which loss / kernel machine to train (paper §2: SVM, KLR, KRR).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Loss {
+    /// Squared hinge (L2-SVM) — the paper's running example.
+    SqHinge,
+    /// Logistic (kernel logistic regression).
+    Logistic,
+    /// Squared (kernel ridge regression).
+    Squared,
+}
+
+impl Loss {
+    pub fn parse(s: &str) -> Result<Loss> {
+        match s {
+            "sqhinge" => Ok(Loss::SqHinge),
+            "logistic" => Ok(Loss::Logistic),
+            "squared" => Ok(Loss::Squared),
+            other => anyhow::bail!("unknown loss {other:?} (sqhinge|logistic|squared)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Loss::SqHinge => "sqhinge",
+            Loss::Logistic => "logistic",
+            Loss::Squared => "squared",
+        }
+    }
+}
+
+/// Basis selection policy (paper §3.2: K-means when m small, random else).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BasisSelection {
+    Random,
+    KMeans,
+    /// The paper's adaptive policy: K-means below the threshold, random above.
+    Auto,
+}
+
+impl BasisSelection {
+    pub fn parse(s: &str) -> Result<BasisSelection> {
+        match s {
+            "random" => Ok(BasisSelection::Random),
+            "kmeans" => Ok(BasisSelection::KMeans),
+            "auto" => Ok(BasisSelection::Auto),
+            other => anyhow::bail!("unknown basis selection {other:?} (random|kmeans|auto)"),
+        }
+    }
+}
+
+/// Compute backend for node-local block math.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// PJRT: load AOT artifacts (JAX+Pallas lowered HLO) — the paper stack.
+    Pjrt,
+    /// Pure-Rust reference math; differential-tested against Pjrt.
+    Native,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend> {
+        match s {
+            "pjrt" => Ok(Backend::Pjrt),
+            "native" => Ok(Backend::Native),
+            other => anyhow::bail!("unknown backend {other:?} (pjrt|native)"),
+        }
+    }
+}
+
+/// Full training-run settings.
+#[derive(Clone, Debug)]
+pub struct Settings {
+    pub dataset: String,
+    /// Number of basis points m.
+    pub m: usize,
+    /// Number of nodes p.
+    pub nodes: usize,
+    pub lambda: f32,
+    pub sigma: f32,
+    pub loss: Loss,
+    pub basis: BasisSelection,
+    pub backend: Backend,
+    /// TRON iteration cap (paper: "typically around 300").
+    pub max_iters: usize,
+    /// Relative gradient-norm stopping tolerance.
+    pub tol: f32,
+    pub seed: u64,
+    /// K-means iterations for basis selection (paper Table 2 used 3).
+    pub kmeans_iters: usize,
+    /// m threshold below which Auto picks K-means.
+    pub kmeans_max_m: usize,
+    pub artifacts_dir: String,
+}
+
+impl Default for Settings {
+    fn default() -> Self {
+        Settings {
+            dataset: "covtype_like".into(),
+            m: 400,
+            nodes: 4,
+            lambda: 0.005,
+            sigma: 0.7,
+            loss: Loss::SqHinge,
+            basis: BasisSelection::Random,
+            backend: Backend::Pjrt,
+            max_iters: 300,
+            tol: 1e-3,
+            seed: 42,
+            kmeans_iters: 3,
+            kmeans_max_m: 2048,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl Settings {
+    pub fn gamma(&self) -> f32 {
+        1.0 / (2.0 * self.sigma * self.sigma)
+    }
+
+    /// Parse a flat `key = value` file (`#` comments, blank lines ok).
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Settings> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.as_ref().display()))?;
+        let mut kv = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            kv.insert(k.trim().to_string(), v.trim().trim_matches('"').to_string());
+        }
+        let mut s = Settings::default();
+        s.apply(&kv)?;
+        Ok(s)
+    }
+
+    /// Apply string key/values (from file or CLI) onto the settings.
+    pub fn apply(&mut self, kv: &BTreeMap<String, String>) -> Result<()> {
+        for (k, v) in kv {
+            match k.as_str() {
+                "dataset" => self.dataset = v.clone(),
+                "m" => self.m = v.parse().map_err(|e| anyhow::anyhow!("m: {e}"))?,
+                "nodes" => self.nodes = v.parse().map_err(|e| anyhow::anyhow!("nodes: {e}"))?,
+                "lambda" => self.lambda = v.parse().map_err(|e| anyhow::anyhow!("lambda: {e}"))?,
+                "sigma" => self.sigma = v.parse().map_err(|e| anyhow::anyhow!("sigma: {e}"))?,
+                "loss" => self.loss = Loss::parse(v)?,
+                "basis" => self.basis = BasisSelection::parse(v)?,
+                "backend" => self.backend = Backend::parse(v)?,
+                "max_iters" => {
+                    self.max_iters = v.parse().map_err(|e| anyhow::anyhow!("max_iters: {e}"))?
+                }
+                "tol" => self.tol = v.parse().map_err(|e| anyhow::anyhow!("tol: {e}"))?,
+                "seed" => self.seed = v.parse().map_err(|e| anyhow::anyhow!("seed: {e}"))?,
+                "kmeans_iters" => {
+                    self.kmeans_iters =
+                        v.parse().map_err(|e| anyhow::anyhow!("kmeans_iters: {e}"))?
+                }
+                "kmeans_max_m" => {
+                    self.kmeans_max_m =
+                        v.parse().map_err(|e| anyhow::anyhow!("kmeans_max_m: {e}"))?
+                }
+                "artifacts_dir" => self.artifacts_dir = v.clone(),
+                other => anyhow::bail!("unknown setting {other:?}"),
+            }
+        }
+        self.validate()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.m == 0 {
+            anyhow::bail!("m must be > 0");
+        }
+        if self.nodes == 0 {
+            anyhow::bail!("nodes must be > 0");
+        }
+        if self.lambda <= 0.0 {
+            anyhow::bail!("lambda must be > 0");
+        }
+        if self.sigma <= 0.0 {
+            anyhow::bail!("sigma must be > 0");
+        }
+        Ok(())
+    }
+
+    /// Load the per-dataset hyper-parameters from the Table-3 specs.
+    pub fn with_dataset_defaults(mut self, name: &str) -> Settings {
+        let spec = crate::data::synth::spec(name);
+        self.dataset = name.to_string();
+        self.lambda = spec.lambda;
+        self.sigma = spec.sigma;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        Settings::default().validate().unwrap();
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("dkm_settings_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("exp.conf");
+        std::fs::write(
+            &path,
+            "# experiment\ndataset = vehicle_like\nm = 1600\nloss = logistic\nbackend = native\nsigma = 2.0\n",
+        )
+        .unwrap();
+        let s = Settings::from_file(&path).unwrap();
+        assert_eq!(s.dataset, "vehicle_like");
+        assert_eq!(s.m, 1600);
+        assert_eq!(s.loss, Loss::Logistic);
+        assert_eq!(s.backend, Backend::Native);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        let mut s = Settings::default();
+        let mut kv = BTreeMap::new();
+        kv.insert("bogus".to_string(), "1".to_string());
+        assert!(s.apply(&kv).is_err());
+        let mut kv = BTreeMap::new();
+        kv.insert("m".to_string(), "zero".to_string());
+        assert!(s.apply(&kv).is_err());
+        let mut kv = BTreeMap::new();
+        kv.insert("m".to_string(), "0".to_string());
+        assert!(s.apply(&kv).is_err());
+    }
+
+    #[test]
+    fn gamma_matches_sigma() {
+        let s = Settings {
+            sigma: 2.0,
+            ..Settings::default()
+        };
+        assert!((s.gamma() - 0.125).abs() < 1e-7);
+    }
+
+    #[test]
+    fn dataset_defaults_pull_spec() {
+        let s = Settings::default().with_dataset_defaults("vehicle_like");
+        assert_eq!(s.lambda, 8.0);
+        assert_eq!(s.sigma, 2.0);
+    }
+}

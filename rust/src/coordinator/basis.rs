@@ -1,0 +1,384 @@
+//! Basis selection (paper §3.2) + the shared `Basis` bundle the trainer
+//! threads through kernel computation, W-share setup and prediction.
+//!
+//! * **Random**: each node samples its share of the m basis points from its
+//!   local rows (Algorithm 1 step 2); basis ⊂ training set, so W's row
+//!   block is a subset of C's rows — no extra kernel work.
+//! * **K-means**: cluster centers from [`crate::kmeans`]; better accuracy
+//!   at small m, but centers are NOT training rows, so W must be computed
+//!   explicitly (its row blocks are distributed round-robin).
+//! * **Auto**: the paper's policy — K-means while m ≤ threshold, random
+//!   beyond ("we use a distributed K-means algorithm when m is not too
+//!   large, and switch to random selection otherwise").
+
+use std::rc::Rc;
+
+use crate::cluster::Cluster;
+use crate::config::settings::{BasisSelection, Settings};
+use crate::linalg::Mat;
+use crate::metrics::Step;
+use crate::rng::Rng;
+use crate::runtime::tiles::{TiledMatrix, TB, TM};
+use crate::runtime::Compute;
+use crate::Result;
+
+use super::node::{pad_feature_tiles, WorkerNode, WShare};
+
+/// The selected basis, padded and ready for kernel tile calls.
+#[derive(Clone)]
+pub struct Basis {
+    /// m × d basis points (unpadded).
+    pub z: Mat,
+    /// TM × dpad padded tiles of z.
+    pub z_tiles: Vec<Vec<f32>>,
+    /// Per-node (local_row, global_k) pairs when basis ⊂ training rows.
+    pub train_rows: Option<Vec<Vec<(usize, usize)>>>,
+}
+
+impl Basis {
+    pub fn m(&self) -> usize {
+        self.z.rows()
+    }
+
+    pub fn col_tiles(&self) -> usize {
+        self.m().div_ceil(TM).max(1)
+    }
+}
+
+/// Build basis tiles from an m × d matrix.
+pub fn tiles_of(z: &Mat, dpad: usize) -> Vec<Vec<f32>> {
+    // Reuse the feature-tile padding but at TM granularity == TB (same
+    // constant here; assert to catch future divergence).
+    assert_eq!(TB, TM, "basis tiling assumes TB == TM");
+    pad_feature_tiles(z, dpad)
+}
+
+/// Random selection (Algorithm 1 step 2): each node contributes a share of
+/// m proportional to its shard, sampled without replacement.
+pub fn select_random(
+    cluster: &mut Cluster<WorkerNode>,
+    m: usize,
+    d: usize,
+    dpad: usize,
+    seed: u64,
+) -> Result<Basis> {
+    let p = cluster.p();
+    let sizes: Vec<usize> = (0..p).map(|j| cluster.node(j).n_local()).collect();
+    let total: usize = sizes.iter().sum();
+    if m > total {
+        anyhow::bail!("m={m} exceeds training size n={total}");
+    }
+    let mut rng = Rng::new(seed ^ 0xBA515);
+    let mut shares: Vec<usize> = sizes.iter().map(|&s| m * s / total).collect();
+    let mut assigned: usize = shares.iter().sum();
+    let mut j = 0;
+    while assigned < m {
+        if shares[j % p] < sizes[j % p] {
+            shares[j % p] += 1;
+            assigned += 1;
+        }
+        j += 1;
+    }
+
+    let mut z = Mat::zeros(m, d);
+    let mut train_rows: Vec<Vec<(usize, usize)>> = vec![Vec::new(); p];
+    let mut k = 0;
+    for (node_id, &share) in shares.iter().enumerate() {
+        let mut rng_j = rng.fork(node_id as u64);
+        let locals = rng_j.sample_indices(sizes[node_id], share);
+        for local in locals {
+            z.row_mut(k).copy_from_slice(cluster.node(node_id).x.row(local));
+            train_rows[node_id].push((local, k));
+            k += 1;
+        }
+    }
+    debug_assert_eq!(k, m);
+
+    // Step 2 communication: the basis points are broadcast to all nodes
+    // (m·d floats through the tree) — the O(m²/p)-class cost of §3.1.
+    cluster.broadcast_meter(Step::BasisBcast, m * d * 4);
+
+    Ok(Basis {
+        z_tiles: tiles_of(&z, dpad),
+        z,
+        train_rows: Some(train_rows),
+    })
+}
+
+/// K-means selection: centers from the distributed clustering substrate.
+pub fn select_kmeans(
+    cluster: &mut Cluster<WorkerNode>,
+    backend: &Rc<dyn Compute>,
+    m: usize,
+    iters: usize,
+    d: usize,
+    dpad: usize,
+    seed: u64,
+) -> Result<Basis> {
+    let res = crate::kmeans::distributed_kmeans(cluster, backend, m, iters, d, dpad, seed)?;
+    cluster.broadcast_meter(Step::BasisBcast, m * d * 4);
+    Ok(Basis {
+        z_tiles: tiles_of(&res.centroids, dpad),
+        z: res.centroids,
+        train_rows: None,
+    })
+}
+
+/// The paper's adaptive policy.
+pub fn select(
+    cluster: &mut Cluster<WorkerNode>,
+    backend: &Rc<dyn Compute>,
+    settings: &Settings,
+    d: usize,
+    dpad: usize,
+) -> Result<Basis> {
+    let use_kmeans = match settings.basis {
+        BasisSelection::Random => false,
+        BasisSelection::KMeans => true,
+        BasisSelection::Auto => settings.m <= settings.kmeans_max_m,
+    };
+    if use_kmeans {
+        select_kmeans(
+            cluster,
+            backend,
+            settings.m,
+            settings.kmeans_iters,
+            d,
+            dpad,
+            settings.seed,
+        )
+    } else {
+        select_random(cluster, settings.m, d, dpad, settings.seed)
+    }
+}
+
+/// Install each node's W share for the chosen basis.
+///
+/// Random basis: W rows come from C rows (FromC). K-means basis: W row
+/// blocks are computed explicitly, round-robin over nodes, with the same
+/// kernel tile module (the extra cost the paper attributes to K-means
+/// basis: "since the basis points do not form a subset of the training
+/// points, W needs to be computed").
+pub fn install_w_shares(
+    cluster: &mut Cluster<WorkerNode>,
+    backend: &Rc<dyn Compute>,
+    basis: &Basis,
+    gamma: f32,
+    dpad: usize,
+) -> Result<()> {
+    let p = cluster.p();
+    match &basis.train_rows {
+        Some(rows_per_node) => {
+            for j in 0..p {
+                cluster.node_mut(j).w_share = WShare::FromC(rows_per_node[j].clone());
+            }
+            Ok(())
+        }
+        None => {
+            let m = basis.m();
+            let shards = crate::data::shard_rows(m, p);
+            // Build each node's explicit W row block via kernel tiles.
+            let z_tiles = basis.z_tiles.clone();
+            let z = basis.z.clone();
+            let backend2 = Rc::clone(backend);
+            cluster.try_par_compute(Step::Kernel, |j, node| {
+                let range = shards[j].clone();
+                let rows = range.len();
+                let k0 = range.start;
+                let mut block = TiledMatrix::zeros(rows.max(1), m);
+                if rows > 0 {
+                    let idx: Vec<usize> = range.collect();
+                    let sub = z.gather_rows(&idx);
+                    let sub_tiles = pad_feature_tiles(&sub, dpad);
+                    for (i, x_tile) in sub_tiles.iter().enumerate() {
+                        for (jj, z_tile) in z_tiles.iter().enumerate() {
+                            let tile = backend2.kernel_block(x_tile, z_tile, dpad, gamma)?;
+                            block.tile_mut(i, jj).copy_from_slice(&tile);
+                        }
+                    }
+                }
+                node.w_share = if rows > 0 {
+                    WShare::Explicit { k0, block }
+                } else {
+                    WShare::FromC(Vec::new())
+                };
+                Ok(())
+            })?;
+            Ok(())
+        }
+    }
+}
+
+/// Stage-wise basis growth (paper §3): append `extra` fresh random training
+/// rows to the basis, avoiding rows already in it. Returns the global
+/// indices of the new points per node.
+pub fn grow_random(
+    cluster: &mut Cluster<WorkerNode>,
+    basis: &mut Basis,
+    extra: usize,
+    d: usize,
+    dpad: usize,
+    seed: u64,
+) -> Result<()> {
+    let p = cluster.p();
+    let mut train_rows = basis
+        .train_rows
+        .take()
+        .ok_or_else(|| anyhow::anyhow!("stage-wise growth requires a training-row basis"))?;
+    let mut used: Vec<std::collections::HashSet<usize>> = train_rows
+        .iter()
+        .map(|rows| rows.iter().map(|&(l, _)| l).collect())
+        .collect();
+    let sizes: Vec<usize> = (0..p).map(|j| cluster.node(j).n_local()).collect();
+    let free_total: usize = sizes
+        .iter()
+        .zip(&used)
+        .map(|(&s, u)| s - u.len())
+        .sum();
+    if extra > free_total {
+        basis.train_rows = Some(train_rows);
+        anyhow::bail!("cannot grow basis by {extra}: only {free_total} unused rows");
+    }
+
+    let m_old = basis.m();
+    let mut z_new = Mat::zeros(m_old + extra, d);
+    for r in 0..m_old {
+        z_new.row_mut(r).copy_from_slice(basis.z.row(r));
+    }
+    let mut rng = Rng::new(seed ^ 0x57A6E);
+    let mut k = m_old;
+    let mut node_cursor = 0usize;
+    while k < m_old + extra {
+        let j = node_cursor % p;
+        node_cursor += 1;
+        if used[j].len() >= sizes[j] {
+            continue;
+        }
+        // Rejection-sample an unused local row.
+        let local = loop {
+            let cand = rng.below(sizes[j]);
+            if !used[j].contains(&cand) {
+                break cand;
+            }
+        };
+        used[j].insert(local);
+        z_new.row_mut(k).copy_from_slice(cluster.node(j).x.row(local));
+        train_rows[j].push((local, k));
+        k += 1;
+    }
+    basis.z = z_new;
+    basis.z_tiles = tiles_of(&basis.z, dpad);
+    basis.train_rows = Some(train_rows);
+    // Only the new basis points transit the tree.
+    cluster.broadcast_meter(Step::BasisBcast, extra * d * 4);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::CostModel;
+    use crate::data::{shard_rows, synth};
+
+    fn build(n: usize, p: usize) -> (Cluster<WorkerNode>, usize, usize) {
+        let ds = synth::covtype_like(n, 3);
+        let d = ds.d();
+        let dpad = 64;
+        let shards = shard_rows(n, p);
+        let nodes: Vec<WorkerNode> = shards
+            .iter()
+            .map(|r| {
+                let idx: Vec<usize> = r.clone().collect();
+                WorkerNode::new(ds.x.gather_rows(&idx), ds.y[r.clone()].to_vec(), dpad)
+            })
+            .collect();
+        (Cluster::new(nodes, 2, CostModel::free()), d, dpad)
+    }
+
+    #[test]
+    fn random_basis_rows_are_training_rows() {
+        let (mut cl, d, dpad) = build(500, 4);
+        let basis = select_random(&mut cl, 60, d, dpad, 7).unwrap();
+        assert_eq!(basis.m(), 60);
+        let rows = basis.train_rows.as_ref().unwrap();
+        let total: usize = rows.iter().map(|r| r.len()).sum();
+        assert_eq!(total, 60);
+        // each recorded (local, k) matches the stored z row
+        for (j, node_rows) in rows.iter().enumerate() {
+            for &(local, k) in node_rows {
+                assert_eq!(cl.node(j).x.row(local), basis.z.row(k), "node {j}");
+            }
+        }
+        // global ks are a permutation of 0..m
+        let mut ks: Vec<usize> = rows.iter().flatten().map(|&(_, k)| k).collect();
+        ks.sort_unstable();
+        assert_eq!(ks, (0..60).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn random_basis_rejects_m_over_n() {
+        let (mut cl, d, dpad) = build(50, 2);
+        assert!(select_random(&mut cl, 51, d, dpad, 1).is_err());
+    }
+
+    #[test]
+    fn grow_random_appends_and_warm_start_mapping_stays() {
+        let (mut cl, d, dpad) = build(400, 3);
+        let mut basis = select_random(&mut cl, 40, d, dpad, 9).unwrap();
+        let z_before = basis.z.clone();
+        grow_random(&mut cl, &mut basis, 24, d, dpad, 10).unwrap();
+        assert_eq!(basis.m(), 64);
+        // old rows unchanged (warm-start contract)
+        for r in 0..40 {
+            assert_eq!(basis.z.row(r), z_before.row(r));
+        }
+        // no duplicate locals per node
+        for rows in basis.train_rows.as_ref().unwrap() {
+            let set: std::collections::HashSet<usize> =
+                rows.iter().map(|&(l, _)| l).collect();
+            assert_eq!(set.len(), rows.len());
+        }
+    }
+
+    #[test]
+    fn install_w_shares_fromc() {
+        let (mut cl, d, dpad) = build(300, 2);
+        let basis = select_random(&mut cl, 32, d, dpad, 5).unwrap();
+        let backend: Rc<dyn Compute> =
+            Rc::new(crate::runtime::backend::NativeCompute::new());
+        install_w_shares(&mut cl, &backend, &basis, 0.5, dpad).unwrap();
+        let mut total = 0;
+        for j in 0..cl.p() {
+            match &cl.node(j).w_share {
+                WShare::FromC(rows) => total += rows.len(),
+                _ => panic!("expected FromC"),
+            }
+        }
+        assert_eq!(total, 32);
+    }
+
+    #[test]
+    fn install_w_shares_explicit_for_kmeans_basis() {
+        let (mut cl, d, dpad) = build(300, 3);
+        let backend: Rc<dyn Compute> =
+            Rc::new(crate::runtime::backend::NativeCompute::new());
+        let basis = select_kmeans(&mut cl, &backend, 20, 2, d, dpad, 3).unwrap();
+        assert!(basis.train_rows.is_none());
+        install_w_shares(&mut cl, &backend, &basis, 0.5, dpad).unwrap();
+        let mut rows_seen = 0;
+        for j in 0..cl.p() {
+            if let WShare::Explicit { k0, block } = &cl.node(j).w_share {
+                // W row k0+r against basis: diagonal entries must be 1
+                // (kernel of a point with itself).
+                for r in 0..block.rows() {
+                    let diag = block.at(r, k0 + r);
+                    assert!((diag - 1.0).abs() < 1e-4, "diag {diag}");
+                }
+                rows_seen += block.rows();
+            } else {
+                panic!("expected explicit W share");
+            }
+        }
+        assert_eq!(rows_seen, 20);
+    }
+}

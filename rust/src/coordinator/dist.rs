@@ -1,0 +1,225 @@
+//! Steps 4a–4c of Algorithm 1: distributed evaluation of f, ∇f and H·d for
+//!
+//! ```text
+//! f(β) = λ/2 βᵀWβ + L(Cβ, y)
+//! ∇f   = λWβ + Cᵀ D (Cβ − y)
+//! H·d  = λWd + Cᵀ D C d
+//! ```
+//!
+//! Per evaluation: β (or d) is broadcast down the tree; every node computes
+//! its row-block partials with tile ops on the compute backend; partial
+//! m-vectors and scalars are AllReduce-summed back up. The master (node 0)
+//! then assembles f/g/Hd — all O(m) work, exactly the paper's split.
+
+use std::rc::Rc;
+
+use crate::cluster::Cluster;
+use crate::config::settings::Loss;
+use crate::metrics::Step;
+use crate::runtime::tiles::TM;
+use crate::runtime::Compute;
+use crate::Result;
+
+use super::node::{pad_m_tiles, unpad_m_tiles, WorkerNode};
+use super::tron::Objective;
+
+/// The distributed formulation-(4) objective over a simulated cluster.
+pub struct DistProblem<'a> {
+    pub cluster: &'a mut Cluster<WorkerNode>,
+    pub backend: Rc<dyn Compute>,
+    pub m: usize,
+    pub lambda: f32,
+    pub loss: Loss,
+    /// Count of fg / hd evaluations (the 4a/4b/4c call counts of §4.4).
+    pub fg_evals: usize,
+    pub hd_evals: usize,
+}
+
+impl<'a> DistProblem<'a> {
+    pub fn new(
+        cluster: &'a mut Cluster<WorkerNode>,
+        backend: Rc<dyn Compute>,
+        m: usize,
+        lambda: f32,
+        loss: Loss,
+    ) -> Self {
+        DistProblem {
+            cluster,
+            backend,
+            m,
+            lambda,
+            loss,
+            fg_evals: 0,
+            hd_evals: 0,
+        }
+    }
+
+    fn col_tiles(&self) -> usize {
+        self.m.div_ceil(TM).max(1)
+    }
+
+    /// Node-local loss+gradient partial for one node. Returns
+    /// (loss_partial, reg_partial, grad_tiles) and refreshes the node's
+    /// cached Gauss-Newton diagonal.
+    fn node_fg(
+        node: &mut WorkerNode,
+        backend: &dyn Compute,
+        loss: Loss,
+        v_tiles: &[Vec<f32>],
+        beta: &[f32],
+        lambda: f32,
+    ) -> Result<(f32, f32, Vec<Vec<f32>>)> {
+        let ct = node.c.col_tiles();
+        let mut loss_partial = 0.0f32;
+        let mut grad_tiles = vec![vec![0.0f32; TM]; ct];
+        assert_eq!(
+            node.c_prep.len(),
+            node.row_tiles(),
+            "prepare_hot must run before TRON"
+        );
+        for i in 0..node.row_tiles() {
+            if ct == 1 {
+                // Fused per-tile module: one dispatch instead of three.
+                let out = backend.fgrad_p(
+                    loss,
+                    &node.c_prep[i][0],
+                    &v_tiles[0],
+                    &node.y_prep[i],
+                    &node.mask_prep[i],
+                )?;
+                loss_partial += out.loss;
+                for (g, v) in grad_tiles[0].iter_mut().zip(&out.vec) {
+                    *g += v;
+                }
+                node.dcoef_tiles[i] = out.dcoef;
+            } else {
+                // o = Σ_j C_ij β_j
+                let mut o = vec![0.0f32; crate::runtime::tiles::TB];
+                for j in 0..ct {
+                    let part = backend.matvec_p(&node.c_prep[i][j], &v_tiles[j])?;
+                    for (a, b) in o.iter_mut().zip(&part) {
+                        *a += b;
+                    }
+                }
+                let stage = backend.loss_stage(loss, &o, &node.y_tiles[i], &node.masks[i])?;
+                loss_partial += stage.loss;
+                for j in 0..ct {
+                    let part = backend.matvec_t_p(&node.c_prep[i][j], &stage.vec)?;
+                    for (g, v) in grad_tiles[j].iter_mut().zip(&part) {
+                        *g += v;
+                    }
+                }
+                node.dcoef_tiles[i] = stage.dcoef;
+            }
+        }
+        // Regularizer part: this node's (Wβ) entries.
+        let mut reg_partial = 0.0f32;
+        for (k, wv) in node.wv_entries(backend, v_tiles)? {
+            reg_partial += beta[k] * wv;
+            grad_tiles[k / TM][k % TM] += lambda * wv;
+        }
+        Ok((loss_partial, reg_partial, grad_tiles))
+    }
+
+    /// Node-local Hd partial using the cached diagonal.
+    fn node_hd(
+        node: &WorkerNode,
+        backend: &dyn Compute,
+        v_tiles: &[Vec<f32>],
+        lambda: f32,
+    ) -> Result<Vec<Vec<f32>>> {
+        let ct = node.c.col_tiles();
+        let mut hd_tiles = vec![vec![0.0f32; TM]; ct];
+        for i in 0..node.row_tiles() {
+            if ct == 1 {
+                let part = backend.hd_p(&node.c_prep[i][0], &v_tiles[0], &node.dcoef_tiles[i])?;
+                for (h, v) in hd_tiles[0].iter_mut().zip(&part) {
+                    *h += v;
+                }
+            } else {
+                let mut z = vec![0.0f32; crate::runtime::tiles::TB];
+                for j in 0..ct {
+                    let part = backend.matvec_p(&node.c_prep[i][j], &v_tiles[j])?;
+                    for (a, b) in z.iter_mut().zip(&part) {
+                        *a += b;
+                    }
+                }
+                for (zi, w) in z.iter_mut().zip(&node.dcoef_tiles[i]) {
+                    *zi *= w;
+                }
+                for j in 0..ct {
+                    let part = backend.matvec_t_p(&node.c_prep[i][j], &z)?;
+                    for (h, v) in hd_tiles[j].iter_mut().zip(&part) {
+                        *h += v;
+                    }
+                }
+            }
+        }
+        // λ(Wd) entries.
+        for (k, wv) in node.wv_entries(backend, v_tiles)? {
+            hd_tiles[k / TM][k % TM] += lambda * wv;
+        }
+        Ok(hd_tiles)
+    }
+}
+
+impl Objective for DistProblem<'_> {
+    fn dim(&self) -> usize {
+        self.m
+    }
+
+    /// Steps 4a + 4b: broadcast β; nodes compute partials; two AllReduce
+    /// instances (scalars for f, an m-vector for ∇f) — the paper's call
+    /// structure.
+    fn eval_fg(&mut self, beta: &[f32]) -> Result<(f64, Vec<f32>)> {
+        assert_eq!(beta.len(), self.m);
+        self.fg_evals += 1;
+        let v_tiles = pad_m_tiles(beta, self.col_tiles());
+        self.cluster
+            .broadcast_meter(Step::Tron, self.m * std::mem::size_of::<f32>());
+        let backend = Rc::clone(&self.backend);
+        let loss = self.loss;
+        let lambda = self.lambda;
+        let partials = self.cluster.try_par_compute(Step::Tron, |_, node| {
+            Self::node_fg(node, backend.as_ref(), loss, &v_tiles, beta, lambda)
+        })?;
+        // AllReduce 1: the two scalars (4a).
+        let scalar_partials: Vec<Vec<f32>> = partials
+            .iter()
+            .map(|(l, r, _)| vec![*l, *r])
+            .collect();
+        let scalars = self.cluster.allreduce_sum(Step::Tron, scalar_partials);
+        // AllReduce 2: the gradient m-vector (4b).
+        let grad_partials: Vec<Vec<f32>> = partials
+            .into_iter()
+            .map(|(_, _, g)| g.concat())
+            .collect();
+        let grad_padded = self.cluster.allreduce_sum(Step::Tron, grad_partials);
+        let grad_tiles: Vec<Vec<f32>> = grad_padded
+            .chunks(TM)
+            .map(|c| c.to_vec())
+            .collect();
+        let grad = unpad_m_tiles(&grad_tiles, self.m);
+        let f = 0.5 * self.lambda as f64 * scalars[1] as f64 + scalars[0] as f64;
+        Ok((f, grad))
+    }
+
+    /// Step 4c: same sequence as the gradient with β replaced by d and the
+    /// cached D diagonal.
+    fn eval_hd(&mut self, d: &[f32]) -> Result<Vec<f32>> {
+        assert_eq!(d.len(), self.m);
+        self.hd_evals += 1;
+        let v_tiles = pad_m_tiles(d, self.col_tiles());
+        self.cluster
+            .broadcast_meter(Step::Tron, self.m * std::mem::size_of::<f32>());
+        let backend = Rc::clone(&self.backend);
+        let lambda = self.lambda;
+        let partials = self.cluster.try_par_compute(Step::Tron, |_, node| {
+            Self::node_hd(node, backend.as_ref(), &v_tiles, lambda)
+        })?;
+        let hd_partials: Vec<Vec<f32>> = partials.into_iter().map(|t| t.concat()).collect();
+        let hd_padded = self.cluster.allreduce_sum(Step::Tron, hd_partials);
+        let hd_tiles: Vec<Vec<f32>> = hd_padded.chunks(TM).map(|c| c.to_vec()).collect();
+        Ok(unpad_m_tiles(&hd_tiles, self.m))
+    }
+}

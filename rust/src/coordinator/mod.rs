@@ -1,0 +1,25 @@
+//! The paper's system contribution: Algorithm 1 — distributed training of
+//! the Nyström formulation (4) with TRON over an AllReduce tree.
+//!
+//! * [`node`] — per-node state: data shard, padded row tiles, the C row
+//!   block, and the node's share of W.
+//! * [`dist`] — the distributed function / gradient / Hessian-vector
+//!   products (steps 4a–4c): node-local tile ops + AllReduce.
+//! * [`tron`] — the trust-region Newton solver (Lin–Weng–Keerthi) run by
+//!   the master.
+//! * [`basis`] — basis selection: random (paper's large-m default),
+//!   distributed K-means (small m), and the auto policy of §3.2.
+//! * [`trainer`] — the end-to-end Algorithm-1 driver + stage-wise basis
+//!   growth (§3, "Stage-wise addition of basis points").
+//! * [`predict`] — distributed test-set scoring with the trained model.
+
+pub mod basis;
+pub mod dist;
+pub mod node;
+pub mod predict;
+pub mod trainer;
+pub mod tron;
+
+pub use node::WorkerNode;
+pub use trainer::{train, TrainOutput, TrainedModel};
+pub use tron::{TronOptions, TronStats};

@@ -1,0 +1,334 @@
+//! Per-node worker state for Algorithm 1.
+//!
+//! Each of the p nodes owns a row shard of the training data, the matching
+//! row block of C (tiled for the fixed-shape AOT modules), and its share of
+//! W: either references into its own C rows (random basis ⊂ training set —
+//! the paper's step-3 observation that "the corresponding row block of W is
+//! a subset of the C row block") or an explicitly computed W row block
+//! (K-means basis, which is not a subset — §3.2).
+
+use crate::linalg::Mat;
+use crate::runtime::backend::Prepared;
+use crate::runtime::tiles::{row_masks, TiledMatrix, TB, TM};
+use crate::runtime::Compute;
+use crate::Result;
+
+/// How this node's share of W is represented.
+#[derive(Clone, Debug)]
+pub enum WShare {
+    /// Basis points are training rows: (local_row, global_basis_index)
+    /// pairs — W rows come for free from C rows.
+    FromC(Vec<(usize, usize)>),
+    /// Explicit W row block for global basis indices [k0, k0+rows):
+    /// computed kernel values (rows × m), tiled.
+    Explicit { k0: usize, block: TiledMatrix },
+}
+
+/// One simulated worker node.
+pub struct WorkerNode {
+    /// Local feature shard (n_j × d), unpadded.
+    pub x: Mat,
+    /// Local labels.
+    pub y: Vec<f32>,
+    /// Feature row tiles padded to (TB × dpad), one per row tile.
+    pub x_tiles: Vec<Vec<f32>>,
+    /// Row-validity masks per tile.
+    pub masks: Vec<Vec<f32>>,
+    /// Label tiles (padded with zeros).
+    pub y_tiles: Vec<Vec<f32>>,
+    /// Kernel row block C_j (n_j × m), tiled.
+    pub c: TiledMatrix,
+    /// This node's share of W.
+    pub w_share: WShare,
+    /// Cached Gauss-Newton diagonal per row tile (from the last f/g eval at
+    /// the current β) — consumed by the Hd products of step 4c.
+    pub dcoef_tiles: Vec<Vec<f32>>,
+    /// Padded feature width in use.
+    pub dpad: usize,
+    /// Prepared (device-resident on PJRT) operands for the TRON hot path:
+    /// C tiles, labels and masks. Built by [`WorkerNode::prepare_hot`]
+    /// after step 3; every f/g/Hd call then ships only O(TB + TM) bytes.
+    pub c_prep: Vec<Vec<Prepared>>,
+    pub y_prep: Vec<Prepared>,
+    pub mask_prep: Vec<Prepared>,
+    /// Prepared explicit W row-block tiles (K-means basis only).
+    pub w_prep: Vec<Vec<Prepared>>,
+    /// Prepared feature row tiles (for repeated kernel-tile calls).
+    pub x_prep: Vec<Prepared>,
+}
+
+impl WorkerNode {
+    /// Build a node from its data shard (pads feature tiles; C comes later
+    /// in step 3).
+    pub fn new(x: Mat, y: Vec<f32>, dpad: usize) -> Self {
+        assert!(dpad >= x.cols());
+        let n_j = x.rows();
+        let x_tiles = pad_feature_tiles(&x, dpad);
+        let masks = row_masks(n_j);
+        let y_tiles = pad_label_tiles(&y);
+        WorkerNode {
+            c: TiledMatrix::zeros(n_j, 0),
+            dcoef_tiles: vec![vec![0.0; TB]; x_tiles.len()],
+            x: x.clone(),
+            y,
+            x_tiles,
+            masks,
+            y_tiles,
+            w_share: WShare::FromC(Vec::new()),
+            dpad,
+            c_prep: Vec::new(),
+            y_prep: Vec::new(),
+            mask_prep: Vec::new(),
+            w_prep: Vec::new(),
+            x_prep: Vec::new(),
+        }
+    }
+
+    /// Prepare the hot-path operands (one upload per C tile; labels and
+    /// masks once). Must be called after [`WorkerNode::compute_c_block`]
+    /// and again after any stage-wise growth.
+    pub fn prepare_hot(&mut self, backend: &dyn Compute) -> Result<()> {
+        self.c_prep.clear();
+        for i in 0..self.c.row_tiles() {
+            let mut row = Vec::with_capacity(self.c.col_tiles());
+            for j in 0..self.c.col_tiles() {
+                row.push(backend.prepare(self.c.tile(i, j), &[TB, TM])?);
+            }
+            self.c_prep.push(row);
+        }
+        if self.y_prep.len() != self.y_tiles.len() {
+            self.y_prep = self
+                .y_tiles
+                .iter()
+                .map(|t| backend.prepare(t, &[TB]))
+                .collect::<Result<_>>()?;
+            self.mask_prep = self
+                .masks
+                .iter()
+                .map(|t| backend.prepare(t, &[TB]))
+                .collect::<Result<_>>()?;
+        }
+        self.w_prep.clear();
+        if let WShare::Explicit { block, .. } = &self.w_share {
+            for i in 0..block.row_tiles() {
+                let mut row = Vec::with_capacity(block.col_tiles());
+                for j in 0..block.col_tiles() {
+                    row.push(backend.prepare(block.tile(i, j), &[TB, TM])?);
+                }
+                self.w_prep.push(row);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn n_local(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn row_tiles(&self) -> usize {
+        self.x_tiles.len()
+    }
+
+    /// Step 3: (re)compute the C row block columns for basis tiles
+    /// `dirty_cols` against the padded basis tiles `z_tiles`. Convenience
+    /// wrapper that prepares z locally; the trainer uses
+    /// [`WorkerNode::compute_c_block_p`] with basis tiles prepared once and
+    /// shared across nodes.
+    pub fn compute_c_block(
+        &mut self,
+        backend: &dyn Compute,
+        z_tiles: &[Vec<f32>],
+        m: usize,
+        gamma: f32,
+        dirty_cols: std::ops::Range<usize>,
+    ) -> Result<()> {
+        let z_prep: Vec<Prepared> = z_tiles
+            .iter()
+            .map(|t| backend.prepare(t, &[TM, self.dpad]))
+            .collect::<Result<_>>()?;
+        self.compute_c_block_p(backend, &z_prep, m, gamma, dirty_cols)
+    }
+
+    /// Step 3 with pre-prepared basis tiles (the hot production path).
+    pub fn compute_c_block_p(
+        &mut self,
+        backend: &dyn Compute,
+        z_prep: &[Prepared],
+        m: usize,
+        gamma: f32,
+        dirty_cols: std::ops::Range<usize>,
+    ) -> Result<()> {
+        if self.c.cols() != m {
+            let prev = self.c.cols();
+            if m > prev {
+                self.c.grow_cols(m);
+            } else {
+                self.c = TiledMatrix::zeros(self.n_local(), m);
+            }
+        }
+        assert_eq!(z_prep.len(), self.c.col_tiles());
+        if self.x_prep.is_empty() {
+            self.x_prep = self
+                .x_tiles
+                .iter()
+                .map(|t| backend.prepare(t, &[TB, self.dpad]))
+                .collect::<Result<_>>()?;
+        }
+        for i in 0..self.row_tiles() {
+            for j in dirty_cols.clone() {
+                let tile =
+                    backend.kernel_block_p(&self.x_prep[i], &z_prep[j], self.dpad, gamma)?;
+                self.c.tile_mut(i, j).copy_from_slice(&tile);
+            }
+        }
+        Ok(())
+    }
+
+    /// The node's contribution to (Wβ): a sparse set of (global_k, value)
+    /// entries, each `value = <W_k, β> = <C_row or W_row, β>`.
+    pub fn wv_entries(&self, backend: &dyn Compute, v_tiles: &[Vec<f32>]) -> Result<Vec<(usize, f32)>> {
+        match &self.w_share {
+            WShare::FromC(rows) => {
+                let mut out = Vec::with_capacity(rows.len());
+                for &(local, global_k) in rows {
+                    out.push((global_k, row_dot(&self.c, local, v_tiles)));
+                }
+                Ok(out)
+            }
+            WShare::Explicit { k0, block } => {
+                // block is (rows × m) tiled; rows are basis k0..k0+rows.
+                let mut acc = vec![0.0f32; block.row_tiles() * TB];
+                for i in 0..block.row_tiles() {
+                    let mut tile_acc = vec![0.0f32; TB];
+                    for j in 0..block.col_tiles() {
+                        let part = if let Some(prow) = self.w_prep.get(i) {
+                            backend.matvec_p(&prow[j], &v_tiles[j])?
+                        } else {
+                            backend.matvec(block.tile(i, j), &v_tiles[j])?
+                        };
+                        for (a, b) in tile_acc.iter_mut().zip(&part) {
+                            *a += b;
+                        }
+                    }
+                    acc[i * TB..(i + 1) * TB].copy_from_slice(&tile_acc);
+                }
+                Ok((0..block.rows())
+                    .map(|r| (k0 + r, acc[r]))
+                    .collect())
+            }
+        }
+    }
+}
+
+/// Dot of one logical C row with a tiled m-vector.
+fn row_dot(c: &TiledMatrix, row: usize, v_tiles: &[Vec<f32>]) -> f32 {
+    let ti = row / TB;
+    let r = row % TB;
+    let mut s = 0.0f32;
+    for j in 0..c.col_tiles() {
+        let tile = c.tile(ti, j);
+        s += crate::linalg::mat::dot(&tile[r * TM..(r + 1) * TM], &v_tiles[j]);
+    }
+    s
+}
+
+/// Pad a shard's features into (TB × dpad) row tiles.
+pub fn pad_feature_tiles(x: &Mat, dpad: usize) -> Vec<Vec<f32>> {
+    let nt = x.rows().div_ceil(TB).max(1);
+    let mut out = Vec::with_capacity(nt);
+    for t in 0..nt {
+        let mut tile = vec![0.0f32; TB * dpad];
+        let live = (x.rows() - t * TB).min(TB);
+        for r in 0..live {
+            let row = x.row(t * TB + r);
+            tile[r * dpad..r * dpad + row.len()].copy_from_slice(row);
+        }
+        out.push(tile);
+    }
+    out
+}
+
+/// Pad labels into TB tiles (zeros beyond n_j; masked out downstream).
+pub fn pad_label_tiles(y: &[f32]) -> Vec<Vec<f32>> {
+    let nt = y.len().div_ceil(TB).max(1);
+    (0..nt)
+        .map(|t| {
+            let mut tile = vec![0.0f32; TB];
+            let live = (y.len() - t * TB).min(TB);
+            tile[..live].copy_from_slice(&y[t * TB..t * TB + live]);
+            tile
+        })
+        .collect()
+}
+
+/// Pad an m-vector into TM tiles.
+pub fn pad_m_tiles(v: &[f32], col_tiles: usize) -> Vec<Vec<f32>> {
+    let mut out = vec![vec![0.0f32; TM]; col_tiles];
+    for (k, &val) in v.iter().enumerate() {
+        out[k / TM][k % TM] = val;
+    }
+    out
+}
+
+/// Flatten TM tiles back to an m-vector.
+pub fn unpad_m_tiles(tiles: &[Vec<f32>], m: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(m);
+    for k in 0..m {
+        out.push(tiles[k / TM][k % TM]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn feature_tiles_pad_rows_and_width() {
+        let mut rng = Rng::new(1);
+        let x = Mat::from_fn(300, 54, |_, _| rng.normal_f32());
+        let tiles = pad_feature_tiles(&x, 64);
+        assert_eq!(tiles.len(), 2);
+        assert_eq!(tiles[0].len(), TB * 64);
+        // row 0 contents + zero padding beyond col 54
+        assert_eq!(&tiles[0][0..54], x.row(0));
+        assert!(tiles[0][54..64].iter().all(|&v| v == 0.0));
+        // rows beyond 300 are all zero in tile 1
+        let dead = &tiles[1][(300 - TB) * 64..];
+        assert!(dead.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn m_tile_roundtrip() {
+        let v: Vec<f32> = (0..300).map(|i| i as f32).collect();
+        let tiles = pad_m_tiles(&v, 2);
+        assert_eq!(tiles.len(), 2);
+        assert_eq!(tiles[0][255], 255.0);
+        assert_eq!(tiles[1][0], 256.0);
+        assert_eq!(unpad_m_tiles(&tiles, 300), v);
+    }
+
+    #[test]
+    fn label_tiles_pad() {
+        let y = vec![1.0f32; 10];
+        let t = pad_label_tiles(&y);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t[0][9], 1.0);
+        assert_eq!(t[0][10], 0.0);
+    }
+
+    #[test]
+    fn row_dot_matches_dense() {
+        let mut rng = Rng::new(2);
+        let dense = Mat::from_fn(40, 300, |_, _| rng.normal_f32());
+        let c = TiledMatrix::from_mat(&dense);
+        let v: Vec<f32> = (0..300).map(|_| rng.normal_f32()).collect();
+        let v_tiles = pad_m_tiles(&v, c.col_tiles());
+        for row in [0, 7, 39] {
+            let want = crate::linalg::mat::dot(dense.row(row), &v);
+            let got = row_dot(&c, row, &v_tiles);
+            assert!((got - want).abs() < 1e-3, "row {row}: {got} vs {want}");
+        }
+    }
+}

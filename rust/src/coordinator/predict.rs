@@ -1,0 +1,78 @@
+//! Test-set scoring with a trained formulation-(4) model:
+//! o(x) = Σ_k β_k k(x, z̄_k), evaluated with the fused predict tile module
+//! (kernel block + matvec in one dispatch).
+
+use crate::linalg::Mat;
+use crate::runtime::tiles::{TB, TM};
+use crate::runtime::Compute;
+use crate::Result;
+
+use super::node::{pad_feature_tiles, pad_m_tiles};
+use super::trainer::TrainedModel;
+
+/// Decision values for every row of `x`.
+pub fn predict(backend: &dyn Compute, model: &TrainedModel, x: &Mat) -> Result<Vec<f32>> {
+    let dpad = backend.pad_d(model.basis.cols().max(x.cols()))?;
+    let z_tiles = super::basis::tiles_of(&model.basis, dpad);
+    let col_tiles = model.beta.len().div_ceil(TM).max(1);
+    assert_eq!(z_tiles.len(), col_tiles);
+    let beta_tiles = pad_m_tiles(&model.beta, col_tiles);
+    let x_tiles = pad_feature_tiles(x, dpad);
+    let n = x.rows();
+    let mut scores = Vec::with_capacity(n);
+    for (t, x_tile) in x_tiles.iter().enumerate() {
+        let mut acc = vec![0.0f32; TB];
+        for (j, z_tile) in z_tiles.iter().enumerate() {
+            // β padding entries are zero, so the kernel values computed
+            // against zero-padding basis rows contribute nothing.
+            let part = backend.predict_block(x_tile, z_tile, model.gamma, &beta_tiles[j], dpad)?;
+            for (a, b) in acc.iter_mut().zip(&part) {
+                *a += b;
+            }
+        }
+        let live = (n - t * TB).min(TB);
+        scores.extend_from_slice(&acc[..live]);
+    }
+    Ok(scores)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::settings::Loss;
+    use crate::rng::Rng;
+
+    /// predict == direct dense evaluation of Σ β_k exp(-γ‖x-z_k‖²).
+    #[test]
+    fn matches_dense_evaluation() {
+        let mut rng = Rng::new(1);
+        let d = 20;
+        let m = 300; // exercises 2 basis tiles
+        let n = 70;
+        let basis = Mat::from_fn(m, d, |_, _| rng.normal_f32());
+        let beta: Vec<f32> = (0..m).map(|_| 0.05 * rng.normal_f32()).collect();
+        let x = Mat::from_fn(n, d, |_, _| rng.normal_f32());
+        let gamma = 0.3f32;
+        let model = TrainedModel {
+            basis: basis.clone(),
+            beta: beta.clone(),
+            gamma,
+            loss: Loss::SqHinge,
+        };
+        let backend = crate::runtime::backend::NativeCompute::new();
+        let got = predict(&backend, &model, &x).unwrap();
+        assert_eq!(got.len(), n);
+        for i in 0..n {
+            let mut want = 0.0f32;
+            for k in 0..m {
+                let mut d2 = 0.0f32;
+                for j in 0..d {
+                    let diff = x.at(i, j) - basis.at(k, j);
+                    d2 += diff * diff;
+                }
+                want += beta[k] * (-gamma * d2).exp();
+            }
+            assert!((got[i] - want).abs() < 1e-3, "row {i}: {} vs {want}", got[i]);
+        }
+    }
+}

@@ -1,0 +1,421 @@
+//! The Algorithm-1 driver: data loading → basis communication → kernel
+//! computation → TRON optimization, with per-step wall timers and the
+//! simulated cluster ledger. Also the stage-wise training mode of §3.
+
+use std::rc::Rc;
+
+use crate::cluster::{Cluster, CostModel, SimClock};
+use crate::config::settings::{Loss, Settings};
+use crate::data::{shard_rows, Dataset};
+use crate::linalg::Mat;
+use crate::metrics::{Metrics, Step};
+use crate::runtime::Compute;
+use crate::Result;
+
+use super::basis::{self, Basis};
+use super::dist::DistProblem;
+use super::node::WorkerNode;
+use super::tron::{self, TronOptions, TronStats};
+
+/// A trained formulation-(4) kernel machine.
+#[derive(Clone)]
+pub struct TrainedModel {
+    /// m × d basis points z̄_k.
+    pub basis: Mat,
+    /// Expansion coefficients β.
+    pub beta: Vec<f32>,
+    /// Gaussian kernel 1/(2σ²).
+    pub gamma: f32,
+    pub loss: Loss,
+}
+
+impl TrainedModel {
+    /// Decision values for a feature matrix.
+    pub fn predict(&self, backend: &dyn Compute, x: &Mat) -> Result<Vec<f32>> {
+        super::predict::predict(backend, self, x)
+    }
+
+    /// Test accuracy.
+    pub fn accuracy(&self, backend: &dyn Compute, test: &Dataset) -> Result<f64> {
+        let scores = self.predict(backend, &test.x)?;
+        Ok(crate::metrics::accuracy(&scores, &test.y))
+    }
+}
+
+/// Everything a training run produces.
+pub struct TrainOutput {
+    pub model: TrainedModel,
+    pub stats: TronStats,
+    /// Wall-clock per Algorithm-1 step (single-core reality).
+    pub wall: Metrics,
+    /// Simulated p-node ledger (compute max per phase + C + D·B comm).
+    pub sim: SimClock,
+    /// f/g and Hd evaluation counts (the 4a/4b/4c call counts).
+    pub fg_evals: usize,
+    pub hd_evals: usize,
+}
+
+/// Step 1: shard the training set over p nodes.
+pub fn build_cluster(
+    train: &Dataset,
+    p: usize,
+    dpad: usize,
+    cost: CostModel,
+) -> Cluster<WorkerNode> {
+    let shards = shard_rows(train.n(), p);
+    let nodes: Vec<WorkerNode> = shards
+        .iter()
+        .map(|r| {
+            let idx: Vec<usize> = r.clone().collect();
+            WorkerNode::new(train.x.gather_rows(&idx), train.y[r.clone()].to_vec(), dpad)
+        })
+        .collect();
+    Cluster::new(nodes, 2, cost)
+}
+
+/// Full Algorithm-1 run.
+pub fn train(
+    settings: &Settings,
+    train_ds: &Dataset,
+    backend: Rc<dyn Compute>,
+    cost: CostModel,
+) -> Result<TrainOutput> {
+    settings.validate()?;
+    let mut wall = Metrics::new();
+    let dpad = backend.pad_d(train_ds.d())?;
+
+    // Step 1: data loading / sharding.
+    let mut cluster = wall.time(Step::Load, || {
+        build_cluster(train_ds, settings.nodes, dpad, cost)
+    });
+    // Simulated: each node ingests its n/p shard (disk-bound in the paper;
+    // we charge the measured shard-build time as the compute part).
+    let load_wall = wall.wall_secs(Step::Load);
+    cluster.clock.add_compute(Step::Load, load_wall / settings.nodes as f64);
+
+    // Steps 2 (+ K-means when enabled): basis selection & broadcast.
+    let basis_sel = wall.time(Step::BasisBcast, || {
+        basis::select(&mut cluster, &backend, settings, train_ds.d(), dpad)
+    })?;
+
+    // Step 3: kernel computation (C row blocks; W shares).
+    wall.time(Step::Kernel, || -> Result<()> {
+        basis::install_w_shares(&mut cluster, &backend, &basis_sel, settings.gamma(), dpad)?;
+        let m = basis_sel.m();
+        let gamma = settings.gamma();
+        // Prepare the basis tiles once; all nodes reuse the same operands.
+        let z_prep: Vec<_> = basis_sel
+            .z_tiles
+            .iter()
+            .map(|t| backend.prepare(t, &[crate::runtime::tiles::TM, dpad]))
+            .collect::<Result<_>>()?;
+        let backend2 = Rc::clone(&backend);
+        let col_tiles = basis_sel.col_tiles();
+        cluster.try_par_compute(Step::Kernel, |_, node| {
+            node.compute_c_block_p(backend2.as_ref(), &z_prep, m, gamma, 0..col_tiles)?;
+            node.prepare_hot(backend2.as_ref())
+        })?;
+        Ok(())
+    })?;
+
+    // Step 4: TRON on the master.
+    let (beta, stats, fg, hd) = wall.time(Step::Tron, || -> Result<_> {
+        let mut problem = DistProblem::new(
+            &mut cluster,
+            Rc::clone(&backend),
+            basis_sel.m(),
+            settings.lambda,
+            settings.loss,
+        );
+        let opts = TronOptions {
+            tol: settings.tol,
+            max_iters: settings.max_iters,
+            ..TronOptions::default()
+        };
+        let beta0 = vec![0.0f32; basis_sel.m()];
+        let (beta, stats) = tron::minimize(&mut problem, &beta0, &opts)?;
+        Ok((beta, stats, problem.fg_evals, problem.hd_evals))
+    })?;
+
+    Ok(TrainOutput {
+        model: TrainedModel {
+            basis: basis_sel.z,
+            beta,
+            gamma: settings.gamma(),
+            loss: settings.loss,
+        },
+        stats,
+        wall,
+        sim: cluster.clock,
+        fg_evals: fg,
+        hd_evals: hd,
+    })
+}
+
+/// One stage of a stage-wise run.
+pub struct StageOutput {
+    pub m: usize,
+    pub model: TrainedModel,
+    pub stats: TronStats,
+    pub stage_wall_secs: f64,
+}
+
+/// Stage-wise basis addition (§3): train at stages[0], then repeatedly add
+/// basis points and re-optimize with β warm-started by zero-extension —
+/// "one can use the β obtained for a set of basis points to initialize a
+/// good β when new basis points are added" — recomputing only the new
+/// columns of C.
+pub fn train_stagewise(
+    settings: &Settings,
+    train_ds: &Dataset,
+    backend: Rc<dyn Compute>,
+    cost: CostModel,
+    stages: &[usize],
+) -> Result<Vec<StageOutput>> {
+    anyhow::ensure!(!stages.is_empty(), "need at least one stage");
+    anyhow::ensure!(
+        stages.windows(2).all(|w| w[1] > w[0]),
+        "stages must be strictly increasing"
+    );
+    let dpad = backend.pad_d(train_ds.d())?;
+    let mut cluster = build_cluster(train_ds, settings.nodes, dpad, cost);
+
+    let mut outputs = Vec::new();
+    let mut basis_sel: Option<Basis> = None;
+    let mut beta: Vec<f32> = Vec::new();
+
+    for &m in stages {
+        let stage_start = std::time::Instant::now();
+        // Grow (or create) the basis; only dirty C column tiles recompute.
+        let dirty = match basis_sel.as_mut() {
+            None => {
+                let b = basis::select_random(&mut cluster, m, train_ds.d(), dpad, settings.seed)?;
+                basis_sel = Some(b);
+                0..basis_sel.as_ref().unwrap().col_tiles()
+            }
+            Some(b) => {
+                let old_cols = b.m();
+                basis::grow_random(
+                    &mut cluster,
+                    b,
+                    m - old_cols,
+                    train_ds.d(),
+                    dpad,
+                    settings.seed ^ m as u64,
+                )?;
+                // Dirty tiles: the one containing old_cols (partial) onward.
+                (old_cols / crate::runtime::tiles::TM)..b.col_tiles()
+            }
+        };
+        let b = basis_sel.as_ref().unwrap();
+        basis::install_w_shares(&mut cluster, &backend, b, settings.gamma(), dpad)?;
+        let gamma = settings.gamma();
+        let z_prep: Vec<_> = b
+            .z_tiles
+            .iter()
+            .map(|t| backend.prepare(t, &[crate::runtime::tiles::TM, dpad]))
+            .collect::<Result<_>>()?;
+        let backend2 = Rc::clone(&backend);
+        cluster.try_par_compute(Step::Kernel, |_, node| {
+            node.compute_c_block_p(backend2.as_ref(), &z_prep, m, gamma, dirty.clone())?;
+            node.prepare_hot(backend2.as_ref())
+        })?;
+
+        // Warm start: zero-extend β for the new points.
+        beta.resize(m, 0.0);
+        let mut problem = DistProblem::new(
+            &mut cluster,
+            Rc::clone(&backend),
+            m,
+            settings.lambda,
+            settings.loss,
+        );
+        let opts = TronOptions {
+            tol: settings.tol,
+            max_iters: settings.max_iters,
+            ..TronOptions::default()
+        };
+        let (beta_new, stats) = tron::minimize(&mut problem, &beta, &opts)?;
+        beta = beta_new;
+        outputs.push(StageOutput {
+            m,
+            model: TrainedModel {
+                basis: b.z.clone(),
+                beta: beta.clone(),
+                gamma: settings.gamma(),
+                loss: settings.loss,
+            },
+            stats,
+            stage_wall_secs: stage_start.elapsed().as_secs_f64(),
+        });
+    }
+    Ok(outputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::settings::{Backend, BasisSelection};
+    use crate::data::synth;
+    use crate::runtime::make_backend;
+
+    fn tiny_settings(m: usize, nodes: usize) -> Settings {
+        Settings {
+            dataset: "covtype_like".into(),
+            m,
+            nodes,
+            lambda: 0.01,
+            sigma: 2.0,
+            loss: Loss::SqHinge,
+            basis: BasisSelection::Random,
+            backend: Backend::Native,
+            max_iters: 60,
+            tol: 1e-3,
+            seed: 42,
+            kmeans_iters: 2,
+            kmeans_max_m: 512,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+
+    fn tiny_data() -> (Dataset, Dataset) {
+        let mut spec = synth::spec("covtype_like");
+        spec.n_train = 1200;
+        spec.n_test = 400;
+        synth::generate(&spec, 5)
+    }
+
+    #[test]
+    fn trains_above_chance_and_better_with_more_basis() {
+        let (train_ds, test_ds) = tiny_data();
+        let backend = make_backend(Backend::Native, "artifacts").unwrap();
+        let small = train(
+            &tiny_settings(16, 4),
+            &train_ds,
+            Rc::clone(&backend),
+            CostModel::free(),
+        )
+        .unwrap();
+        let big = train(
+            &tiny_settings(256, 4),
+            &train_ds,
+            Rc::clone(&backend),
+            CostModel::free(),
+        )
+        .unwrap();
+        let acc_small = small.model.accuracy(backend.as_ref(), &test_ds).unwrap();
+        let acc_big = big.model.accuracy(backend.as_ref(), &test_ds).unwrap();
+        assert!(acc_small > 0.5, "small-m accuracy {acc_small}");
+        assert!(acc_big > acc_small - 0.02, "{acc_big} vs {acc_small}");
+        assert!(acc_big > 0.6, "big-m accuracy {acc_big}");
+    }
+
+    #[test]
+    fn objective_decreases_and_counts_recorded() {
+        let (train_ds, _) = tiny_data();
+        let backend = make_backend(Backend::Native, "artifacts").unwrap();
+        let out = train(
+            &tiny_settings(64, 3),
+            &train_ds,
+            backend,
+            CostModel::free(),
+        )
+        .unwrap();
+        assert!(out.stats.f_history.len() >= 2);
+        assert!(out.stats.final_f < out.stats.f_history[0]);
+        assert!(out.fg_evals >= out.stats.iterations);
+        assert!(out.hd_evals >= 1);
+        assert!(out.wall.wall_secs(Step::Kernel) > 0.0);
+    }
+
+    #[test]
+    fn node_count_does_not_change_the_model_much() {
+        // The distributed objective is identical for any p. The random
+        // basis SAMPLE differs across p (each node draws its own share), so
+        // accuracies agree only statistically; reruns at the same p must be
+        // bit-identical.
+        let (train_ds, test_ds) = tiny_data();
+        let backend = make_backend(Backend::Native, "artifacts").unwrap();
+        let mut accs = Vec::new();
+        for p in [1, 5, 5] {
+            let out = train(
+                &tiny_settings(96, p),
+                &train_ds,
+                Rc::clone(&backend),
+                CostModel::free(),
+            )
+            .unwrap();
+            accs.push(out.model.accuracy(backend.as_ref(), &test_ds).unwrap());
+        }
+        assert_eq!(accs[1], accs[2], "same p, same seed must reproduce");
+        assert!(
+            (accs[0] - accs[1]).abs() < 0.08,
+            "p=1: {} vs p=5: {}",
+            accs[0],
+            accs[1]
+        );
+    }
+
+    #[test]
+    fn kmeans_basis_path_trains() {
+        let (train_ds, test_ds) = tiny_data();
+        let backend = make_backend(Backend::Native, "artifacts").unwrap();
+        let mut s = tiny_settings(24, 3);
+        s.basis = BasisSelection::KMeans;
+        let out = train(&s, &train_ds, Rc::clone(&backend), CostModel::free()).unwrap();
+        let acc = out.model.accuracy(backend.as_ref(), &test_ds).unwrap();
+        assert!(acc > 0.52, "kmeans-basis accuracy {acc}");
+        assert!(out.sim.step_secs(Step::KMeans) > 0.0);
+    }
+
+    #[test]
+    fn stagewise_warm_start_reaches_same_quality() {
+        let (train_ds, test_ds) = tiny_data();
+        let backend = make_backend(Backend::Native, "artifacts").unwrap();
+        let s = tiny_settings(0, 4); // m overridden by stages
+        let stages = train_stagewise(
+            &s,
+            &train_ds,
+            Rc::clone(&backend),
+            CostModel::free(),
+            &[32, 96, 192],
+        )
+        .unwrap();
+        assert_eq!(stages.len(), 3);
+        let cold = train(
+            &tiny_settings(192, 4),
+            &train_ds,
+            Rc::clone(&backend),
+            CostModel::free(),
+        )
+        .unwrap();
+        let acc_staged = stages[2]
+            .model
+            .accuracy(backend.as_ref(), &test_ds)
+            .unwrap();
+        let acc_cold = cold.model.accuracy(backend.as_ref(), &test_ds).unwrap();
+        assert!(
+            (acc_staged - acc_cold).abs() < 0.05,
+            "staged {acc_staged} vs cold {acc_cold}"
+        );
+        // Later stages should need no more iterations than a cold start
+        // (warm start benefit) — allow slack for stochastic variation.
+        assert!(stages[2].stats.iterations <= cold.stats.iterations + 20);
+    }
+
+    #[test]
+    fn all_losses_train() {
+        let (train_ds, test_ds) = tiny_data();
+        let backend = make_backend(Backend::Native, "artifacts").unwrap();
+        for loss in [Loss::SqHinge, Loss::Logistic, Loss::Squared] {
+            let mut s = tiny_settings(64, 2);
+            s.loss = loss;
+            if loss == Loss::Logistic {
+                s.lambda = 0.001;
+            }
+            let out = train(&s, &train_ds, Rc::clone(&backend), CostModel::free()).unwrap();
+            let acc = out.model.accuracy(backend.as_ref(), &test_ds).unwrap();
+            assert!(acc > 0.52, "{}: accuracy {acc}", loss.name());
+        }
+    }
+}

@@ -1,0 +1,378 @@
+//! TRON: trust-region Newton method (Lin, Weng & Keerthi, 2007) — the
+//! solver the paper runs on the master (step 4), with every f/∇f/H·d
+//! evaluation delegated to an [`Objective`] (distributed or local).
+//!
+//! The inner solver is Steihaug conjugate gradient truncated at the trust
+//! region boundary; the update/radius logic follows LIBLINEAR's tron.cpp.
+//! "Typically, TRON requires at most a few hundred iterations, with each
+//! iteration involving one function/gradient computation and a few Hd
+//! computations" (paper §3).
+
+use crate::Result;
+
+/// Anything TRON can minimize. Gradients are f32 vectors (they travel over
+/// the AllReduce tree); f accumulates in f64 on the master.
+pub trait Objective {
+    fn dim(&self) -> usize;
+    fn eval_fg(&mut self, x: &[f32]) -> Result<(f64, Vec<f32>)>;
+    fn eval_hd(&mut self, d: &[f32]) -> Result<Vec<f32>>;
+}
+
+#[derive(Clone, Debug)]
+pub struct TronOptions {
+    /// Stop when ‖g‖ ≤ tol · ‖g₀‖.
+    pub tol: f32,
+    pub max_iters: usize,
+    /// Relative CG residual tolerance.
+    pub cg_tol: f32,
+    /// Cap on CG steps per TRON iteration.
+    pub max_cg: usize,
+    /// Print per-iteration progress.
+    pub verbose: bool,
+}
+
+impl Default for TronOptions {
+    fn default() -> Self {
+        TronOptions {
+            tol: 1e-3,
+            max_iters: 300,
+            cg_tol: 0.1,
+            max_cg: 50,
+            verbose: false,
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TronStats {
+    pub iterations: usize,
+    pub fg_evals: usize,
+    pub hd_evals: usize,
+    pub final_f: f64,
+    pub final_gnorm: f64,
+    /// f after each accepted iteration (the loss curve).
+    pub f_history: Vec<f64>,
+    pub gnorm_history: Vec<f64>,
+    pub converged: bool,
+}
+
+fn dot64(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum()
+}
+
+fn norm64(a: &[f32]) -> f64 {
+    dot64(a, a).sqrt()
+}
+
+/// Minimize `obj` from `x0`. Returns (x*, stats).
+pub fn minimize(
+    obj: &mut dyn Objective,
+    x0: &[f32],
+    opts: &TronOptions,
+) -> Result<(Vec<f32>, TronStats)> {
+    // Radius update constants (LIBLINEAR).
+    const ETA0: f64 = 1e-4;
+    const ETA1: f64 = 0.25;
+    const ETA2: f64 = 0.75;
+    const SIGMA1: f64 = 0.25;
+    const SIGMA2: f64 = 0.5;
+    const SIGMA3: f64 = 4.0;
+
+    let n = obj.dim();
+    assert_eq!(x0.len(), n);
+    let mut stats = TronStats::default();
+    let mut x = x0.to_vec();
+    let (mut f, mut g) = obj.eval_fg(&x)?;
+    stats.fg_evals += 1;
+    let gnorm0 = norm64(&g);
+    let mut gnorm = gnorm0;
+    stats.f_history.push(f);
+    stats.gnorm_history.push(gnorm);
+    let mut delta = gnorm;
+
+    if gnorm0 == 0.0 {
+        stats.final_f = f;
+        stats.converged = true;
+        return Ok((x, stats));
+    }
+
+    let mut iter = 1;
+    while iter <= opts.max_iters {
+        if gnorm <= opts.tol as f64 * gnorm0 {
+            stats.converged = true;
+            break;
+        }
+        let (s, r, cg_steps) = trcg(obj, &g, delta, opts)?;
+        stats.hd_evals += cg_steps;
+
+        let mut x_new = x.clone();
+        for (xi, si) in x_new.iter_mut().zip(&s) {
+            *xi += si;
+        }
+        let (f_new, g_new) = obj.eval_fg(&x_new)?;
+        stats.fg_evals += 1;
+
+        // Predicted reduction: -(gᵀs + ½ sᵀHs) = -½(gᵀs - sᵀr).
+        let gs = dot64(&g, &s);
+        let prered = -0.5 * (gs - dot64(&s, &r));
+        let actred = f - f_new;
+        let snorm = norm64(&s);
+        if iter == 1 {
+            delta = delta.min(snorm);
+        }
+
+        // Radius update via one-dimensional quadratic interpolation.
+        let denom = f_new - f - gs;
+        let alpha = if denom <= 0.0 {
+            SIGMA3
+        } else {
+            (-0.5 * (gs / denom)).max(SIGMA1)
+        };
+        if actred < ETA0 * prered {
+            delta = (alpha * snorm).min(SIGMA2 * delta);
+        } else if actred < ETA1 * prered {
+            delta = (SIGMA1 * delta).max((alpha * snorm).min(SIGMA2 * delta));
+        } else if actred < ETA2 * prered {
+            delta = (SIGMA1 * delta).max((alpha * snorm).min(SIGMA3 * delta));
+        } else {
+            delta = delta.max((alpha * snorm).min(SIGMA3 * delta));
+        }
+
+        if actred > ETA0 * prered {
+            // Accept.
+            x = x_new;
+            f = f_new;
+            g = g_new;
+            gnorm = norm64(&g);
+            stats.f_history.push(f);
+            stats.gnorm_history.push(gnorm);
+            iter += 1;
+            if opts.verbose {
+                eprintln!(
+                    "tron it {iter:4} f {f:.6e} |g| {gnorm:.3e} delta {delta:.3e} cg {cg_steps}"
+                );
+            }
+        } else if opts.verbose {
+            eprintln!("tron reject: actred {actred:.3e} prered {prered:.3e} delta {delta:.3e}");
+        }
+
+        // Degenerate-progress guards (LIBLINEAR).
+        if f < -1e32 {
+            anyhow::bail!("tron: objective unbounded below");
+        }
+        if prered.abs() <= 0.0 && actred <= 0.0 {
+            break;
+        }
+        if actred.abs() <= 1e-12 * f.abs() && prered.abs() <= 1e-12 * f.abs() {
+            break;
+        }
+        if delta <= 1e-30 {
+            break;
+        }
+    }
+    stats.iterations = iter.min(opts.max_iters);
+    stats.final_f = f;
+    stats.final_gnorm = gnorm;
+    Ok((x, stats))
+}
+
+/// Steihaug trust-region CG: approximately solve H s = -g with ‖s‖ ≤ delta.
+/// Returns (s, residual r = -g - Hs, #Hd products).
+fn trcg(
+    obj: &mut dyn Objective,
+    g: &[f32],
+    delta: f64,
+    opts: &TronOptions,
+) -> Result<(Vec<f32>, Vec<f32>, usize)> {
+    let n = g.len();
+    let mut s = vec![0.0f32; n];
+    let mut r: Vec<f32> = g.iter().map(|v| -v).collect();
+    let mut d = r.clone();
+    let mut rtr = dot64(&r, &r);
+    let cg_tol = opts.cg_tol as f64 * norm64(g);
+    let mut steps = 0;
+
+    while steps < opts.max_cg {
+        if rtr.sqrt() <= cg_tol {
+            break;
+        }
+        let hd = obj.eval_hd(&d)?;
+        steps += 1;
+        let dhd = dot64(&d, &hd);
+        if dhd <= 0.0 {
+            // Negative curvature: go to the boundary along d.
+            let tau = boundary_tau(&s, &d, delta);
+            for i in 0..n {
+                s[i] += (tau * d[i] as f64) as f32;
+                r[i] -= (tau * hd[i] as f64) as f32;
+            }
+            break;
+        }
+        let alpha = rtr / dhd;
+        let mut s_try = s.clone();
+        for i in 0..n {
+            s_try[i] += (alpha * d[i] as f64) as f32;
+        }
+        if norm64(&s_try) > delta {
+            // Hit the boundary.
+            let tau = boundary_tau(&s, &d, delta);
+            for i in 0..n {
+                s[i] += (tau * d[i] as f64) as f32;
+                r[i] -= (tau * hd[i] as f64) as f32;
+            }
+            break;
+        }
+        s = s_try;
+        for i in 0..n {
+            r[i] -= (alpha * hd[i] as f64) as f32;
+        }
+        let rtr_new = dot64(&r, &r);
+        let beta = rtr_new / rtr;
+        rtr = rtr_new;
+        for i in 0..n {
+            d[i] = r[i] + (beta * d[i] as f64) as f32;
+        }
+    }
+    Ok((s, r, steps))
+}
+
+/// Largest τ ≥ 0 with ‖s + τ d‖ = delta.
+fn boundary_tau(s: &[f32], d: &[f32], delta: f64) -> f64 {
+    let std_ = dot64(s, d);
+    let dtd = dot64(d, d);
+    let sts = dot64(s, s);
+    let disc = (std_ * std_ + dtd * (delta * delta - sts)).max(0.0);
+    if std_ >= 0.0 {
+        (delta * delta - sts) / (std_ + disc.sqrt())
+    } else {
+        (disc.sqrt() - std_) / dtd
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Quadratic ½ xᵀAx - bᵀx with SPD A: one Newton step should nail it.
+    struct Quad {
+        a: Vec<f64>, // n x n
+        b: Vec<f64>,
+        n: usize,
+    }
+
+    impl Objective for Quad {
+        fn dim(&self) -> usize {
+            self.n
+        }
+
+        fn eval_fg(&mut self, x: &[f32]) -> Result<(f64, Vec<f32>)> {
+            let n = self.n;
+            let mut ax = vec![0.0f64; n];
+            for i in 0..n {
+                for j in 0..n {
+                    ax[i] += self.a[i * n + j] * x[j] as f64;
+                }
+            }
+            let f = 0.5 * ax.iter().zip(x).map(|(a, x)| a * *x as f64).sum::<f64>()
+                - self.b.iter().zip(x).map(|(b, x)| b * *x as f64).sum::<f64>();
+            let g = (0..n).map(|i| (ax[i] - self.b[i]) as f32).collect();
+            Ok((f, g))
+        }
+
+        fn eval_hd(&mut self, d: &[f32]) -> Result<Vec<f32>> {
+            let n = self.n;
+            let mut hd = vec![0.0f32; n];
+            for i in 0..n {
+                let mut s = 0.0f64;
+                for j in 0..n {
+                    s += self.a[i * n + j] * d[j] as f64;
+                }
+                hd[i] = s as f32;
+            }
+            Ok(hd)
+        }
+    }
+
+    fn spd_quad(n: usize, seed: u64) -> Quad {
+        let mut rng = crate::rng::Rng::new(seed);
+        let g: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = if i == j { n as f64 } else { 0.0 };
+                for k in 0..n {
+                    s += g[i * n + k] * g[j * n + k] / n as f64;
+                }
+                a[i * n + j] = s;
+            }
+        }
+        let b = (0..n).map(|i| (i as f64 % 5.0) - 2.0).collect();
+        Quad { a, b, n }
+    }
+
+    #[test]
+    fn solves_quadratic_to_tolerance() {
+        let mut q = spd_quad(20, 1);
+        let x0 = vec![0.0f32; 20];
+        let opts = TronOptions {
+            tol: 1e-5,
+            ..TronOptions::default()
+        };
+        let (x, stats) = minimize(&mut q, &x0, &opts).unwrap();
+        assert!(stats.converged, "{stats:?}");
+        // Check Ax ≈ b.
+        let (_, g) = q.eval_fg(&x).unwrap();
+        assert!(norm64(&g) <= 1e-4 * norm64(&q.eval_fg(&x0).unwrap().1));
+    }
+
+    #[test]
+    fn quadratic_converges_fast() {
+        let mut q = spd_quad(40, 2);
+        let (_, stats) = minimize(&mut q, &vec![0.0; 40], &TronOptions::default()).unwrap();
+        assert!(stats.iterations <= 20, "took {} iters", stats.iterations);
+        assert!(stats.converged);
+    }
+
+    #[test]
+    fn f_history_monotone_nonincreasing() {
+        let mut q = spd_quad(15, 3);
+        let (_, stats) = minimize(&mut q, &vec![1.0; 15], &TronOptions::default()).unwrap();
+        for w in stats.f_history.windows(2) {
+            assert!(w[1] <= w[0] + 1e-10, "{:?}", stats.f_history);
+        }
+    }
+
+    #[test]
+    fn zero_gradient_returns_immediately() {
+        // b = 0, x0 = 0 is already optimal.
+        let mut q = spd_quad(5, 4);
+        q.b = vec![0.0; 5];
+        let (x, stats) = minimize(&mut q, &vec![0.0; 5], &TronOptions::default()).unwrap();
+        assert_eq!(x, vec![0.0; 5]);
+        assert!(stats.converged);
+        assert_eq!(stats.fg_evals, 1);
+    }
+
+    #[test]
+    fn respects_iteration_cap() {
+        let mut q = spd_quad(30, 5);
+        let opts = TronOptions {
+            tol: 1e-12,
+            max_iters: 2,
+            ..TronOptions::default()
+        };
+        let (_, stats) = minimize(&mut q, &vec![0.0; 30], &opts).unwrap();
+        assert!(stats.iterations <= 2);
+    }
+
+    #[test]
+    fn boundary_tau_lands_on_sphere() {
+        let s = vec![0.5f32, 0.0];
+        let d = vec![1.0f32, 1.0];
+        let delta = 2.0;
+        let tau = boundary_tau(&s, &d, delta);
+        let x = [s[0] as f64 + tau, tau];
+        let norm = (x[0] * x[0] + x[1] * x[1]).sqrt();
+        assert!((norm - delta).abs() < 1e-9);
+    }
+}

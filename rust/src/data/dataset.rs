@@ -1,0 +1,141 @@
+//! Core dataset container + row sharding (step 1 of Algorithm 1).
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// A binary classification dataset: row-major features, labels in {-1, +1}.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub x: Mat,
+    pub y: Vec<f32>,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, x: Mat, y: Vec<f32>) -> Self {
+        assert_eq!(x.rows(), y.len(), "feature/label count mismatch");
+        assert!(
+            y.iter().all(|&v| v == 1.0 || v == -1.0),
+            "labels must be +/-1"
+        );
+        Self {
+            name: name.into(),
+            x,
+            y,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Fraction of positive labels.
+    pub fn pos_fraction(&self) -> f32 {
+        self.y.iter().filter(|&&v| v > 0.0).count() as f32 / self.n() as f32
+    }
+
+    /// Random permutation split into (train, test).
+    pub fn split(&self, n_test: usize, rng: &mut Rng) -> (Dataset, Dataset) {
+        assert!(n_test < self.n());
+        let mut idx: Vec<usize> = (0..self.n()).collect();
+        rng.shuffle(&mut idx);
+        let (test_idx, train_idx) = idx.split_at(n_test);
+        (self.subset(train_idx), self.subset(test_idx))
+    }
+
+    /// Row subset (copying).
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            name: self.name.clone(),
+            x: self.x.gather_rows(idx),
+            y: idx.iter().map(|&i| self.y[i]).collect(),
+        }
+    }
+}
+
+/// Everything a benchmark needs to instantiate a dataset: the generator
+/// handle plus the paper's hyper-parameters for it (Table 3).
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub d: usize,
+    /// Regularization constant λ of formulation (4).
+    pub lambda: f32,
+    /// Gaussian kernel width σ; gamma = 1 / (2 σ²).
+    pub sigma: f32,
+}
+
+impl DatasetSpec {
+    pub fn gamma(&self) -> f32 {
+        1.0 / (2.0 * self.sigma * self.sigma)
+    }
+}
+
+/// Step 1 of Algorithm 1: row ranges for p nodes (contiguous blocks after
+/// the caller's shuffle; block j gets the remainder spread evenly).
+pub fn shard_rows(n: usize, p: usize) -> Vec<std::ops::Range<usize>> {
+    assert!(p > 0);
+    let base = n / p;
+    let rem = n % p;
+    let mut out = Vec::with_capacity(p);
+    let mut start = 0;
+    for j in 0..p {
+        let len = base + usize::from(j < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let x = Mat::from_vec(4, 2, vec![0., 0., 1., 0., 0., 1., 1., 1.]);
+        Dataset::new("tiny", x, vec![1.0, -1.0, -1.0, 1.0])
+    }
+
+    #[test]
+    fn split_partitions_rows() {
+        let d = tiny();
+        let mut rng = Rng::new(1);
+        let (tr, te) = d.split(1, &mut rng);
+        assert_eq!(tr.n(), 3);
+        assert_eq!(te.n(), 1);
+    }
+
+    #[test]
+    fn shard_rows_covers_everything() {
+        for (n, p) in [(10, 3), (7, 7), (100, 1), (5, 8)] {
+            let shards = shard_rows(n, p);
+            assert_eq!(shards.len(), p);
+            let total: usize = shards.iter().map(|r| r.len()).sum();
+            assert_eq!(total, n, "n={n} p={p}");
+            // contiguous and ordered
+            let mut next = 0;
+            for r in &shards {
+                assert_eq!(r.start, next);
+                next = r.end;
+            }
+            // balanced within 1
+            let lens: Vec<usize> = shards.iter().map(|r| r.len()).collect();
+            let (mn, mx) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(mx - mn <= 1);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "labels must be +/-1")]
+    fn rejects_bad_labels() {
+        let x = Mat::zeros(1, 1);
+        Dataset::new("bad", x, vec![0.5]);
+    }
+}

@@ -1,0 +1,158 @@
+//! LibSVM-format text IO, so users can run DKM on the paper's real datasets
+//! (Vehicle / Covtype / CCAT / MNIST8m are all distributed in this format).
+//!
+//! Format: one example per line, `label idx:val idx:val ...`, 1-based
+//! indices. Labels are mapped to {-1, +1} (0/1 inputs are accepted).
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use crate::linalg::Mat;
+use crate::Result;
+
+use super::dataset::Dataset;
+
+/// Parse LibSVM text. `d` pads/truncates to a fixed width; pass 0 to infer
+/// the max index seen.
+pub fn parse(reader: impl BufRead, d: usize, name: &str) -> Result<Dataset> {
+    let mut rows: Vec<Vec<(usize, f32)>> = Vec::new();
+    let mut labels: Vec<f32> = Vec::new();
+    let mut max_idx = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label_tok = parts
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {}: empty", lineno + 1))?;
+        let raw: f32 = label_tok
+            .parse()
+            .map_err(|e| anyhow::anyhow!("line {}: bad label {label_tok:?}: {e}", lineno + 1))?;
+        let label = if raw > 0.0 { 1.0 } else { -1.0 };
+        let mut feats = Vec::new();
+        for tok in parts {
+            let (i_str, v_str) = tok
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("line {}: bad feature {tok:?}", lineno + 1))?;
+            let idx: usize = i_str
+                .parse()
+                .map_err(|e| anyhow::anyhow!("line {}: bad index {i_str:?}: {e}", lineno + 1))?;
+            if idx == 0 {
+                anyhow::bail!("line {}: LibSVM indices are 1-based", lineno + 1);
+            }
+            let val: f32 = v_str
+                .parse()
+                .map_err(|e| anyhow::anyhow!("line {}: bad value {v_str:?}: {e}", lineno + 1))?;
+            max_idx = max_idx.max(idx);
+            feats.push((idx - 1, val));
+        }
+        rows.push(feats);
+        labels.push(label);
+    }
+    let width = if d == 0 { max_idx } else { d };
+    let mut x = Mat::zeros(rows.len(), width);
+    for (i, feats) in rows.iter().enumerate() {
+        for &(j, v) in feats {
+            if j < width {
+                *x.at_mut(i, j) = v;
+            }
+        }
+    }
+    Ok(Dataset::new(name, x, labels))
+}
+
+pub fn read_file(path: impl AsRef<Path>, d: usize) -> Result<Dataset> {
+    let path = path.as_ref();
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "libsvm".into());
+    let f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?;
+    parse(std::io::BufReader::new(f), d, &name)
+}
+
+/// Write a dataset in LibSVM format (zeros skipped).
+pub fn write_file(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())?;
+    let mut w = BufWriter::new(f);
+    for i in 0..ds.n() {
+        write!(w, "{}", if ds.y[i] > 0.0 { "+1" } else { "-1" })?;
+        for (j, &v) in ds.x.row(i).iter().enumerate() {
+            if v != 0.0 {
+                write!(w, " {}:{}", j + 1, v)?;
+            }
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_basic_lines() {
+        let text = "+1 1:0.5 3:2.0\n-1 2:1.0\n";
+        let ds = parse(Cursor::new(text), 0, "t").unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.d(), 3);
+        assert_eq!(ds.x.row(0), &[0.5, 0.0, 2.0]);
+        assert_eq!(ds.x.row(1), &[0.0, 1.0, 0.0]);
+        assert_eq!(ds.y, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn maps_01_labels() {
+        let ds = parse(Cursor::new("0 1:1\n1 1:2\n"), 0, "t").unwrap();
+        assert_eq!(ds.y, vec![-1.0, 1.0]);
+    }
+
+    #[test]
+    fn skips_comments_and_blank_lines() {
+        let ds = parse(Cursor::new("# hi\n\n+1 1:1\n"), 0, "t").unwrap();
+        assert_eq!(ds.n(), 1);
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        assert!(parse(Cursor::new("+1 0:1\n"), 0, "t").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse(Cursor::new("abc 1:1\n"), 0, "t").is_err());
+        assert!(parse(Cursor::new("+1 1:x\n"), 0, "t").is_err());
+        assert!(parse(Cursor::new("+1 1\n"), 0, "t").is_err());
+    }
+
+    #[test]
+    fn fixed_width_pads_and_truncates() {
+        let ds = parse(Cursor::new("+1 5:1.0\n"), 3, "t").unwrap();
+        assert_eq!(ds.d(), 3);
+        assert_eq!(ds.x.row(0), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn roundtrip_through_file() {
+        let ds = crate::data::synth::vehicle_like(20, 3);
+        let dir = std::env::temp_dir().join("dkm_libsvm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.libsvm");
+        write_file(&ds, &path).unwrap();
+        let back = read_file(&path, ds.d()).unwrap();
+        assert_eq!(back.n(), ds.n());
+        assert_eq!(back.y, ds.y);
+        for i in 0..ds.n() {
+            for j in 0..ds.d() {
+                assert!((back.x.at(i, j) - ds.x.at(i, j)).abs() < 1e-4);
+            }
+        }
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,14 @@
+//! Datasets: synthetic benchmark generators, LibSVM text IO, sharding.
+//!
+//! The paper evaluates on Vehicle, Covtype, CCAT and MNIST8m (Table 3).
+//! None are redistributable here (repro gate), so [`synth`] provides
+//! generators with matched *shape*: same feature dimensionality and
+//! character, and ground-truth boundaries tuned so the paper's observable
+//! trends (accuracy-vs-m climb rate, kernel-compute vs TRON cost balance)
+//! reproduce. See DESIGN.md §2 for the substitution argument.
+
+pub mod dataset;
+pub mod libsvm;
+pub mod synth;
+
+pub use dataset::{shard_rows, Dataset, DatasetSpec};

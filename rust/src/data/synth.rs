@@ -1,0 +1,324 @@
+//! Synthetic benchmark generators matched to the paper's datasets (Table 3).
+//!
+//! Each generator draws from an **RBF teacher**: a ground-truth classifier
+//! `sign(Σ_t w_t exp(-γ_t ||x - c_t||²) + b)` with the number of teacher
+//! centers controlling boundary complexity. This matters for fidelity:
+//!
+//! * `covtype_like` uses *many* centers + label noise → the learned machine
+//!   needs many basis points (the paper: "for Covtype the number of support
+//!   vectors is more than half the training set; the curve does not
+//!   stabilize even at m = 51200"). Accuracy-vs-m climbs slowly — Fig 1
+//!   left.
+//! * `ccat_like` uses few centers on sparse-ish high-d data → accuracy
+//!   saturates at small m — Fig 1 right.
+//! * `mnist8m_like` uses well-separated class clusters → very high
+//!   achievable accuracy (paper Table 5: 0.996), kernel computation (d=784)
+//!   dominates cost — Table 4 / Fig 2 right.
+//! * `vehicle_like` is the small dense workhorse for Table 1.
+//!
+//! Scale note: n is ~10-100x the paper's (one CPU core here); every bench
+//! prints both the paper's n and ours (EXPERIMENTS.md carries the mapping).
+
+use super::dataset::{Dataset, DatasetSpec};
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Ground-truth RBF teacher parameters.
+struct Teacher {
+    centers: Mat,
+    weights: Vec<f32>,
+    gamma: f32,
+    bias: f32,
+}
+
+impl Teacher {
+    fn new(n_centers: usize, d: usize, gamma: f32, spread: f32, rng: &mut Rng) -> Self {
+        let centers = Mat::from_fn(n_centers, d, |_, _| spread * rng.normal_f32());
+        let weights = (0..n_centers)
+            .map(|_| if rng.f32() < 0.5 { 1.0 } else { -1.0 })
+            .collect();
+        Teacher {
+            centers,
+            weights,
+            gamma,
+            bias: 0.0,
+        }
+    }
+
+    fn score(&self, x: &[f32]) -> f32 {
+        let mut s = self.bias;
+        for t in 0..self.centers.rows() {
+            let c = self.centers.row(t);
+            let mut d2 = 0.0f32;
+            for (xi, ci) in x.iter().zip(c) {
+                let diff = xi - ci;
+                d2 += diff * diff;
+            }
+            s += self.weights[t] * (-self.gamma * d2).exp();
+        }
+        s
+    }
+
+    /// Calibrate bias so classes are roughly balanced on a probe sample.
+    fn calibrate(&mut self, probe: &Mat) {
+        let mut scores: Vec<f32> = (0..probe.rows()).map(|i| self.score(probe.row(i))).collect();
+        scores.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        self.bias = -scores[scores.len() / 2];
+    }
+}
+
+/// Draw a dataset from an RBF teacher over N(0, I_d)-ish inputs.
+///
+/// `sparsity` < 1.0 zeroes that fraction of coordinates per row (CCAT-like
+/// text features); `noise` flips that fraction of labels (irreducible error,
+/// keeps the boundary support-vector-dense).
+#[allow(clippy::too_many_arguments)]
+fn rbf_teacher_dataset(
+    name: &str,
+    n: usize,
+    d: usize,
+    n_centers: usize,
+    teacher_gamma: f32,
+    input_spread: f32,
+    sparsity: f32,
+    noise: f32,
+    seed: u64,
+) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut teacher = Teacher::new(n_centers, d, teacher_gamma, input_spread, &mut rng);
+
+    let keep = 1.0 - sparsity;
+    let mut x = Mat::from_fn(n, d, |_, _| 0.0);
+    for i in 0..n {
+        // Sample inputs near teacher centers half the time so the score
+        // distribution has mass on both sides of the boundary.
+        let near = rng.f32() < 0.5 && n_centers > 0;
+        let center = if near {
+            Some(teacher.centers.row(rng.below(n_centers)).to_vec())
+        } else {
+            None
+        };
+        let row = x.row_mut(i);
+        for (j, v) in row.iter_mut().enumerate() {
+            if sparsity > 0.0 && rng.f32() >= keep {
+                *v = 0.0;
+            } else {
+                let base = center.as_ref().map_or(0.0, |c| c[j]);
+                *v = base + input_spread * 0.6 * rng.normal_f32();
+            }
+        }
+    }
+
+    // Calibrate bias on the first 512 rows, then label.
+    let probe = x.gather_rows(&(0..n.min(512)).collect::<Vec<_>>());
+    teacher.calibrate(&probe);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut label = if teacher.score(x.row(i)) >= 0.0 { 1.0 } else { -1.0 };
+        if noise > 0.0 && rng.f32() < noise {
+            label = -label;
+        }
+        y.push(label);
+    }
+    Dataset::new(name, x, y)
+}
+
+/// Vehicle-like: small dense d=100 (paper: n=78,823, λ=8, σ=2).
+pub fn vehicle_like(n: usize, seed: u64) -> Dataset {
+    rbf_teacher_dataset("vehicle_like", n, 100, 24, 0.02, 2.0, 0.0, 0.01, seed)
+}
+
+/// Covtype-like: d=54, support-vector-dense boundary + label noise
+/// (paper: n=522,910, λ=0.005, σ=0.09 — an extremely narrow kernel,
+/// i.e. a very local, complex boundary).
+pub fn covtype_like(n: usize, seed: u64) -> Dataset {
+    rbf_teacher_dataset("covtype_like", n, 54, 160, 0.45, 1.0, 0.0, 0.02, seed)
+}
+
+/// CCAT-like: sparse high-d text-like features with a *nearly linear*
+/// ground truth (RCV1/CCAT is close to linearly separable), so a kernel
+/// machine saturates at small m — the Fig-1-right character.
+/// (paper: n=781,265, d=47,236 sparse text; we keep the sparse character
+/// at d=512 — DESIGN.md §2 documents the width reduction.)
+pub fn ccat_like(n: usize, seed: u64) -> Dataset {
+    let d = 512;
+    let mut rng = Rng::new(seed);
+    // A small informative "topic" sub-vocabulary (like CCAT's category
+    // cues): 16 strong dims; the rest is sparse background vocabulary.
+    let n_topic = 16;
+    let w: Vec<f32> = (0..d)
+        .map(|j| if j < n_topic { rng.normal_f32() * 2.0 } else { 0.0 })
+        .collect();
+    let mut x = Mat::zeros(n, d);
+    let mut scores = Vec::with_capacity(n);
+    for i in 0..n {
+        let row = x.row_mut(i);
+        let mut score = 0.0f32;
+        for (j, v) in row.iter_mut().enumerate() {
+            // Topic cues appear in half the documents; background terms in
+            // ~6% — tf-idf-ish positive magnitudes either way.
+            let p = if j < n_topic { 0.5 } else { 0.06 };
+            if rng.f32() < p {
+                *v = rng.f32() + 0.2;
+                score += w[j] * *v;
+            }
+        }
+        scores.push(score);
+    }
+    // Median-calibrated threshold keeps the classes balanced regardless of
+    // the drawn topic weights (documents have positive-only magnitudes).
+    let mut sorted = scores.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let bias = sorted[n / 2];
+    let mut y = Vec::with_capacity(n);
+    for &score in &scores {
+        let mut label = if score >= bias { 1.0 } else { -1.0 };
+        // Small irreducible error; the boundary itself is (near) linear,
+        // which is what lets a modest basis saturate the curve early.
+        if rng.f32() < 0.015 {
+            label = -label;
+        }
+        y.push(label);
+    }
+    Dataset::new("ccat_like", x, y)
+}
+
+/// MNIST8m-like: d=784 dense image-like clusters, 2 classes of 5 clusters
+/// each, very high achievable accuracy (paper Table 5: 0.9963).
+pub fn mnist8m_like(n: usize, seed: u64) -> Dataset {
+    let d = 784;
+    let k = 10;
+    let mut rng = Rng::new(seed);
+    let centers = Mat::from_fn(k, d, |_, _| 1.2 * rng.normal_f32());
+    let mut x = Mat::zeros(n, d);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = rng.below(k);
+        let row = x.row_mut(i);
+        let center = centers.row(c);
+        for (v, &cj) in row.iter_mut().zip(center) {
+            *v = cj + 0.55 * rng.normal_f32();
+        }
+        y.push(if c % 2 == 0 { 1.0 } else { -1.0 });
+    }
+    // Overwrite the borrow (x moved via the builder above).
+    Dataset::new("mnist8m_like", x, y)
+}
+
+/// The paper's Table 3, scaled for one core. λ/σ re-tuned for the synthetic
+/// twins (the paper's σ values are tied to its datasets' feature scales).
+pub fn spec(name: &str) -> DatasetSpec {
+    match name {
+        "vehicle_like" => DatasetSpec {
+            name: "vehicle_like",
+            n_train: 6_000,
+            n_test: 1_500,
+            d: 100,
+            lambda: 8.0,
+            sigma: 2.0,
+        },
+        "covtype_like" => DatasetSpec {
+            name: "covtype_like",
+            n_train: 24_000,
+            n_test: 6_000,
+            d: 54,
+            lambda: 0.005,
+            sigma: 2.0,
+        },
+        "ccat_like" => DatasetSpec {
+            name: "ccat_like",
+            n_train: 16_000,
+            n_test: 4_000,
+            d: 512,
+            lambda: 0.1,
+            sigma: 6.0,
+        },
+        "mnist8m_like" => DatasetSpec {
+            name: "mnist8m_like",
+            n_train: 32_000,
+            n_test: 4_000,
+            d: 784,
+            lambda: 8.0,
+            sigma: 18.0,
+        },
+        other => panic!("unknown dataset spec: {other}"),
+    }
+}
+
+/// Generate train+test for a spec (test rows drawn from the same process).
+pub fn generate(spec: &DatasetSpec, seed: u64) -> (Dataset, Dataset) {
+    let total = spec.n_train + spec.n_test;
+    let full = match spec.name {
+        "vehicle_like" => vehicle_like(total, seed),
+        "covtype_like" => covtype_like(total, seed),
+        "ccat_like" => ccat_like(total, seed),
+        "mnist8m_like" => mnist8m_like(total, seed),
+        other => panic!("unknown dataset: {other}"),
+    };
+    let mut rng = Rng::new(seed ^ 0x5EED);
+    let (train, test) = full.split(spec.n_test, &mut rng);
+    (train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = covtype_like(200, 7);
+        let b = covtype_like(200, 7);
+        assert_eq!(a.x.as_slice(), b.x.as_slice());
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn generators_differ_across_seeds() {
+        let a = covtype_like(100, 1);
+        let b = covtype_like(100, 2);
+        assert_ne!(a.x.as_slice(), b.x.as_slice());
+    }
+
+    #[test]
+    fn classes_roughly_balanced() {
+        for ds in [
+            vehicle_like(2000, 3),
+            covtype_like(2000, 3),
+            ccat_like(2000, 3),
+            mnist8m_like(2000, 3),
+        ] {
+            let f = ds.pos_fraction();
+            assert!(
+                (0.25..=0.75).contains(&f),
+                "{}: pos fraction {f}",
+                ds.name
+            );
+        }
+    }
+
+    #[test]
+    fn ccat_like_is_sparse() {
+        let ds = ccat_like(200, 5);
+        let nz = ds.x.as_slice().iter().filter(|&&v| v != 0.0).count();
+        let frac = nz as f32 / ds.x.as_slice().len() as f32;
+        assert!(frac < 0.2, "nonzero fraction {frac}");
+    }
+
+    #[test]
+    fn dims_match_paper_shape() {
+        assert_eq!(vehicle_like(10, 1).d(), 100);
+        assert_eq!(covtype_like(10, 1).d(), 54);
+        assert_eq!(mnist8m_like(10, 1).d(), 784);
+    }
+
+    #[test]
+    fn spec_generate_roundtrip() {
+        let mut sp = spec("vehicle_like");
+        sp.n_train = 300;
+        sp.n_test = 100;
+        let (tr, te) = generate(&sp, 11);
+        assert_eq!(tr.n(), 300);
+        assert_eq!(te.n(), 100);
+        assert_eq!(tr.d(), sp.d);
+    }
+}

@@ -1,0 +1,41 @@
+//! # DKM — Distributed Kernel Machines
+//!
+//! A reproduction of *"A Distributed Algorithm for Training Nonlinear Kernel
+//! Machines"* (Mahajan, Keerthi, Sundararajan, 2014) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! The paper trains a nonlinear kernel machine through the Nyström
+//! formulation
+//!
+//! ```text
+//! min_β  f(β) = λ/2 βᵀWβ + L(Cβ, y)          (formulation (4))
+//! ```
+//!
+//! solved with TRON (trust-region Newton), where the function / gradient /
+//! Hessian-vector products are row-block matrix-vector products distributed
+//! over `p` nodes and summed with an AllReduce tree.
+//!
+//! Layer map:
+//! * [`cluster`] — the Hadoop-AllReduce substitute: worker nodes, a binary
+//!   AllReduce tree, and the `C + D·B` communication cost model of §4.4.
+//! * [`runtime`] — PJRT engine loading the AOT artifacts (HLO text lowered
+//!   from JAX+Pallas at build time) and executing them on the hot path.
+//! * [`coordinator`] — the paper's contribution: Algorithm 1, TRON, losses,
+//!   basis selection (random / distributed K-means), stage-wise growth.
+//! * [`baselines`] — formulation (3) (Zhang et al. linearization) and
+//!   P-packSVM (Zhu et al.), the paper's comparators.
+//! * [`linalg`], [`rng`], [`data`], [`config`], [`metrics`] — substrates.
+
+pub mod baselines;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod kmeans;
+pub mod linalg;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

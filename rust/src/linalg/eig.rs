@@ -1,0 +1,335 @@
+//! Symmetric eigensolver: Householder tridiagonalization (tred2) + implicit
+//! shift QL with eigenvectors (tql2), in f64 — the EISPACK pair.
+//!
+//! This is the O(m³) step the paper's formulation (4) exists to AVOID: the
+//! linearization baseline (formulation (3), `baselines::linearized`) needs
+//! the eigen-decomposition W = U Λ Uᵀ to form A = C U Λ^{-1/2}. It lives in
+//! the substrate so Table 1 can measure exactly how badly it scales with m.
+
+/// Eigen-decomposition of a symmetric matrix given as a dense row-major
+/// `n x n` slice (only the symmetric part is used).
+///
+/// Returns (eigenvalues ascending, eigenvectors as columns of a row-major
+/// `n x n` matrix: `vecs[i*n + j]` = component i of eigenvector j).
+pub fn sym_eig(a: &[f64], n: usize) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(a.len(), n * n, "matrix must be n*n");
+    let mut v = a.to_vec();
+    let mut d = vec![0.0; n];
+    let mut e = vec![0.0; n];
+    tred2(&mut v, n, &mut d, &mut e);
+    tql2(&mut v, n, &mut d, &mut e);
+    (d, v)
+}
+
+/// Householder reduction to tridiagonal form. On exit `v` holds the
+/// accumulated orthogonal transform Q, `d` the diagonal, `e` the
+/// subdiagonal (e[0] unused).
+fn tred2(v: &mut [f64], n: usize, d: &mut [f64], e: &mut [f64]) {
+    for j in 0..n {
+        d[j] = v[(n - 1) * n + j];
+    }
+    for i in (1..n).rev() {
+        // Scale to avoid under/overflow.
+        let mut scale = 0.0;
+        let mut h = 0.0;
+        for item in d.iter().take(i) {
+            scale += item.abs();
+        }
+        if scale == 0.0 {
+            e[i] = d[i - 1];
+            for j in 0..i {
+                d[j] = v[(i - 1) * n + j];
+                v[i * n + j] = 0.0;
+                v[j * n + i] = 0.0;
+            }
+        } else {
+            for item in d.iter_mut().take(i) {
+                *item /= scale;
+            }
+            for item in d.iter().take(i) {
+                h += item * item;
+            }
+            let mut f = d[i - 1];
+            let mut g = h.sqrt();
+            if f > 0.0 {
+                g = -g;
+            }
+            e[i] = scale * g;
+            h -= f * g;
+            d[i - 1] = f - g;
+            for j in 0..i {
+                e[j] = 0.0;
+            }
+            // Apply similarity transformation to remaining columns.
+            for j in 0..i {
+                f = d[j];
+                v[j * n + i] = f;
+                g = e[j] + v[j * n + j] * f;
+                for k in (j + 1)..i {
+                    g += v[k * n + j] * d[k];
+                    e[k] += v[k * n + j] * f;
+                }
+                e[j] = g;
+            }
+            f = 0.0;
+            for j in 0..i {
+                e[j] /= h;
+                f += e[j] * d[j];
+            }
+            let hh = f / (h + h);
+            for j in 0..i {
+                e[j] -= hh * d[j];
+            }
+            for j in 0..i {
+                f = d[j];
+                g = e[j];
+                for k in j..i {
+                    v[k * n + j] -= f * e[k] + g * d[k];
+                }
+                d[j] = v[(i - 1) * n + j];
+                v[i * n + j] = 0.0;
+            }
+        }
+        d[i] = h;
+    }
+    // Accumulate transformations.
+    for i in 0..(n - 1) {
+        v[(n - 1) * n + i] = v[i * n + i];
+        v[i * n + i] = 1.0;
+        let h = d[i + 1];
+        if h != 0.0 {
+            for k in 0..=i {
+                d[k] = v[k * n + (i + 1)] / h;
+            }
+            for j in 0..=i {
+                let mut g = 0.0;
+                for k in 0..=i {
+                    g += v[k * n + (i + 1)] * v[k * n + j];
+                }
+                for k in 0..=i {
+                    v[k * n + j] -= g * d[k];
+                }
+            }
+        }
+        for k in 0..=i {
+            v[k * n + (i + 1)] = 0.0;
+        }
+    }
+    for j in 0..n {
+        d[j] = v[(n - 1) * n + j];
+        v[(n - 1) * n + j] = 0.0;
+    }
+    v[(n - 1) * n + (n - 1)] = 1.0;
+    e[0] = 0.0;
+}
+
+/// Implicit-shift QL for symmetric tridiagonal; accumulates eigenvectors
+/// into `v`. Eigenvalues are sorted ascending on exit (with vectors).
+fn tql2(v: &mut [f64], n: usize, d: &mut [f64], e: &mut [f64]) {
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+
+    let mut f = 0.0f64;
+    let mut tst1 = 0.0f64;
+    let eps = f64::EPSILON;
+    for l in 0..n {
+        tst1 = tst1.max(d[l].abs() + e[l].abs());
+        // Find small subdiagonal element.
+        let mut m = l;
+        while m < n {
+            if e[m].abs() <= eps * tst1 {
+                break;
+            }
+            m += 1;
+        }
+        if m == n {
+            m = n - 1;
+        }
+        if m > l {
+            let mut iter = 0;
+            loop {
+                iter += 1;
+                assert!(iter <= 50, "tql2: no convergence after 50 iterations");
+                // Compute implicit shift.
+                let mut g = d[l];
+                let mut p = (d[l + 1] - g) / (2.0 * e[l]);
+                let mut r = (p * p + 1.0).sqrt();
+                if p < 0.0 {
+                    r = -r;
+                }
+                d[l] = e[l] / (p + r);
+                d[l + 1] = e[l] * (p + r);
+                let dl1 = d[l + 1];
+                let mut h = g - d[l];
+                for item in d.iter_mut().take(n).skip(l + 2) {
+                    *item -= h;
+                }
+                f += h;
+                // Implicit QL transformation.
+                p = d[m];
+                let mut c = 1.0f64;
+                let mut c2 = c;
+                let mut c3 = c;
+                let el1 = e[l + 1];
+                let mut s = 0.0f64;
+                let mut s2 = 0.0f64;
+                for i in (l..m).rev() {
+                    c3 = c2;
+                    c2 = c;
+                    s2 = s;
+                    g = c * e[i];
+                    h = c * p;
+                    r = (p * p + e[i] * e[i]).sqrt();
+                    e[i + 1] = s * r;
+                    s = e[i] / r;
+                    c = p / r;
+                    p = c * d[i] - s * g;
+                    d[i + 1] = h + s * (c * g + s * d[i]);
+                    // Accumulate eigenvectors.
+                    for k in 0..n {
+                        h = v[k * n + (i + 1)];
+                        v[k * n + (i + 1)] = s * v[k * n + i] + c * h;
+                        v[k * n + i] = c * v[k * n + i] - s * h;
+                    }
+                }
+                p = -s * s2 * c3 * el1 * e[l] / dl1;
+                e[l] = s * p;
+                d[l] = c * p;
+                if e[l].abs() <= eps * tst1 {
+                    break;
+                }
+            }
+        }
+        d[l] += f;
+        e[l] = 0.0;
+    }
+
+    // Sort eigenvalues ascending, permuting vectors along.
+    for i in 0..n.saturating_sub(1) {
+        let mut k = i;
+        let mut p = d[i];
+        for j in (i + 1)..n {
+            if d[j] < p {
+                k = j;
+                p = d[j];
+            }
+        }
+        if k != i {
+            d[k] = d[i];
+            d[i] = p;
+            for r in 0..n {
+                v.swap(r * n + i, r * n + k);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_symmetric(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut a = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.normal();
+                a[i * n + j] = v;
+                a[j * n + i] = v;
+            }
+        }
+        a
+    }
+
+    fn check_decomposition(a: &[f64], n: usize, tol: f64) {
+        let (d, v) = sym_eig(a, n);
+        // A v_j == d_j v_j for every eigenpair.
+        for j in 0..n {
+            for i in 0..n {
+                let mut av = 0.0;
+                for k in 0..n {
+                    av += a[i * n + k] * v[k * n + j];
+                }
+                let want = d[j] * v[i * n + j];
+                assert!(
+                    (av - want).abs() < tol,
+                    "eigenpair {j}: row {i}: {av} vs {want}"
+                );
+            }
+        }
+        // Orthonormal columns.
+        for j1 in 0..n {
+            for j2 in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += v[k * n + j1] * v[k * n + j2];
+                }
+                let want = if j1 == j2 { 1.0 } else { 0.0 };
+                assert!((s - want).abs() < tol, "orthonormality ({j1},{j2}): {s}");
+            }
+        }
+        // Ascending order.
+        for j in 1..n {
+            assert!(d[j] >= d[j - 1] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3.
+        let (d, _) = sym_eig(&[2.0, 1.0, 1.0, 2.0], 2);
+        assert!((d[0] - 1.0).abs() < 1e-12);
+        assert!((d[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = vec![3.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 2.0];
+        let (d, _) = sym_eig(&a, 3);
+        assert!((d[0] - 1.0).abs() < 1e-12);
+        assert!((d[1] - 2.0).abs() < 1e-12);
+        assert!((d[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_matrices_reconstruct() {
+        for (n, seed) in [(5, 1), (16, 2), (33, 3), (64, 4)] {
+            let a = random_symmetric(n, seed);
+            check_decomposition(&a, n, 1e-8);
+        }
+    }
+
+    #[test]
+    fn gram_matrix_is_psd() {
+        // W = G Gᵀ must have non-negative eigenvalues.
+        let mut rng = Rng::new(9);
+        let n = 24;
+        let g: Vec<f64> = (0..n * 8).map(|_| rng.normal()).collect();
+        let mut w = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..8 {
+                    s += g[i * 8 + k] * g[j * 8 + k];
+                }
+                w[i * n + j] = s;
+            }
+        }
+        let (d, _) = sym_eig(&w, n);
+        assert!(d[0] > -1e-9, "smallest eigenvalue {}", d[0]);
+    }
+
+    #[test]
+    fn repeated_eigenvalues() {
+        // Identity: all eigenvalues 1, any orthonormal basis is fine.
+        let n = 8;
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1.0;
+        }
+        check_decomposition(&a, n, 1e-10);
+    }
+}

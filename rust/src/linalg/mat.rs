@@ -1,0 +1,286 @@
+//! Row-major dense matrix + the matvec/gemm kernels of the native backend.
+//!
+//! The layout contract (row-major, contiguous) is shared with
+//! `runtime::tiles`, which reinterprets row panels of a `Mat` as PJRT tile
+//! inputs without copying rows around.
+
+use std::fmt;
+
+/// Row-major dense `rows x cols` matrix of f32.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Mat({}x{})", self.rows, self.cols)
+    }
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Build from a row-producing closure.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Contiguous row panel `[r0, r1)` — the zero-copy tile view.
+    #[inline]
+    pub fn row_panel(&self, r0: usize, r1: usize) -> &[f32] {
+        debug_assert!(r0 <= r1 && r1 <= self.rows);
+        &self.data[r0 * self.cols..r1 * self.cols]
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Gather the given rows into a new matrix (basis sub-matrix extraction).
+    pub fn gather_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (k, &i) in idx.iter().enumerate() {
+            out.row_mut(k).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// y = A x. Panics on dimension mismatch.
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        // 4-wide unrolled dot per row: the compiler autovectorizes this form.
+        for i in 0..self.rows {
+            y[i] = dot(self.row(i), x);
+        }
+    }
+
+    /// y = Aᵀ x.
+    pub fn matvec_t(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.fill(0.0);
+        // axpy per row keeps the inner loop unit-stride over the row-major
+        // layout (a column-wise loop would stride by `cols`).
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi != 0.0 {
+                axpy(xi, self.row(i), y);
+            }
+        }
+    }
+
+    /// C = A Bᵀ where B is given row-major (i.e. C_ik = <A_i, B_k>).
+    /// This is the natural product for kernel blocks (both operands are
+    /// row-major example matrices).
+    pub fn gemm_nt(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.cols, "inner dims");
+        let mut out = Mat::zeros(self.rows, b.rows);
+        for i in 0..self.rows {
+            let ai = self.row(i);
+            let orow = out.row_mut(i);
+            for k in 0..b.rows {
+                orow[k] = dot(ai, b.row(k));
+            }
+        }
+        out
+    }
+
+    /// C = A B (B row-major `self.cols x n`).
+    pub fn gemm_nn(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "inner dims");
+        let n = b.cols;
+        let mut out = Mat::zeros(self.rows, n);
+        for i in 0..self.rows {
+            let ai = self.row(i);
+            let orow = out.row_mut(i);
+            for (k, &aik) in ai.iter().enumerate() {
+                if aik != 0.0 {
+                    axpy(aik, b.row(k), orow);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                *out.at_mut(j, i) = self.at(i, j);
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+}
+
+/// Unit-stride dot product; written so LLVM autovectorizes (4 accumulators).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 8;
+        s0 += a[i] * b[i] + a[i + 4] * b[i + 4];
+        s1 += a[i + 1] * b[i + 1] + a[i + 5] * b[i + 5];
+        s2 += a[i + 2] * b[i + 2] + a[i + 6] * b[i + 6];
+        s3 += a[i + 3] * b[i + 3] + a[i + 7] * b[i + 7];
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..n {
+        tail += a[i] * b[i];
+    }
+    s0 + s1 + s2 + s3 + tail
+}
+
+/// y += alpha * x, unit stride.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_known() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let mut y = vec![0.0; 2];
+        a.matvec(&[1., 1., 1.], &mut y);
+        assert_eq!(y, vec![6.0, 15.0]);
+    }
+
+    #[test]
+    fn matvec_t_known() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let mut y = vec![0.0; 3];
+        a.matvec_t(&[1., 2.], &mut y);
+        assert_eq!(y, vec![9.0, 12.0, 15.0]);
+    }
+
+    #[test]
+    fn matvec_adjoint_identity() {
+        // <A x, r> == <x, Aᵀ r>
+        let mut rng = crate::rng::Rng::new(3);
+        let a = Mat::from_fn(17, 29, |_, _| rng.normal_f32());
+        let x: Vec<f32> = (0..29).map(|_| rng.normal_f32()).collect();
+        let r: Vec<f32> = (0..17).map(|_| rng.normal_f32()).collect();
+        let mut ax = vec![0.0; 17];
+        a.matvec(&x, &mut ax);
+        let mut atr = vec![0.0; 29];
+        a.matvec_t(&r, &mut atr);
+        let lhs = dot(&ax, &r);
+        let rhs = dot(&x, &atr);
+        assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0));
+    }
+
+    #[test]
+    fn gemm_nt_matches_manual() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Mat::from_vec(3, 2, vec![1., 0., 0., 1., 1., 1.]);
+        let c = a.gemm_nt(&b);
+        assert_eq!(c.as_slice(), &[1., 2., 3., 3., 4., 7.]);
+    }
+
+    #[test]
+    fn gemm_nn_matches_gemm_nt_with_transpose() {
+        let mut rng = crate::rng::Rng::new(5);
+        let a = Mat::from_fn(7, 11, |_, _| rng.normal_f32());
+        let b = Mat::from_fn(11, 5, |_, _| rng.normal_f32());
+        let c1 = a.gemm_nn(&b);
+        let c2 = a.gemm_nt(&b.transpose());
+        for (x, y) in c1.as_slice().iter().zip(c2.as_slice()) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gather_rows_picks_rows() {
+        let a = Mat::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let g = a.gather_rows(&[2, 0]);
+        assert_eq!(g.as_slice(), &[5., 6., 1., 2.]);
+    }
+
+    #[test]
+    fn dot_handles_tails() {
+        for n in [0, 1, 7, 8, 9, 31, 64] {
+            let a: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let b = vec![2.0f32; n];
+            let want: f32 = (0..n).map(|i| 2.0 * i as f32).sum();
+            assert_eq!(dot(&a, &b), want, "n={n}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn from_vec_rejects_bad_shape() {
+        Mat::from_vec(2, 2, vec![1.0; 5]);
+    }
+}

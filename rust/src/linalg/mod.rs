@@ -1,0 +1,18 @@
+//! Dense linear algebra substrate (no external BLAS/LAPACK offline).
+//!
+//! * [`mat`] — row-major `Mat<f32>` + matvec / gemm kernels used by the
+//!   native compute backend and the baselines.
+//! * [`eig`] — Householder tridiagonalization + implicit-shift QL symmetric
+//!   eigensolver (f64), needed *only* by the formulation-(3) baseline: the
+//!   whole point of the paper's formulation (4) is to avoid it.
+//! * [`chol`] — Cholesky factorization (diagnostics, ridge solves in tests).
+//! * [`vecops`] — the O(m) vector kernels TRON runs on the master.
+
+pub mod chol;
+pub mod eig;
+pub mod mat;
+pub mod vecops;
+
+pub use chol::cholesky_solve;
+pub use eig::sym_eig;
+pub use mat::Mat;

@@ -1,0 +1,70 @@
+//! O(m) vector kernels: everything TRON does on the master between the
+//! distributed matrix-vector products ("all other computations in TRON
+//! require only O(m) effort" — paper §3.1).
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(x: &[f32]) -> f32 {
+    super::mat::dot(x, x).sqrt()
+}
+
+/// Dot product (re-exported from the unrolled mat kernel).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    super::mat::dot(a, b)
+}
+
+/// y += alpha x.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    super::mat::axpy(alpha, x, y)
+}
+
+/// x *= alpha.
+#[inline]
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// out = a + alpha b (allocating).
+pub fn add_scaled(a: &[f32], alpha: f32, b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x + alpha * y).collect()
+}
+
+/// Elementwise product, in place: y *= x.
+#[inline]
+pub fn hadamard(x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi *= xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norm_of_unit_axes() {
+        assert_eq!(norm2(&[3.0, 4.0]), 5.0);
+        assert_eq!(norm2(&[]), 0.0);
+    }
+
+    #[test]
+    fn add_scaled_works() {
+        assert_eq!(add_scaled(&[1.0, 2.0], 2.0, &[3.0, -1.0]), vec![7.0, 0.0]);
+    }
+
+    #[test]
+    fn scale_and_hadamard() {
+        let mut x = vec![1.0, -2.0, 3.0];
+        scale(2.0, &mut x);
+        assert_eq!(x, vec![2.0, -4.0, 6.0]);
+        let mut y = vec![1.0, 2.0, 3.0];
+        hadamard(&[0.0, 1.0, 2.0], &mut y);
+        assert_eq!(y, vec![0.0, 2.0, 6.0]);
+    }
+}

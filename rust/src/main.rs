@@ -1,0 +1,282 @@
+//! `dkm` — the launcher CLI for distributed kernel-machine training.
+//!
+//! Subcommands:
+//!   train       Run Algorithm 1 on a dataset (synthetic spec or LibSVM file)
+//!   stagewise   Stage-wise basis growth (§3) with per-stage accuracy
+//!   linearized  Formulation-(3) baseline (Zhang et al.) with timing slices
+//!   ppacksvm    P-packSVM baseline (Zhu et al.)
+//!   info        Show the artifact manifest the runtime would load
+//!
+//! Examples:
+//!   dkm train --dataset covtype_like --m 800 --nodes 8 --backend pjrt
+//!   dkm train --libsvm data/a9a --ntest 2000 --m 400 --sigma 2
+//!   dkm stagewise --dataset covtype_like --stages 100,400,1600
+//!   dkm linearized --dataset vehicle_like --m 400
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use dkm::baselines::{train_linearized, train_ppacksvm, PPackOptions};
+use dkm::cluster::CostModel;
+use dkm::config::{Args, Settings};
+use dkm::coordinator::{train, trainer::train_stagewise};
+use dkm::data::{synth, Dataset};
+use dkm::metrics::{Step, Table};
+use dkm::runtime::{make_backend, Manifest};
+use dkm::Result;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const TRAIN_FLAGS: &[&str] = &[
+    "dataset", "libsvm", "ntest", "ntrain", "m", "nodes", "lambda", "sigma", "loss", "basis",
+    "backend", "max-iters", "tol", "seed", "kmeans-iters", "artifacts", "config", "stages",
+    "pack", "epochs", "verbose", "cost",
+];
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    args.validate(TRAIN_FLAGS)?;
+    let cmd = args
+        .positional()
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "stagewise" => cmd_stagewise(&args),
+        "linearized" => cmd_linearized(&args),
+        "ppacksvm" => cmd_ppacksvm(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            print!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "dkm — distributed nonlinear kernel machines (Nyström formulation (4) + AllReduce TRON)
+
+USAGE: dkm <train|stagewise|linearized|ppacksvm|info> [--flags]
+
+Common flags:
+  --dataset NAME    vehicle_like | covtype_like | ccat_like | mnist8m_like
+  --libsvm PATH     train from a LibSVM file instead of a synthetic spec
+  --ntrain N / --ntest N   synthetic sizes (defaults from the Table-3 spec)
+  --m M             number of basis points
+  --nodes P         simulated cluster size
+  --lambda/--sigma  hyper-parameters (defaults from the dataset spec)
+  --loss            sqhinge | logistic | squared
+  --basis           random | kmeans | auto
+  --backend         pjrt | native
+  --cost            free | hadoop | mpi   (simulated comm cost model)
+  --stages a,b,c    stage-wise m schedule (stagewise command)
+  --config FILE     key=value settings file (CLI flags override)
+";
+
+fn settings_from(args: &Args) -> Result<Settings> {
+    let mut s = match args.str_opt("config") {
+        Some(path) => Settings::from_file(path)?,
+        None => Settings::default(),
+    };
+    if let Some(name) = args.str_opt("dataset") {
+        s = s.with_dataset_defaults(name);
+    }
+    let mut kv = BTreeMap::new();
+    for (flag, key) in [
+        ("m", "m"),
+        ("nodes", "nodes"),
+        ("lambda", "lambda"),
+        ("sigma", "sigma"),
+        ("loss", "loss"),
+        ("basis", "basis"),
+        ("backend", "backend"),
+        ("max-iters", "max_iters"),
+        ("tol", "tol"),
+        ("seed", "seed"),
+        ("kmeans-iters", "kmeans_iters"),
+        ("artifacts", "artifacts_dir"),
+    ] {
+        if let Some(v) = args.str_opt(flag) {
+            kv.insert(key.to_string(), v.to_string());
+        }
+    }
+    s.apply(&kv)?;
+    Ok(s)
+}
+
+fn cost_from(args: &Args) -> Result<CostModel> {
+    Ok(match args.str_or("cost", "hadoop").as_str() {
+        "free" => CostModel::free(),
+        "hadoop" => CostModel::hadoop_crude(),
+        "mpi" => CostModel::mpi(),
+        other => anyhow::bail!("unknown cost model {other:?} (free|hadoop|mpi)"),
+    })
+}
+
+fn load_data(args: &Args, s: &Settings) -> Result<(Dataset, Dataset)> {
+    if let Some(path) = args.str_opt("libsvm") {
+        let full = dkm::data::libsvm::read_file(path, 0)?;
+        let ntest = args.usize_or("ntest", full.n() / 5)?;
+        let mut rng = dkm::rng::Rng::new(s.seed);
+        Ok(full.split(ntest, &mut rng))
+    } else {
+        let mut spec = synth::spec(&s.dataset);
+        spec.n_train = args.usize_or("ntrain", spec.n_train)?;
+        spec.n_test = args.usize_or("ntest", spec.n_test)?;
+        Ok(synth::generate(&spec, s.seed))
+    }
+}
+
+fn print_run_report(out: &dkm::coordinator::TrainOutput, acc: f64, verbose: bool) {
+    println!("\n== Algorithm-1 wall clock (single core) ==");
+    let mut t = Table::new(&["step", "seconds"]);
+    for step in Step::all() {
+        let secs = out.wall.wall_secs(step);
+        if secs > 0.0 {
+            t.row(&[step.name().into(), format!("{secs:.3}")]);
+        }
+    }
+    print!("{}", t.render());
+    println!("\n== Simulated p-node ledger (compute max/node + C+D·B comm) ==");
+    print!("{}", out.sim.report());
+    println!(
+        "tron: {} iterations, {} f/g evals, {} Hd evals, final f {:.6e}, |g| {:.3e}",
+        out.stats.iterations,
+        out.fg_evals,
+        out.hd_evals,
+        out.stats.final_f,
+        out.stats.final_gnorm
+    );
+    if verbose {
+        println!("loss curve: {:?}", out.stats.f_history);
+    }
+    println!("test accuracy: {acc:.4}");
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let s = settings_from(args)?;
+    let cost = cost_from(args)?;
+    let (train_ds, test_ds) = load_data(args, &s)?;
+    println!(
+        "dataset {} n={} d={} ntest={} | m={} p={} λ={} σ={} loss={} backend={:?}",
+        train_ds.name,
+        train_ds.n(),
+        train_ds.d(),
+        test_ds.n(),
+        s.m,
+        s.nodes,
+        s.lambda,
+        s.sigma,
+        s.loss.name(),
+        s.backend,
+    );
+    let backend = make_backend(s.backend, &s.artifacts_dir)?;
+    let out = train(&s, &train_ds, Rc::clone(&backend), cost)?;
+    let acc = out.model.accuracy(backend.as_ref(), &test_ds)?;
+    print_run_report(&out, acc, args.bool("verbose"));
+    Ok(())
+}
+
+fn cmd_stagewise(args: &Args) -> Result<()> {
+    let s = settings_from(args)?;
+    let cost = cost_from(args)?;
+    let stages: Vec<usize> = args
+        .str_or("stages", "100,200,400")
+        .split(',')
+        .map(|t| t.trim().parse().map_err(|e| anyhow::anyhow!("--stages: {e}")))
+        .collect::<Result<_>>()?;
+    let (train_ds, test_ds) = load_data(args, &s)?;
+    let backend = make_backend(s.backend, &s.artifacts_dir)?;
+    let outs = train_stagewise(&s, &train_ds, Rc::clone(&backend), cost, &stages)?;
+    let mut t = Table::new(&["m", "accuracy", "tron_iters", "stage_secs"]);
+    for st in &outs {
+        let acc = st.model.accuracy(backend.as_ref(), &test_ds)?;
+        t.row(&[
+            st.m.to_string(),
+            format!("{acc:.4}"),
+            st.stats.iterations.to_string(),
+            format!("{:.2}", st.stage_wall_secs),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_linearized(args: &Args) -> Result<()> {
+    let s = settings_from(args)?;
+    let (train_ds, test_ds) = load_data(args, &s)?;
+    let out = train_linearized(&s, &train_ds)?;
+    println!(
+        "formulation (3): m={} rank={} | kernel {:.2}s eig {:.2}s A {:.2}s tron {:.2}s total {:.2}s (A fraction {:.4})",
+        s.m,
+        out.rank,
+        out.kernel_secs,
+        out.eig_secs,
+        out.a_secs,
+        out.tron_secs,
+        out.total_secs,
+        out.a_fraction()
+    );
+    println!("test accuracy: {:.4}", out.accuracy(&test_ds));
+    Ok(())
+}
+
+fn cmd_ppacksvm(args: &Args) -> Result<()> {
+    let s = settings_from(args)?;
+    let cost = cost_from(args)?;
+    let (train_ds, test_ds) = load_data(args, &s)?;
+    let opts = PPackOptions {
+        pack: args.usize_or("pack", 100)?,
+        epochs: args.usize_or("epochs", 1)?,
+        lambda: s.lambda / train_ds.n() as f32, // Pegasos λ is per-example
+        seed: s.seed,
+        nodes: s.nodes,
+    };
+    let out = train_ppacksvm(&train_ds, s.gamma(), &opts, cost)?;
+    let backend = make_backend(s.backend, &s.artifacts_dir)?;
+    let acc = out.model.accuracy(backend.as_ref(), &test_ds)?;
+    println!(
+        "p-packsvm: rounds={} support={} wall {:.2}s sim {:.2}s (comm {:.2}s)",
+        out.rounds,
+        out.n_support,
+        out.wall_secs,
+        out.sim.total_secs(),
+        out.sim.comm_secs(Step::Tron),
+    );
+    println!("test accuracy: {acc:.4}");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let m = Manifest::load(&dir)?;
+    println!(
+        "artifacts at {dir}: TB={} TM={} widths={:?} losses={:?}",
+        m.tb, m.tm, m.ds, m.losses
+    );
+    let mut t = Table::new(&["module", "inputs", "outputs"]);
+    for module in &m.modules {
+        t.row(&[
+            module.name.clone(),
+            module
+                .inputs
+                .iter()
+                .map(|i| format!("{:?}", i.shape))
+                .collect::<Vec<_>>()
+                .join(" "),
+            module
+                .outputs
+                .iter()
+                .map(|o| format!("{:?}", o.shape))
+                .collect::<Vec<_>>()
+                .join(" "),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,232 @@
+//! Metrics: per-step timers keyed by Algorithm-1 step, accuracy, and the
+//! fixed-width table printer the benches use to regenerate the paper's
+//! tables.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// The steps of Algorithm 1 (plus prediction), used as timer keys so
+/// Table 4's "cost slicing" falls straight out of any run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Step {
+    /// Step 1: data loading / sharding.
+    Load,
+    /// Step 3.2 extra: K-means basis selection (when enabled).
+    KMeans,
+    /// Step 2: communication of basis points.
+    BasisBcast,
+    /// Step 3: kernel (C row block) computation.
+    Kernel,
+    /// Step 4: TRON optimization.
+    Tron,
+    /// Test-set prediction (not an Algorithm-1 step; reported separately).
+    Predict,
+}
+
+impl Step {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Step::Load => "load",
+            Step::KMeans => "kmeans",
+            Step::BasisBcast => "basis_bcast",
+            Step::Kernel => "kernel",
+            Step::Tron => "tron",
+            Step::Predict => "predict",
+        }
+    }
+
+    pub fn all() -> [Step; 6] {
+        [
+            Step::Load,
+            Step::KMeans,
+            Step::BasisBcast,
+            Step::Kernel,
+            Step::Tron,
+            Step::Predict,
+        ]
+    }
+}
+
+/// Wall-clock timers per step + free-form counters.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    wall: BTreeMap<Step, Duration>,
+    counters: BTreeMap<String, u64>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under a step key (accumulating).
+    pub fn time<T>(&mut self, step: Step, f: impl FnOnce() -> T) -> T {
+        let start = Instant::now();
+        let out = f();
+        *self.wall.entry(step).or_default() += start.elapsed();
+        out
+    }
+
+    pub fn add_wall(&mut self, step: Step, d: Duration) {
+        *self.wall.entry(step).or_default() += d;
+    }
+
+    pub fn wall(&self, step: Step) -> Duration {
+        self.wall.get(&step).copied().unwrap_or_default()
+    }
+
+    pub fn wall_secs(&self, step: Step) -> f64 {
+        self.wall(step).as_secs_f64()
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.wall.values().map(|d| d.as_secs_f64()).sum()
+    }
+
+    /// Total excluding TRON — the paper's "Other time" series in Fig 2.
+    pub fn other_secs(&self) -> f64 {
+        self.total_secs() - self.wall_secs(Step::Tron)
+    }
+
+    pub fn bump(&mut self, key: &str, by: u64) {
+        *self.counters.entry(key.to_string()).or_default() += by;
+    }
+
+    pub fn counter(&self, key: &str) -> u64 {
+        self.counters.get(key).copied().unwrap_or(0)
+    }
+
+    pub fn counters(&self) -> &BTreeMap<String, u64> {
+        &self.counters
+    }
+
+    pub fn merge(&mut self, other: &Metrics) {
+        for (s, d) in &other.wall {
+            *self.wall.entry(*s).or_default() += *d;
+        }
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_default() += v;
+        }
+    }
+}
+
+/// Binary-classification accuracy from decision values.
+pub fn accuracy(scores: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    if scores.is_empty() {
+        return 0.0;
+    }
+    let correct = scores
+        .iter()
+        .zip(labels)
+        .filter(|(s, y)| (**s >= 0.0) == (**y > 0.0))
+        .count();
+    correct as f64 / scores.len() as f64
+}
+
+/// Fixed-width console table (the benches print paper-style tables).
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                s.push_str(&format!(" {:>w$} |", cells[i], w = widths[i]));
+            }
+            s
+        };
+        let mut out = String::new();
+        out.push_str(&line(&self.header));
+        out.push('\n');
+        let sep: String = format!(
+            "|{}|",
+            widths
+                .iter()
+                .map(|w| "-".repeat(w + 2))
+                .collect::<Vec<_>>()
+                .join("|")
+        );
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timers_accumulate() {
+        let mut m = Metrics::new();
+        m.time(Step::Kernel, || std::thread::sleep(Duration::from_millis(5)));
+        m.time(Step::Kernel, || std::thread::sleep(Duration::from_millis(5)));
+        assert!(m.wall_secs(Step::Kernel) >= 0.009);
+        assert_eq!(m.wall_secs(Step::Tron), 0.0);
+    }
+
+    #[test]
+    fn other_excludes_tron() {
+        let mut m = Metrics::new();
+        m.add_wall(Step::Tron, Duration::from_secs(3));
+        m.add_wall(Step::Kernel, Duration::from_secs(2));
+        assert!((m.other_secs() - 2.0).abs() < 1e-9);
+        assert!((m.total_secs() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_sums_both() {
+        let mut a = Metrics::new();
+        a.add_wall(Step::Load, Duration::from_secs(1));
+        a.bump("calls", 2);
+        let mut b = Metrics::new();
+        b.add_wall(Step::Load, Duration::from_secs(2));
+        b.bump("calls", 3);
+        a.merge(&b);
+        assert!((a.wall_secs(Step::Load) - 3.0).abs() < 1e-9);
+        assert_eq!(a.counter("calls"), 5);
+    }
+
+    #[test]
+    fn accuracy_counts_sign_agreement() {
+        let acc = accuracy(&[1.0, -0.5, 0.2, -2.0], &[1.0, 1.0, 1.0, -1.0]);
+        assert!((acc - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["m", "acc"]);
+        t.row(&["100".into(), "0.81".into()]);
+        t.row(&["51200".into(), "0.9493".into()]);
+        let s = t.render();
+        assert!(s.contains("| 51200 | 0.9493 |"));
+        assert!(s.lines().count() == 4);
+    }
+}

@@ -1,0 +1,198 @@
+//! Artifact manifest: the schema contract with `python/compile/aot.py`.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::Json;
+use crate::Result;
+
+/// Shape + dtype of one module input/output.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec {
+            shape,
+            dtype: j.get("dtype")?.as_str()?.to_string(),
+        })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT module entry.
+#[derive(Clone, Debug)]
+pub struct ModuleSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub tb: usize,
+    pub tm: usize,
+    pub ds: Vec<usize>,
+    pub losses: Vec<String>,
+    pub modules: Vec<ModuleSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "read {}: {e}\n(hint: run `make artifacts` first)",
+                path.display()
+            )
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let version = j.get("version")?.as_usize()?;
+        if version != 1 {
+            anyhow::bail!("unsupported manifest version {version}");
+        }
+        let tb = j.get("tb")?.as_usize()?;
+        let tm = j.get("tm")?.as_usize()?;
+        let ds = j
+            .get("ds")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        let losses = j
+            .get("losses")?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?;
+        let mut modules = Vec::new();
+        for m in j.get("modules")?.as_arr()? {
+            let name = m.get("name")?.as_str()?.to_string();
+            let inputs = m
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()
+                .map_err(|e| anyhow::anyhow!("module {name}: {e}"))?;
+            let outputs = m
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()
+                .map_err(|e| anyhow::anyhow!("module {name}: {e}"))?;
+            modules.push(ModuleSpec {
+                file: dir.join(m.get("file")?.as_str()?),
+                name,
+                inputs,
+                outputs,
+            });
+        }
+        Ok(Manifest {
+            tb,
+            tm,
+            ds,
+            losses,
+            modules,
+            dir,
+        })
+    }
+
+    pub fn module(&self, name: &str) -> Result<&ModuleSpec> {
+        self.modules
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| anyhow::anyhow!("module {name:?} not in manifest"))
+    }
+
+    /// Smallest supported padded width >= d.
+    pub fn pad_d(&self, d: usize) -> Result<usize> {
+        self.ds
+            .iter()
+            .copied()
+            .filter(|&w| w >= d)
+            .min()
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "feature dim {d} exceeds the largest compiled width {:?}",
+                    self.ds.iter().max()
+                )
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+ "version": 1, "tb": 256, "tm": 256, "ds": [32, 64], "losses": ["sqhinge"],
+ "modules": [
+  {"name": "matvec", "file": "matvec.hlo.txt",
+   "inputs": [{"shape": [256, 256], "dtype": "f32"}, {"shape": [256], "dtype": "f32"}],
+   "outputs": [{"shape": [256], "dtype": "f32"}]}
+ ]
+}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.tb, 256);
+        assert_eq!(m.losses, vec!["sqhinge"]);
+        let mv = m.module("matvec").unwrap();
+        assert_eq!(mv.inputs.len(), 2);
+        assert_eq!(mv.inputs[0].shape, vec![256, 256]);
+        assert_eq!(mv.file, PathBuf::from("/tmp/a/matvec.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_module_is_error() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
+        assert!(m.module("nope").is_err());
+    }
+
+    #[test]
+    fn pad_d_picks_next_width() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
+        assert_eq!(m.pad_d(10).unwrap(), 32);
+        assert_eq!(m.pad_d(32).unwrap(), 32);
+        assert_eq!(m.pad_d(33).unwrap(), 64);
+        assert!(m.pad_d(65).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&bad, PathBuf::from(".")).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_present() {
+        // Integration-style: only runs when `make artifacts` has been run.
+        if let Ok(m) = Manifest::load("artifacts") {
+            assert_eq!(m.tb, 256);
+            assert!(m.module("kernel_block_d64").is_ok());
+            assert!(m.module("fgrad_sqhinge").is_ok());
+        }
+    }
+}

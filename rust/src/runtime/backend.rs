@@ -1,0 +1,398 @@
+//! The `Compute` trait: the tile-op interface the coordinator programs
+//! against, with the PJRT (AOT artifact) and native (pure Rust)
+//! implementations. The two are differential-tested against each other in
+//! `rust/tests/runtime_pjrt.rs`.
+
+use std::rc::Rc;
+
+use crate::config::settings::{Backend, Loss};
+use crate::Result;
+
+use super::engine::{AssignOut, Engine, StageOut};
+use super::native;
+use super::tiles::{TB, TM};
+
+/// An operand prepared for repeated hot-path use: resident on the PJRT
+/// device (one upload, zero per-call transfer) or a pinned host copy for
+/// the native backend. Created once per C tile / feature panel after the
+/// kernel-computation step; every TRON f/g/Hd call then ships only the
+/// O(TB + TM) small vectors. This is the §Perf "persistent device buffer"
+/// optimization (see EXPERIMENTS.md §Perf for before/after).
+pub enum Prepared {
+    Host(Vec<f32>),
+    Device(xla::PjRtBuffer),
+}
+
+impl Prepared {
+    /// Host view (native backend only).
+    fn host(&self) -> &[f32] {
+        match self {
+            Prepared::Host(v) => v,
+            Prepared::Device(_) => panic!("device-prepared operand used on native backend"),
+        }
+    }
+
+    fn device(&self) -> Result<&xla::PjRtBuffer> {
+        match self {
+            Prepared::Device(b) => Ok(b),
+            Prepared::Host(_) => anyhow::bail!("host-prepared operand used on PJRT backend"),
+        }
+    }
+}
+
+/// Node-local tile compute. All slices follow the tiling contract of
+/// [`super::tiles`]: row tiles are TB long, basis tiles TM, features padded
+/// to a compiled width.
+pub trait Compute {
+    /// Supported padded feature widths.
+    fn widths(&self) -> Vec<usize>;
+
+    /// Smallest compiled width >= d.
+    fn pad_d(&self, d: usize) -> Result<usize> {
+        super::tiles::pad_dim(&self.widths(), d)
+            .ok_or_else(|| anyhow::anyhow!("feature dim {d} exceeds compiled widths"))
+    }
+
+    fn kernel_block(&self, x: &[f32], z: &[f32], dpad: usize, gamma: f32) -> Result<Vec<f32>>;
+    fn matvec(&self, c: &[f32], v: &[f32]) -> Result<Vec<f32>>;
+    fn matvec_t(&self, c: &[f32], r: &[f32]) -> Result<Vec<f32>>;
+    fn loss_stage(&self, loss: Loss, o: &[f32], y: &[f32], mask: &[f32]) -> Result<StageOut>;
+    fn fgrad(&self, loss: Loss, c: &[f32], beta: &[f32], y: &[f32], mask: &[f32])
+        -> Result<StageOut>;
+    fn hd_tile(&self, c: &[f32], d: &[f32], dcoef: &[f32]) -> Result<Vec<f32>>;
+    fn dist2_block(&self, x: &[f32], z: &[f32], dpad: usize) -> Result<Vec<f32>>;
+    #[allow(clippy::too_many_arguments)]
+    fn kmeans_assign(
+        &self,
+        x: &[f32],
+        cent: &[f32],
+        cmask: &[f32],
+        rmask: &[f32],
+        dpad: usize,
+    ) -> Result<AssignOut>;
+    fn predict_block(
+        &self,
+        x: &[f32],
+        z: &[f32],
+        gamma: f32,
+        beta: &[f32],
+        dpad: usize,
+    ) -> Result<Vec<f32>>;
+
+    /// Dispatch count (PJRT executions / native calls) for overhead metrics.
+    fn call_count(&self) -> u64;
+
+    fn name(&self) -> &'static str;
+
+    // ---- prepared-operand hot path (one upload, many executions) ----
+
+    /// Prepare an operand for repeated use (shape `dims`, row-major).
+    fn prepare(&self, data: &[f32], dims: &[usize]) -> Result<Prepared>;
+
+    fn kernel_block_p(
+        &self,
+        x: &Prepared,
+        z: &Prepared,
+        dpad: usize,
+        gamma: f32,
+    ) -> Result<Vec<f32>>;
+
+    fn matvec_p(&self, c: &Prepared, v: &[f32]) -> Result<Vec<f32>>;
+
+    fn matvec_t_p(&self, c: &Prepared, r: &[f32]) -> Result<Vec<f32>>;
+
+    fn fgrad_p(
+        &self,
+        loss: Loss,
+        c: &Prepared,
+        beta: &[f32],
+        y: &Prepared,
+        mask: &Prepared,
+    ) -> Result<StageOut>;
+
+    fn hd_p(&self, c: &Prepared, d: &[f32], dcoef: &[f32]) -> Result<Vec<f32>>;
+}
+
+/// PJRT-backed compute (the paper stack: AOT JAX+Pallas artifacts).
+pub struct PjrtCompute {
+    engine: Engine,
+}
+
+impl PjrtCompute {
+    pub fn new(artifacts_dir: &str) -> Result<Self> {
+        Ok(PjrtCompute {
+            engine: Engine::new(artifacts_dir)?,
+        })
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+}
+
+impl Compute for PjrtCompute {
+    fn widths(&self) -> Vec<usize> {
+        self.engine.manifest().ds.clone()
+    }
+
+    fn kernel_block(&self, x: &[f32], z: &[f32], dpad: usize, gamma: f32) -> Result<Vec<f32>> {
+        self.engine.kernel_block(x, z, dpad, gamma)
+    }
+
+    fn matvec(&self, c: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+        self.engine.matvec(c, v)
+    }
+
+    fn matvec_t(&self, c: &[f32], r: &[f32]) -> Result<Vec<f32>> {
+        self.engine.matvec_t(c, r)
+    }
+
+    fn loss_stage(&self, loss: Loss, o: &[f32], y: &[f32], mask: &[f32]) -> Result<StageOut> {
+        self.engine.loss_stage(loss.name(), o, y, mask)
+    }
+
+    fn fgrad(
+        &self,
+        loss: Loss,
+        c: &[f32],
+        beta: &[f32],
+        y: &[f32],
+        mask: &[f32],
+    ) -> Result<StageOut> {
+        self.engine.fgrad(loss.name(), c, beta, y, mask)
+    }
+
+    fn hd_tile(&self, c: &[f32], d: &[f32], dcoef: &[f32]) -> Result<Vec<f32>> {
+        self.engine.hd_tile(c, d, dcoef)
+    }
+
+    fn dist2_block(&self, x: &[f32], z: &[f32], dpad: usize) -> Result<Vec<f32>> {
+        self.engine.dist2_block(x, z, dpad)
+    }
+
+    fn kmeans_assign(
+        &self,
+        x: &[f32],
+        cent: &[f32],
+        cmask: &[f32],
+        rmask: &[f32],
+        dpad: usize,
+    ) -> Result<AssignOut> {
+        self.engine.kmeans_assign(x, cent, cmask, rmask, dpad)
+    }
+
+    fn predict_block(
+        &self,
+        x: &[f32],
+        z: &[f32],
+        gamma: f32,
+        beta: &[f32],
+        dpad: usize,
+    ) -> Result<Vec<f32>> {
+        self.engine.predict_block(x, z, gamma, beta, dpad)
+    }
+
+    fn call_count(&self) -> u64 {
+        self.engine.call_count()
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn prepare(&self, data: &[f32], dims: &[usize]) -> Result<Prepared> {
+        Ok(Prepared::Device(self.engine.upload(data, dims)?))
+    }
+
+    fn kernel_block_p(
+        &self,
+        x: &Prepared,
+        z: &Prepared,
+        dpad: usize,
+        gamma: f32,
+    ) -> Result<Vec<f32>> {
+        self.engine
+            .kernel_block_b(x.device()?, z.device()?, dpad, gamma)
+    }
+
+    fn matvec_p(&self, c: &Prepared, v: &[f32]) -> Result<Vec<f32>> {
+        self.engine.matvec_b(c.device()?, v)
+    }
+
+    fn matvec_t_p(&self, c: &Prepared, r: &[f32]) -> Result<Vec<f32>> {
+        self.engine.matvec_t_b(c.device()?, r)
+    }
+
+    fn fgrad_p(
+        &self,
+        loss: Loss,
+        c: &Prepared,
+        beta: &[f32],
+        y: &Prepared,
+        mask: &Prepared,
+    ) -> Result<StageOut> {
+        self.engine
+            .fgrad_b(loss.name(), c.device()?, beta, y.device()?, mask.device()?)
+    }
+
+    fn hd_p(&self, c: &Prepared, d: &[f32], dcoef: &[f32]) -> Result<Vec<f32>> {
+        self.engine.hd_b(c.device()?, d, dcoef)
+    }
+}
+
+/// Pure-Rust compute (differential oracle / fallback).
+#[derive(Default)]
+pub struct NativeCompute {
+    calls: std::cell::RefCell<u64>,
+}
+
+impl NativeCompute {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bump(&self) {
+        *self.calls.borrow_mut() += 1;
+    }
+}
+
+impl Compute for NativeCompute {
+    fn widths(&self) -> Vec<usize> {
+        // The native path handles any width, but report the artifact grid so
+        // padding behaviour is identical across backends.
+        vec![32, 64, 128, 256, 512, 1024]
+    }
+
+    fn kernel_block(&self, x: &[f32], z: &[f32], dpad: usize, gamma: f32) -> Result<Vec<f32>> {
+        self.bump();
+        Ok(native::kernel_block(x, z, dpad, gamma))
+    }
+
+    fn matvec(&self, c: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+        self.bump();
+        Ok(native::matvec(c, v))
+    }
+
+    fn matvec_t(&self, c: &[f32], r: &[f32]) -> Result<Vec<f32>> {
+        self.bump();
+        Ok(native::matvec_t(c, r))
+    }
+
+    fn loss_stage(&self, loss: Loss, o: &[f32], y: &[f32], mask: &[f32]) -> Result<StageOut> {
+        self.bump();
+        Ok(native::loss_stage(loss, o, y, mask))
+    }
+
+    fn fgrad(
+        &self,
+        loss: Loss,
+        c: &[f32],
+        beta: &[f32],
+        y: &[f32],
+        mask: &[f32],
+    ) -> Result<StageOut> {
+        self.bump();
+        Ok(native::fgrad(loss, c, beta, y, mask))
+    }
+
+    fn hd_tile(&self, c: &[f32], d: &[f32], dcoef: &[f32]) -> Result<Vec<f32>> {
+        self.bump();
+        Ok(native::hd_tile(c, d, dcoef))
+    }
+
+    fn dist2_block(&self, x: &[f32], z: &[f32], dpad: usize) -> Result<Vec<f32>> {
+        self.bump();
+        Ok(native::dist2_block(x, z, dpad))
+    }
+
+    fn kmeans_assign(
+        &self,
+        x: &[f32],
+        cent: &[f32],
+        cmask: &[f32],
+        rmask: &[f32],
+        dpad: usize,
+    ) -> Result<AssignOut> {
+        self.bump();
+        Ok(native::kmeans_assign(x, cent, cmask, rmask, dpad))
+    }
+
+    fn predict_block(
+        &self,
+        x: &[f32],
+        z: &[f32],
+        gamma: f32,
+        beta: &[f32],
+        dpad: usize,
+    ) -> Result<Vec<f32>> {
+        self.bump();
+        Ok(native::predict_block(x, z, gamma, beta, dpad))
+    }
+
+    fn call_count(&self) -> u64 {
+        *self.calls.borrow()
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn prepare(&self, data: &[f32], _dims: &[usize]) -> Result<Prepared> {
+        Ok(Prepared::Host(data.to_vec()))
+    }
+
+    fn kernel_block_p(
+        &self,
+        x: &Prepared,
+        z: &Prepared,
+        dpad: usize,
+        gamma: f32,
+    ) -> Result<Vec<f32>> {
+        self.bump();
+        Ok(native::kernel_block(x.host(), z.host(), dpad, gamma))
+    }
+
+    fn matvec_p(&self, c: &Prepared, v: &[f32]) -> Result<Vec<f32>> {
+        self.bump();
+        Ok(native::matvec(c.host(), v))
+    }
+
+    fn matvec_t_p(&self, c: &Prepared, r: &[f32]) -> Result<Vec<f32>> {
+        self.bump();
+        Ok(native::matvec_t(c.host(), r))
+    }
+
+    fn fgrad_p(
+        &self,
+        loss: Loss,
+        c: &Prepared,
+        beta: &[f32],
+        y: &Prepared,
+        mask: &Prepared,
+    ) -> Result<StageOut> {
+        self.bump();
+        Ok(native::fgrad(loss, c.host(), beta, y.host(), mask.host()))
+    }
+
+    fn hd_p(&self, c: &Prepared, d: &[f32], dcoef: &[f32]) -> Result<Vec<f32>> {
+        self.bump();
+        Ok(native::hd_tile(c.host(), d, dcoef))
+    }
+}
+
+/// Construct the configured backend. The result is shared (`Rc`) across all
+/// simulated nodes: in-process they share one PJRT client and its compiled
+/// executables, which is the moral equivalent of each Hadoop node having
+/// compiled the same binary.
+pub fn make_backend(backend: Backend, artifacts_dir: &str) -> Result<Rc<dyn Compute>> {
+    Ok(match backend {
+        Backend::Pjrt => Rc::new(PjrtCompute::new(artifacts_dir)?),
+        Backend::Native => Rc::new(NativeCompute::new()),
+    })
+}
+
+/// Sanity guard shared by all Compute users: tile buffers must match the
+/// fixed grid.
+pub fn assert_tile_shapes(c: &[f32]) {
+    assert_eq!(c.len(), TB * TM, "C tile must be TB*TM");
+}

@@ -1,0 +1,378 @@
+//! PJRT engine: compiles the AOT HLO-text modules once and dispatches typed
+//! tile ops on the training hot path.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: `HloModuleProto::
+//! from_text_file` → `XlaComputation::from_proto` → `client.compile` →
+//! `execute`. Modules are compiled lazily on first use and cached for the
+//! life of the engine (one compiled executable per module).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+
+use crate::Result;
+
+use super::artifacts::Manifest;
+use super::tiles::{TB, TM};
+
+/// Loss/grad stage output: (loss_sum, vec, dcoef).
+pub struct StageOut {
+    pub loss: f32,
+    pub vec: Vec<f32>,
+    pub dcoef: Vec<f32>,
+}
+
+/// K-means assignment output for one row tile.
+pub struct AssignOut {
+    pub idx: Vec<i32>,
+    pub counts: Vec<f32>,
+    pub sums: Vec<f32>,
+    pub inertia: f32,
+}
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: RefCell<BTreeMap<String, xla::PjRtLoadedExecutable>>,
+    calls: RefCell<u64>,
+    compile_secs: RefCell<f64>,
+}
+
+impl Engine {
+    /// Create the engine over an artifacts directory (no compilation yet).
+    pub fn new(artifacts_dir: &str) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        if manifest.tb != TB || manifest.tm != TM {
+            anyhow::bail!(
+                "artifact tile grid ({}, {}) != compiled-in ({TB}, {TM}); \
+                 re-run `make artifacts`",
+                manifest.tb,
+                manifest.tm
+            );
+        }
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            manifest,
+            exes: RefCell::new(BTreeMap::new()),
+            calls: RefCell::new(0),
+            compile_secs: RefCell::new(0.0),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Total module executions so far (dispatch-overhead accounting).
+    pub fn call_count(&self) -> u64 {
+        *self.calls.borrow()
+    }
+
+    /// Cumulative compile time (excluded from hot-path timings by warmup).
+    pub fn compile_secs(&self) -> f64 {
+        *self.compile_secs.borrow()
+    }
+
+    /// Pre-compile a set of modules (so hot-path timings exclude compiles).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.ensure_compiled(n)?;
+        }
+        Ok(())
+    }
+
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        if self.exes.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.module(name)?;
+        let start = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        *self.compile_secs.borrow_mut() += start.elapsed().as_secs_f64();
+        self.exes.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a module on literal inputs; returns the decomposed output
+    /// tuple (modules are lowered with return_tuple=True).
+    fn exec(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.ensure_compiled(name)?;
+        let exes = self.exes.borrow();
+        let exe = exes.get(name).unwrap();
+        *self.calls.borrow_mut() += 1;
+        let bufs = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
+        lit.to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))
+    }
+
+    /// Execute on device buffers (the hot path: operands prepared once with
+    /// [`Engine::upload`], only the small per-call vectors are copied).
+    fn exec_b(&self, name: &str, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        self.ensure_compiled(name)?;
+        let exes = self.exes.borrow();
+        let exe = exes.get(name).unwrap();
+        *self.calls.borrow_mut() += 1;
+        let bufs = exe
+            .execute_b::<&xla::PjRtBuffer>(args)
+            .map_err(|e| anyhow::anyhow!("execute_b {name}: {e:?}"))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
+        lit.to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))
+    }
+
+    /// Copy a host array to a persistent device buffer (CPU PJRT: one
+    /// memcpy, then zero per-call transfer for the life of the buffer).
+    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload {dims:?}: {e:?}"))
+    }
+
+    fn lit1(&self, v: &[f32]) -> xla::Literal {
+        xla::Literal::vec1(v)
+    }
+
+    fn lit2(&self, v: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        assert_eq!(v.len(), rows * cols);
+        xla::Literal::vec1(v)
+            .reshape(&[rows as i64, cols as i64])
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+    }
+
+    fn vec_f32(lit: &xla::Literal, what: &str) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("{what}: {e:?}"))
+    }
+
+    fn scalar_f32(lit: &xla::Literal, what: &str) -> Result<f32> {
+        lit.get_first_element::<f32>()
+            .map_err(|e| anyhow::anyhow!("{what}: {e:?}"))
+    }
+
+    // ---------------- typed tile ops (the hot path) ----------------
+
+    /// C tile = RBF(x_tile, z_tile): x (TB, dpad), z (TM, dpad) → (TB*TM).
+    pub fn kernel_block(
+        &self,
+        x_tile: &[f32],
+        z_tile: &[f32],
+        dpad: usize,
+        gamma: f32,
+    ) -> Result<Vec<f32>> {
+        let name = format!("kernel_block_d{dpad}");
+        let out = self.exec(
+            &name,
+            &[
+                self.lit2(x_tile, TB, dpad)?,
+                self.lit2(z_tile, TM, dpad)?,
+                self.lit1(&[gamma]),
+            ],
+        )?;
+        Self::vec_f32(&out[0], "kernel_block out")
+    }
+
+    /// o tile = C v: c (TB*TM), v (TM) → (TB).
+    pub fn matvec(&self, c_tile: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+        let out = self.exec("matvec", &[self.lit2(c_tile, TB, TM)?, self.lit1(v)])?;
+        Self::vec_f32(&out[0], "matvec out")
+    }
+
+    /// g tile = Cᵀ r: c (TB*TM), r (TB) → (TM).
+    pub fn matvec_t(&self, c_tile: &[f32], r: &[f32]) -> Result<Vec<f32>> {
+        let out = self.exec("matvec_t", &[self.lit2(c_tile, TB, TM)?, self.lit1(r)])?;
+        Self::vec_f32(&out[0], "matvec_t out")
+    }
+
+    /// Loss stage: (o, y, mask) → (loss_sum, resid, dcoef).
+    pub fn loss_stage(
+        &self,
+        loss: &str,
+        o: &[f32],
+        y: &[f32],
+        mask: &[f32],
+    ) -> Result<StageOut> {
+        let name = format!("loss_{loss}");
+        let out = self.exec(
+            &name,
+            &[self.lit1(o), self.lit1(y), self.lit1(mask)],
+        )?;
+        Ok(StageOut {
+            loss: Self::scalar_f32(&out[0], "loss")?,
+            vec: Self::vec_f32(&out[1], "resid")?,
+            dcoef: Self::vec_f32(&out[2], "dcoef")?,
+        })
+    }
+
+    /// Fused f/grad for one row tile (m <= TM): (c, β, y, mask) →
+    /// (loss_sum, grad (TM), dcoef (TB)).
+    pub fn fgrad(
+        &self,
+        loss: &str,
+        c_tile: &[f32],
+        beta: &[f32],
+        y: &[f32],
+        mask: &[f32],
+    ) -> Result<StageOut> {
+        let name = format!("fgrad_{loss}");
+        let out = self.exec(
+            &name,
+            &[
+                self.lit2(c_tile, TB, TM)?,
+                self.lit1(beta),
+                self.lit1(y),
+                self.lit1(mask),
+            ],
+        )?;
+        Ok(StageOut {
+            loss: Self::scalar_f32(&out[0], "loss")?,
+            vec: Self::vec_f32(&out[1], "grad")?,
+            dcoef: Self::vec_f32(&out[2], "dcoef")?,
+        })
+    }
+
+    /// Fused Hd loss term for one row tile (m <= TM): Cᵀ(D(C d)).
+    pub fn hd_tile(&self, c_tile: &[f32], d: &[f32], dcoef: &[f32]) -> Result<Vec<f32>> {
+        let out = self.exec(
+            "hd_tile",
+            &[self.lit2(c_tile, TB, TM)?, self.lit1(d), self.lit1(dcoef)],
+        )?;
+        Self::vec_f32(&out[0], "hd out")
+    }
+
+    /// Squared-distance tile: x (TB, dpad), z (TM, dpad) → (TB*TM).
+    pub fn dist2_block(&self, x_tile: &[f32], z_tile: &[f32], dpad: usize) -> Result<Vec<f32>> {
+        let name = format!("dist2_block_d{dpad}");
+        let out = self.exec(
+            &name,
+            &[self.lit2(x_tile, TB, dpad)?, self.lit2(z_tile, TM, dpad)?],
+        )?;
+        Self::vec_f32(&out[0], "dist2_block out")
+    }
+
+    /// K-means assignment for one row tile.
+    pub fn kmeans_assign(
+        &self,
+        x_tile: &[f32],
+        cent: &[f32],
+        cmask: &[f32],
+        rmask: &[f32],
+        dpad: usize,
+    ) -> Result<AssignOut> {
+        let name = format!("kmeans_assign_d{dpad}");
+        let out = self.exec(
+            &name,
+            &[
+                self.lit2(x_tile, TB, dpad)?,
+                self.lit2(cent, TM, dpad)?,
+                self.lit1(cmask),
+                self.lit1(rmask),
+            ],
+        )?;
+        Ok(AssignOut {
+            idx: out[0]
+                .to_vec::<i32>()
+                .map_err(|e| anyhow::anyhow!("idx: {e:?}"))?,
+            counts: Self::vec_f32(&out[1], "counts")?,
+            sums: Self::vec_f32(&out[2], "sums")?,
+            inertia: Self::scalar_f32(&out[3], "inertia")?,
+        })
+    }
+
+    // -------- buffer (prepared-operand) variants of the hot ops --------
+
+    /// C tile from prepared operands: x, z already on device.
+    pub fn kernel_block_b(
+        &self,
+        x: &xla::PjRtBuffer,
+        z: &xla::PjRtBuffer,
+        dpad: usize,
+        gamma: f32,
+    ) -> Result<Vec<f32>> {
+        let name = format!("kernel_block_d{dpad}");
+        let g = self.upload(&[gamma], &[1])?;
+        let out = self.exec_b(&name, &[x, z, &g])?;
+        Self::vec_f32(&out[0], "kernel_block out")
+    }
+
+    pub fn matvec_b(&self, c: &xla::PjRtBuffer, v: &[f32]) -> Result<Vec<f32>> {
+        let vb = self.upload(v, &[v.len()])?;
+        let out = self.exec_b("matvec", &[c, &vb])?;
+        Self::vec_f32(&out[0], "matvec out")
+    }
+
+    pub fn matvec_t_b(&self, c: &xla::PjRtBuffer, r: &[f32]) -> Result<Vec<f32>> {
+        let rb = self.upload(r, &[r.len()])?;
+        let out = self.exec_b("matvec_t", &[c, &rb])?;
+        Self::vec_f32(&out[0], "matvec_t out")
+    }
+
+    pub fn fgrad_b(
+        &self,
+        loss: &str,
+        c: &xla::PjRtBuffer,
+        beta: &[f32],
+        y: &xla::PjRtBuffer,
+        mask: &xla::PjRtBuffer,
+    ) -> Result<StageOut> {
+        let name = format!("fgrad_{loss}");
+        let bb = self.upload(beta, &[beta.len()])?;
+        let out = self.exec_b(&name, &[c, &bb, y, mask])?;
+        Ok(StageOut {
+            loss: Self::scalar_f32(&out[0], "loss")?,
+            vec: Self::vec_f32(&out[1], "grad")?,
+            dcoef: Self::vec_f32(&out[2], "dcoef")?,
+        })
+    }
+
+    pub fn hd_b(
+        &self,
+        c: &xla::PjRtBuffer,
+        d: &[f32],
+        dcoef: &[f32],
+    ) -> Result<Vec<f32>> {
+        let db = self.upload(d, &[d.len()])?;
+        let dc = self.upload(dcoef, &[dcoef.len()])?;
+        let out = self.exec_b("hd_tile", &[c, &db, &dc])?;
+        Self::vec_f32(&out[0], "hd out")
+    }
+
+    /// Prediction tile: decision values for TB test rows against one basis
+    /// tile: kernel_block + matvec fused.
+    pub fn predict_block(
+        &self,
+        x_tile: &[f32],
+        z_tile: &[f32],
+        gamma: f32,
+        beta: &[f32],
+        dpad: usize,
+    ) -> Result<Vec<f32>> {
+        let name = format!("predict_block_d{dpad}");
+        let out = self.exec(
+            &name,
+            &[
+                self.lit2(x_tile, TB, dpad)?,
+                self.lit2(z_tile, TM, dpad)?,
+                self.lit1(&[gamma]),
+                self.lit1(beta),
+            ],
+        )?;
+        Self::vec_f32(&out[0], "predict out")
+    }
+}
+
+// Tests for the engine live in rust/tests/runtime_pjrt.rs (they need the
+// artifacts directory and a PJRT client, i.e. integration scope).

@@ -1,0 +1,25 @@
+//! Runtime: loads the AOT artifacts (HLO text lowered from JAX + Pallas at
+//! build time) and executes them on the training hot path via the PJRT CPU
+//! client (`xla` crate). Python never runs here.
+//!
+//! * [`artifacts`] — manifest schema shared with `python/compile/aot.py`.
+//! * [`engine`] — PJRT client + compiled executables + typed dispatch for
+//!   every module (kernel tiles, matvec family, loss stages, k-means,
+//!   prediction).
+//! * [`tiles`] — the padding/tiling contract: datasets are zero-padded to
+//!   the (TB, TM, D) grid the modules were lowered for.
+//! * [`native`] — pure-Rust implementations of the exact same ops, used as
+//!   a differential-testing oracle and as a fallback backend.
+//! * [`backend`] — the `Compute` trait the coordinator programs against,
+//!   with PJRT and native implementations.
+
+pub mod artifacts;
+pub mod backend;
+pub mod engine;
+pub mod native;
+pub mod tiles;
+
+pub use artifacts::Manifest;
+pub use backend::{make_backend, Compute};
+pub use engine::Engine;
+pub use tiles::{pad_dim, TiledMatrix, TB, TM};

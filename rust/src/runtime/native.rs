@@ -1,0 +1,374 @@
+//! Pure-Rust implementations of the exact tile-op semantics of the AOT
+//! modules. Two roles:
+//! * differential-testing oracle for the PJRT path (rust/tests/);
+//! * fallback `Compute` backend (`--backend native`).
+//!
+//! Every function mirrors the L2 graph in `python/compile/model.py`
+//! including mask conventions; keep the two in sync.
+
+use super::engine::{AssignOut, StageOut};
+use super::tiles::{TB, TM};
+use crate::config::settings::Loss;
+
+/// RBF kernel tile: x (TB, d), z (TM, d), row-major → (TB*TM).
+pub fn kernel_block(x_tile: &[f32], z_tile: &[f32], d: usize, gamma: f32) -> Vec<f32> {
+    assert_eq!(x_tile.len(), TB * d);
+    assert_eq!(z_tile.len(), TM * d);
+    let mut out = vec![0.0f32; TB * TM];
+    // ||x||^2 + ||z||^2 - 2 x.z, like the Pallas kernel (not the naive
+    // difference loop) so numerics match closely.
+    let xsq: Vec<f32> = (0..TB)
+        .map(|i| crate::linalg::mat::dot(&x_tile[i * d..(i + 1) * d], &x_tile[i * d..(i + 1) * d]))
+        .collect();
+    let zsq: Vec<f32> = (0..TM)
+        .map(|k| crate::linalg::mat::dot(&z_tile[k * d..(k + 1) * d], &z_tile[k * d..(k + 1) * d]))
+        .collect();
+    for i in 0..TB {
+        let xi = &x_tile[i * d..(i + 1) * d];
+        let orow = &mut out[i * TM..(i + 1) * TM];
+        for k in 0..TM {
+            let zk = &z_tile[k * d..(k + 1) * d];
+            let d2 = (xsq[i] + zsq[k] - 2.0 * crate::linalg::mat::dot(xi, zk)).max(0.0);
+            orow[k] = (-gamma * d2).exp();
+        }
+    }
+    out
+}
+
+/// o = C v over one tile.
+pub fn matvec(c_tile: &[f32], v: &[f32]) -> Vec<f32> {
+    assert_eq!(c_tile.len(), TB * TM);
+    assert_eq!(v.len(), TM);
+    (0..TB)
+        .map(|i| crate::linalg::mat::dot(&c_tile[i * TM..(i + 1) * TM], v))
+        .collect()
+}
+
+/// g = Cᵀ r over one tile.
+pub fn matvec_t(c_tile: &[f32], r: &[f32]) -> Vec<f32> {
+    assert_eq!(c_tile.len(), TB * TM);
+    assert_eq!(r.len(), TB);
+    let mut out = vec![0.0f32; TM];
+    for i in 0..TB {
+        if r[i] != 0.0 {
+            crate::linalg::mat::axpy(r[i], &c_tile[i * TM..(i + 1) * TM], &mut out);
+        }
+    }
+    out
+}
+
+/// Loss stage (value, dL/do, Gauss-Newton diagonal), masked.
+pub fn loss_stage(loss: Loss, o: &[f32], y: &[f32], mask: &[f32]) -> StageOut {
+    let n = o.len();
+    assert_eq!(y.len(), n);
+    assert_eq!(mask.len(), n);
+    let mut total = 0.0f32;
+    let mut resid = vec![0.0f32; n];
+    let mut dcoef = vec![0.0f32; n];
+    match loss {
+        Loss::SqHinge => {
+            for i in 0..n {
+                let margin = 1.0 - y[i] * o[i];
+                if margin > 0.0 && mask[i] > 0.0 {
+                    total += 0.5 * margin * margin;
+                    resid[i] = o[i] - y[i];
+                    dcoef[i] = 1.0;
+                }
+            }
+        }
+        Loss::Logistic => {
+            for i in 0..n {
+                if mask[i] > 0.0 {
+                    let m = y[i] * o[i];
+                    // log(1 + exp(-m)), stable form (matches jnp.logaddexp).
+                    total += if m > 0.0 {
+                        (-m).exp().ln_1p()
+                    } else {
+                        -m + m.exp().ln_1p()
+                    };
+                    let sig = 1.0 / (1.0 + m.exp()); // sigma(-m)
+                    resid[i] = -y[i] * sig;
+                    dcoef[i] = sig * (1.0 - sig);
+                }
+            }
+        }
+        Loss::Squared => {
+            for i in 0..n {
+                if mask[i] > 0.0 {
+                    let r = o[i] - y[i];
+                    total += 0.5 * r * r;
+                    resid[i] = r;
+                    dcoef[i] = 1.0;
+                }
+            }
+        }
+    }
+    StageOut {
+        loss: total,
+        vec: resid,
+        dcoef,
+    }
+}
+
+/// Fused f/grad tile: o = C β; (loss, Cᵀ resid, dcoef).
+pub fn fgrad(loss: Loss, c_tile: &[f32], beta: &[f32], y: &[f32], mask: &[f32]) -> StageOut {
+    let o = matvec(c_tile, beta);
+    let stage = loss_stage(loss, &o, y, mask);
+    let grad = matvec_t(c_tile, &stage.vec);
+    StageOut {
+        loss: stage.loss,
+        vec: grad,
+        dcoef: stage.dcoef,
+    }
+}
+
+/// Fused Hd tile: Cᵀ (D (C d)).
+pub fn hd_tile(c_tile: &[f32], d: &[f32], dcoef: &[f32]) -> Vec<f32> {
+    let mut z = matvec(c_tile, d);
+    for (zi, w) in z.iter_mut().zip(dcoef) {
+        *zi *= w;
+    }
+    matvec_t(c_tile, &z)
+}
+
+/// Squared-distance tile (K-means multi-tile path).
+pub fn dist2_block(x_tile: &[f32], z_tile: &[f32], d: usize) -> Vec<f32> {
+    assert_eq!(x_tile.len(), TB * d);
+    assert_eq!(z_tile.len(), TM * d);
+    let mut out = vec![0.0f32; TB * TM];
+    let xsq: Vec<f32> = (0..TB)
+        .map(|i| crate::linalg::mat::dot(&x_tile[i * d..(i + 1) * d], &x_tile[i * d..(i + 1) * d]))
+        .collect();
+    let zsq: Vec<f32> = (0..TM)
+        .map(|k| crate::linalg::mat::dot(&z_tile[k * d..(k + 1) * d], &z_tile[k * d..(k + 1) * d]))
+        .collect();
+    for i in 0..TB {
+        let xi = &x_tile[i * d..(i + 1) * d];
+        for k in 0..TM {
+            out[i * TM + k] = (xsq[i] + zsq[k]
+                - 2.0 * crate::linalg::mat::dot(xi, &z_tile[k * d..(k + 1) * d]))
+            .max(0.0);
+        }
+    }
+    out
+}
+
+/// K-means assignment over one row tile (rmask marks live rows).
+pub fn kmeans_assign(
+    x_tile: &[f32],
+    cent: &[f32],
+    cmask: &[f32],
+    rmask: &[f32],
+    d: usize,
+) -> AssignOut {
+    assert_eq!(x_tile.len(), TB * d);
+    assert_eq!(cent.len(), TM * d);
+    assert_eq!(cmask.len(), TM);
+    assert_eq!(rmask.len(), TB);
+    let csq: Vec<f32> = (0..TM)
+        .map(|k| crate::linalg::mat::dot(&cent[k * d..(k + 1) * d], &cent[k * d..(k + 1) * d]))
+        .collect();
+    let mut idx = vec![0i32; TB];
+    let mut counts = vec![0.0f32; TM];
+    let mut sums = vec![0.0f32; TM * d];
+    let mut inertia = 0.0f32;
+    for i in 0..TB {
+        let xi = &x_tile[i * d..(i + 1) * d];
+        let xsq = crate::linalg::mat::dot(xi, xi);
+        let mut best = f32::INFINITY;
+        let mut best_k = 0usize;
+        for k in 0..TM {
+            let d2 = (xsq + csq[k] - 2.0 * crate::linalg::mat::dot(xi, &cent[k * d..(k + 1) * d]))
+                .max(0.0)
+                + (1.0 - cmask[k]) * 1e30;
+            if d2 < best {
+                best = d2;
+                best_k = k;
+            }
+        }
+        idx[i] = best_k as i32;
+        if rmask[i] > 0.0 {
+            counts[best_k] += 1.0;
+            crate::linalg::mat::axpy(1.0, xi, &mut sums[best_k * d..(best_k + 1) * d]);
+            inertia += best;
+        }
+    }
+    AssignOut {
+        idx,
+        counts,
+        sums,
+        inertia,
+    }
+}
+
+/// Prediction tile: RBF(x, z) β.
+pub fn predict_block(
+    x_tile: &[f32],
+    z_tile: &[f32],
+    gamma: f32,
+    beta: &[f32],
+    d: usize,
+) -> Vec<f32> {
+    let c = kernel_block(x_tile, z_tile, d, gamma);
+    matvec(&c, beta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| scale * rng.normal_f32()).collect()
+    }
+
+    #[test]
+    fn kernel_diag_is_one_for_identical_rows() {
+        let mut rng = Rng::new(1);
+        let d = 32;
+        let x = rand_vec(&mut rng, TB * d, 1.0);
+        let mut z = vec![0.0; TM * d];
+        z[..TB.min(TM) * d].copy_from_slice(&x[..TB.min(TM) * d]);
+        let k = kernel_block(&x, &z, d, 0.7);
+        for i in 0..TB.min(TM) {
+            assert!((k[i * TM + i] - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn matvec_pair_adjoint() {
+        let mut rng = Rng::new(2);
+        let c = rand_vec(&mut rng, TB * TM, 1.0);
+        let v = rand_vec(&mut rng, TM, 1.0);
+        let r = rand_vec(&mut rng, TB, 1.0);
+        let lhs = crate::linalg::mat::dot(&matvec(&c, &v), &r);
+        let rhs = crate::linalg::mat::dot(&v, &matvec_t(&c, &r));
+        assert!((lhs - rhs).abs() < 2e-2 * lhs.abs().max(1.0));
+    }
+
+    #[test]
+    fn sqhinge_stage_matches_paper() {
+        let mut o = vec![0.0f32; TB];
+        let mut y = vec![1.0f32; TB];
+        let mut mask = vec![0.0f32; TB];
+        o[0] = 2.0; // inactive
+        o[1] = 0.5; // active
+        y[1] = 1.0;
+        mask[0] = 1.0;
+        mask[1] = 1.0;
+        let s = loss_stage(Loss::SqHinge, &o, &y, &mask);
+        assert!((s.loss - 0.125).abs() < 1e-6);
+        assert_eq!(s.dcoef[0], 0.0);
+        assert_eq!(s.dcoef[1], 1.0);
+        assert!((s.vec[1] - (-0.5)).abs() < 1e-6);
+        // padding rows contribute nothing even with nonzero o
+        assert_eq!(s.vec[2], 0.0);
+    }
+
+    #[test]
+    fn logistic_matches_finite_difference() {
+        // FD on a single-row mask so the f32 loss sum has no cancellation
+        // noise from the other TB-1 rows.
+        let mut rng = Rng::new(3);
+        let o = rand_vec(&mut rng, TB, 1.5);
+        let y: Vec<f32> = (0..TB).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let full_mask = vec![1.0f32; TB];
+        let s = loss_stage(Loss::Logistic, &o, &y, &full_mask);
+        let eps = 1e-3;
+        for i in [0, 7, 100] {
+            let mut mask = vec![0.0f32; TB];
+            mask[i] = 1.0;
+            let mut op = o.clone();
+            op[i] += eps;
+            let lp = loss_stage(Loss::Logistic, &op, &y, &mask).loss;
+            let mut om = o.clone();
+            om[i] -= eps;
+            let lm = loss_stage(Loss::Logistic, &om, &y, &mask).loss;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - s.vec[i]).abs() < 1e-3 * s.vec[i].abs().max(0.1),
+                "i={i}: fd {fd} vs {}",
+                s.vec[i]
+            );
+        }
+    }
+
+    #[test]
+    fn fgrad_consistent_with_stages() {
+        let mut rng = Rng::new(4);
+        let c = rand_vec(&mut rng, TB * TM, 0.5);
+        let beta = rand_vec(&mut rng, TM, 0.2);
+        let y: Vec<f32> = (0..TB).map(|i| if i % 3 == 0 { 1.0 } else { -1.0 }).collect();
+        let mask = vec![1.0f32; TB];
+        let f = fgrad(Loss::SqHinge, &c, &beta, &y, &mask);
+        let o = matvec(&c, &beta);
+        let s = loss_stage(Loss::SqHinge, &o, &y, &mask);
+        let grad = matvec_t(&c, &s.vec);
+        assert!((f.loss - s.loss).abs() < 1e-3);
+        for (a, b) in f.vec.iter().zip(&grad) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn kmeans_assign_respects_mask_and_counts() {
+        let mut rng = Rng::new(5);
+        let d = 32;
+        let x = rand_vec(&mut rng, TB * d, 1.0);
+        let cent = rand_vec(&mut rng, TM * d, 1.0);
+        let mut cmask = vec![0.0f32; TM];
+        cmask[..10].fill(1.0);
+        let rmask = vec![1.0f32; TB];
+        let a = kmeans_assign(&x, &cent, &cmask, &rmask, d);
+        assert!(a.idx.iter().all(|&i| i < 10));
+        assert_eq!(a.counts.iter().sum::<f32>(), TB as f32);
+        assert!(a.counts[10..].iter().all(|&c| c == 0.0));
+        // sums consistency: total of sums == total of x
+        let total_sums: f32 = a.sums.iter().sum();
+        let total_x: f32 = x.iter().sum();
+        assert!((total_sums - total_x).abs() < 1e-2 * total_x.abs().max(1.0));
+    }
+
+    #[test]
+    fn kmeans_row_mask_excludes_padding_rows() {
+        let mut rng = Rng::new(7);
+        let d = 32;
+        let x = rand_vec(&mut rng, TB * d, 1.0);
+        let cent = rand_vec(&mut rng, TM * d, 1.0);
+        let cmask = vec![1.0f32; TM];
+        let mut rmask = vec![0.0f32; TB];
+        rmask[..100].fill(1.0);
+        let a = kmeans_assign(&x, &cent, &cmask, &rmask, d);
+        assert_eq!(a.counts.iter().sum::<f32>(), 100.0);
+        let full = kmeans_assign(&x, &cent, &cmask, &vec![1.0; TB], d);
+        assert!(a.inertia < full.inertia);
+    }
+
+    #[test]
+    fn dist2_block_matches_kernel_exponent() {
+        let mut rng = Rng::new(8);
+        let d = 32;
+        let x = rand_vec(&mut rng, TB * d, 1.0);
+        let z = rand_vec(&mut rng, TM * d, 1.0);
+        let d2 = dist2_block(&x, &z, d);
+        let k = kernel_block(&x, &z, d, 0.5);
+        for i in (0..TB * TM).step_by(999) {
+            assert!((k[i] - (-0.5 * d2[i]).exp()).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn predict_is_kernel_then_matvec() {
+        let mut rng = Rng::new(6);
+        let d = 32;
+        let x = rand_vec(&mut rng, TB * d, 1.0);
+        let z = rand_vec(&mut rng, TM * d, 1.0);
+        let beta = rand_vec(&mut rng, TM, 0.1);
+        let p = predict_block(&x, &z, 0.3, &beta, d);
+        let c = kernel_block(&x, &z, d, 0.3);
+        let o = matvec(&c, &beta);
+        for (a, b) in p.iter().zip(&o) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}

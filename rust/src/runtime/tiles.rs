@@ -1,0 +1,275 @@
+//! The tiling/padding contract between datasets and the fixed-shape AOT
+//! modules.
+//!
+//! HLO modules have static shapes, so the runtime zero-pads everything to a
+//! (TB, TM, D) grid and loops tiles:
+//! * rows are padded to multiples of TB with zero rows, masked out of
+//!   losses and reductions via `mask` vectors;
+//! * basis columns are padded to multiples of TM with zero columns — for
+//!   the RBF kernel a zero *basis row* still yields kernel values, so basis
+//!   validity is ALSO handled by masks (β padding entries stay exactly 0:
+//!   they start 0 and their gradient entries are masked);
+//! * feature width d is zero-padded to the next compiled width D, which is
+//!   exact for RBF (padded coordinates contribute 0 to ‖x−z‖²).
+
+use crate::linalg::Mat;
+
+/// Row-tile edge (must match `python/compile/aot.py::TB`).
+pub const TB: usize = 256;
+/// Basis-tile edge (must match `python/compile/aot.py::TM`).
+pub const TM: usize = 256;
+
+/// Round `n` up to a multiple of `tile`.
+#[inline]
+pub fn round_up(n: usize, tile: usize) -> usize {
+    n.div_ceil(tile) * tile
+}
+
+/// Zero-pad a row-major matrix to (rows_to, cols_to).
+pub fn pad_mat(x: &Mat, rows_to: usize, cols_to: usize) -> Mat {
+    assert!(rows_to >= x.rows() && cols_to >= x.cols());
+    let mut out = Mat::zeros(rows_to, cols_to);
+    for i in 0..x.rows() {
+        out.row_mut(i)[..x.cols()].copy_from_slice(x.row(i));
+    }
+    out
+}
+
+/// Zero-pad a vector to `len_to`.
+pub fn pad_vec(v: &[f32], len_to: usize) -> Vec<f32> {
+    assert!(len_to >= v.len());
+    let mut out = vec![0.0; len_to];
+    out[..v.len()].copy_from_slice(v);
+    out
+}
+
+/// Smallest width in `widths` that is >= d (the compiled-D selection).
+pub fn pad_dim(widths: &[usize], d: usize) -> Option<usize> {
+    widths.iter().copied().filter(|&w| w >= d).min()
+}
+
+/// A (rows x cols) matrix stored as a grid of contiguous (TB x TM) tiles —
+/// the layout the PJRT modules consume directly. Logical size is
+/// (rows, cols); physical size is padded.
+#[derive(Clone, Debug)]
+pub struct TiledMatrix {
+    rows: usize,
+    cols: usize,
+    row_tiles: usize,
+    col_tiles: usize,
+    /// tiles[i][j] is the (TB x TM) tile at row-tile i, col-tile j,
+    /// row-major within the tile.
+    tiles: Vec<Vec<Vec<f32>>>,
+}
+
+impl TiledMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        let row_tiles = rows.div_ceil(TB).max(1);
+        let col_tiles = cols.div_ceil(TM).max(1);
+        TiledMatrix {
+            rows,
+            cols,
+            row_tiles,
+            col_tiles,
+            tiles: vec![vec![vec![0.0; TB * TM]; col_tiles]; row_tiles],
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn row_tiles(&self) -> usize {
+        self.row_tiles
+    }
+
+    pub fn col_tiles(&self) -> usize {
+        self.col_tiles
+    }
+
+    /// Logical rows covered by row-tile i (the last tile may be partial).
+    pub fn rows_in_tile(&self, i: usize) -> usize {
+        debug_assert!(i < self.row_tiles);
+        (self.rows - i * TB).min(TB)
+    }
+
+    /// Logical cols covered by col-tile j.
+    pub fn cols_in_tile(&self, j: usize) -> usize {
+        debug_assert!(j < self.col_tiles);
+        (self.cols - j * TM).min(TM)
+    }
+
+    pub fn tile(&self, i: usize, j: usize) -> &[f32] {
+        &self.tiles[i][j]
+    }
+
+    pub fn tile_mut(&mut self, i: usize, j: usize) -> &mut [f32] {
+        &mut self.tiles[i][j]
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.tiles[r / TB][c / TM][(r % TB) * TM + (c % TM)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.tiles[r / TB][c / TM][(r % TB) * TM + (c % TM)] = v;
+    }
+
+    /// Grow the logical column count (stage-wise basis addition). Newly
+    /// exposed columns are zero; tiles are allocated as needed. Returns the
+    /// range of col-tiles whose contents must be (re)computed: from the
+    /// tile containing old `cols` (it was partial) through the new last
+    /// tile.
+    pub fn grow_cols(&mut self, new_cols: usize) -> std::ops::Range<usize> {
+        assert!(new_cols >= self.cols, "grow_cols cannot shrink");
+        let first_dirty = self.cols / TM; // tile holding the first new column
+        let new_col_tiles = new_cols.div_ceil(TM).max(1);
+        for row in &mut self.tiles {
+            row.resize(new_col_tiles, vec![0.0; TB * TM]);
+        }
+        self.cols = new_cols;
+        self.col_tiles = new_col_tiles;
+        first_dirty..new_col_tiles
+    }
+
+    /// Dense copy (tests / debugging).
+    pub fn to_mat(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                *out.at_mut(r, c) = self.at(r, c);
+            }
+        }
+        out
+    }
+
+    /// Build from a dense matrix (tests).
+    pub fn from_mat(m: &Mat) -> Self {
+        let mut out = Self::zeros(m.rows(), m.cols());
+        for r in 0..m.rows() {
+            for c in 0..m.cols() {
+                out.set(r, c, m.at(r, c));
+            }
+        }
+        out
+    }
+
+    /// Physical bytes held (padding included) — the O(nm/p) node memory the
+    /// paper discusses in §3.1.
+    pub fn bytes(&self) -> usize {
+        self.row_tiles * self.col_tiles * TB * TM * 4
+    }
+}
+
+/// Per-row-tile padding masks (1.0 for live rows) for `rows` logical rows.
+pub fn row_masks(rows: usize) -> Vec<Vec<f32>> {
+    let nt = rows.div_ceil(TB).max(1);
+    (0..nt)
+        .map(|i| {
+            let live = ((rows - i * TB).min(TB)) as usize;
+            let mut m = vec![0.0; TB];
+            m[..live].fill(1.0);
+            m
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn round_up_works() {
+        assert_eq!(round_up(0, 256), 0);
+        assert_eq!(round_up(1, 256), 256);
+        assert_eq!(round_up(256, 256), 256);
+        assert_eq!(round_up(257, 256), 512);
+    }
+
+    #[test]
+    fn tiled_roundtrip_matches_dense() {
+        let mut rng = Rng::new(1);
+        let m = Mat::from_fn(300, 270, |_, _| rng.normal_f32());
+        let t = TiledMatrix::from_mat(&m);
+        assert_eq!(t.row_tiles(), 2);
+        assert_eq!(t.col_tiles(), 2);
+        assert_eq!(t.to_mat().as_slice(), m.as_slice());
+    }
+
+    #[test]
+    fn tile_padding_is_zero() {
+        let m = Mat::from_fn(10, 10, |_, _| 1.0);
+        let t = TiledMatrix::from_mat(&m);
+        let tile = t.tile(0, 0);
+        assert_eq!(tile[0], 1.0);
+        assert_eq!(tile[9], 1.0);
+        assert_eq!(tile[10], 0.0); // column padding
+        assert_eq!(tile[10 * TM], 0.0); // row padding
+    }
+
+    #[test]
+    fn rows_cols_in_tile_handle_partials() {
+        let t = TiledMatrix::zeros(300, 500);
+        assert_eq!(t.rows_in_tile(0), 256);
+        assert_eq!(t.rows_in_tile(1), 44);
+        assert_eq!(t.cols_in_tile(0), 256);
+        assert_eq!(t.cols_in_tile(1), 244);
+    }
+
+    #[test]
+    fn grow_cols_reports_dirty_tiles() {
+        let mut t = TiledMatrix::zeros(10, 200);
+        // 200 -> 300: tile 0 (partial, holds cols 200..256) + new tile 1.
+        let dirty = t.grow_cols(300);
+        assert_eq!(dirty, 0..2);
+        assert_eq!(t.cols(), 300);
+        assert_eq!(t.col_tiles(), 2);
+        // 300 -> 512: tile 1 again (was partial), no new tiles beyond 2.
+        let dirty = t.grow_cols(512);
+        assert_eq!(dirty, 1..2);
+    }
+
+    #[test]
+    fn grow_preserves_existing_values() {
+        let mut t = TiledMatrix::zeros(4, 4);
+        t.set(2, 3, 7.0);
+        t.grow_cols(600);
+        assert_eq!(t.at(2, 3), 7.0);
+        assert_eq!(t.at(2, 500), 0.0);
+    }
+
+    #[test]
+    fn row_masks_mark_live_rows() {
+        let ms = row_masks(300);
+        assert_eq!(ms.len(), 2);
+        assert_eq!(ms[0].iter().sum::<f32>(), 256.0);
+        assert_eq!(ms[1].iter().sum::<f32>(), 44.0);
+        assert_eq!(ms[1][43], 1.0);
+        assert_eq!(ms[1][44], 0.0);
+    }
+
+    #[test]
+    fn pad_mat_and_vec() {
+        let m = Mat::from_vec(1, 2, vec![1.0, 2.0]);
+        let p = pad_mat(&m, 2, 4);
+        assert_eq!(p.row(0), &[1.0, 2.0, 0.0, 0.0]);
+        assert_eq!(p.row(1), &[0.0; 4]);
+        assert_eq!(pad_vec(&[1.0], 3), vec![1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn pad_dim_selection() {
+        assert_eq!(pad_dim(&[32, 64, 128], 54), Some(64));
+        assert_eq!(pad_dim(&[32, 64], 64), Some(64));
+        assert_eq!(pad_dim(&[32, 64], 100), None);
+    }
+}

@@ -1,0 +1,257 @@
+//! Cross-module integration + property tests for Algorithm 1 (native
+//! backend — fast; the PJRT differential suite lives in runtime_pjrt.rs).
+
+use std::rc::Rc;
+
+use dkm::baselines::{train_linearized, train_ppacksvm, PPackOptions};
+use dkm::cluster::CostModel;
+use dkm::config::settings::{Backend, BasisSelection, Loss, Settings};
+use dkm::coordinator::dist::DistProblem;
+use dkm::coordinator::trainer::{build_cluster, train_stagewise};
+use dkm::coordinator::tron::Objective;
+use dkm::coordinator::{basis, train};
+use dkm::data::{synth, Dataset};
+use dkm::metrics::Step;
+use dkm::rng::Rng;
+use dkm::runtime::make_backend;
+
+fn settings(m: usize, nodes: usize) -> Settings {
+    Settings {
+        dataset: "covtype_like".into(),
+        m,
+        nodes,
+        lambda: 0.01,
+        sigma: 2.0,
+        loss: Loss::SqHinge,
+        basis: BasisSelection::Random,
+        backend: Backend::Native,
+        max_iters: 60,
+        tol: 1e-3,
+        seed: 42,
+        kmeans_iters: 2,
+        kmeans_max_m: 512,
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+fn data(n: usize, ntest: usize, seed: u64) -> (Dataset, Dataset) {
+    let mut spec = synth::spec("covtype_like");
+    spec.n_train = n;
+    spec.n_test = ntest;
+    synth::generate(&spec, seed)
+}
+
+/// Property: the distributed gradient matches central finite differences
+/// for every loss, across random seeds and node counts.
+#[test]
+fn property_distributed_gradient_matches_fd() {
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    for (seed, p, loss) in [
+        (1u64, 1usize, Loss::SqHinge),
+        (2, 3, Loss::Logistic),
+        (3, 4, Loss::Squared),
+        (4, 2, Loss::SqHinge),
+    ] {
+        let (tr, _) = data(400, 100, seed);
+        let dpad = backend.pad_d(tr.d()).unwrap();
+        let mut cluster = build_cluster(&tr, p, dpad, CostModel::free());
+        let b = basis::select_random(&mut cluster, 24, tr.d(), dpad, seed).unwrap();
+        basis::install_w_shares(&mut cluster, &backend, &b, 0.125, dpad).unwrap();
+        let zt = b.z_tiles.clone();
+        let be = Rc::clone(&backend);
+        cluster
+            .try_par_compute(Step::Kernel, |_, n| {
+                n.compute_c_block(be.as_ref(), &zt, 24, 0.125, 0..1)?;
+                n.prepare_hot(be.as_ref())
+            })
+            .unwrap();
+        let mut prob = DistProblem::new(&mut cluster, Rc::clone(&backend), 24, 0.05, loss);
+        let mut rng = Rng::new(seed);
+        let beta: Vec<f32> = (0..24).map(|_| 0.2 * rng.normal_f32()).collect();
+        let (_, g) = prob.eval_fg(&beta).unwrap();
+        let eps = 1e-2f32;
+        for i in [0usize, 11, 23] {
+            let mut bp = beta.clone();
+            bp[i] += eps;
+            let (fp, _) = prob.eval_fg(&bp).unwrap();
+            let mut bm = beta.clone();
+            bm[i] -= eps;
+            let (fm, _) = prob.eval_fg(&bm).unwrap();
+            let fd = ((fp - fm) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (fd - g[i]).abs() < 3e-2 * g[i].abs().max(1.0),
+                "seed={seed} p={p} {}: i={i} fd {fd} vs g {}",
+                loss.name(),
+                g[i]
+            );
+        }
+    }
+}
+
+/// Property: Hd matches the Gauss-Newton quadratic form and is PSD.
+#[test]
+fn property_hd_is_psd_quadratic() {
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    for seed in [5u64, 6, 7] {
+        let (tr, _) = data(300, 80, seed);
+        let dpad = backend.pad_d(tr.d()).unwrap();
+        let mut cluster = build_cluster(&tr, 2, dpad, CostModel::free());
+        let b = basis::select_random(&mut cluster, 16, tr.d(), dpad, seed).unwrap();
+        basis::install_w_shares(&mut cluster, &backend, &b, 0.125, dpad).unwrap();
+        let zt = b.z_tiles.clone();
+        let be = Rc::clone(&backend);
+        cluster
+            .try_par_compute(Step::Kernel, |_, n| {
+                n.compute_c_block(be.as_ref(), &zt, 16, 0.125, 0..1)?;
+                n.prepare_hot(be.as_ref())
+            })
+            .unwrap();
+        let mut prob =
+            DistProblem::new(&mut cluster, Rc::clone(&backend), 16, 0.05, Loss::SqHinge);
+        let mut rng = Rng::new(seed ^ 99);
+        let beta: Vec<f32> = (0..16).map(|_| 0.2 * rng.normal_f32()).collect();
+        prob.eval_fg(&beta).unwrap(); // refresh dcoef cache
+        for _ in 0..5 {
+            let d: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
+            let hd = prob.eval_hd(&d).unwrap();
+            let quad: f64 = d.iter().zip(&hd).map(|(a, b)| (*a * *b) as f64).sum();
+            assert!(quad > -1e-4, "seed {seed}: d'Hd = {quad}");
+        }
+    }
+}
+
+/// Formulations (3) and (4) are the same model: with the same basis-size
+/// they must reach comparable accuracy.
+#[test]
+fn formulations_3_and_4_agree() {
+    let (tr, te) = data(900, 300, 11);
+    let s = settings(96, 1);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let f4 = train(&s, &tr, Rc::clone(&backend), CostModel::free()).unwrap();
+    let f3 = train_linearized(&s, &tr).unwrap();
+    let a4 = f4.model.accuracy(backend.as_ref(), &te).unwrap();
+    let a3 = f3.accuracy(&te);
+    assert!((a3 - a4).abs() < 0.05, "(3): {a3} (4): {a4}");
+}
+
+/// Stage-wise warm starting: each later stage starts from a better
+/// objective than a cold start at the same m would.
+#[test]
+fn stagewise_warm_start_reduces_initial_objective() {
+    let (tr, _) = data(800, 200, 13);
+    let s = settings(0, 3);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let stages =
+        train_stagewise(&s, &tr, Rc::clone(&backend), CostModel::free(), &[32, 128]).unwrap();
+    // Cold start at m=128 begins at f(0) = L(0, y) = n/2 for sqhinge.
+    let cold_f0 = tr.n() as f64 / 2.0;
+    let warm_f0 = stages[1].stats.f_history[0];
+    assert!(
+        warm_f0 < cold_f0 * 0.95,
+        "warm f0 {warm_f0} vs cold {cold_f0}"
+    );
+}
+
+/// Failure injection: a node erroring mid-kernel-computation surfaces as a
+/// structured coordinator error naming the node.
+#[test]
+fn node_failure_is_reported() {
+    let (tr, _) = data(300, 80, 17);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let dpad = backend.pad_d(tr.d()).unwrap();
+    let mut cluster = build_cluster(&tr, 4, dpad, CostModel::free());
+    let err = cluster
+        .try_par_compute(Step::Kernel, |j, _| {
+            if j == 3 {
+                anyhow::bail!("simulated node crash")
+            }
+            Ok(())
+        })
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("node 3") && msg.contains("simulated node crash"), "{msg}");
+}
+
+/// The m > n guard fires before any compute happens.
+#[test]
+fn basis_larger_than_data_is_rejected() {
+    let (tr, _) = data(100, 30, 19);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let s = settings(500, 2);
+    let err = match train(&s, &tr, backend, CostModel::free()) {
+        Ok(_) => panic!("expected m > n to be rejected"),
+        Err(e) => e,
+    };
+    assert!(format!("{err:#}").contains("exceeds"), "{err:#}");
+}
+
+/// LibSVM round-trip: a model trained from a LibSVM file of synthetic data
+/// matches training on the in-memory dataset.
+#[test]
+fn libsvm_ingestion_trains_identically() {
+    let (tr, te) = data(400, 100, 23);
+    let dir = std::env::temp_dir().join("dkm_it_libsvm");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("train.libsvm");
+    dkm::data::libsvm::write_file(&tr, &path).unwrap();
+    let tr2 = dkm::data::libsvm::read_file(&path, tr.d()).unwrap();
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let s = settings(48, 2);
+    let out1 = train(&s, &tr, Rc::clone(&backend), CostModel::free()).unwrap();
+    let out2 = train(&s, &tr2, Rc::clone(&backend), CostModel::free()).unwrap();
+    let a1 = out1.model.accuracy(backend.as_ref(), &te).unwrap();
+    let a2 = out2.model.accuracy(backend.as_ref(), &te).unwrap();
+    // Text serialization rounds floats; accuracies must be very close.
+    assert!((a1 - a2).abs() < 0.02, "{a1} vs {a2}");
+    std::fs::remove_file(path).ok();
+}
+
+/// P-packSVM on the same substrate: sane accuracy and O(n/r) rounds.
+#[test]
+fn ppacksvm_trains_on_substrate() {
+    let mut spec = synth::spec("mnist8m_like");
+    spec.n_train = 600;
+    spec.n_test = 150;
+    let (tr, te) = synth::generate(&spec, 29);
+    let opts = PPackOptions {
+        pack: 60,
+        epochs: 1,
+        lambda: 1e-4,
+        seed: 5,
+        nodes: 4,
+    };
+    let gamma = 1.0 / (2.0 * 18.0f32 * 18.0);
+    let out = train_ppacksvm(&tr, gamma, &opts, CostModel::hadoop_crude()).unwrap();
+    assert_eq!(out.rounds, 10);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let acc = out.model.accuracy(backend.as_ref(), &te).unwrap();
+    assert!(acc > 0.75, "accuracy {acc}");
+    // Every pack costs at least one latency on the crude-Hadoop ledger.
+    assert!(out.sim.comm_secs(Step::Tron) >= 10.0 * 0.03);
+}
+
+/// Simulated speed-up sanity: more nodes → less simulated kernel compute
+/// time; TRON comm time does NOT shrink (the Fig-2 mechanism).
+#[test]
+fn sim_ledger_reproduces_fig2_mechanism() {
+    let (tr, _) = data(2000, 200, 31);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let mut kernel_secs = Vec::new();
+    let mut tron_comm = Vec::new();
+    for p in [2usize, 8] {
+        let s = settings(128, p);
+        let out = train(&s, &tr, Rc::clone(&backend), CostModel::hadoop_crude()).unwrap();
+        kernel_secs.push(out.sim.compute_secs(Step::Kernel));
+        tron_comm.push(out.sim.comm_secs(Step::Tron));
+    }
+    assert!(
+        kernel_secs[1] < kernel_secs[0] * 0.55,
+        "kernel compute did not scale: {kernel_secs:?}"
+    );
+    // Comm accumulates per-instance latency; with more nodes the tree is
+    // deeper, so it must not decrease.
+    assert!(
+        tron_comm[1] >= tron_comm[0] * 0.9,
+        "tron comm unexpectedly shrank: {tron_comm:?}"
+    );
+}

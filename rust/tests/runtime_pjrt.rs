@@ -1,0 +1,239 @@
+//! Integration tests over the PJRT runtime: every AOT module is executed on
+//! the CPU PJRT client and differential-tested against the native oracle,
+//! then the full Algorithm-1 pipeline is compared PJRT-vs-native.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use std::rc::Rc;
+
+use dkm::cluster::CostModel;
+use dkm::config::settings::{Backend, BasisSelection, Loss, Settings};
+use dkm::coordinator::train;
+use dkm::data::synth;
+use dkm::rng::Rng;
+use dkm::runtime::backend::{NativeCompute, PjrtCompute};
+use dkm::runtime::tiles::{TB, TM};
+use dkm::runtime::{make_backend, Compute};
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+            return;
+        }
+    };
+}
+
+fn rand_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| scale * rng.normal_f32()).collect()
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+            "{what}[{i}]: pjrt {x} vs native {y}"
+        );
+    }
+}
+
+#[test]
+fn kernel_block_pjrt_matches_native_all_widths() {
+    require_artifacts!();
+    let pjrt = PjrtCompute::new("artifacts").unwrap();
+    let native = NativeCompute::new();
+    let mut rng = Rng::new(1);
+    for d in [32usize, 64, 128] {
+        let x = rand_vec(&mut rng, TB * d, 1.0);
+        let z = rand_vec(&mut rng, TM * d, 1.0);
+        let a = pjrt.kernel_block(&x, &z, d, 0.37).unwrap();
+        let b = native.kernel_block(&x, &z, d, 0.37).unwrap();
+        assert_close(&a, &b, 1e-4, &format!("kernel_block d={d}"));
+    }
+}
+
+#[test]
+fn matvec_family_pjrt_matches_native() {
+    require_artifacts!();
+    let pjrt = PjrtCompute::new("artifacts").unwrap();
+    let native = NativeCompute::new();
+    let mut rng = Rng::new(2);
+    let c = rand_vec(&mut rng, TB * TM, 0.5);
+    let v = rand_vec(&mut rng, TM, 1.0);
+    let r = rand_vec(&mut rng, TB, 1.0);
+    assert_close(
+        &pjrt.matvec(&c, &v).unwrap(),
+        &native.matvec(&c, &v).unwrap(),
+        1e-3,
+        "matvec",
+    );
+    assert_close(
+        &pjrt.matvec_t(&c, &r).unwrap(),
+        &native.matvec_t(&c, &r).unwrap(),
+        1e-3,
+        "matvec_t",
+    );
+}
+
+#[test]
+fn loss_stages_pjrt_match_native() {
+    require_artifacts!();
+    let pjrt = PjrtCompute::new("artifacts").unwrap();
+    let native = NativeCompute::new();
+    let mut rng = Rng::new(3);
+    let o = rand_vec(&mut rng, TB, 2.0);
+    let y: Vec<f32> = (0..TB).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    let mut mask = vec![1.0f32; TB];
+    mask[200..].fill(0.0); // partial tile
+    for loss in [Loss::SqHinge, Loss::Logistic, Loss::Squared] {
+        let a = pjrt.loss_stage(loss, &o, &y, &mask).unwrap();
+        let b = native.loss_stage(loss, &o, &y, &mask).unwrap();
+        assert!(
+            (a.loss - b.loss).abs() < 1e-3 * (1.0 + b.loss.abs()),
+            "{}: loss {} vs {}",
+            loss.name(),
+            a.loss,
+            b.loss
+        );
+        assert_close(&a.vec, &b.vec, 1e-4, &format!("{} resid", loss.name()));
+        assert_close(&a.dcoef, &b.dcoef, 1e-4, &format!("{} dcoef", loss.name()));
+    }
+}
+
+#[test]
+fn fused_fgrad_and_hd_pjrt_match_native() {
+    require_artifacts!();
+    let pjrt = PjrtCompute::new("artifacts").unwrap();
+    let native = NativeCompute::new();
+    let mut rng = Rng::new(4);
+    let c = rand_vec(&mut rng, TB * TM, 0.4);
+    let beta = rand_vec(&mut rng, TM, 0.2);
+    let y: Vec<f32> = (0..TB).map(|i| if i % 3 == 0 { 1.0 } else { -1.0 }).collect();
+    let mask = vec![1.0f32; TB];
+    for loss in [Loss::SqHinge, Loss::Logistic, Loss::Squared] {
+        let a = pjrt.fgrad(loss, &c, &beta, &y, &mask).unwrap();
+        let b = native.fgrad(loss, &c, &beta, &y, &mask).unwrap();
+        assert!((a.loss - b.loss).abs() < 1e-3 * (1.0 + b.loss.abs()));
+        assert_close(&a.vec, &b.vec, 1e-3, &format!("fgrad {}", loss.name()));
+    }
+    let d = rand_vec(&mut rng, TM, 0.3);
+    let dcoef: Vec<f32> = (0..TB).map(|i| (i % 2) as f32).collect();
+    assert_close(
+        &pjrt.hd_tile(&c, &d, &dcoef).unwrap(),
+        &native.hd_tile(&c, &d, &dcoef).unwrap(),
+        1e-3,
+        "hd_tile",
+    );
+}
+
+#[test]
+fn kmeans_and_predict_pjrt_match_native() {
+    require_artifacts!();
+    let pjrt = PjrtCompute::new("artifacts").unwrap();
+    let native = NativeCompute::new();
+    let mut rng = Rng::new(5);
+    let d = 64;
+    let x = rand_vec(&mut rng, TB * d, 1.0);
+    let cent = rand_vec(&mut rng, TM * d, 1.0);
+    let mut cmask = vec![0.0f32; TM];
+    cmask[..30].fill(1.0);
+    let mut rmask = vec![1.0f32; TB];
+    rmask[180..].fill(0.0);
+    let a = pjrt.kmeans_assign(&x, &cent, &cmask, &rmask, d).unwrap();
+    let b = native.kmeans_assign(&x, &cent, &cmask, &rmask, d).unwrap();
+    // Live rows must agree exactly on assignment.
+    for i in 0..180 {
+        assert_eq!(a.idx[i], b.idx[i], "row {i}");
+    }
+    assert_close(&a.counts, &b.counts, 1e-5, "counts");
+    assert!((a.inertia - b.inertia).abs() < 1e-2 * (1.0 + b.inertia.abs()));
+
+    let beta = rand_vec(&mut rng, TM, 0.1);
+    let z = rand_vec(&mut rng, TM * d, 1.0);
+    assert_close(
+        &pjrt.predict_block(&x, &z, 0.3, &beta, d).unwrap(),
+        &native.predict_block(&x, &z, 0.3, &beta, d).unwrap(),
+        1e-3,
+        "predict_block",
+    );
+
+    assert_close(
+        &pjrt.dist2_block(&x, &z, d).unwrap(),
+        &native.dist2_block(&x, &z, d).unwrap(),
+        1e-3,
+        "dist2_block",
+    );
+}
+
+#[test]
+fn end_to_end_training_pjrt_equals_native() {
+    require_artifacts!();
+    let mut spec = synth::spec("covtype_like");
+    spec.n_train = 900;
+    spec.n_test = 300;
+    let (train_ds, test_ds) = synth::generate(&spec, 7);
+    let settings = Settings {
+        dataset: "covtype_like".into(),
+        m: 96,
+        nodes: 3,
+        lambda: 0.01,
+        sigma: 2.0,
+        loss: Loss::SqHinge,
+        basis: BasisSelection::Random,
+        backend: Backend::Pjrt,
+        max_iters: 40,
+        tol: 1e-3,
+        seed: 42,
+        kmeans_iters: 2,
+        kmeans_max_m: 512,
+        artifacts_dir: "artifacts".into(),
+    };
+    let pjrt = make_backend(Backend::Pjrt, "artifacts").unwrap();
+    let native = make_backend(Backend::Native, "artifacts").unwrap();
+    let out_p = train(&settings, &train_ds, Rc::clone(&pjrt), CostModel::free()).unwrap();
+    let out_n = train(&settings, &train_ds, Rc::clone(&native), CostModel::free()).unwrap();
+    // Same seed → same basis; optimization paths may diverge slightly in fp
+    // but final objective and accuracy must agree closely.
+    let rel_f = (out_p.stats.final_f - out_n.stats.final_f).abs()
+        / out_n.stats.final_f.abs().max(1.0);
+    assert!(rel_f < 2e-2, "final f: pjrt {} native {}", out_p.stats.final_f, out_n.stats.final_f);
+    let acc_p = out_p.model.accuracy(pjrt.as_ref(), &test_ds).unwrap();
+    let acc_n = out_n.model.accuracy(native.as_ref(), &test_ds).unwrap();
+    assert!((acc_p - acc_n).abs() < 0.03, "acc: pjrt {acc_p} native {acc_n}");
+    assert!(pjrt.call_count() > 0, "pjrt path was not exercised");
+}
+
+#[test]
+fn engine_rejects_missing_artifacts_dir() {
+    let err = PjrtCompute::new("definitely_not_here").err();
+    assert!(err.is_some());
+    let msg = format!("{:#}", err.unwrap());
+    assert!(msg.contains("make artifacts"), "{msg}");
+}
+
+#[test]
+fn multi_tile_m_training_works_on_pjrt() {
+    require_artifacts!();
+    // m > TM exercises the unfused matvec/matvec_t path.
+    let mut spec = synth::spec("covtype_like");
+    spec.n_train = 700;
+    spec.n_test = 200;
+    let (train_ds, test_ds) = synth::generate(&spec, 9);
+    let settings = Settings {
+        m: 300, // 2 basis tiles
+        nodes: 2,
+        lambda: 0.01,
+        sigma: 2.0,
+        max_iters: 25,
+        ..Settings::default()
+    };
+    let pjrt = make_backend(Backend::Pjrt, "artifacts").unwrap();
+    let out = train(&settings, &train_ds, Rc::clone(&pjrt), CostModel::free()).unwrap();
+    let acc = out.model.accuracy(pjrt.as_ref(), &test_ds).unwrap();
+    assert!(acc > 0.5, "accuracy {acc}");
+}
