@@ -5,7 +5,7 @@
 //!
 //! Run: cargo run --release --example cluster_speedup
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use dkm::cluster::CostModel;
 use dkm::config::settings::{Backend, Settings};
@@ -33,7 +33,7 @@ fn main() -> dkm::Result<()> {
         let out = train(
             &settings,
             &train_ds,
-            Rc::clone(&backend),
+            Arc::clone(&backend),
             CostModel::hadoop_crude(),
         )?;
         rows.push((

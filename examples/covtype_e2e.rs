@@ -11,7 +11,7 @@
 //! Run: make artifacts && cargo run --release --example covtype_e2e
 //! (pass --fast for a 6k-row smoke version, --native to skip PJRT)
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use dkm::cluster::CostModel;
 use dkm::config::settings::{Backend, Settings};
@@ -53,7 +53,7 @@ fn main() -> dkm::Result<()> {
     let out = train(
         &settings,
         &train_ds,
-        Rc::clone(&backend),
+        Arc::clone(&backend),
         CostModel::hadoop_crude(),
     )?;
     let train_secs = t0.elapsed().as_secs_f64();

@@ -4,7 +4,7 @@
 //!
 //! Run: cargo run --release --example quickstart
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use dkm::cluster::CostModel;
 use dkm::config::settings::{Backend, Settings};
@@ -46,7 +46,7 @@ fn main() -> dkm::Result<()> {
     println!("backend: {}", backend.name());
 
     // 4. Train (Algorithm 1) and evaluate.
-    let out = train(&settings, &train_ds, Rc::clone(&backend), CostModel::hadoop_crude())?;
+    let out = train(&settings, &train_ds, Arc::clone(&backend), CostModel::hadoop_crude())?;
     let acc = out.model.accuracy(backend.as_ref(), &test_ds)?;
 
     println!(

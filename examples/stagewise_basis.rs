@@ -9,7 +9,7 @@
 //!
 //! Run: cargo run --release --example stagewise_basis
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use dkm::cluster::CostModel;
 use dkm::config::settings::{Backend, Settings};
@@ -37,7 +37,7 @@ fn main() -> dkm::Result<()> {
     let outs = train_stagewise(
         &settings,
         &train_ds,
-        Rc::clone(&backend),
+        Arc::clone(&backend),
         CostModel::free(),
         &stages,
     )?;
@@ -65,7 +65,7 @@ fn main() -> dkm::Result<()> {
             ..settings.clone()
         },
         &train_ds,
-        Rc::clone(&backend),
+        Arc::clone(&backend),
         CostModel::free(),
     )?;
     let cold_total = t1.elapsed().as_secs_f64();

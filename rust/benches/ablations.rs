@@ -11,7 +11,7 @@ use dkm::baselines::{train_ppacksvm, PPackOptions};
 use dkm::cluster::{Cluster, CostModel};
 use dkm::coordinator::train;
 use dkm::metrics::{Step, Table};
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn main() {
     common::header("ABLATIONS", "design choices called out in DESIGN.md");
@@ -42,7 +42,7 @@ fn main() {
             per_byte_s: 1e-8,
         };
         let s = common::settings("covtype_like", 256, 8);
-        let out = train(&s, &train_ds, Rc::clone(&backend), cost).unwrap();
+        let out = train(&s, &train_ds, Arc::clone(&backend), cost).unwrap();
         let total = out.sim.total_secs();
         let comm = out.sim.comm_secs(Step::Tron);
         table.row(&[

@@ -1,7 +1,7 @@
 //! Shared helpers for the paper-table benches (no criterion offline; each
 //! bench is a `harness = false` binary that prints the paper-style table).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use dkm::cluster::CostModel;
 use dkm::config::settings::{Backend, Settings};
@@ -39,14 +39,14 @@ pub fn settings(name: &str, m: usize, nodes: usize) -> Settings {
 }
 
 /// Default backend for benches: PJRT when artifacts exist, else native.
-pub fn backend() -> Rc<dyn Compute> {
+pub fn backend() -> Arc<dyn Compute> {
     match make_backend(Backend::Pjrt, "artifacts") {
         Ok(b) => b,
         Err(_) => make_backend(Backend::Native, "artifacts").expect("native backend"),
     }
 }
 
-pub fn native_backend() -> Rc<dyn Compute> {
+pub fn native_backend() -> Arc<dyn Compute> {
     make_backend(Backend::Native, "artifacts").expect("native backend")
 }
 

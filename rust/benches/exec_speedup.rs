@@ -1,0 +1,114 @@
+//! EXECUTOR — real wall-clock speedup of the threaded execution layer.
+//!
+//! Trains the same covtype-like workload twice — once on the serial
+//! executor (the metering reference) and once on scoped worker threads —
+//! and reports, per Algorithm-1 step, the *host* wall-clock times side by
+//! side with the simulated p-node ledger. The trained β must be
+//! bit-identical between the two runs (the executor contract); only real
+//! time changes. On a multi-core host the kernel + TRON steps should show
+//! >1.5× wall speedup.
+//!
+//! Run: cargo bench --bench exec_speedup
+//! (DKM_BENCH_SCALE scales the dataset; DKM_THREADS caps the workers.)
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::Arc;
+
+use dkm::config::settings::ExecutorChoice;
+use dkm::coordinator::train;
+use dkm::metrics::{Step, Table};
+
+fn main() {
+    common::header(
+        "EXECUTOR — serial vs threaded wall clock (bit-identical training)",
+        "tentpole: pluggable execution layer; cf. Hsieh et al. block-parallel training",
+    );
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let cap: usize = std::env::var("DKM_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    println!(
+        "host cores: {cores}; worker cap: {}",
+        if cap == 0 { "auto (one per core)".to_string() } else { cap.to_string() }
+    );
+
+    let (train_ds, test_ds) = common::dataset("covtype_like", 12_000, 1_000, 42);
+    let backend = common::native_backend();
+    let m = common::clamp_m(800, train_ds.n());
+    let nodes = 8;
+
+    let mut outs = Vec::new();
+    for exec in [ExecutorChoice::Serial, ExecutorChoice::Threads { cap }] {
+        let mut s = common::settings("covtype_like", m, nodes);
+        s.executor = exec;
+        let out = train(&s, &train_ds, Arc::clone(&backend), common::free())
+            .expect("training failed");
+        outs.push((exec.name(), out));
+    }
+    let (_, serial) = &outs[0];
+    let (threads_name, threaded) = &outs[1];
+
+    let mut t = Table::new(&["step", "serial_s", "threads_s", "wall speedup"]);
+    let mut hot_serial = 0.0;
+    let mut hot_threaded = 0.0;
+    for step in [Step::Kernel, Step::Tron] {
+        let a = serial.wall.wall_secs(step);
+        let b = threaded.wall.wall_secs(step);
+        hot_serial += a;
+        hot_threaded += b;
+        t.row(&[
+            step.name().into(),
+            format!("{a:.3}"),
+            format!("{b:.3}"),
+            format!("{:.2}x", a / b.max(1e-9)),
+        ]);
+    }
+    t.row(&[
+        "kernel+tron".into(),
+        format!("{hot_serial:.3}"),
+        format!("{hot_threaded:.3}"),
+        format!("{:.2}x", hot_serial / hot_threaded.max(1e-9)),
+    ]);
+    let (ta, tb) = (serial.wall.total_secs(), threaded.wall.total_secs());
+    t.row(&[
+        "total".into(),
+        format!("{ta:.3}"),
+        format!("{tb:.3}"),
+        format!("{:.2}x", ta / tb.max(1e-9)),
+    ]);
+    print!("{}", t.render());
+
+    let bit_identical = serial.model.beta.len() == threaded.model.beta.len()
+        && serial
+            .model
+            .beta
+            .iter()
+            .zip(&threaded.model.beta)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+    println!(
+        "\nβ bit-identical across executors: {} | evals serial fg={} hd={} vs {} fg={} hd={}",
+        if bit_identical { "YES" } else { "NO (BUG!)" },
+        serial.fg_evals,
+        serial.hd_evals,
+        threads_name,
+        threaded.fg_evals,
+        threaded.hd_evals,
+    );
+    let acc = threaded
+        .model
+        .accuracy(backend.as_ref(), &test_ds)
+        .unwrap();
+    println!("test accuracy (threaded run): {acc:.4}");
+    println!(
+        "\nsimulated {nodes}-node ledger of the threaded run (comm is priced \
+         identically to serial; measured compute can include cross-worker \
+         contention — use --exec serial for ledger-grade numbers):\n{}",
+        threaded.sim.report()
+    );
+    assert!(bit_identical, "executor equivalence violated");
+}

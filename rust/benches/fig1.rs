@@ -11,7 +11,7 @@ mod common;
 
 use dkm::coordinator::trainer::train_stagewise;
 use dkm::metrics::Table;
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn run(name: &str, n: usize, ntest: usize, stages: &[usize]) {
     let (train_ds, test_ds) = common::dataset(name, n, ntest, 42);
@@ -23,7 +23,7 @@ fn run(name: &str, n: usize, ntest: usize, stages: &[usize]) {
     let stages = &stages[..];
     let backend = common::backend();
     let s = common::settings(name, 0, 8);
-    let outs = train_stagewise(&s, &train_ds, Rc::clone(&backend), common::free(), stages)
+    let outs = train_stagewise(&s, &train_ds, Arc::clone(&backend), common::free(), stages)
         .unwrap_or_else(|e| panic!("{name}: {e:#}"));
     let mut table = Table::new(&["m", "accuracy", "tron iters", "stage secs"]);
     let mut prev = 0.0f64;

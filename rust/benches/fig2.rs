@@ -15,7 +15,7 @@ mod common;
 use dkm::cluster::CostModel;
 use dkm::coordinator::train;
 use dkm::metrics::{Step, Table};
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// The crude-Hadoop latency scaled by the same ~10x factor as the
 /// workloads (DESIGN.md §2: the observable is the compute:latency ratio;
@@ -35,7 +35,7 @@ fn run(name: &str, n: usize, ntest: usize, m: usize, ps: &[usize]) {
     let mut rows = Vec::new();
     for &p in ps {
         let s = common::settings(name, m, p);
-        let out = train(&s, &train_ds, Rc::clone(&backend), scaled_hadoop()).unwrap();
+        let out = train(&s, &train_ds, Arc::clone(&backend), scaled_hadoop()).unwrap();
         rows.push((
             p,
             out.sim.total_secs(),

@@ -15,7 +15,7 @@ mod common;
 use dkm::baselines::train_linearized;
 use dkm::coordinator::train;
 use dkm::metrics::Table;
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn main() {
     common::header(
@@ -37,7 +37,7 @@ fn main() {
     for m in [100usize, 400, 1600].map(|m| common::clamp_m(m, train_ds.n())) {
         let s = common::settings("vehicle_like", m, 1);
         let t0 = std::time::Instant::now();
-        let f4 = train(&s, &train_ds, Rc::clone(&backend), common::free()).unwrap();
+        let f4 = train(&s, &train_ds, Arc::clone(&backend), common::free()).unwrap();
         let f4_secs = t0.elapsed().as_secs_f64();
         let f4_acc = f4.model.accuracy(backend.as_ref(), &test_ds).unwrap();
         let f3 = train_linearized(&s, &train_ds).unwrap();

@@ -15,7 +15,7 @@ mod common;
 use dkm::config::settings::BasisSelection;
 use dkm::coordinator::train;
 use dkm::metrics::{Step, Table};
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn main() {
     common::header(
@@ -31,7 +31,7 @@ fn main() {
             s.basis = basis;
             s.kmeans_iters = 3; // the paper's Table-2 setting
             let t0 = std::time::Instant::now();
-            let out = train(&s, &train_ds, Rc::clone(&backend), common::free()).unwrap();
+            let out = train(&s, &train_ds, Arc::clone(&backend), common::free()).unwrap();
             let total = t0.elapsed().as_secs_f64();
             let acc = out.model.accuracy(backend.as_ref(), &test_ds).unwrap();
             let kmeans_secs = out.wall.wall_secs(Step::BasisBcast);

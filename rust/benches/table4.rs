@@ -10,7 +10,7 @@ mod common;
 
 use dkm::coordinator::train;
 use dkm::metrics::{Step, Table};
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn main() {
     common::header(
@@ -53,7 +53,7 @@ fn main() {
         let (train_ds, _) = common::dataset(name, n, ntest, 42);
         for m in ms.iter().map(|&m| common::clamp_m(m, train_ds.n())) {
             let s = common::settings(name, m, 8);
-            let out = train(&s, &train_ds, Rc::clone(&backend), common::free()).unwrap();
+            let out = train(&s, &train_ds, Arc::clone(&backend), common::free()).unwrap();
             let (l, b, k, tr) = (
                 out.wall.wall_secs(Step::Load),
                 out.wall.wall_secs(Step::BasisBcast),

@@ -16,7 +16,7 @@ use dkm::baselines::{train_ppacksvm, PPackOptions};
 use dkm::cluster::CostModel;
 use dkm::coordinator::train;
 use dkm::metrics::Table;
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn main() {
     common::header(
@@ -29,7 +29,7 @@ fn main() {
     // Our method: m = 1600 (scaled from the paper's 10k), 8 nodes, Hadoop.
     let s = common::settings("mnist8m_like", common::clamp_m(1_600, train_ds.n()), 8);
     let t0 = std::time::Instant::now();
-    let ours = train(&s, &train_ds, Rc::clone(&backend), CostModel::hadoop_crude()).unwrap();
+    let ours = train(&s, &train_ds, Arc::clone(&backend), CostModel::hadoop_crude()).unwrap();
     let ours_wall = t0.elapsed().as_secs_f64();
     let ours_acc = ours.model.accuracy(backend.as_ref(), &test_ds).unwrap();
     println!("  done ours");

@@ -263,6 +263,7 @@ mod tests {
     fn matches_formulation_4_accuracy() {
         use crate::cluster::CostModel;
         use crate::runtime::make_backend;
+        use std::sync::Arc;
         let (train_ds, test_ds) = tiny();
         let s = settings(96);
         let lin = train_linearized(&s, &train_ds).unwrap();
@@ -270,7 +271,7 @@ mod tests {
         let f4 = crate::coordinator::train(
             &s,
             &train_ds,
-            std::rc::Rc::clone(&backend),
+            Arc::clone(&backend),
             CostModel::free(),
         )
         .unwrap();

@@ -58,6 +58,63 @@ impl BasisSelection {
     }
 }
 
+/// Execution layer for the simulated cluster's node-local phases
+/// (see [`crate::cluster::exec`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecutorChoice {
+    /// Deterministic single-thread loop (the metering reference).
+    Serial,
+    /// Scoped OS worker threads, one per logical node up to `cap`
+    /// (`cap = 0` means "one per available core").
+    Threads { cap: usize },
+}
+
+impl ExecutorChoice {
+    pub fn parse(s: &str) -> Result<ExecutorChoice> {
+        match s {
+            "serial" => Ok(ExecutorChoice::Serial),
+            "threads" => Ok(ExecutorChoice::Threads { cap: 0 }),
+            other => match other.strip_prefix("threads:") {
+                Some(n) => {
+                    let cap: usize = n
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("executor thread cap {n:?}: {e}"))?;
+                    if cap == 0 {
+                        anyhow::bail!("executor thread cap must be > 0");
+                    }
+                    Ok(ExecutorChoice::Threads { cap })
+                }
+                None => anyhow::bail!("unknown executor {other:?} (serial|threads|threads:N)"),
+            },
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            ExecutorChoice::Serial => "serial".to_string(),
+            ExecutorChoice::Threads { cap: 0 } => "threads".to_string(),
+            ExecutorChoice::Threads { cap } => format!("threads:{cap}"),
+        }
+    }
+
+    /// Resolve to a concrete cluster executor (`cap = 0` → core count).
+    pub fn to_executor(self) -> crate::cluster::Executor {
+        match self {
+            ExecutorChoice::Serial => crate::cluster::Executor::serial(),
+            ExecutorChoice::Threads { cap } => {
+                let threads = if cap == 0 {
+                    std::thread::available_parallelism()
+                        .map(|n| n.get())
+                        .unwrap_or(1)
+                } else {
+                    cap
+                };
+                crate::cluster::Executor::threaded(threads)
+            }
+        }
+    }
+}
+
 /// Compute backend for node-local block math.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {
@@ -90,6 +147,8 @@ pub struct Settings {
     pub loss: Loss,
     pub basis: BasisSelection,
     pub backend: Backend,
+    /// How node-local phases execute: serial loop or real worker threads.
+    pub executor: ExecutorChoice,
     /// TRON iteration cap (paper: "typically around 300").
     pub max_iters: usize,
     /// Relative gradient-norm stopping tolerance.
@@ -112,7 +171,14 @@ impl Default for Settings {
             sigma: 0.7,
             loss: Loss::SqHinge,
             basis: BasisSelection::Random,
-            backend: Backend::Pjrt,
+            // The paper stack when compiled in; pure-Rust math otherwise
+            // (a `--backend pjrt` request still errors helpfully).
+            backend: if cfg!(feature = "pjrt") {
+                Backend::Pjrt
+            } else {
+                Backend::Native
+            },
+            executor: ExecutorChoice::Serial,
             max_iters: 300,
             tol: 1e-3,
             seed: 42,
@@ -160,6 +226,7 @@ impl Settings {
                 "loss" => self.loss = Loss::parse(v)?,
                 "basis" => self.basis = BasisSelection::parse(v)?,
                 "backend" => self.backend = Backend::parse(v)?,
+                "executor" => self.executor = ExecutorChoice::parse(v)?,
                 "max_iters" => {
                     self.max_iters = v.parse().map_err(|e| anyhow::anyhow!("max_iters: {e}"))?
                 }
@@ -244,6 +311,39 @@ mod tests {
         assert!(s.apply(&kv).is_err());
         let mut kv = BTreeMap::new();
         kv.insert("m".to_string(), "0".to_string());
+        assert!(s.apply(&kv).is_err());
+    }
+
+    #[test]
+    fn executor_parse_forms() {
+        assert_eq!(
+            ExecutorChoice::parse("serial").unwrap(),
+            ExecutorChoice::Serial
+        );
+        assert_eq!(
+            ExecutorChoice::parse("threads").unwrap(),
+            ExecutorChoice::Threads { cap: 0 }
+        );
+        assert_eq!(
+            ExecutorChoice::parse("threads:8").unwrap(),
+            ExecutorChoice::Threads { cap: 8 }
+        );
+        assert!(ExecutorChoice::parse("threads:0").is_err());
+        assert!(ExecutorChoice::parse("threads:x").is_err());
+        assert!(ExecutorChoice::parse("fibers").is_err());
+        assert_eq!(ExecutorChoice::Threads { cap: 8 }.name(), "threads:8");
+        assert_eq!(ExecutorChoice::Threads { cap: 0 }.name(), "threads");
+    }
+
+    #[test]
+    fn executor_setting_applies_from_kv() {
+        let mut s = Settings::default();
+        let mut kv = BTreeMap::new();
+        kv.insert("executor".to_string(), "threads:4".to_string());
+        s.apply(&kv).unwrap();
+        assert_eq!(s.executor, ExecutorChoice::Threads { cap: 4 });
+        let mut kv = BTreeMap::new();
+        kv.insert("executor".to_string(), "coroutines".to_string());
         assert!(s.apply(&kv).is_err());
     }
 

@@ -11,7 +11,7 @@
 //!   beyond ("we use a distributed K-means algorithm when m is not too
 //!   large, and switch to random selection otherwise").
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::cluster::Cluster;
 use crate::config::settings::{BasisSelection, Settings};
@@ -108,7 +108,7 @@ pub fn select_random(
 /// K-means selection: centers from the distributed clustering substrate.
 pub fn select_kmeans(
     cluster: &mut Cluster<WorkerNode>,
-    backend: &Rc<dyn Compute>,
+    backend: &Arc<dyn Compute>,
     m: usize,
     iters: usize,
     d: usize,
@@ -127,7 +127,7 @@ pub fn select_kmeans(
 /// The paper's adaptive policy.
 pub fn select(
     cluster: &mut Cluster<WorkerNode>,
-    backend: &Rc<dyn Compute>,
+    backend: &Arc<dyn Compute>,
     settings: &Settings,
     d: usize,
     dpad: usize,
@@ -161,7 +161,7 @@ pub fn select(
 /// points, W needs to be computed").
 pub fn install_w_shares(
     cluster: &mut Cluster<WorkerNode>,
-    backend: &Rc<dyn Compute>,
+    backend: &Arc<dyn Compute>,
     basis: &Basis,
     gamma: f32,
     dpad: usize,
@@ -180,7 +180,7 @@ pub fn install_w_shares(
             // Build each node's explicit W row block via kernel tiles.
             let z_tiles = basis.z_tiles.clone();
             let z = basis.z.clone();
-            let backend2 = Rc::clone(backend);
+            let backend2 = Arc::clone(backend);
             cluster.try_par_compute(Step::Kernel, |j, node| {
                 let range = shards[j].clone();
                 let rows = range.len();
@@ -344,8 +344,8 @@ mod tests {
     fn install_w_shares_fromc() {
         let (mut cl, d, dpad) = build(300, 2);
         let basis = select_random(&mut cl, 32, d, dpad, 5).unwrap();
-        let backend: Rc<dyn Compute> =
-            Rc::new(crate::runtime::backend::NativeCompute::new());
+        let backend: Arc<dyn Compute> =
+            Arc::new(crate::runtime::backend::NativeCompute::new());
         install_w_shares(&mut cl, &backend, &basis, 0.5, dpad).unwrap();
         let mut total = 0;
         for j in 0..cl.p() {
@@ -360,8 +360,8 @@ mod tests {
     #[test]
     fn install_w_shares_explicit_for_kmeans_basis() {
         let (mut cl, d, dpad) = build(300, 3);
-        let backend: Rc<dyn Compute> =
-            Rc::new(crate::runtime::backend::NativeCompute::new());
+        let backend: Arc<dyn Compute> =
+            Arc::new(crate::runtime::backend::NativeCompute::new());
         let basis = select_kmeans(&mut cl, &backend, 20, 2, d, dpad, 3).unwrap();
         assert!(basis.train_rows.is_none());
         install_w_shares(&mut cl, &backend, &basis, 0.5, dpad).unwrap();

@@ -11,7 +11,7 @@
 //! m-vectors and scalars are AllReduce-summed back up. The master (node 0)
 //! then assembles f/g/Hd — all O(m) work, exactly the paper's split.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::cluster::Cluster;
 use crate::config::settings::Loss;
@@ -26,7 +26,7 @@ use super::tron::Objective;
 /// The distributed formulation-(4) objective over a simulated cluster.
 pub struct DistProblem<'a> {
     pub cluster: &'a mut Cluster<WorkerNode>,
-    pub backend: Rc<dyn Compute>,
+    pub backend: Arc<dyn Compute>,
     pub m: usize,
     pub lambda: f32,
     pub loss: Loss,
@@ -38,7 +38,7 @@ pub struct DistProblem<'a> {
 impl<'a> DistProblem<'a> {
     pub fn new(
         cluster: &'a mut Cluster<WorkerNode>,
-        backend: Rc<dyn Compute>,
+        backend: Arc<dyn Compute>,
         m: usize,
         lambda: f32,
         loss: Loss,
@@ -177,7 +177,7 @@ impl Objective for DistProblem<'_> {
         let v_tiles = pad_m_tiles(beta, self.col_tiles());
         self.cluster
             .broadcast_meter(Step::Tron, self.m * std::mem::size_of::<f32>());
-        let backend = Rc::clone(&self.backend);
+        let backend = Arc::clone(&self.backend);
         let loss = self.loss;
         let lambda = self.lambda;
         let partials = self.cluster.try_par_compute(Step::Tron, |_, node| {
@@ -212,7 +212,7 @@ impl Objective for DistProblem<'_> {
         let v_tiles = pad_m_tiles(d, self.col_tiles());
         self.cluster
             .broadcast_meter(Step::Tron, self.m * std::mem::size_of::<f32>());
-        let backend = Rc::clone(&self.backend);
+        let backend = Arc::clone(&self.backend);
         let lambda = self.lambda;
         let partials = self.cluster.try_par_compute(Step::Tron, |_, node| {
             Self::node_hd(node, backend.as_ref(), &v_tiles, lambda)

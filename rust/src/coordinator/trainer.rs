@@ -2,7 +2,7 @@
 //! computation → TRON optimization, with per-step wall timers and the
 //! simulated cluster ledger. Also the stage-wise training mode of §3.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::cluster::{Cluster, CostModel, SimClock};
 use crate::config::settings::{Loss, Settings};
@@ -55,7 +55,9 @@ pub struct TrainOutput {
     pub hd_evals: usize,
 }
 
-/// Step 1: shard the training set over p nodes.
+/// Step 1: shard the training set over p nodes. The cluster starts on the
+/// serial executor; the trainer swaps in `Settings::executor` right after
+/// (results are bit-identical either way — only wall-clock changes).
 pub fn build_cluster(
     train: &Dataset,
     p: usize,
@@ -77,7 +79,7 @@ pub fn build_cluster(
 pub fn train(
     settings: &Settings,
     train_ds: &Dataset,
-    backend: Rc<dyn Compute>,
+    backend: Arc<dyn Compute>,
     cost: CostModel,
 ) -> Result<TrainOutput> {
     settings.validate()?;
@@ -88,6 +90,7 @@ pub fn train(
     let mut cluster = wall.time(Step::Load, || {
         build_cluster(train_ds, settings.nodes, dpad, cost)
     });
+    cluster.set_executor(settings.executor.to_executor());
     // Simulated: each node ingests its n/p shard (disk-bound in the paper;
     // we charge the measured shard-build time as the compute part).
     let load_wall = wall.wall_secs(Step::Load);
@@ -109,7 +112,7 @@ pub fn train(
             .iter()
             .map(|t| backend.prepare(t, &[crate::runtime::tiles::TM, dpad]))
             .collect::<Result<_>>()?;
-        let backend2 = Rc::clone(&backend);
+        let backend2 = Arc::clone(&backend);
         let col_tiles = basis_sel.col_tiles();
         cluster.try_par_compute(Step::Kernel, |_, node| {
             node.compute_c_block_p(backend2.as_ref(), &z_prep, m, gamma, 0..col_tiles)?;
@@ -122,7 +125,7 @@ pub fn train(
     let (beta, stats, fg, hd) = wall.time(Step::Tron, || -> Result<_> {
         let mut problem = DistProblem::new(
             &mut cluster,
-            Rc::clone(&backend),
+            Arc::clone(&backend),
             basis_sel.m(),
             settings.lambda,
             settings.loss,
@@ -168,7 +171,7 @@ pub struct StageOutput {
 pub fn train_stagewise(
     settings: &Settings,
     train_ds: &Dataset,
-    backend: Rc<dyn Compute>,
+    backend: Arc<dyn Compute>,
     cost: CostModel,
     stages: &[usize],
 ) -> Result<Vec<StageOutput>> {
@@ -179,6 +182,7 @@ pub fn train_stagewise(
     );
     let dpad = backend.pad_d(train_ds.d())?;
     let mut cluster = build_cluster(train_ds, settings.nodes, dpad, cost);
+    cluster.set_executor(settings.executor.to_executor());
 
     let mut outputs = Vec::new();
     let mut basis_sel: Option<Basis> = None;
@@ -215,7 +219,7 @@ pub fn train_stagewise(
             .iter()
             .map(|t| backend.prepare(t, &[crate::runtime::tiles::TM, dpad]))
             .collect::<Result<_>>()?;
-        let backend2 = Rc::clone(&backend);
+        let backend2 = Arc::clone(&backend);
         cluster.try_par_compute(Step::Kernel, |_, node| {
             node.compute_c_block_p(backend2.as_ref(), &z_prep, m, gamma, dirty.clone())?;
             node.prepare_hot(backend2.as_ref())
@@ -225,7 +229,7 @@ pub fn train_stagewise(
         beta.resize(m, 0.0);
         let mut problem = DistProblem::new(
             &mut cluster,
-            Rc::clone(&backend),
+            Arc::clone(&backend),
             m,
             settings.lambda,
             settings.loss,
@@ -255,7 +259,7 @@ pub fn train_stagewise(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::settings::{Backend, BasisSelection};
+    use crate::config::settings::{Backend, BasisSelection, ExecutorChoice};
     use crate::data::synth;
     use crate::runtime::make_backend;
 
@@ -269,6 +273,7 @@ mod tests {
             loss: Loss::SqHinge,
             basis: BasisSelection::Random,
             backend: Backend::Native,
+            executor: ExecutorChoice::Serial,
             max_iters: 60,
             tol: 1e-3,
             seed: 42,
@@ -292,14 +297,14 @@ mod tests {
         let small = train(
             &tiny_settings(16, 4),
             &train_ds,
-            Rc::clone(&backend),
+            Arc::clone(&backend),
             CostModel::free(),
         )
         .unwrap();
         let big = train(
             &tiny_settings(256, 4),
             &train_ds,
-            Rc::clone(&backend),
+            Arc::clone(&backend),
             CostModel::free(),
         )
         .unwrap();
@@ -341,7 +346,7 @@ mod tests {
             let out = train(
                 &tiny_settings(96, p),
                 &train_ds,
-                Rc::clone(&backend),
+                Arc::clone(&backend),
                 CostModel::free(),
             )
             .unwrap();
@@ -362,7 +367,7 @@ mod tests {
         let backend = make_backend(Backend::Native, "artifacts").unwrap();
         let mut s = tiny_settings(24, 3);
         s.basis = BasisSelection::KMeans;
-        let out = train(&s, &train_ds, Rc::clone(&backend), CostModel::free()).unwrap();
+        let out = train(&s, &train_ds, Arc::clone(&backend), CostModel::free()).unwrap();
         let acc = out.model.accuracy(backend.as_ref(), &test_ds).unwrap();
         assert!(acc > 0.52, "kmeans-basis accuracy {acc}");
         assert!(out.sim.step_secs(Step::KMeans) > 0.0);
@@ -376,7 +381,7 @@ mod tests {
         let stages = train_stagewise(
             &s,
             &train_ds,
-            Rc::clone(&backend),
+            Arc::clone(&backend),
             CostModel::free(),
             &[32, 96, 192],
         )
@@ -385,7 +390,7 @@ mod tests {
         let cold = train(
             &tiny_settings(192, 4),
             &train_ds,
-            Rc::clone(&backend),
+            Arc::clone(&backend),
             CostModel::free(),
         )
         .unwrap();
@@ -413,7 +418,7 @@ mod tests {
             if loss == Loss::Logistic {
                 s.lambda = 0.001;
             }
-            let out = train(&s, &train_ds, Rc::clone(&backend), CostModel::free()).unwrap();
+            let out = train(&s, &train_ds, Arc::clone(&backend), CostModel::free()).unwrap();
             let acc = out.model.accuracy(backend.as_ref(), &test_ds).unwrap();
             assert!(acc > 0.52, "{}: accuracy {acc}", loss.name());
         }

@@ -11,7 +11,7 @@
 //! The cost per iteration is one C-sized kernel-distance pass — the paper's
 //! footnote 4: "nearly N_kmeans times the cost of computing C".
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::cluster::Cluster;
 use crate::coordinator::WorkerNode;
@@ -34,7 +34,7 @@ pub struct KMeansResult {
 /// Run `iters` Lloyd iterations for `k` centroids over the sharded data.
 pub fn distributed_kmeans(
     cluster: &mut Cluster<WorkerNode>,
-    backend: &Rc<dyn Compute>,
+    backend: &Arc<dyn Compute>,
     k: usize,
     iters: usize,
     d: usize,
@@ -73,7 +73,7 @@ pub fn distributed_kmeans(
         let (cent_tiles, cmasks) = pad_centroid_tiles(&centroids, dpad);
 
         // Assignment + local accumulation on every node.
-        let backend2 = Rc::clone(backend);
+        let backend2 = Arc::clone(backend);
         let partials = cluster.try_par_compute(Step::KMeans, |_, node| {
             node_accumulate(node, backend2.as_ref(), &cent_tiles, &cmasks, k, d, dpad)
         })?;
@@ -244,8 +244,8 @@ mod tests {
     fn finds_separated_blobs() {
         let x = blob_data(600, 1);
         let y = vec![1.0f32; 600];
-        let backend: Rc<dyn Compute> =
-            Rc::new(crate::runtime::backend::NativeCompute::new());
+        let backend: Arc<dyn Compute> =
+            Arc::new(crate::runtime::backend::NativeCompute::new());
         let mut cl = build_cluster(x, y, 4, 32);
         let res = distributed_kmeans(&mut cl, &backend, 3, 5, 8, 32, 7).unwrap();
         // Each centroid should be near one blob center (coordinates all
@@ -264,8 +264,8 @@ mod tests {
     fn inertia_decreases_monotonically() {
         let x = blob_data(300, 2);
         let y = vec![1.0f32; 300];
-        let backend: Rc<dyn Compute> =
-            Rc::new(crate::runtime::backend::NativeCompute::new());
+        let backend: Arc<dyn Compute> =
+            Arc::new(crate::runtime::backend::NativeCompute::new());
         let mut prev = f64::INFINITY;
         for iters in [1, 2, 4] {
             let mut cl = build_cluster(x.clone(), y.clone(), 3, 32);
@@ -280,8 +280,8 @@ mod tests {
         // k > TM exercises the dist2 merge path.
         let x = blob_data(1200, 3);
         let y = vec![1.0f32; 1200];
-        let backend: Rc<dyn Compute> =
-            Rc::new(crate::runtime::backend::NativeCompute::new());
+        let backend: Arc<dyn Compute> =
+            Arc::new(crate::runtime::backend::NativeCompute::new());
         let mut cl = build_cluster(x, y, 2, 32);
         let res = distributed_kmeans(&mut cl, &backend, 300, 2, 8, 32, 5).unwrap();
         assert_eq!(res.centroids.rows(), 300);
@@ -292,8 +292,8 @@ mod tests {
     fn kmeans_invariant_to_node_count() {
         let x = blob_data(400, 4);
         let y = vec![1.0f32; 400];
-        let backend: Rc<dyn Compute> =
-            Rc::new(crate::runtime::backend::NativeCompute::new());
+        let backend: Arc<dyn Compute> =
+            Arc::new(crate::runtime::backend::NativeCompute::new());
         // Same seed, different p: init picks differ (sharding changes), so
         // compare inertia magnitude only — both must cluster the blobs.
         for p in [1, 4] {

@@ -14,7 +14,7 @@
 //!   dkm linearized --dataset vehicle_like --m 400
 
 use std::collections::BTreeMap;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use dkm::baselines::{train_linearized, train_ppacksvm, PPackOptions};
 use dkm::cluster::CostModel;
@@ -34,8 +34,8 @@ fn main() {
 
 const TRAIN_FLAGS: &[&str] = &[
     "dataset", "libsvm", "ntest", "ntrain", "m", "nodes", "lambda", "sigma", "loss", "basis",
-    "backend", "max-iters", "tol", "seed", "kmeans-iters", "artifacts", "config", "stages",
-    "pack", "epochs", "verbose", "cost",
+    "backend", "exec", "max-iters", "tol", "seed", "kmeans-iters", "artifacts", "config",
+    "stages", "pack", "epochs", "verbose", "cost",
 ];
 
 fn run() -> Result<()> {
@@ -73,6 +73,9 @@ Common flags:
   --loss            sqhinge | logistic | squared
   --basis           random | kmeans | auto
   --backend         pjrt | native
+  --exec            serial | threads | threads:N   (execution layer: metered
+                    serial loop, or real OS worker threads — bit-identical
+                    results, threads:N caps the worker count)
   --cost            free | hadoop | mpi   (simulated comm cost model)
   --stages a,b,c    stage-wise m schedule (stagewise command)
   --config FILE     key=value settings file (CLI flags override)
@@ -95,6 +98,7 @@ fn settings_from(args: &Args) -> Result<Settings> {
         ("loss", "loss"),
         ("basis", "basis"),
         ("backend", "backend"),
+        ("exec", "executor"),
         ("max-iters", "max_iters"),
         ("tol", "tol"),
         ("seed", "seed"),
@@ -133,7 +137,7 @@ fn load_data(args: &Args, s: &Settings) -> Result<(Dataset, Dataset)> {
 }
 
 fn print_run_report(out: &dkm::coordinator::TrainOutput, acc: f64, verbose: bool) {
-    println!("\n== Algorithm-1 wall clock (single core) ==");
+    println!("\n== Algorithm-1 wall clock (host) ==");
     let mut t = Table::new(&["step", "seconds"]);
     for step in Step::all() {
         let secs = out.wall.wall_secs(step);
@@ -163,7 +167,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let cost = cost_from(args)?;
     let (train_ds, test_ds) = load_data(args, &s)?;
     println!(
-        "dataset {} n={} d={} ntest={} | m={} p={} λ={} σ={} loss={} backend={:?}",
+        "dataset {} n={} d={} ntest={} | m={} p={} λ={} σ={} loss={} backend={:?} exec={}",
         train_ds.name,
         train_ds.n(),
         train_ds.d(),
@@ -174,9 +178,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         s.sigma,
         s.loss.name(),
         s.backend,
+        s.executor.name(),
     );
     let backend = make_backend(s.backend, &s.artifacts_dir)?;
-    let out = train(&s, &train_ds, Rc::clone(&backend), cost)?;
+    let out = train(&s, &train_ds, Arc::clone(&backend), cost)?;
     let acc = out.model.accuracy(backend.as_ref(), &test_ds)?;
     print_run_report(&out, acc, args.bool("verbose"));
     Ok(())
@@ -192,7 +197,7 @@ fn cmd_stagewise(args: &Args) -> Result<()> {
         .collect::<Result<_>>()?;
     let (train_ds, test_ds) = load_data(args, &s)?;
     let backend = make_backend(s.backend, &s.artifacts_dir)?;
-    let outs = train_stagewise(&s, &train_ds, Rc::clone(&backend), cost, &stages)?;
+    let outs = train_stagewise(&s, &train_ds, Arc::clone(&backend), cost, &stages)?;
     let mut t = Table::new(&["m", "accuracy", "tron_iters", "stage_secs"]);
     for st in &outs {
         let acc = st.model.accuracy(backend.as_ref(), &test_ds)?;

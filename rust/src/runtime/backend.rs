@@ -1,15 +1,22 @@
 //! The `Compute` trait: the tile-op interface the coordinator programs
-//! against, with the PJRT (AOT artifact) and native (pure Rust)
-//! implementations. The two are differential-tested against each other in
-//! `rust/tests/runtime_pjrt.rs`.
+//! against, with the PJRT (AOT artifact, `pjrt` feature) and native (pure
+//! Rust) implementations. The two are differential-tested against each
+//! other in `rust/tests/runtime_pjrt.rs`.
+//!
+//! `Compute` is `Send + Sync`: one shared backend (`Arc<dyn Compute>`)
+//! serves every simulated node, including concurrently from the worker
+//! threads of [`crate::cluster::ThreadedExecutor`].
 
-use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::config::settings::{Backend, Loss};
 use crate::Result;
 
-use super::engine::{AssignOut, Engine, StageOut};
-use super::native;
+#[cfg(feature = "pjrt")]
+use super::engine::Engine;
+use super::{native, AssignOut, StageOut};
+
 use super::tiles::{TB, TM};
 
 /// An operand prepared for repeated hot-path use: resident on the PJRT
@@ -20,18 +27,29 @@ use super::tiles::{TB, TM};
 /// optimization (see EXPERIMENTS.md §Perf for before/after).
 pub enum Prepared {
     Host(Vec<f32>),
+    #[cfg(feature = "pjrt")]
     Device(xla::PjRtBuffer),
 }
+
+// SAFETY (pjrt builds): PJRT device buffers are internally synchronized —
+// see the Send/Sync rationale on [`Engine`]. Without the feature `Prepared`
+// is plain owned data and these impls match what the compiler would derive.
+#[cfg(feature = "pjrt")]
+unsafe impl Send for Prepared {}
+#[cfg(feature = "pjrt")]
+unsafe impl Sync for Prepared {}
 
 impl Prepared {
     /// Host view (native backend only).
     fn host(&self) -> &[f32] {
         match self {
             Prepared::Host(v) => v,
+            #[cfg(feature = "pjrt")]
             Prepared::Device(_) => panic!("device-prepared operand used on native backend"),
         }
     }
 
+    #[cfg(feature = "pjrt")]
     fn device(&self) -> Result<&xla::PjRtBuffer> {
         match self {
             Prepared::Device(b) => Ok(b),
@@ -42,8 +60,9 @@ impl Prepared {
 
 /// Node-local tile compute. All slices follow the tiling contract of
 /// [`super::tiles`]: row tiles are TB long, basis tiles TM, features padded
-/// to a compiled width.
-pub trait Compute {
+/// to a compiled width. Implementations must be thread-safe (`Send + Sync`)
+/// — the threaded executor calls them from every worker concurrently.
+pub trait Compute: Send + Sync {
     /// Supported padded feature widths.
     fn widths(&self) -> Vec<usize>;
 
@@ -114,10 +133,12 @@ pub trait Compute {
 }
 
 /// PJRT-backed compute (the paper stack: AOT JAX+Pallas artifacts).
+#[cfg(feature = "pjrt")]
 pub struct PjrtCompute {
     engine: Engine,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtCompute {
     pub fn new(artifacts_dir: &str) -> Result<Self> {
         Ok(PjrtCompute {
@@ -130,6 +151,7 @@ impl PjrtCompute {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Compute for PjrtCompute {
     fn widths(&self) -> Vec<usize> {
         self.engine.manifest().ds.clone()
@@ -243,7 +265,7 @@ impl Compute for PjrtCompute {
 /// Pure-Rust compute (differential oracle / fallback).
 #[derive(Default)]
 pub struct NativeCompute {
-    calls: std::cell::RefCell<u64>,
+    calls: AtomicU64,
 }
 
 impl NativeCompute {
@@ -252,7 +274,7 @@ impl NativeCompute {
     }
 
     fn bump(&self) {
-        *self.calls.borrow_mut() += 1;
+        self.calls.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -330,7 +352,7 @@ impl Compute for NativeCompute {
     }
 
     fn call_count(&self) -> u64 {
-        *self.calls.borrow()
+        self.calls.load(Ordering::Relaxed)
     }
 
     fn name(&self) -> &'static str {
@@ -380,15 +402,25 @@ impl Compute for NativeCompute {
     }
 }
 
-/// Construct the configured backend. The result is shared (`Rc`) across all
-/// simulated nodes: in-process they share one PJRT client and its compiled
-/// executables, which is the moral equivalent of each Hadoop node having
-/// compiled the same binary.
-pub fn make_backend(backend: Backend, artifacts_dir: &str) -> Result<Rc<dyn Compute>> {
-    Ok(match backend {
-        Backend::Pjrt => Rc::new(PjrtCompute::new(artifacts_dir)?),
-        Backend::Native => Rc::new(NativeCompute::new()),
-    })
+/// Construct the configured backend. The result is shared (`Arc`) across
+/// all simulated nodes — and across the threaded executor's workers: in-
+/// process they share one engine and its compiled executables, which is the
+/// moral equivalent of each Hadoop node having compiled the same binary.
+pub fn make_backend(backend: Backend, artifacts_dir: &str) -> Result<Arc<dyn Compute>> {
+    match backend {
+        #[cfg(feature = "pjrt")]
+        Backend::Pjrt => Ok(Arc::new(PjrtCompute::new(artifacts_dir)?)),
+        #[cfg(not(feature = "pjrt"))]
+        Backend::Pjrt => {
+            let _ = artifacts_dir;
+            anyhow::bail!(
+                "backend 'pjrt' is not compiled into this binary: rebuild with \
+                 `cargo build --features pjrt` (requires the `xla` PJRT binding \
+                 crate — see README) or use `--backend native`"
+            )
+        }
+        Backend::Native => Ok(Arc::new(NativeCompute::new())),
+    }
 }
 
 /// Sanity guard shared by all Compute users: tile buffers must match the

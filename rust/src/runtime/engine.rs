@@ -1,41 +1,46 @@
 //! PJRT engine: compiles the AOT HLO-text modules once and dispatches typed
-//! tile ops on the training hot path.
+//! tile ops on the training hot path. `pjrt` feature only.
 //!
 //! Follows the /opt/xla-example/load_hlo pattern: `HloModuleProto::
 //! from_text_file` → `XlaComputation::from_proto` → `client.compile` →
 //! `execute`. Modules are compiled lazily on first use and cached for the
 //! life of the engine (one compiled executable per module).
+//!
+//! The engine is shared by every simulated node, which under the threaded
+//! executor means concurrent use from worker threads: the executable cache
+//! is behind a `Mutex` (held only for lookup/compile — dispatch happens on
+//! a cloned `Arc` outside the lock, so executions overlap freely) and the
+//! call/compile counters are atomics / mutexed scalars.
 
-use std::cell::RefCell;
+// If this module fails to compile with "unresolved import `xla`" /
+// "use of undeclared crate", you enabled `--features pjrt` without wiring
+// the `xla` PJRT binding crate into rust/Cargo.toml — see the `pjrt`
+// feature comment there for the two-line fix.
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::Result;
 
 use super::artifacts::Manifest;
 use super::tiles::{TB, TM};
-
-/// Loss/grad stage output: (loss_sum, vec, dcoef).
-pub struct StageOut {
-    pub loss: f32,
-    pub vec: Vec<f32>,
-    pub dcoef: Vec<f32>,
-}
-
-/// K-means assignment output for one row tile.
-pub struct AssignOut {
-    pub idx: Vec<i32>,
-    pub counts: Vec<f32>,
-    pub sums: Vec<f32>,
-    pub inertia: f32,
-}
+use super::{AssignOut, StageOut};
 
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
-    exes: RefCell<BTreeMap<String, xla::PjRtLoadedExecutable>>,
-    calls: RefCell<u64>,
-    compile_secs: RefCell<f64>,
+    exes: Mutex<BTreeMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    calls: AtomicU64,
+    compile_secs: Mutex<f64>,
 }
+
+// SAFETY: the PJRT C API is thread-safe — clients, loaded executables and
+// device buffers may be used concurrently from multiple threads (the CPU
+// plugin synchronizes internally). The `xla` binding wraps raw pointers
+// without declaring this, so it does not derive Send/Sync; all remaining
+// interior state of `Engine` is Mutex-/atomic-protected above.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
 
 impl Engine {
     /// Create the engine over an artifacts directory (no compilation yet).
@@ -54,9 +59,9 @@ impl Engine {
         Ok(Engine {
             client,
             manifest,
-            exes: RefCell::new(BTreeMap::new()),
-            calls: RefCell::new(0),
-            compile_secs: RefCell::new(0.0),
+            exes: Mutex::new(BTreeMap::new()),
+            calls: AtomicU64::new(0),
+            compile_secs: Mutex::new(0.0),
         })
     }
 
@@ -66,25 +71,30 @@ impl Engine {
 
     /// Total module executions so far (dispatch-overhead accounting).
     pub fn call_count(&self) -> u64 {
-        *self.calls.borrow()
+        self.calls.load(Ordering::Relaxed)
     }
 
     /// Cumulative compile time (excluded from hot-path timings by warmup).
     pub fn compile_secs(&self) -> f64 {
-        *self.compile_secs.borrow()
+        *self.compile_secs.lock().unwrap()
     }
 
     /// Pre-compile a set of modules (so hot-path timings exclude compiles).
     pub fn warmup(&self, names: &[&str]) -> Result<()> {
         for n in names {
-            self.ensure_compiled(n)?;
+            self.executable(n)?;
         }
         Ok(())
     }
 
-    fn ensure_compiled(&self, name: &str) -> Result<()> {
-        if self.exes.borrow().contains_key(name) {
-            return Ok(());
+    /// Look up (or lazily compile) a module's executable. The lock is held
+    /// across compilation so a module is compiled exactly once even when
+    /// worker threads race to it; callers dispatch on the returned `Arc`
+    /// after the lock is released.
+    fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        let mut exes = self.exes.lock().unwrap();
+        if let Some(exe) = exes.get(name) {
+            return Ok(Arc::clone(exe));
         }
         let spec = self.manifest.module(name)?;
         let start = std::time::Instant::now();
@@ -95,18 +105,17 @@ impl Engine {
             .client
             .compile(&comp)
             .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
-        *self.compile_secs.borrow_mut() += start.elapsed().as_secs_f64();
-        self.exes.borrow_mut().insert(name.to_string(), exe);
-        Ok(())
+        *self.compile_secs.lock().unwrap() += start.elapsed().as_secs_f64();
+        let exe = Arc::new(exe);
+        exes.insert(name.to_string(), Arc::clone(&exe));
+        Ok(exe)
     }
 
     /// Execute a module on literal inputs; returns the decomposed output
     /// tuple (modules are lowered with return_tuple=True).
     fn exec(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        self.ensure_compiled(name)?;
-        let exes = self.exes.borrow();
-        let exe = exes.get(name).unwrap();
-        *self.calls.borrow_mut() += 1;
+        let exe = self.executable(name)?;
+        self.calls.fetch_add(1, Ordering::Relaxed);
         let bufs = exe
             .execute::<xla::Literal>(args)
             .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
@@ -120,10 +129,8 @@ impl Engine {
     /// Execute on device buffers (the hot path: operands prepared once with
     /// [`Engine::upload`], only the small per-call vectors are copied).
     fn exec_b(&self, name: &str, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
-        self.ensure_compiled(name)?;
-        let exes = self.exes.borrow();
-        let exe = exes.get(name).unwrap();
-        *self.calls.borrow_mut() += 1;
+        let exe = self.executable(name)?;
+        self.calls.fetch_add(1, Ordering::Relaxed);
         let bufs = exe
             .execute_b::<&xla::PjRtBuffer>(args)
             .map_err(|e| anyhow::anyhow!("execute_b {name}: {e:?}"))?;

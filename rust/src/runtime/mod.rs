@@ -1,25 +1,51 @@
-//! Runtime: loads the AOT artifacts (HLO text lowered from JAX + Pallas at
-//! build time) and executes them on the training hot path via the PJRT CPU
-//! client (`xla` crate). Python never runs here.
+//! Runtime: the node-local tile-compute layer the coordinator programs
+//! against. Two backends implement the same [`Compute`] trait:
 //!
-//! * [`artifacts`] — manifest schema shared with `python/compile/aot.py`.
+//! * **native** (always built) — pure-Rust implementations of every op,
+//!   used as a differential-testing oracle and as the default backend.
+//! * **pjrt** (behind the off-by-default `pjrt` cargo feature) — loads the
+//!   AOT artifacts (HLO text lowered from JAX + Pallas at build time) and
+//!   executes them via the PJRT CPU client (`xla` crate). Python never
+//!   runs here.
+//!
+//! Backends are `Send + Sync`: one shared instance serves every worker
+//! thread of the [`crate::cluster::ThreadedExecutor`] concurrently.
+//!
+//! * [`artifacts`] — manifest schema shared with `python/compile/aot.py`
+//!   (pure JSON; built regardless of the `pjrt` feature).
 //! * [`engine`] — PJRT client + compiled executables + typed dispatch for
 //!   every module (kernel tiles, matvec family, loss stages, k-means,
-//!   prediction).
+//!   prediction). `pjrt` feature only.
 //! * [`tiles`] — the padding/tiling contract: datasets are zero-padded to
 //!   the (TB, TM, D) grid the modules were lowered for.
-//! * [`native`] — pure-Rust implementations of the exact same ops, used as
-//!   a differential-testing oracle and as a fallback backend.
-//! * [`backend`] — the `Compute` trait the coordinator programs against,
-//!   with PJRT and native implementations.
+//! * [`native`] — pure-Rust implementations of the exact same ops.
+//! * [`backend`] — the `Compute` trait with both implementations.
 
 pub mod artifacts;
 pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod native;
 pub mod tiles;
 
 pub use artifacts::Manifest;
 pub use backend::{make_backend, Compute};
+#[cfg(feature = "pjrt")]
 pub use engine::Engine;
 pub use tiles::{pad_dim, TiledMatrix, TB, TM};
+
+/// Loss/grad stage output: (loss_sum, vec, dcoef). Shared by every backend
+/// (defined here so the native path builds without the `pjrt` feature).
+pub struct StageOut {
+    pub loss: f32,
+    pub vec: Vec<f32>,
+    pub dcoef: Vec<f32>,
+}
+
+/// K-means assignment output for one row tile.
+pub struct AssignOut {
+    pub idx: Vec<i32>,
+    pub counts: Vec<f32>,
+    pub sums: Vec<f32>,
+    pub inertia: f32,
+}

@@ -6,7 +6,7 @@
 //! Every function mirrors the L2 graph in `python/compile/model.py`
 //! including mask conventions; keep the two in sync.
 
-use super::engine::{AssignOut, StageOut};
+use super::{AssignOut, StageOut};
 use super::tiles::{TB, TM};
 use crate::config::settings::Loss;
 

@@ -1,11 +1,11 @@
 //! Cross-module integration + property tests for Algorithm 1 (native
 //! backend — fast; the PJRT differential suite lives in runtime_pjrt.rs).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use dkm::baselines::{train_linearized, train_ppacksvm, PPackOptions};
 use dkm::cluster::CostModel;
-use dkm::config::settings::{Backend, BasisSelection, Loss, Settings};
+use dkm::config::settings::{Backend, BasisSelection, ExecutorChoice, Loss, Settings};
 use dkm::coordinator::dist::DistProblem;
 use dkm::coordinator::trainer::{build_cluster, train_stagewise};
 use dkm::coordinator::tron::Objective;
@@ -25,6 +25,7 @@ fn settings(m: usize, nodes: usize) -> Settings {
         loss: Loss::SqHinge,
         basis: BasisSelection::Random,
         backend: Backend::Native,
+        executor: ExecutorChoice::Serial,
         max_iters: 60,
         tol: 1e-3,
         seed: 42,
@@ -58,14 +59,14 @@ fn property_distributed_gradient_matches_fd() {
         let b = basis::select_random(&mut cluster, 24, tr.d(), dpad, seed).unwrap();
         basis::install_w_shares(&mut cluster, &backend, &b, 0.125, dpad).unwrap();
         let zt = b.z_tiles.clone();
-        let be = Rc::clone(&backend);
+        let be = Arc::clone(&backend);
         cluster
             .try_par_compute(Step::Kernel, |_, n| {
                 n.compute_c_block(be.as_ref(), &zt, 24, 0.125, 0..1)?;
                 n.prepare_hot(be.as_ref())
             })
             .unwrap();
-        let mut prob = DistProblem::new(&mut cluster, Rc::clone(&backend), 24, 0.05, loss);
+        let mut prob = DistProblem::new(&mut cluster, Arc::clone(&backend), 24, 0.05, loss);
         let mut rng = Rng::new(seed);
         let beta: Vec<f32> = (0..24).map(|_| 0.2 * rng.normal_f32()).collect();
         let (_, g) = prob.eval_fg(&beta).unwrap();
@@ -99,7 +100,7 @@ fn property_hd_is_psd_quadratic() {
         let b = basis::select_random(&mut cluster, 16, tr.d(), dpad, seed).unwrap();
         basis::install_w_shares(&mut cluster, &backend, &b, 0.125, dpad).unwrap();
         let zt = b.z_tiles.clone();
-        let be = Rc::clone(&backend);
+        let be = Arc::clone(&backend);
         cluster
             .try_par_compute(Step::Kernel, |_, n| {
                 n.compute_c_block(be.as_ref(), &zt, 16, 0.125, 0..1)?;
@@ -107,7 +108,7 @@ fn property_hd_is_psd_quadratic() {
             })
             .unwrap();
         let mut prob =
-            DistProblem::new(&mut cluster, Rc::clone(&backend), 16, 0.05, Loss::SqHinge);
+            DistProblem::new(&mut cluster, Arc::clone(&backend), 16, 0.05, Loss::SqHinge);
         let mut rng = Rng::new(seed ^ 99);
         let beta: Vec<f32> = (0..16).map(|_| 0.2 * rng.normal_f32()).collect();
         prob.eval_fg(&beta).unwrap(); // refresh dcoef cache
@@ -127,7 +128,7 @@ fn formulations_3_and_4_agree() {
     let (tr, te) = data(900, 300, 11);
     let s = settings(96, 1);
     let backend = make_backend(Backend::Native, "artifacts").unwrap();
-    let f4 = train(&s, &tr, Rc::clone(&backend), CostModel::free()).unwrap();
+    let f4 = train(&s, &tr, Arc::clone(&backend), CostModel::free()).unwrap();
     let f3 = train_linearized(&s, &tr).unwrap();
     let a4 = f4.model.accuracy(backend.as_ref(), &te).unwrap();
     let a3 = f3.accuracy(&te);
@@ -142,7 +143,7 @@ fn stagewise_warm_start_reduces_initial_objective() {
     let s = settings(0, 3);
     let backend = make_backend(Backend::Native, "artifacts").unwrap();
     let stages =
-        train_stagewise(&s, &tr, Rc::clone(&backend), CostModel::free(), &[32, 128]).unwrap();
+        train_stagewise(&s, &tr, Arc::clone(&backend), CostModel::free(), &[32, 128]).unwrap();
     // Cold start at m=128 begins at f(0) = L(0, y) = n/2 for sqhinge.
     let cold_f0 = tr.n() as f64 / 2.0;
     let warm_f0 = stages[1].stats.f_history[0];
@@ -197,8 +198,8 @@ fn libsvm_ingestion_trains_identically() {
     let tr2 = dkm::data::libsvm::read_file(&path, tr.d()).unwrap();
     let backend = make_backend(Backend::Native, "artifacts").unwrap();
     let s = settings(48, 2);
-    let out1 = train(&s, &tr, Rc::clone(&backend), CostModel::free()).unwrap();
-    let out2 = train(&s, &tr2, Rc::clone(&backend), CostModel::free()).unwrap();
+    let out1 = train(&s, &tr, Arc::clone(&backend), CostModel::free()).unwrap();
+    let out2 = train(&s, &tr2, Arc::clone(&backend), CostModel::free()).unwrap();
     let a1 = out1.model.accuracy(backend.as_ref(), &te).unwrap();
     let a2 = out2.model.accuracy(backend.as_ref(), &te).unwrap();
     // Text serialization rounds floats; accuracies must be very close.
@@ -240,7 +241,7 @@ fn sim_ledger_reproduces_fig2_mechanism() {
     let mut tron_comm = Vec::new();
     for p in [2usize, 8] {
         let s = settings(128, p);
-        let out = train(&s, &tr, Rc::clone(&backend), CostModel::hadoop_crude()).unwrap();
+        let out = train(&s, &tr, Arc::clone(&backend), CostModel::hadoop_crude()).unwrap();
         kernel_secs.push(out.sim.compute_secs(Step::Kernel));
         tron_comm.push(out.sim.comm_secs(Step::Tron));
     }

@@ -1,0 +1,186 @@
+//! Executor equivalence: the tentpole contract that training on the
+//! threaded execution layer is BIT-IDENTICAL to the serial reference —
+//! same β bits, same evaluation counts, same TRON trajectory — and that
+//! every collective reduces in the same deterministic order under both.
+
+use std::sync::Arc;
+
+use dkm::cluster::{Cluster, CostModel, Executor};
+use dkm::config::settings::{Backend, BasisSelection, ExecutorChoice, Loss, Settings};
+use dkm::coordinator::train;
+use dkm::data::{synth, Dataset};
+use dkm::metrics::Step;
+use dkm::rng::Rng;
+use dkm::runtime::make_backend;
+
+fn settings(m: usize, nodes: usize, executor: ExecutorChoice) -> Settings {
+    Settings {
+        dataset: "covtype_like".into(),
+        m,
+        nodes,
+        lambda: 0.01,
+        sigma: 2.0,
+        loss: Loss::SqHinge,
+        basis: BasisSelection::Random,
+        backend: Backend::Native,
+        executor,
+        max_iters: 60,
+        tol: 1e-3,
+        seed: 42,
+        kmeans_iters: 2,
+        kmeans_max_m: 512,
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+fn data(n: usize, ntest: usize, seed: u64) -> (Dataset, Dataset) {
+    let mut spec = synth::spec("covtype_like");
+    spec.n_train = n;
+    spec.n_test = ntest;
+    synth::generate(&spec, seed)
+}
+
+/// The acceptance-criterion test: serial and threaded training on
+/// covtype_like produce bit-identical β and identical fg/hd eval counts.
+#[test]
+fn threaded_training_is_bit_identical_to_serial() {
+    let (tr, _) = data(1600, 200, 7);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let serial = train(
+        &settings(96, 8, ExecutorChoice::Serial),
+        &tr,
+        Arc::clone(&backend),
+        CostModel::hadoop_crude(),
+    )
+    .unwrap();
+    for cap in [2usize, 8] {
+        let threaded = train(
+            &settings(96, 8, ExecutorChoice::Threads { cap }),
+            &tr,
+            Arc::clone(&backend),
+            CostModel::hadoop_crude(),
+        )
+        .unwrap();
+        assert_eq!(
+            serial.model.beta.len(),
+            threaded.model.beta.len(),
+            "cap={cap}"
+        );
+        for (i, (a, b)) in serial
+            .model
+            .beta
+            .iter()
+            .zip(&threaded.model.beta)
+            .enumerate()
+        {
+            assert_eq!(a.to_bits(), b.to_bits(), "cap={cap} beta[{i}]: {a} vs {b}");
+        }
+        assert_eq!(serial.fg_evals, threaded.fg_evals, "cap={cap}");
+        assert_eq!(serial.hd_evals, threaded.hd_evals, "cap={cap}");
+        assert_eq!(
+            serial.stats.iterations, threaded.stats.iterations,
+            "cap={cap}"
+        );
+        assert_eq!(
+            serial.stats.final_f.to_bits(),
+            threaded.stats.final_f.to_bits(),
+            "cap={cap}"
+        );
+    }
+}
+
+/// Multi-tile m (two basis column tiles) exercises the unfused
+/// matvec/matvec_t partials; equivalence must hold there too.
+#[test]
+fn threaded_training_multi_tile_m_is_bit_identical() {
+    let (tr, _) = data(1400, 200, 11);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let mut runs = Vec::new();
+    for exec in [ExecutorChoice::Serial, ExecutorChoice::Threads { cap: 4 }] {
+        let mut s = settings(300, 5, exec);
+        s.max_iters = 25;
+        runs.push(train(&s, &tr, Arc::clone(&backend), CostModel::free()).unwrap());
+    }
+    for (a, b) in runs[0].model.beta.iter().zip(&runs[1].model.beta) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+/// K-means basis selection (explicit W shares, the distributed Lloyd loop)
+/// also rides the executor; its output must be executor-independent.
+#[test]
+fn kmeans_basis_training_is_bit_identical_across_executors() {
+    let (tr, _) = data(900, 150, 13);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let mut runs = Vec::new();
+    for exec in [ExecutorChoice::Serial, ExecutorChoice::Threads { cap: 3 }] {
+        let mut s = settings(24, 3, exec);
+        s.basis = BasisSelection::KMeans;
+        runs.push(train(&s, &tr, Arc::clone(&backend), CostModel::free()).unwrap());
+    }
+    for (a, b) in runs[0].model.beta.iter().zip(&runs[1].model.beta) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    // The basis itself (K-means centers) must match exactly, too.
+    assert_eq!(runs[0].model.basis, runs[1].model.basis);
+}
+
+/// AllReduce determinism under both executors, for vectors and scalars.
+#[test]
+fn allreduce_bit_identical_under_both_executors() {
+    for p in [1usize, 3, 8, 20] {
+        let mut rng = Rng::new(p as u64);
+        let partials: Vec<Vec<f32>> = (0..p)
+            .map(|_| (0..33).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let scalars: Vec<f32> = partials.iter().map(|v| v[7.min(v.len() - 1)]).collect();
+        let mut serial = Cluster::new(vec![(); p], 2, CostModel::free());
+        let mut threaded =
+            Cluster::new(vec![(); p], 2, CostModel::free()).with_executor(Executor::threaded(4));
+        let a = serial.allreduce_sum(Step::Tron, partials.clone());
+        let b = threaded.allreduce_sum(Step::Tron, partials);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "p={p}");
+        }
+        let sa = serial.allreduce_scalar(Step::Tron, scalars.clone());
+        let sb = threaded.allreduce_scalar(Step::Tron, scalars);
+        assert_eq!(sa.to_bits(), sb.to_bits(), "p={p}");
+    }
+}
+
+/// The simulated ledger stays max-over-nodes on the threaded executor:
+/// a phase's simulated time is one slow node, not the sum of all nodes.
+#[test]
+fn threaded_metering_is_max_over_nodes() {
+    let p = 4;
+    let mut cl =
+        Cluster::new(vec![(); p], 2, CostModel::free()).with_executor(Executor::threaded(p));
+    cl.par_compute(Step::Kernel, |_, _| {
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    });
+    let secs = cl.clock.compute_secs(Step::Kernel);
+    assert!(secs >= 0.018, "phase under-metered: {secs}");
+    // Sum-over-nodes would be >= 80ms; max-over-nodes stays well below
+    // (generous bound for scheduling noise on loaded CI hosts).
+    assert!(secs < 0.060, "phase looks sum-metered: {secs}");
+}
+
+/// Node failures under the threaded executor surface the same structured
+/// error, naming the first failing node in node order.
+#[test]
+fn threaded_node_failure_is_reported_in_node_order() {
+    let mut cl =
+        Cluster::new(vec![(); 6], 2, CostModel::free()).with_executor(Executor::threaded(6));
+    let err = cl
+        .try_par_compute(Step::Kernel, |j, _| {
+            if j >= 3 {
+                anyhow::bail!("shard {j} corrupt")
+            }
+            Ok(j)
+        })
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("node 3"), "{msg}");
+    assert!(msg.contains("shard 3 corrupt"), "{msg}");
+}

@@ -2,12 +2,15 @@
 //! the CPU PJRT client and differential-tested against the native oracle,
 //! then the full Algorithm-1 pipeline is compared PJRT-vs-native.
 //!
-//! Requires `make artifacts` (skipped with a clear message otherwise).
+//! Requires the `pjrt` cargo feature (the whole suite is compiled out
+//! otherwise) and `make artifacts` (skipped with a clear message if the
+//! artifacts directory is missing).
+#![cfg(feature = "pjrt")]
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use dkm::cluster::CostModel;
-use dkm::config::settings::{Backend, BasisSelection, Loss, Settings};
+use dkm::config::settings::{Backend, BasisSelection, ExecutorChoice, Loss, Settings};
 use dkm::coordinator::train;
 use dkm::data::synth;
 use dkm::rng::Rng;
@@ -186,6 +189,7 @@ fn end_to_end_training_pjrt_equals_native() {
         loss: Loss::SqHinge,
         basis: BasisSelection::Random,
         backend: Backend::Pjrt,
+        executor: ExecutorChoice::Serial,
         max_iters: 40,
         tol: 1e-3,
         seed: 42,
@@ -195,8 +199,8 @@ fn end_to_end_training_pjrt_equals_native() {
     };
     let pjrt = make_backend(Backend::Pjrt, "artifacts").unwrap();
     let native = make_backend(Backend::Native, "artifacts").unwrap();
-    let out_p = train(&settings, &train_ds, Rc::clone(&pjrt), CostModel::free()).unwrap();
-    let out_n = train(&settings, &train_ds, Rc::clone(&native), CostModel::free()).unwrap();
+    let out_p = train(&settings, &train_ds, Arc::clone(&pjrt), CostModel::free()).unwrap();
+    let out_n = train(&settings, &train_ds, Arc::clone(&native), CostModel::free()).unwrap();
     // Same seed → same basis; optimization paths may diverge slightly in fp
     // but final objective and accuracy must agree closely.
     let rel_f = (out_p.stats.final_f - out_n.stats.final_f).abs()
@@ -233,7 +237,7 @@ fn multi_tile_m_training_works_on_pjrt() {
         ..Settings::default()
     };
     let pjrt = make_backend(Backend::Pjrt, "artifacts").unwrap();
-    let out = train(&settings, &train_ds, Rc::clone(&pjrt), CostModel::free()).unwrap();
+    let out = train(&settings, &train_ds, Arc::clone(&pjrt), CostModel::free()).unwrap();
     let acc = out.model.accuracy(pjrt.as_ref(), &test_ds).unwrap();
     assert!(acc > 0.5, "accuracy {acc}");
 }
