@@ -6,6 +6,7 @@
 mod common;
 
 use dkm::cluster::{Cluster, CostModel};
+use dkm::linalg::Mat;
 use dkm::metrics::{Step, Table};
 use dkm::rng::Rng;
 use dkm::runtime::tiles::{TB, TM};
@@ -154,5 +155,67 @@ fn main() {
         format!("{:.1}", time(50, || native.hd_p(&cn, &v, &dcoef).unwrap()) * 1e6),
         format!("{:.1}x", un_hd / p_hd),
     ]);
+    print!("{}", table.render());
+
+    // --- streaming (from-features) ops: the --c-storage streaming cost ---
+    println!("\nstreaming C ops (kernel tile recomputed per dispatch) vs prepared C:");
+    let d = 64usize;
+    let xs: Vec<f32> = (0..TB * d).map(|_| rng.normal_f32()).collect();
+    let zs: Vec<f32> = (0..TM * d).map(|_| rng.normal_f32()).collect();
+    let xp = native.prepare(&xs, &[TB, d]).unwrap();
+    let zp = native.prepare(&zs, &[TM, d]).unwrap();
+    let cs = native.kernel_block(&xs, &zs, d, 0.5).unwrap();
+    let csp = native.prepare(&cs, &[TB, TM]).unwrap();
+    let mut table = Table::new(&["op", "prepared us", "from_x us", "recompute factor"]);
+    let p_fgx = time(50, || native.fgrad_p(loss, &csp, &v, &yn, &mn).unwrap());
+    let s_fgx = time(
+        50,
+        || native.fgrad_from_x(loss, &xp, &zp, d, 0.5, &v, &yn, &mn).unwrap(),
+    );
+    table.row(&[
+        "fgrad".into(),
+        format!("{:.1}", p_fgx * 1e6),
+        format!("{:.1}", s_fgx * 1e6),
+        format!("{:.1}x", s_fgx / p_fgx),
+    ]);
+    let p_hdx = time(50, || native.hd_p(&csp, &v, &dcoef).unwrap());
+    let s_hdx = time(50, || native.hd_from_x(&xp, &zp, d, 0.5, &v, &dcoef).unwrap());
+    table.row(&[
+        "hd".into(),
+        format!("{:.1}", p_hdx * 1e6),
+        format!("{:.1}", s_hdx * 1e6),
+        format!("{:.1}x", s_hdx / p_hdx),
+    ]);
+    print!("{}", table.render());
+
+    // --- matvec_t guard: when does the xi != 0 sparsity skip pay? ---
+    // Mat::matvec_t keeps its guard (sq-hinge residuals are mostly exact
+    // zeros near convergence); Mat::gemm_nn dropped its copy (kernel-matrix
+    // operands are never zero). This section is the measurement behind both
+    // decisions.
+    println!("\nMat::matvec_t sparsity guard (1000x400), usec/call:");
+    let a = Mat::from_fn(1000, 400, |_, _| rng.normal_f32());
+    let dense_r: Vec<f32> = (0..1000).map(|_| rng.normal_f32()).collect();
+    // 90% exact zeros — a converged sq-hinge residual profile.
+    let sparse_r: Vec<f32> = (0..1000)
+        .map(|i| if i % 10 == 0 { rng.normal_f32() } else { 0.0 })
+        .collect();
+    let mut y_out = vec![0.0f32; 400];
+    let mut table = Table::new(&["input", "guarded us", "unguarded us"]);
+    for (name, r) in [("dense", &dense_r), ("90% zeros", &sparse_r)] {
+        let guarded = time(200, || a.matvec_t(r, &mut y_out));
+        let unguarded = time(200, || {
+            // The no-guard variant gemm_nn now uses, inlined on a vector.
+            y_out.fill(0.0);
+            for i in 0..1000 {
+                dkm::linalg::mat::axpy(r[i], a.row(i), &mut y_out);
+            }
+        });
+        table.row(&[
+            name.into(),
+            format!("{:.1}", guarded * 1e6),
+            format!("{:.1}", unguarded * 1e6),
+        ]);
+    }
     print!("{}", table.render());
 }

@@ -115,6 +115,62 @@ impl ExecutorChoice {
     }
 }
 
+/// How each node stores its kernel row block C_j (the
+/// [`crate::coordinator::cstore`] layer).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CStorage {
+    /// Fully materialized tiled C + prepared operands (fastest; O(n_j·m)
+    /// bytes per node).
+    Materialized,
+    /// No stored C: every f/g/Hd dispatch recomputes its kernel tile from
+    /// the prepared feature/basis tiles (O(1 tile) bytes per node).
+    Streaming,
+    /// Materialize row tiles while they fit `c_memory_budget`, stream the
+    /// rest — memory becomes a dial instead of a cap.
+    Auto,
+}
+
+impl CStorage {
+    pub fn parse(s: &str) -> Result<CStorage> {
+        match s {
+            "materialized" => Ok(CStorage::Materialized),
+            "streaming" => Ok(CStorage::Streaming),
+            "auto" => Ok(CStorage::Auto),
+            other => {
+                anyhow::bail!("unknown C storage {other:?} (materialized|streaming|auto)")
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CStorage::Materialized => "materialized",
+            CStorage::Streaming => "streaming",
+            CStorage::Auto => "auto",
+        }
+    }
+}
+
+/// Parse a byte count with an optional k/m/g suffix ("512m", "64k", "2g").
+pub fn parse_bytes(s: &str) -> Result<usize> {
+    let t = s.trim().to_ascii_lowercase();
+    let (body, mult) = if let Some(b) = t.strip_suffix('g') {
+        (b, 1usize << 30)
+    } else if let Some(b) = t.strip_suffix('m') {
+        (b, 1usize << 20)
+    } else if let Some(b) = t.strip_suffix('k') {
+        (b, 1usize << 10)
+    } else {
+        (t.as_str(), 1usize)
+    };
+    let n: usize = body
+        .trim()
+        .parse()
+        .map_err(|e| anyhow::anyhow!("byte count {s:?}: {e}"))?;
+    n.checked_mul(mult)
+        .ok_or_else(|| anyhow::anyhow!("byte count {s:?} overflows"))
+}
+
 /// Compute backend for node-local block math.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {
@@ -149,6 +205,11 @@ pub struct Settings {
     pub backend: Backend,
     /// How node-local phases execute: serial loop or real worker threads.
     pub executor: ExecutorChoice,
+    /// How each node stores its kernel row block C_j.
+    pub c_storage: CStorage,
+    /// Per-node byte budget for `CStorage::Auto` (materialize C row tiles
+    /// while they fit, stream the rest).
+    pub c_memory_budget: usize,
     /// TRON iteration cap (paper: "typically around 300").
     pub max_iters: usize,
     /// Relative gradient-norm stopping tolerance.
@@ -179,6 +240,8 @@ impl Default for Settings {
                 Backend::Native
             },
             executor: ExecutorChoice::Serial,
+            c_storage: CStorage::Materialized,
+            c_memory_budget: 256 << 20,
             max_iters: 300,
             tol: 1e-3,
             seed: 42,
@@ -227,6 +290,8 @@ impl Settings {
                 "basis" => self.basis = BasisSelection::parse(v)?,
                 "backend" => self.backend = Backend::parse(v)?,
                 "executor" => self.executor = ExecutorChoice::parse(v)?,
+                "c_storage" => self.c_storage = CStorage::parse(v)?,
+                "c_memory_budget" => self.c_memory_budget = parse_bytes(v)?,
                 "max_iters" => {
                     self.max_iters = v.parse().map_err(|e| anyhow::anyhow!("max_iters: {e}"))?
                 }
@@ -345,6 +410,36 @@ mod tests {
         let mut kv = BTreeMap::new();
         kv.insert("executor".to_string(), "coroutines".to_string());
         assert!(s.apply(&kv).is_err());
+    }
+
+    #[test]
+    fn c_storage_parse_and_apply() {
+        assert_eq!(
+            CStorage::parse("materialized").unwrap(),
+            CStorage::Materialized
+        );
+        assert_eq!(CStorage::parse("streaming").unwrap(), CStorage::Streaming);
+        assert_eq!(CStorage::parse("auto").unwrap(), CStorage::Auto);
+        assert!(CStorage::parse("mmap").is_err());
+        assert_eq!(CStorage::Streaming.name(), "streaming");
+        let mut s = Settings::default();
+        let mut kv = BTreeMap::new();
+        kv.insert("c_storage".to_string(), "streaming".to_string());
+        kv.insert("c_memory_budget".to_string(), "64m".to_string());
+        s.apply(&kv).unwrap();
+        assert_eq!(s.c_storage, CStorage::Streaming);
+        assert_eq!(s.c_memory_budget, 64 << 20);
+    }
+
+    #[test]
+    fn byte_counts_parse_with_suffixes() {
+        assert_eq!(parse_bytes("1024").unwrap(), 1024);
+        assert_eq!(parse_bytes("8k").unwrap(), 8 << 10);
+        assert_eq!(parse_bytes("512M").unwrap(), 512 << 20);
+        assert_eq!(parse_bytes("2g").unwrap(), 2 << 30);
+        assert!(parse_bytes("lots").is_err());
+        // Parses as a number but overflows usize once the suffix applies.
+        assert!(parse_bytes("99999999999g").is_err());
     }
 
     #[test]

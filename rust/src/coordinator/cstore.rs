@@ -1,0 +1,961 @@
+//! The memory-bounded kernel-operator layer: how a node's kernel row block
+//! C_j is represented and applied.
+//!
+//! The paper's formulation keeps per-node memory at O(n_j·m) by fully
+//! materializing C_j — which turns memory into a hard cap once m grows.
+//! This layer makes that a dial instead. A [`CBlockStore`] owns the C row
+//! block behind the tile ops the TRON hot path needs, with three modes:
+//!
+//! * [`MaterializedStore`] — today's behavior: tiled C plus prepared
+//!   operands, fastest, O(n_j·m) bytes per node.
+//! * [`StreamingStore`] — no stored C at all: every f/g/Hd dispatch
+//!   recomputes its kernel tile from the already-prepared feature/basis
+//!   tiles via the fused `*_from_x` backend ops (the tile is computed once
+//!   per dispatch and consumed in place). Peak C-block memory is O(1 tile);
+//!   compute grows by the kernel-tile recompute, which the stores count so
+//!   the simulated ledger can charge it honestly.
+//! * [`AutoStore`] — materializes row tiles while they fit a per-node byte
+//!   budget and streams the rest.
+//!
+//! All three produce BIT-IDENTICAL training output: the streamed tile is
+//! `kernel_block` of the same prepared operands, so every matvec/matvec_t
+//! consumes the same f32 bits in the same order (enforced by
+//! `rust/tests/c_storage.rs`).
+//!
+//! One nuance: with a random (training-row) basis the node's W share reads
+//! individual C *rows* (`row_dot`). Streaming modes cache exactly those
+//! rows — the node's W-share row block, O(m_j·m) like the explicit K-means
+//! W share — so the hot path never recomputes a whole tile to read one row.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::config::settings::{CStorage, Loss};
+use crate::linalg::mat::dot;
+use crate::runtime::backend::Prepared;
+use crate::runtime::tiles::{TB, TM};
+use crate::runtime::{Compute, StageOut};
+use crate::Result;
+
+/// How a node's C row block is stored and applied. Implementations must be
+/// `Send` (nodes move across the threaded executor's workers).
+pub trait CBlockStore: Send {
+    /// Mode name for reports ("materialized" / "streaming" / "auto").
+    fn kind(&self) -> &'static str;
+
+    /// Logical C columns (m) currently installed.
+    fn cols(&self) -> usize;
+
+    /// Basis column tiles currently installed.
+    fn col_tiles(&self) -> usize;
+
+    /// True once `rebuild` has run (the TRON hot path asserts this).
+    fn ready(&self) -> bool;
+
+    /// (Re)bind the store to the node's prepared feature tiles and the
+    /// shared prepared basis tiles, recomputing/re-preparing whatever this
+    /// mode stores. `dirty_cols` is the stage-wise hint of which column
+    /// tiles changed; a shrink of m (or a first build) forces a full
+    /// recompute regardless — the stale-column hazard guard. `w_rows` are
+    /// the node's (local_row, global_k) W-share rows when the basis is a
+    /// subset of the training rows.
+    #[allow(clippy::too_many_arguments)]
+    fn rebuild(
+        &mut self,
+        backend: &dyn Compute,
+        x_prep: &Arc<Vec<Prepared>>,
+        z_prep: &Arc<Vec<Prepared>>,
+        rows: usize,
+        m: usize,
+        gamma: f32,
+        dpad: usize,
+        dirty_cols: Range<usize>,
+        w_rows: &[(usize, usize)],
+    ) -> Result<()>;
+
+    /// C[i,j] · v (one TB vector).
+    fn matvec_tile(
+        &self,
+        backend: &dyn Compute,
+        i: usize,
+        j: usize,
+        v: &[f32],
+    ) -> Result<Vec<f32>>;
+
+    /// C[i,j]ᵀ · r (one TM vector).
+    fn matvec_t_tile(
+        &self,
+        backend: &dyn Compute,
+        i: usize,
+        j: usize,
+        r: &[f32],
+    ) -> Result<Vec<f32>>;
+
+    /// Fused f/g over row tile i (single basis column tile only).
+    fn fgrad_tile(
+        &self,
+        backend: &dyn Compute,
+        loss: Loss,
+        i: usize,
+        beta_tile: &[f32],
+        y: &Prepared,
+        mask: &Prepared,
+    ) -> Result<StageOut>;
+
+    /// Fused Hd over row tile i (single basis column tile only).
+    fn hd_tile(
+        &self,
+        backend: &dyn Compute,
+        i: usize,
+        d_tile: &[f32],
+        dcoef: &[f32],
+    ) -> Result<Vec<f32>>;
+
+    /// Dot of logical C row `row` with a tiled m-vector (FromC W shares).
+    fn row_dot(&self, row: usize, v_tiles: &[Vec<f32>]) -> Result<f32>;
+
+    /// Peak C-block bytes this store holds across dispatches: stored tiles
+    /// plus prepared copies, plus one transient tile when any row streams.
+    fn peak_c_bytes(&self) -> usize;
+
+    /// Bytes held by the streamed-row W-share cache (reported separately:
+    /// it is the W share, not the C block).
+    fn w_cache_bytes(&self) -> usize;
+
+    /// Kernel-tile computations this store performed beyond the one-time
+    /// materialized build: streaming f/g/Hd dispatches plus W-row cache
+    /// builds (zero for materialized).
+    fn recomputed_tiles(&self) -> u64;
+}
+
+/// Construct the configured store (`budget_bytes` feeds `Auto`).
+pub fn make_store(choice: CStorage, budget_bytes: usize) -> Box<dyn CBlockStore> {
+    match choice {
+        CStorage::Materialized => Box::new(MaterializedStore::new()),
+        CStorage::Streaming => Box::new(StreamingStore::new()),
+        CStorage::Auto => Box::new(AutoStore::new(budget_bytes)),
+    }
+}
+
+/// Everything needed to recompute a kernel tile on demand.
+#[derive(Clone)]
+struct StreamCtx {
+    x_prep: Arc<Vec<Prepared>>,
+    z_prep: Arc<Vec<Prepared>>,
+    gamma: f32,
+    dpad: usize,
+}
+
+/// Which row tiles to materialize.
+#[derive(Clone, Copy, Debug)]
+enum MatPolicy {
+    All,
+    None,
+    Budget(usize),
+}
+
+/// One materialized row of tiles: host tiles + prepared copies. The host
+/// tiles serve `row_dot`; the prepared copies serve the hot-path dispatch
+/// (device-resident under PJRT).
+#[derive(Default)]
+struct MatRowTiles {
+    tiles: Vec<Vec<f32>>,
+    preps: Vec<Prepared>,
+}
+
+impl MatRowTiles {
+    /// Recompute the dirty column tiles and re-prepare only those —
+    /// stage-wise basis growth stays O(new columns).
+    fn rebuild(
+        &mut self,
+        backend: &dyn Compute,
+        x: &Prepared,
+        z_prep: &[Prepared],
+        dpad: usize,
+        gamma: f32,
+        dirty: Range<usize>,
+    ) -> Result<()> {
+        let ct = z_prep.len();
+        debug_assert_eq!(dirty.end, ct, "dirty range must run through the last tile");
+        // A fresh slot (e.g. a row tile newly promoted to materialized) has
+        // no valid tiles at all — every column is dirty for it.
+        let dirty = if self.tiles.is_empty() { 0..ct } else { dirty };
+        self.tiles.resize_with(ct, || vec![0.0; TB * TM]);
+        for j in dirty.clone() {
+            let tile = backend.kernel_block_p(x, &z_prep[j], dpad, gamma)?;
+            self.tiles[j].copy_from_slice(&tile);
+        }
+        self.preps.truncate(dirty.start.min(self.preps.len()));
+        for j in self.preps.len()..ct {
+            self.preps.push(backend.prepare(&self.tiles[j], &[TB, TM])?);
+        }
+        Ok(())
+    }
+}
+
+/// The shared store core: a materialized prefix of row tiles (per policy)
+/// plus streaming for the rest, with a W-share row cache for streamed rows.
+struct Core {
+    policy: MatPolicy,
+    ctx: Option<StreamCtx>,
+    /// Per row tile: `Some` = materialized, `None` = streamed.
+    slots: Vec<Option<MatRowTiles>>,
+    /// local_row → padded C row (col_tiles·TM) for rows in streamed tiles.
+    wcache: BTreeMap<usize, Vec<f32>>,
+    recomputed: AtomicU64,
+    cols: usize,
+}
+
+impl Core {
+    fn new(policy: MatPolicy) -> Self {
+        Core {
+            policy,
+            ctx: None,
+            slots: Vec::new(),
+            wcache: BTreeMap::new(),
+            recomputed: AtomicU64::new(0),
+            cols: 0,
+        }
+    }
+
+    fn ctx(&self) -> Result<&StreamCtx> {
+        self.ctx
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("C-block store used before rebuild"))
+    }
+
+    fn col_tiles(&self) -> usize {
+        self.cols.div_ceil(TM).max(1)
+    }
+
+    fn bump(&self) {
+        self.recomputed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn rebuild(
+        &mut self,
+        backend: &dyn Compute,
+        x_prep: &Arc<Vec<Prepared>>,
+        z_prep: &Arc<Vec<Prepared>>,
+        rows: usize,
+        m: usize,
+        gamma: f32,
+        dpad: usize,
+        dirty_cols: Range<usize>,
+        w_rows: &[(usize, usize)],
+    ) -> Result<()> {
+        anyhow::ensure!(m > 0, "C block needs at least one basis column");
+        let ct = z_prep.len();
+        anyhow::ensure!(
+            ct == m.div_ceil(TM).max(1),
+            "basis tiles ({ct}) do not match the column tiles of m={m}"
+        );
+        let rt = x_prep.len();
+        anyhow::ensure!(
+            rt == rows.div_ceil(TB).max(1),
+            "feature tiles ({rt}) do not match the row tiles of n={rows}"
+        );
+        // Stale-column hazard guard: a shrink of m (or a first build / a
+        // changed row layout) invalidates every stored tile — force a full
+        // recompute no matter what `dirty_cols` claims.
+        let full = self.cols == 0 || m < self.cols || self.slots.len() != rt;
+        let dirty = if full {
+            0..ct
+        } else {
+            // Growth: recompute from the tile holding the first new column
+            // (it was partial) through the new last tile, honoring a wider
+            // caller-provided range.
+            dirty_cols.start.min(self.cols / TM)..ct
+        };
+        if full {
+            self.slots.clear();
+            self.wcache.clear();
+        }
+        self.ctx = Some(StreamCtx {
+            x_prep: Arc::clone(x_prep),
+            z_prep: Arc::clone(z_prep),
+            gamma,
+            dpad,
+        });
+        // Host tiles + prepared copies per materialized row tile.
+        let row_bytes = ct * TB * TM * 4 * 2;
+        let n_mat = match self.policy {
+            MatPolicy::All => rt,
+            MatPolicy::None => 0,
+            MatPolicy::Budget(b) => (b / row_bytes).min(rt),
+        };
+        self.slots.resize_with(rt, || None);
+        for i in 0..rt {
+            if i < n_mat {
+                let slot = self.slots[i].get_or_insert_with(MatRowTiles::default);
+                slot.rebuild(backend, &x_prep[i], z_prep, dpad, gamma, dirty.clone())?;
+            } else {
+                // Budget no longer covers this row tile (columns grew):
+                // drop to streaming; its W rows are cached below.
+                self.slots[i] = None;
+            }
+        }
+        self.rebuild_wcache(backend, n_mat, ct, w_rows, dirty)?;
+        self.cols = m;
+        Ok(())
+    }
+
+    /// (Re)build the W-share row cache for rows living in streamed row
+    /// tiles. Rows already cached at the current width refresh only the
+    /// dirty column tiles; new or re-shaped rows compute every tile. Each
+    /// needed (row tile, col tile) kernel tile is computed once and feeds
+    /// every cached row in it.
+    fn rebuild_wcache(
+        &mut self,
+        backend: &dyn Compute,
+        n_mat: usize,
+        ct: usize,
+        w_rows: &[(usize, usize)],
+        dirty: Range<usize>,
+    ) -> Result<()> {
+        let mut by_tile: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for &(local, _) in w_rows {
+            let ti = local / TB;
+            if ti >= n_mat {
+                by_tile.entry(ti).or_default().push(local);
+            }
+        }
+        let needed: BTreeSet<usize> = by_tile.values().flatten().copied().collect();
+        self.wcache.retain(|row, _| needed.contains(row));
+        if by_tile.is_empty() {
+            return Ok(());
+        }
+        let ctx = self.ctx()?.clone();
+        for (ti, locals) in &by_tile {
+            let any_fresh = locals
+                .iter()
+                .any(|l| self.wcache.get(l).map(|v| v.len()) != Some(ct * TM));
+            let cols = if any_fresh { 0..ct } else { dirty.clone() };
+            for j in cols {
+                let tile =
+                    backend.kernel_block_p(&ctx.x_prep[*ti], &ctx.z_prep[j], ctx.dpad, ctx.gamma)?;
+                // W-cache builds are kernel work the materialized path gets
+                // for free from its stored C — charge them as recompute.
+                self.bump();
+                for &local in locals {
+                    let row = self.wcache.entry(local).or_default();
+                    if row.len() != ct * TM {
+                        row.resize(ct * TM, 0.0);
+                    }
+                    let r = local % TB;
+                    row[j * TM..(j + 1) * TM].copy_from_slice(&tile[r * TM..(r + 1) * TM]);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn matvec_tile(
+        &self,
+        backend: &dyn Compute,
+        i: usize,
+        j: usize,
+        v: &[f32],
+    ) -> Result<Vec<f32>> {
+        if let Some(Some(slot)) = self.slots.get(i) {
+            return backend.matvec_p(&slot.preps[j], v);
+        }
+        let ctx = self.ctx()?;
+        self.bump();
+        backend.matvec_from_x(&ctx.x_prep[i], &ctx.z_prep[j], ctx.dpad, ctx.gamma, v)
+    }
+
+    fn matvec_t_tile(
+        &self,
+        backend: &dyn Compute,
+        i: usize,
+        j: usize,
+        r: &[f32],
+    ) -> Result<Vec<f32>> {
+        if let Some(Some(slot)) = self.slots.get(i) {
+            return backend.matvec_t_p(&slot.preps[j], r);
+        }
+        let ctx = self.ctx()?;
+        self.bump();
+        backend.matvec_t_from_x(&ctx.x_prep[i], &ctx.z_prep[j], ctx.dpad, ctx.gamma, r)
+    }
+
+    fn fgrad_tile(
+        &self,
+        backend: &dyn Compute,
+        loss: Loss,
+        i: usize,
+        beta_tile: &[f32],
+        y: &Prepared,
+        mask: &Prepared,
+    ) -> Result<StageOut> {
+        debug_assert_eq!(
+            self.col_tiles(),
+            1,
+            "fused fgrad_tile covers only single-column-tile m"
+        );
+        if let Some(Some(slot)) = self.slots.get(i) {
+            return backend.fgrad_p(loss, &slot.preps[0], beta_tile, y, mask);
+        }
+        let ctx = self.ctx()?;
+        self.bump();
+        backend.fgrad_from_x(
+            loss,
+            &ctx.x_prep[i],
+            &ctx.z_prep[0],
+            ctx.dpad,
+            ctx.gamma,
+            beta_tile,
+            y,
+            mask,
+        )
+    }
+
+    fn hd_tile(
+        &self,
+        backend: &dyn Compute,
+        i: usize,
+        d_tile: &[f32],
+        dcoef: &[f32],
+    ) -> Result<Vec<f32>> {
+        debug_assert_eq!(
+            self.col_tiles(),
+            1,
+            "fused hd_tile covers only single-column-tile m"
+        );
+        if let Some(Some(slot)) = self.slots.get(i) {
+            return backend.hd_p(&slot.preps[0], d_tile, dcoef);
+        }
+        let ctx = self.ctx()?;
+        self.bump();
+        backend.hd_from_x(
+            &ctx.x_prep[i],
+            &ctx.z_prep[0],
+            ctx.dpad,
+            ctx.gamma,
+            d_tile,
+            dcoef,
+        )
+    }
+
+    fn row_dot(&self, row: usize, v_tiles: &[Vec<f32>]) -> Result<f32> {
+        let ti = row / TB;
+        if let Some(Some(slot)) = self.slots.get(ti) {
+            let r = row % TB;
+            let mut s = 0.0f32;
+            for (j, v) in v_tiles.iter().enumerate() {
+                s += dot(&slot.tiles[j][r * TM..(r + 1) * TM], v);
+            }
+            return Ok(s);
+        }
+        let cached = self.wcache.get(&row).ok_or_else(|| {
+            anyhow::anyhow!("W row {row} not cached in the streaming C store")
+        })?;
+        anyhow::ensure!(
+            cached.len() == v_tiles.len() * TM,
+            "stale W-row cache for row {row}"
+        );
+        let mut s = 0.0f32;
+        for (j, v) in v_tiles.iter().enumerate() {
+            s += dot(&cached[j * TM..(j + 1) * TM], v);
+        }
+        Ok(s)
+    }
+
+    fn peak_c_bytes(&self) -> usize {
+        let held: usize = self
+            .slots
+            .iter()
+            .flatten()
+            .map(|s| (s.tiles.len() + s.preps.len()) * TB * TM * 4)
+            .sum();
+        let streams_any = self.slots.iter().any(|s| s.is_none());
+        held + if streams_any { TB * TM * 4 } else { 0 }
+    }
+
+    fn w_cache_bytes(&self) -> usize {
+        self.wcache.values().map(|v| v.len() * 4).sum()
+    }
+}
+
+macro_rules! impl_cblock_store {
+    ($ty:ty, $kind:expr) => {
+        impl CBlockStore for $ty {
+            fn kind(&self) -> &'static str {
+                $kind
+            }
+
+            fn cols(&self) -> usize {
+                self.0.cols
+            }
+
+            fn col_tiles(&self) -> usize {
+                self.0.col_tiles()
+            }
+
+            fn ready(&self) -> bool {
+                self.0.ctx.is_some()
+            }
+
+            fn rebuild(
+                &mut self,
+                backend: &dyn Compute,
+                x_prep: &Arc<Vec<Prepared>>,
+                z_prep: &Arc<Vec<Prepared>>,
+                rows: usize,
+                m: usize,
+                gamma: f32,
+                dpad: usize,
+                dirty_cols: Range<usize>,
+                w_rows: &[(usize, usize)],
+            ) -> Result<()> {
+                self.0.rebuild(
+                    backend, x_prep, z_prep, rows, m, gamma, dpad, dirty_cols, w_rows,
+                )
+            }
+
+            fn matvec_tile(
+                &self,
+                backend: &dyn Compute,
+                i: usize,
+                j: usize,
+                v: &[f32],
+            ) -> Result<Vec<f32>> {
+                self.0.matvec_tile(backend, i, j, v)
+            }
+
+            fn matvec_t_tile(
+                &self,
+                backend: &dyn Compute,
+                i: usize,
+                j: usize,
+                r: &[f32],
+            ) -> Result<Vec<f32>> {
+                self.0.matvec_t_tile(backend, i, j, r)
+            }
+
+            fn fgrad_tile(
+                &self,
+                backend: &dyn Compute,
+                loss: Loss,
+                i: usize,
+                beta_tile: &[f32],
+                y: &Prepared,
+                mask: &Prepared,
+            ) -> Result<StageOut> {
+                self.0.fgrad_tile(backend, loss, i, beta_tile, y, mask)
+            }
+
+            fn hd_tile(
+                &self,
+                backend: &dyn Compute,
+                i: usize,
+                d_tile: &[f32],
+                dcoef: &[f32],
+            ) -> Result<Vec<f32>> {
+                self.0.hd_tile(backend, i, d_tile, dcoef)
+            }
+
+            fn row_dot(&self, row: usize, v_tiles: &[Vec<f32>]) -> Result<f32> {
+                self.0.row_dot(row, v_tiles)
+            }
+
+            fn peak_c_bytes(&self) -> usize {
+                self.0.peak_c_bytes()
+            }
+
+            fn w_cache_bytes(&self) -> usize {
+                self.0.w_cache_bytes()
+            }
+
+            fn recomputed_tiles(&self) -> u64 {
+                self.0.recomputed.load(Ordering::Relaxed)
+            }
+        }
+    };
+}
+
+/// Fully materialized C (tiled host copies + prepared operands).
+pub struct MaterializedStore(Core);
+
+impl MaterializedStore {
+    pub fn new() -> Self {
+        MaterializedStore(Core::new(MatPolicy::All))
+    }
+}
+
+impl Default for MaterializedStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// No stored C: every dispatch recomputes its kernel tile.
+pub struct StreamingStore(Core);
+
+impl StreamingStore {
+    pub fn new() -> Self {
+        StreamingStore(Core::new(MatPolicy::None))
+    }
+}
+
+impl Default for StreamingStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Budgeted hybrid: materialize row tiles while they fit, stream the rest.
+pub struct AutoStore(Core);
+
+impl AutoStore {
+    pub fn new(budget_bytes: usize) -> Self {
+        AutoStore(Core::new(MatPolicy::Budget(budget_bytes)))
+    }
+}
+
+impl_cblock_store!(MaterializedStore, "materialized");
+impl_cblock_store!(StreamingStore, "streaming");
+impl_cblock_store!(AutoStore, "auto");
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::runtime::backend::NativeCompute;
+    use crate::runtime::native;
+
+    const D: usize = 32;
+
+    struct Fixture {
+        backend: NativeCompute,
+        x_tiles: Vec<Vec<f32>>,
+        z_tiles: Vec<Vec<f32>>,
+        x_prep: Arc<Vec<Prepared>>,
+        z_prep: Arc<Vec<Prepared>>,
+        rows: usize,
+        m: usize,
+    }
+
+    fn fixture(rows: usize, m: usize, seed: u64) -> Fixture {
+        let mut rng = Rng::new(seed);
+        let backend = NativeCompute::new();
+        let rt = rows.div_ceil(TB).max(1);
+        let ct = m.div_ceil(TM).max(1);
+        // Zero-pad dead rows/cols exactly like the production tiling.
+        let x_tiles: Vec<Vec<f32>> = (0..rt)
+            .map(|t| {
+                let live = rows.saturating_sub(t * TB).min(TB);
+                let mut tile = vec![0.0f32; TB * D];
+                for v in tile.iter_mut().take(live * D) {
+                    *v = rng.normal_f32();
+                }
+                tile
+            })
+            .collect();
+        let z_tiles: Vec<Vec<f32>> = (0..ct)
+            .map(|t| {
+                let live = m.saturating_sub(t * TM).min(TM);
+                let mut tile = vec![0.0f32; TM * D];
+                for v in tile.iter_mut().take(live * D) {
+                    *v = rng.normal_f32();
+                }
+                tile
+            })
+            .collect();
+        let x_prep = Arc::new(
+            x_tiles
+                .iter()
+                .map(|t| backend.prepare(t, &[TB, D]).unwrap())
+                .collect::<Vec<_>>(),
+        );
+        let z_prep = Arc::new(
+            z_tiles
+                .iter()
+                .map(|t| backend.prepare(t, &[TM, D]).unwrap())
+                .collect::<Vec<_>>(),
+        );
+        Fixture {
+            backend,
+            x_tiles,
+            z_tiles,
+            x_prep,
+            z_prep,
+            rows,
+            m,
+        }
+    }
+
+    fn rebuild(store: &mut dyn CBlockStore, f: &Fixture, w_rows: &[(usize, usize)]) {
+        let ct = f.z_prep.len();
+        store
+            .rebuild(
+                &f.backend, &f.x_prep, &f.z_prep, f.rows, f.m, 0.5, D, 0..ct, w_rows,
+            )
+            .unwrap();
+    }
+
+    #[test]
+    fn streaming_ops_match_materialized_bitwise() {
+        let f = fixture(300, 300, 1);
+        let w_rows = vec![(0usize, 0usize), (7, 1), (299, 2)];
+        let mut mat = MaterializedStore::new();
+        let mut st = StreamingStore::new();
+        rebuild(&mut mat, &f, &w_rows);
+        rebuild(&mut st, &f, &w_rows);
+        assert_eq!(mat.col_tiles(), 2);
+        assert_eq!(st.cols(), 300);
+
+        let mut rng = Rng::new(9);
+        let v: Vec<f32> = (0..TM).map(|_| rng.normal_f32()).collect();
+        let r: Vec<f32> = (0..TB).map(|_| rng.normal_f32()).collect();
+        for i in 0..2 {
+            for j in 0..2 {
+                let a = mat.matvec_tile(&f.backend, i, j, &v).unwrap();
+                let b = st.matvec_tile(&f.backend, i, j, &v).unwrap();
+                assert_eq!(
+                    a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+                );
+                let a = mat.matvec_t_tile(&f.backend, i, j, &r).unwrap();
+                let b = st.matvec_t_tile(&f.backend, i, j, &r).unwrap();
+                assert_eq!(
+                    a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+                );
+            }
+        }
+        // row_dot agrees bitwise and matches the dense kernel row.
+        let v_tiles = vec![v.clone(), r[..TM].to_vec()];
+        for &(row, _) in &w_rows {
+            let a = mat.row_dot(row, &v_tiles).unwrap();
+            let b = st.row_dot(row, &v_tiles).unwrap();
+            assert_eq!(a.to_bits(), b.to_bits(), "row {row}");
+            let ti = row / TB;
+            let rr = row % TB;
+            let mut want = 0.0f32;
+            for j in 0..2 {
+                let tile = native::kernel_block(&f.x_tiles[ti], &f.z_tiles[j], D, 0.5);
+                want += dot(&tile[rr * TM..(rr + 1) * TM], &v_tiles[j]);
+            }
+            assert_eq!(a.to_bits(), want.to_bits(), "row {row}");
+        }
+        assert_eq!(mat.recomputed_tiles(), 0);
+        assert!(st.recomputed_tiles() > 0);
+        assert_eq!(st.peak_c_bytes(), TB * TM * 4);
+        assert!(mat.peak_c_bytes() >= 2 * 2 * 2 * TB * TM * 4);
+        assert!(st.w_cache_bytes() >= 3 * 2 * TM * 4);
+    }
+
+    #[test]
+    fn fused_single_tile_ops_match_bitwise() {
+        let f = fixture(300, 96, 2);
+        let mut mat = MaterializedStore::new();
+        let mut st = StreamingStore::new();
+        rebuild(&mut mat, &f, &[]);
+        rebuild(&mut st, &f, &[]);
+        let mut rng = Rng::new(5);
+        let beta: Vec<f32> = (0..TM).map(|_| 0.2 * rng.normal_f32()).collect();
+        let y: Vec<f32> = (0..TB)
+            .map(|i| if i % 2 == 0 { 1.0 } else { -1.0 })
+            .collect();
+        let mask = vec![1.0f32; TB];
+        let yp = f.backend.prepare(&y, &[TB]).unwrap();
+        let mp = f.backend.prepare(&mask, &[TB]).unwrap();
+        for i in 0..2 {
+            let a = mat
+                .fgrad_tile(&f.backend, Loss::SqHinge, i, &beta, &yp, &mp)
+                .unwrap();
+            let b = st
+                .fgrad_tile(&f.backend, Loss::SqHinge, i, &beta, &yp, &mp)
+                .unwrap();
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            for (x, w) in a.vec.iter().zip(&b.vec) {
+                assert_eq!(x.to_bits(), w.to_bits());
+            }
+            let ha = mat.hd_tile(&f.backend, i, &beta, &a.dcoef).unwrap();
+            let hb = st.hd_tile(&f.backend, i, &beta, &b.dcoef).unwrap();
+            for (x, w) in ha.iter().zip(&hb) {
+                assert_eq!(x.to_bits(), w.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn auto_budget_materializes_prefix_and_streams_rest() {
+        let f = fixture(600, 96, 3);
+        // One row of tiles costs ct * TB*TM*4 * 2 = 512 KiB (ct = 1):
+        // budget for exactly one of the three row tiles.
+        let mut auto = AutoStore::new(600 * 1024);
+        let mut mat = MaterializedStore::new();
+        let w_rows = vec![(3usize, 0usize), (400, 1), (599, 2)];
+        rebuild(&mut auto, &f, &w_rows);
+        rebuild(&mut mat, &f, &w_rows);
+        // Held bytes: one materialized row tile (host+prep) + 1 transient.
+        assert_eq!(auto.peak_c_bytes(), (2 + 1) * TB * TM * 4);
+        let mut rng = Rng::new(7);
+        let v: Vec<f32> = (0..TM).map(|_| rng.normal_f32()).collect();
+        for i in 0..3 {
+            let a = mat.matvec_tile(&f.backend, i, 0, &v).unwrap();
+            let b = auto.matvec_tile(&f.backend, i, 0, &v).unwrap();
+            for (x, w) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), w.to_bits(), "row tile {i}");
+            }
+        }
+        let v_tiles = vec![v];
+        for &(row, _) in &w_rows {
+            let a = mat.row_dot(row, &v_tiles).unwrap();
+            let b = auto.row_dot(row, &v_tiles).unwrap();
+            assert_eq!(a.to_bits(), b.to_bits(), "row {row}");
+        }
+        // Only the streamed row tiles recompute: two W-cache tile builds at
+        // rebuild (row tiles 1 and 2) + the two streamed matvec dispatches.
+        assert_eq!(auto.recomputed_tiles(), 4);
+    }
+
+    #[test]
+    fn shrink_forces_full_recompute() {
+        let big = fixture(200, 300, 4);
+        let small = fixture(200, 100, 4);
+        // Same x (same seed order for x tiles); different z. Build at
+        // m=300, then shrink to m=100 with a deliberately stale dirty
+        // range — the guard must recompute everything anyway.
+        let mut store = MaterializedStore::new();
+        rebuild(&mut store, &big, &[]);
+        assert_eq!(store.col_tiles(), 2);
+        store
+            .rebuild(
+                &big.backend,
+                &small.x_prep,
+                &small.z_prep,
+                small.rows,
+                small.m,
+                0.5,
+                D,
+                1..1, // stale: claims nothing changed
+                &[],
+            )
+            .unwrap();
+        assert_eq!(store.cols(), 100);
+        assert_eq!(store.col_tiles(), 1);
+        let mut fresh = MaterializedStore::new();
+        rebuild(&mut fresh, &small, &[]);
+        let v: Vec<f32> = (0..TM).map(|i| (i as f32 * 0.01).sin()).collect();
+        let a = store.matvec_tile(&small.backend, 0, 0, &v).unwrap();
+        let b = fresh.matvec_tile(&small.backend, 0, 0, &v).unwrap();
+        for (x, w) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), w.to_bits());
+        }
+    }
+
+    #[test]
+    fn partial_tile_growth_recomputes_only_new_column_tile() {
+        // m = 300 -> 400 keeps ct = 2: dirty.start = 300/TM = 1, so only
+        // the second column tile recomputes and only its prep re-uploads —
+        // the O(new columns) stage-wise contract, asserted by op counts.
+        // Same seed => identical x tiles and an identical z column tile 0
+        // (both fixtures draw its full 256 live rows), exactly like a real
+        // grown basis.
+        let small = fixture(300, 300, 8);
+        let big = fixture(300, 400, 8);
+        let w_rows = vec![(5usize, 0usize), (290, 1)];
+
+        let mut mat = MaterializedStore::new();
+        rebuild(&mut mat, &small, &[]);
+        let calls0 = big.backend.call_count();
+        mat.rebuild(
+            &big.backend,
+            &big.x_prep,
+            &big.z_prep,
+            big.rows,
+            big.m,
+            0.5,
+            D,
+            (300 / TM)..big.z_prep.len(),
+            &[],
+        )
+        .unwrap();
+        // 2 row tiles x 1 dirty column tile; column tile 0 untouched.
+        assert_eq!(big.backend.call_count() - calls0, 2);
+
+        let mut st = StreamingStore::new();
+        rebuild(&mut st, &small, &w_rows);
+        let calls1 = big.backend.call_count();
+        st.rebuild(
+            &big.backend,
+            &big.x_prep,
+            &big.z_prep,
+            big.rows,
+            big.m,
+            0.5,
+            D,
+            (300 / TM)..big.z_prep.len(),
+            &w_rows,
+        )
+        .unwrap();
+        // Cached W rows are already at full width, so only the dirty column
+        // tile of each affected row tile rebuilds (row tiles 0 and 1).
+        assert_eq!(big.backend.call_count() - calls1, 2);
+
+        // The incrementally-grown stores must match fresh full builds
+        // bitwise — through the prepared tiles (matvec) AND the host tiles
+        // / W cache (row_dot).
+        let mut fresh_mat = MaterializedStore::new();
+        let mut fresh_st = StreamingStore::new();
+        rebuild(&mut fresh_mat, &big, &[]);
+        rebuild(&mut fresh_st, &big, &w_rows);
+        let v: Vec<f32> = (0..TM).map(|i| (i as f32 * 0.03).sin()).collect();
+        let v_tiles = vec![v.clone(), v.clone()];
+        for i in 0..2 {
+            for j in 0..2 {
+                let a = mat.matvec_tile(&big.backend, i, j, &v).unwrap();
+                let b = fresh_mat.matvec_tile(&big.backend, i, j, &v).unwrap();
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "tile ({i},{j})");
+                }
+            }
+        }
+        for &(row, _) in &w_rows {
+            let a = st.row_dot(row, &v_tiles).unwrap();
+            let b = fresh_st.row_dot(row, &v_tiles).unwrap();
+            assert_eq!(a.to_bits(), b.to_bits(), "row {row}");
+            let m_dot = mat.row_dot(row, &v_tiles).unwrap();
+            assert_eq!(a.to_bits(), m_dot.to_bits(), "row {row} vs materialized");
+        }
+    }
+
+    #[test]
+    fn growth_recomputes_only_dirty_tiles_and_extends_wcache() {
+        // Start at m=100 (1 col tile), grow to m=300 (2 col tiles).
+        let small = fixture(300, 100, 6);
+        let big = fixture(300, 300, 6);
+        let w_rows = vec![(1usize, 0usize), (280, 1)];
+        let mut st = StreamingStore::new();
+        rebuild(&mut st, &small, &w_rows);
+        st.rebuild(
+            &big.backend,
+            &big.x_prep,
+            &big.z_prep,
+            big.rows,
+            big.m,
+            0.5,
+            D,
+            (100 / TM)..big.z_prep.len(),
+            &w_rows,
+        )
+        .unwrap();
+        let mut fresh = StreamingStore::new();
+        rebuild(&mut fresh, &big, &w_rows);
+        let v_tiles: Vec<Vec<f32>> = (0..2)
+            .map(|t| (0..TM).map(|i| ((t * TM + i) as f32 * 0.02).cos()).collect())
+            .collect();
+        for &(row, _) in &w_rows {
+            let a = st.row_dot(row, &v_tiles).unwrap();
+            let b = fresh.row_dot(row, &v_tiles).unwrap();
+            assert_eq!(a.to_bits(), b.to_bits(), "row {row}");
+        }
+    }
+}

@@ -20,6 +20,7 @@ use crate::runtime::tiles::TM;
 use crate::runtime::Compute;
 use crate::Result;
 
+use super::cstore::CBlockStore;
 use super::node::{pad_m_tiles, unpad_m_tiles, WorkerNode};
 use super::tron::Objective;
 
@@ -60,7 +61,9 @@ impl<'a> DistProblem<'a> {
 
     /// Node-local loss+gradient partial for one node. Returns
     /// (loss_partial, reg_partial, grad_tiles) and refreshes the node's
-    /// cached Gauss-Newton diagonal.
+    /// cached Gauss-Newton diagonal. All C applications go through the
+    /// node's [`crate::coordinator::cstore::CBlockStore`], so the same code
+    /// serves materialized and streaming storage bit-identically.
     fn node_fg(
         node: &mut WorkerNode,
         backend: &dyn Compute,
@@ -69,20 +72,26 @@ impl<'a> DistProblem<'a> {
         beta: &[f32],
         lambda: f32,
     ) -> Result<(f32, f32, Vec<Vec<f32>>)> {
-        let ct = node.c.col_tiles();
+        let ct = node.cstore.col_tiles();
         let mut loss_partial = 0.0f32;
         let mut grad_tiles = vec![vec![0.0f32; TM]; ct];
+        assert!(
+            node.cstore.ready(),
+            "compute_c_block must run before TRON"
+        );
         assert_eq!(
-            node.c_prep.len(),
+            node.y_prep.len(),
             node.row_tiles(),
             "prepare_hot must run before TRON"
         );
         for i in 0..node.row_tiles() {
             if ct == 1 {
-                // Fused per-tile module: one dispatch instead of three.
-                let out = backend.fgrad_p(
+                // Fused per-tile dispatch: one call instead of three (the
+                // streaming store computes its kernel tile once inside it).
+                let out = node.cstore.fgrad_tile(
+                    backend,
                     loss,
-                    &node.c_prep[i][0],
+                    i,
                     &v_tiles[0],
                     &node.y_prep[i],
                     &node.mask_prep[i],
@@ -96,7 +105,7 @@ impl<'a> DistProblem<'a> {
                 // o = Σ_j C_ij β_j
                 let mut o = vec![0.0f32; crate::runtime::tiles::TB];
                 for j in 0..ct {
-                    let part = backend.matvec_p(&node.c_prep[i][j], &v_tiles[j])?;
+                    let part = node.cstore.matvec_tile(backend, i, j, &v_tiles[j])?;
                     for (a, b) in o.iter_mut().zip(&part) {
                         *a += b;
                     }
@@ -104,7 +113,7 @@ impl<'a> DistProblem<'a> {
                 let stage = backend.loss_stage(loss, &o, &node.y_tiles[i], &node.masks[i])?;
                 loss_partial += stage.loss;
                 for j in 0..ct {
-                    let part = backend.matvec_t_p(&node.c_prep[i][j], &stage.vec)?;
+                    let part = node.cstore.matvec_t_tile(backend, i, j, &stage.vec)?;
                     for (g, v) in grad_tiles[j].iter_mut().zip(&part) {
                         *g += v;
                     }
@@ -128,18 +137,20 @@ impl<'a> DistProblem<'a> {
         v_tiles: &[Vec<f32>],
         lambda: f32,
     ) -> Result<Vec<Vec<f32>>> {
-        let ct = node.c.col_tiles();
+        let ct = node.cstore.col_tiles();
         let mut hd_tiles = vec![vec![0.0f32; TM]; ct];
         for i in 0..node.row_tiles() {
             if ct == 1 {
-                let part = backend.hd_p(&node.c_prep[i][0], &v_tiles[0], &node.dcoef_tiles[i])?;
+                let part =
+                    node.cstore
+                        .hd_tile(backend, i, &v_tiles[0], &node.dcoef_tiles[i])?;
                 for (h, v) in hd_tiles[0].iter_mut().zip(&part) {
                     *h += v;
                 }
             } else {
                 let mut z = vec![0.0f32; crate::runtime::tiles::TB];
                 for j in 0..ct {
-                    let part = backend.matvec_p(&node.c_prep[i][j], &v_tiles[j])?;
+                    let part = node.cstore.matvec_tile(backend, i, j, &v_tiles[j])?;
                     for (a, b) in z.iter_mut().zip(&part) {
                         *a += b;
                     }
@@ -148,7 +159,7 @@ impl<'a> DistProblem<'a> {
                     *zi *= w;
                 }
                 for j in 0..ct {
-                    let part = backend.matvec_t_p(&node.c_prep[i][j], &z)?;
+                    let part = node.cstore.matvec_t_tile(backend, i, j, &z)?;
                     for (h, v) in hd_tiles[j].iter_mut().zip(&part) {
                         *h += v;
                     }

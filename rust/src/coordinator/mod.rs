@@ -1,8 +1,11 @@
 //! The paper's system contribution: Algorithm 1 — distributed training of
 //! the Nyström formulation (4) with TRON over an AllReduce tree.
 //!
-//! * [`node`] — per-node state: data shard, padded row tiles, the C row
-//!   block, and the node's share of W.
+//! * [`node`] — per-node state: data shard, padded row tiles, the C-block
+//!   store, and the node's share of W.
+//! * [`cstore`] — the memory-bounded kernel-operator layer: how the C row
+//!   block is represented (materialized / streaming / budgeted auto) behind
+//!   the [`cstore::CBlockStore`] trait, with bit-identical results.
 //! * [`dist`] — the distributed function / gradient / Hessian-vector
 //!   products (steps 4a–4c): node-local tile ops + AllReduce.
 //! * [`tron`] — the trust-region Newton solver (Lin–Weng–Keerthi) run by
@@ -14,12 +17,14 @@
 //! * [`predict`] — distributed test-set scoring with the trained model.
 
 pub mod basis;
+pub mod cstore;
 pub mod dist;
 pub mod node;
 pub mod predict;
 pub mod trainer;
 pub mod tron;
 
+pub use cstore::{make_store, CBlockStore};
 pub use node::WorkerNode;
 pub use trainer::{train, TrainOutput, TrainedModel};
 pub use tron::{TronOptions, TronStats};

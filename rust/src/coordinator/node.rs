@@ -1,17 +1,23 @@
 //! Per-node worker state for Algorithm 1.
 //!
-//! Each of the p nodes owns a row shard of the training data, the matching
-//! row block of C (tiled for the fixed-shape AOT modules), and its share of
-//! W: either references into its own C rows (random basis ⊂ training set —
-//! the paper's step-3 observation that "the corresponding row block of W is
-//! a subset of the C row block") or an explicitly computed W row block
+//! Each of the p nodes owns a row shard of the training data, a
+//! [`CBlockStore`] holding (or streaming) the matching row block of C
+//! (tiled for the fixed-shape AOT modules), and its share of W: either
+//! references into its own C rows (random basis ⊂ training set — the
+//! paper's step-3 observation that "the corresponding row block of W is a
+//! subset of the C row block") or an explicitly computed W row block
 //! (K-means basis, which is not a subset — §3.2).
 
+use std::sync::Arc;
+
+use crate::config::settings::CStorage;
 use crate::linalg::Mat;
 use crate::runtime::backend::Prepared;
 use crate::runtime::tiles::{row_masks, TiledMatrix, TB, TM};
 use crate::runtime::Compute;
 use crate::Result;
+
+use super::cstore::{make_store, CBlockStore, MaterializedStore};
 
 /// How this node's share of W is represented.
 #[derive(Clone, Debug)]
@@ -36,8 +42,10 @@ pub struct WorkerNode {
     pub masks: Vec<Vec<f32>>,
     /// Label tiles (padded with zeros).
     pub y_tiles: Vec<Vec<f32>>,
-    /// Kernel row block C_j (n_j × m), tiled.
-    pub c: TiledMatrix,
+    /// The kernel row block C_j (n_j × m) behind the storage-mode
+    /// abstraction: fully materialized, streamed per dispatch, or a
+    /// budgeted mix (see [`crate::coordinator::cstore`]).
+    pub cstore: Box<dyn CBlockStore>,
     /// This node's share of W.
     pub w_share: WShare,
     /// Cached Gauss-Newton diagonal per row tile (from the last f/g eval at
@@ -46,15 +54,16 @@ pub struct WorkerNode {
     /// Padded feature width in use.
     pub dpad: usize,
     /// Prepared (device-resident on PJRT) operands for the TRON hot path:
-    /// C tiles, labels and masks. Built by [`WorkerNode::prepare_hot`]
-    /// after step 3; every f/g/Hd call then ships only O(TB + TM) bytes.
-    pub c_prep: Vec<Vec<Prepared>>,
+    /// labels and masks (C operands live in the store). Built by
+    /// [`WorkerNode::prepare_hot`] after step 3; every f/g/Hd call then
+    /// ships only O(TB + TM) bytes.
     pub y_prep: Vec<Prepared>,
     pub mask_prep: Vec<Prepared>,
     /// Prepared explicit W row-block tiles (K-means basis only).
     pub w_prep: Vec<Vec<Prepared>>,
-    /// Prepared feature row tiles (for repeated kernel-tile calls).
-    pub x_prep: Vec<Prepared>,
+    /// Prepared feature row tiles, shared with the store (streaming modes
+    /// recompute kernel tiles from these).
+    pub x_prep: Arc<Vec<Prepared>>,
 }
 
 impl WorkerNode {
@@ -67,7 +76,7 @@ impl WorkerNode {
         let masks = row_masks(n_j);
         let y_tiles = pad_label_tiles(&y);
         WorkerNode {
-            c: TiledMatrix::zeros(n_j, 0),
+            cstore: Box::new(MaterializedStore::new()),
             dcoef_tiles: vec![vec![0.0; TB]; x_tiles.len()],
             x: x.clone(),
             y,
@@ -76,26 +85,23 @@ impl WorkerNode {
             y_tiles,
             w_share: WShare::FromC(Vec::new()),
             dpad,
-            c_prep: Vec::new(),
             y_prep: Vec::new(),
             mask_prep: Vec::new(),
             w_prep: Vec::new(),
-            x_prep: Vec::new(),
+            x_prep: Arc::new(Vec::new()),
         }
     }
 
-    /// Prepare the hot-path operands (one upload per C tile; labels and
-    /// masks once). Must be called after [`WorkerNode::compute_c_block`]
-    /// and again after any stage-wise growth.
+    /// Select how this node stores its C row block. Must be called before
+    /// [`WorkerNode::compute_c_block`] (an existing block is discarded).
+    pub fn set_c_storage(&mut self, choice: CStorage, budget_bytes: usize) {
+        self.cstore = make_store(choice, budget_bytes);
+    }
+
+    /// Prepare the hot-path operands (labels and masks once; W tiles on
+    /// change). C operands are prepared incrementally inside the store's
+    /// rebuild — only dirty column tiles re-upload after stage-wise growth.
     pub fn prepare_hot(&mut self, backend: &dyn Compute) -> Result<()> {
-        self.c_prep.clear();
-        for i in 0..self.c.row_tiles() {
-            let mut row = Vec::with_capacity(self.c.col_tiles());
-            for j in 0..self.c.col_tiles() {
-                row.push(backend.prepare(self.c.tile(i, j), &[TB, TM])?);
-            }
-            self.c_prep.push(row);
-        }
         if self.y_prep.len() != self.y_tiles.len() {
             self.y_prep = self
                 .y_tiles
@@ -146,42 +152,44 @@ impl WorkerNode {
             .iter()
             .map(|t| backend.prepare(t, &[TM, self.dpad]))
             .collect::<Result<_>>()?;
-        self.compute_c_block_p(backend, &z_prep, m, gamma, dirty_cols)
+        self.compute_c_block_p(backend, &Arc::new(z_prep), m, gamma, dirty_cols)
     }
 
-    /// Step 3 with pre-prepared basis tiles (the hot production path).
+    /// Step 3 with pre-prepared basis tiles shared across nodes (the hot
+    /// production path). Delegates the representation — materialize, cache
+    /// W rows, or nothing at all — to the configured [`CBlockStore`].
+    /// W shares must be installed first (streaming modes cache those rows).
     pub fn compute_c_block_p(
         &mut self,
         backend: &dyn Compute,
-        z_prep: &[Prepared],
+        z_prep: &Arc<Vec<Prepared>>,
         m: usize,
         gamma: f32,
         dirty_cols: std::ops::Range<usize>,
     ) -> Result<()> {
-        if self.c.cols() != m {
-            let prev = self.c.cols();
-            if m > prev {
-                self.c.grow_cols(m);
-            } else {
-                self.c = TiledMatrix::zeros(self.n_local(), m);
-            }
-        }
-        assert_eq!(z_prep.len(), self.c.col_tiles());
         if self.x_prep.is_empty() {
-            self.x_prep = self
+            let prepped: Vec<Prepared> = self
                 .x_tiles
                 .iter()
                 .map(|t| backend.prepare(t, &[TB, self.dpad]))
                 .collect::<Result<_>>()?;
+            self.x_prep = Arc::new(prepped);
         }
-        for i in 0..self.row_tiles() {
-            for j in dirty_cols.clone() {
-                let tile =
-                    backend.kernel_block_p(&self.x_prep[i], &z_prep[j], self.dpad, gamma)?;
-                self.c.tile_mut(i, j).copy_from_slice(&tile);
-            }
-        }
-        Ok(())
+        let w_rows: Vec<(usize, usize)> = match &self.w_share {
+            WShare::FromC(rows) => rows.clone(),
+            WShare::Explicit { .. } => Vec::new(),
+        };
+        self.cstore.rebuild(
+            backend,
+            &self.x_prep,
+            z_prep,
+            self.n_local(),
+            m,
+            gamma,
+            self.dpad,
+            dirty_cols,
+            &w_rows,
+        )
     }
 
     /// The node's contribution to (Wβ): a sparse set of (global_k, value)
@@ -191,7 +199,7 @@ impl WorkerNode {
             WShare::FromC(rows) => {
                 let mut out = Vec::with_capacity(rows.len());
                 for &(local, global_k) in rows {
-                    out.push((global_k, row_dot(&self.c, local, v_tiles)));
+                    out.push((global_k, self.cstore.row_dot(local, v_tiles)?));
                 }
                 Ok(out)
             }
@@ -218,18 +226,6 @@ impl WorkerNode {
             }
         }
     }
-}
-
-/// Dot of one logical C row with a tiled m-vector.
-fn row_dot(c: &TiledMatrix, row: usize, v_tiles: &[Vec<f32>]) -> f32 {
-    let ti = row / TB;
-    let r = row % TB;
-    let mut s = 0.0f32;
-    for j in 0..c.col_tiles() {
-        let tile = c.tile(ti, j);
-        s += crate::linalg::mat::dot(&tile[r * TM..(r + 1) * TM], &v_tiles[j]);
-    }
-    s
 }
 
 /// Pad a shard's features into (TB × dpad) row tiles.
@@ -316,19 +312,5 @@ mod tests {
         assert_eq!(t.len(), 1);
         assert_eq!(t[0][9], 1.0);
         assert_eq!(t[0][10], 0.0);
-    }
-
-    #[test]
-    fn row_dot_matches_dense() {
-        let mut rng = Rng::new(2);
-        let dense = Mat::from_fn(40, 300, |_, _| rng.normal_f32());
-        let c = TiledMatrix::from_mat(&dense);
-        let v: Vec<f32> = (0..300).map(|_| rng.normal_f32()).collect();
-        let v_tiles = pad_m_tiles(&v, c.col_tiles());
-        for row in [0, 7, 39] {
-            let want = crate::linalg::mat::dot(dense.row(row), &v);
-            let got = row_dot(&c, row, &v_tiles);
-            assert!((got - want).abs() < 1e-3, "row {row}: {got} vs {want}");
-        }
     }
 }

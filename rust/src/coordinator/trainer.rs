@@ -13,6 +13,7 @@ use crate::runtime::Compute;
 use crate::Result;
 
 use super::basis::{self, Basis};
+use super::cstore::CBlockStore;
 use super::dist::DistProblem;
 use super::node::WorkerNode;
 use super::tron::{self, TronOptions, TronStats};
@@ -53,6 +54,20 @@ pub struct TrainOutput {
     /// f/g and Hd evaluation counts (the 4a/4b/4c call counts).
     pub fg_evals: usize,
     pub hd_evals: usize,
+    /// Peak C-block bytes held by any node (the `--c-storage` dial).
+    pub peak_c_bytes: usize,
+    /// Peak bytes of the streamed-row W-share cache on any node (streaming
+    /// modes with a training-row basis; reported apart from the C block).
+    pub peak_w_cache_bytes: usize,
+    /// Kernel-tile recomputations across all nodes (streaming overhead;
+    /// also charged to the sim ledger as FLOPs).
+    pub recomputed_tiles: u64,
+}
+
+/// FLOPs of one RBF kernel-tile computation at padded width `dpad` (the
+/// 2·TB·TM·D inner-product count the micro bench uses).
+fn kernel_tile_flops(dpad: usize) -> u64 {
+    2 * (crate::runtime::tiles::TB * crate::runtime::tiles::TM * dpad) as u64
 }
 
 /// Step 1: shard the training set over p nodes. The cluster starts on the
@@ -91,6 +106,9 @@ pub fn train(
         build_cluster(train_ds, settings.nodes, dpad, cost)
     });
     cluster.set_executor(settings.executor.to_executor());
+    for node in cluster.nodes_mut() {
+        node.set_c_storage(settings.c_storage, settings.c_memory_budget);
+    }
     // Simulated: each node ingests its n/p shard (disk-bound in the paper;
     // we charge the measured shard-build time as the compute part).
     let load_wall = wall.wall_secs(Step::Load);
@@ -106,12 +124,15 @@ pub fn train(
         basis::install_w_shares(&mut cluster, &backend, &basis_sel, settings.gamma(), dpad)?;
         let m = basis_sel.m();
         let gamma = settings.gamma();
-        // Prepare the basis tiles once; all nodes reuse the same operands.
-        let z_prep: Vec<_> = basis_sel
-            .z_tiles
-            .iter()
-            .map(|t| backend.prepare(t, &[crate::runtime::tiles::TM, dpad]))
-            .collect::<Result<_>>()?;
+        // Prepare the basis tiles once; all nodes (and the streaming
+        // stores, for the life of the run) share the same operands.
+        let z_prep = Arc::new(
+            basis_sel
+                .z_tiles
+                .iter()
+                .map(|t| backend.prepare(t, &[crate::runtime::tiles::TM, dpad]))
+                .collect::<Result<Vec<_>>>()?,
+        );
         let backend2 = Arc::clone(&backend);
         let col_tiles = basis_sel.col_tiles();
         cluster.try_par_compute(Step::Kernel, |_, node| {
@@ -140,6 +161,21 @@ pub fn train(
         Ok((beta, stats, problem.fg_evals, problem.hd_evals))
     })?;
 
+    // Honest memory/compute accounting for the storage mode: peak C bytes
+    // held per node, and the kernel-tile recompute charged to the ledger.
+    let mut recomputed_tiles = 0u64;
+    let mut peak_c_bytes = 0usize;
+    let mut peak_w_cache_bytes = 0usize;
+    for j in 0..cluster.p() {
+        let store = &cluster.node(j).cstore;
+        recomputed_tiles += store.recomputed_tiles();
+        peak_c_bytes = peak_c_bytes.max(store.peak_c_bytes());
+        peak_w_cache_bytes = peak_w_cache_bytes.max(store.w_cache_bytes());
+    }
+    cluster
+        .clock
+        .add_recompute_flops(recomputed_tiles * kernel_tile_flops(dpad));
+
     Ok(TrainOutput {
         model: TrainedModel {
             basis: basis_sel.z,
@@ -152,6 +188,9 @@ pub fn train(
         sim: cluster.clock,
         fg_evals: fg,
         hd_evals: hd,
+        peak_c_bytes,
+        peak_w_cache_bytes,
+        recomputed_tiles,
     })
 }
 
@@ -161,6 +200,9 @@ pub struct StageOutput {
     pub model: TrainedModel,
     pub stats: TronStats,
     pub stage_wall_secs: f64,
+    /// Cumulative kernel-tile recomputations across nodes at stage end
+    /// (nonzero only for streaming storage).
+    pub recomputed_tiles: u64,
 }
 
 /// Stage-wise basis addition (§3): train at stages[0], then repeatedly add
@@ -183,6 +225,9 @@ pub fn train_stagewise(
     let dpad = backend.pad_d(train_ds.d())?;
     let mut cluster = build_cluster(train_ds, settings.nodes, dpad, cost);
     cluster.set_executor(settings.executor.to_executor());
+    for node in cluster.nodes_mut() {
+        node.set_c_storage(settings.c_storage, settings.c_memory_budget);
+    }
 
     let mut outputs = Vec::new();
     let mut basis_sel: Option<Basis> = None;
@@ -214,11 +259,12 @@ pub fn train_stagewise(
         let b = basis_sel.as_ref().unwrap();
         basis::install_w_shares(&mut cluster, &backend, b, settings.gamma(), dpad)?;
         let gamma = settings.gamma();
-        let z_prep: Vec<_> = b
-            .z_tiles
-            .iter()
-            .map(|t| backend.prepare(t, &[crate::runtime::tiles::TM, dpad]))
-            .collect::<Result<_>>()?;
+        let z_prep = Arc::new(
+            b.z_tiles
+                .iter()
+                .map(|t| backend.prepare(t, &[crate::runtime::tiles::TM, dpad]))
+                .collect::<Result<Vec<_>>>()?,
+        );
         let backend2 = Arc::clone(&backend);
         cluster.try_par_compute(Step::Kernel, |_, node| {
             node.compute_c_block_p(backend2.as_ref(), &z_prep, m, gamma, dirty.clone())?;
@@ -241,6 +287,9 @@ pub fn train_stagewise(
         };
         let (beta_new, stats) = tron::minimize(&mut problem, &beta, &opts)?;
         beta = beta_new;
+        let recomputed_tiles = (0..cluster.p())
+            .map(|j| cluster.node(j).cstore.recomputed_tiles())
+            .sum();
         outputs.push(StageOutput {
             m,
             model: TrainedModel {
@@ -251,6 +300,7 @@ pub fn train_stagewise(
             },
             stats,
             stage_wall_secs: stage_start.elapsed().as_secs_f64(),
+            recomputed_tiles,
         });
     }
     Ok(outputs)
@@ -259,7 +309,7 @@ pub fn train_stagewise(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::settings::{Backend, BasisSelection, ExecutorChoice};
+    use crate::config::settings::{Backend, BasisSelection, CStorage, ExecutorChoice};
     use crate::data::synth;
     use crate::runtime::make_backend;
 
@@ -274,6 +324,8 @@ mod tests {
             basis: BasisSelection::Random,
             backend: Backend::Native,
             executor: ExecutorChoice::Serial,
+            c_storage: CStorage::Materialized,
+            c_memory_budget: 256 << 20,
             max_iters: 60,
             tol: 1e-3,
             seed: 42,

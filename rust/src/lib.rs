@@ -26,7 +26,13 @@
 //!   cargo feature, the PJRT engine loading AOT artifacts (HLO text
 //!   lowered from JAX+Pallas at build time).
 //! * [`coordinator`] — the paper's contribution: Algorithm 1, TRON, losses,
-//!   basis selection (random / distributed K-means), stage-wise growth.
+//!   basis selection (random / distributed K-means), stage-wise growth —
+//!   including the **memory-bounded kernel-operator layer**
+//!   ([`coordinator::cstore`]): each node's C row block lives behind a
+//!   `CBlockStore` (`--c-storage materialized|streaming|auto`) that either
+//!   stores the kernel tiles, recomputes them per dispatch from the
+//!   prepared feature/basis tiles (O(1 tile) of C per node), or mixes the
+//!   two under a byte budget — with bit-identical training output.
 //! * [`baselines`] — formulation (3) (Zhang et al. linearization) and
 //!   P-packSVM (Zhu et al.), the paper's comparators.
 //! * [`linalg`], [`rng`], [`data`], [`config`], [`metrics`] — substrates.

@@ -120,6 +120,12 @@ impl Mat {
         // layout (a column-wise loop would stride by `cols`).
         for i in 0..self.rows {
             let xi = x[i];
+            // The sparsity guard pays for itself here: the linearized
+            // baseline's TRON feeds sq-hinge residuals through this path,
+            // and those are EXACTLY zero for every margin-inactive example
+            // (most of the set near convergence) — each skip saves a full
+            // `cols`-wide axpy for one predictable branch. See the
+            // `matvec_t guard` section of `cargo bench --bench micro`.
             if xi != 0.0 {
                 axpy(xi, self.row(i), y);
             }
@@ -150,10 +156,13 @@ impl Mat {
         for i in 0..self.rows {
             let ai = self.row(i);
             let orow = out.row_mut(i);
+            // No sparsity guard: every caller feeds dense operands (A is an
+            // RBF kernel matrix in the linearized baseline — entries are
+            // exp(−γd²), never exactly zero), so a per-element branch is
+            // pure overhead in the innermost loop. Measured in the
+            // `matvec_t guard` section of `cargo bench --bench micro`.
             for (k, &aik) in ai.iter().enumerate() {
-                if aik != 0.0 {
-                    axpy(aik, b.row(k), orow);
-                }
+                axpy(aik, b.row(k), orow);
             }
         }
         out

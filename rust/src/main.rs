@@ -34,8 +34,8 @@ fn main() {
 
 const TRAIN_FLAGS: &[&str] = &[
     "dataset", "libsvm", "ntest", "ntrain", "m", "nodes", "lambda", "sigma", "loss", "basis",
-    "backend", "exec", "max-iters", "tol", "seed", "kmeans-iters", "artifacts", "config",
-    "stages", "pack", "epochs", "verbose", "cost",
+    "backend", "exec", "c-storage", "c-memory-budget", "max-iters", "tol", "seed",
+    "kmeans-iters", "artifacts", "config", "stages", "pack", "epochs", "verbose", "cost",
 ];
 
 fn run() -> Result<()> {
@@ -76,6 +76,10 @@ Common flags:
   --exec            serial | threads | threads:N   (execution layer: metered
                     serial loop, or real OS worker threads — bit-identical
                     results, threads:N caps the worker count)
+  --c-storage       materialized | streaming | auto   (C-block memory model:
+                    stored kernel rows, per-dispatch recompute, or a
+                    budgeted mix — bit-identical results)
+  --c-memory-budget per-node byte budget for --c-storage auto (e.g. 256m)
   --cost            free | hadoop | mpi   (simulated comm cost model)
   --stages a,b,c    stage-wise m schedule (stagewise command)
   --config FILE     key=value settings file (CLI flags override)
@@ -99,6 +103,8 @@ fn settings_from(args: &Args) -> Result<Settings> {
         ("basis", "basis"),
         ("backend", "backend"),
         ("exec", "executor"),
+        ("c-storage", "c_storage"),
+        ("c-memory-budget", "c_memory_budget"),
         ("max-iters", "max_iters"),
         ("tol", "tol"),
         ("seed", "seed"),
@@ -156,6 +162,12 @@ fn print_run_report(out: &dkm::coordinator::TrainOutput, acc: f64, verbose: bool
         out.stats.final_f,
         out.stats.final_gnorm
     );
+    println!(
+        "c-storage: peak {:.2} MiB of C per node (+ {:.2} MiB W-row cache), {} kernel-tile recomputes",
+        out.peak_c_bytes as f64 / (1 << 20) as f64,
+        out.peak_w_cache_bytes as f64 / (1 << 20) as f64,
+        out.recomputed_tiles
+    );
     if verbose {
         println!("loss curve: {:?}", out.stats.f_history);
     }
@@ -167,7 +179,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let cost = cost_from(args)?;
     let (train_ds, test_ds) = load_data(args, &s)?;
     println!(
-        "dataset {} n={} d={} ntest={} | m={} p={} λ={} σ={} loss={} backend={:?} exec={}",
+        "dataset {} n={} d={} ntest={} | m={} p={} λ={} σ={} loss={} backend={:?} exec={} c-storage={}",
         train_ds.name,
         train_ds.n(),
         train_ds.d(),
@@ -179,6 +191,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         s.loss.name(),
         s.backend,
         s.executor.name(),
+        s.c_storage.name(),
     );
     let backend = make_backend(s.backend, &s.artifacts_dir)?;
     let out = train(&s, &train_ds, Arc::clone(&backend), cost)?;

@@ -130,6 +130,60 @@ pub trait Compute: Send + Sync {
     ) -> Result<StageOut>;
 
     fn hd_p(&self, c: &Prepared, d: &[f32], dcoef: &[f32]) -> Result<Vec<f32>>;
+
+    // ---- streaming (from-features) fused ops: no stored C ----
+    //
+    // Each op recomputes the kernel tile from the prepared feature tile `x`
+    // and basis tile `z` ONCE per dispatch and consumes it in place. Tile
+    // math is exactly `kernel_block`, so results are bit-identical to the
+    // prepared-C variants above — the memory/compute tradeoff behind
+    // `CStorage::Streaming` (see `coordinator::cstore`).
+
+    /// Fused f/grad with the C tile recomputed from (x, z): the tile feeds
+    /// both the matvec and the matvec_t of this dispatch.
+    #[allow(clippy::too_many_arguments)]
+    fn fgrad_from_x(
+        &self,
+        loss: Loss,
+        x: &Prepared,
+        z: &Prepared,
+        dpad: usize,
+        gamma: f32,
+        beta: &[f32],
+        y: &Prepared,
+        mask: &Prepared,
+    ) -> Result<StageOut>;
+
+    /// Fused Hd with the C tile recomputed from (x, z).
+    fn hd_from_x(
+        &self,
+        x: &Prepared,
+        z: &Prepared,
+        dpad: usize,
+        gamma: f32,
+        d: &[f32],
+        dcoef: &[f32],
+    ) -> Result<Vec<f32>>;
+
+    /// C v with the C tile recomputed from (x, z).
+    fn matvec_from_x(
+        &self,
+        x: &Prepared,
+        z: &Prepared,
+        dpad: usize,
+        gamma: f32,
+        v: &[f32],
+    ) -> Result<Vec<f32>>;
+
+    /// Cᵀ r with the C tile recomputed from (x, z).
+    fn matvec_t_from_x(
+        &self,
+        x: &Prepared,
+        z: &Prepared,
+        dpad: usize,
+        gamma: f32,
+        r: &[f32],
+    ) -> Result<Vec<f32>>;
 }
 
 /// PJRT-backed compute (the paper stack: AOT JAX+Pallas artifacts).
@@ -259,6 +313,66 @@ impl Compute for PjrtCompute {
 
     fn hd_p(&self, c: &Prepared, d: &[f32], dcoef: &[f32]) -> Result<Vec<f32>> {
         self.engine.hd_b(c.device()?, d, dcoef)
+    }
+
+    fn fgrad_from_x(
+        &self,
+        loss: Loss,
+        x: &Prepared,
+        z: &Prepared,
+        dpad: usize,
+        gamma: f32,
+        beta: &[f32],
+        y: &Prepared,
+        mask: &Prepared,
+    ) -> Result<StageOut> {
+        self.engine.fgrad_from_x_b(
+            loss.name(),
+            x.device()?,
+            z.device()?,
+            dpad,
+            gamma,
+            beta,
+            y.device()?,
+            mask.device()?,
+        )
+    }
+
+    fn hd_from_x(
+        &self,
+        x: &Prepared,
+        z: &Prepared,
+        dpad: usize,
+        gamma: f32,
+        d: &[f32],
+        dcoef: &[f32],
+    ) -> Result<Vec<f32>> {
+        self.engine
+            .hd_from_x_b(x.device()?, z.device()?, dpad, gamma, d, dcoef)
+    }
+
+    fn matvec_from_x(
+        &self,
+        x: &Prepared,
+        z: &Prepared,
+        dpad: usize,
+        gamma: f32,
+        v: &[f32],
+    ) -> Result<Vec<f32>> {
+        self.engine
+            .matvec_from_x_b(x.device()?, z.device()?, dpad, gamma, v)
+    }
+
+    fn matvec_t_from_x(
+        &self,
+        x: &Prepared,
+        z: &Prepared,
+        dpad: usize,
+        gamma: f32,
+        r: &[f32],
+    ) -> Result<Vec<f32>> {
+        self.engine
+            .matvec_t_from_x_b(x.device()?, z.device()?, dpad, gamma, r)
     }
 }
 
@@ -399,6 +513,67 @@ impl Compute for NativeCompute {
     fn hd_p(&self, c: &Prepared, d: &[f32], dcoef: &[f32]) -> Result<Vec<f32>> {
         self.bump();
         Ok(native::hd_tile(c.host(), d, dcoef))
+    }
+
+    fn fgrad_from_x(
+        &self,
+        loss: Loss,
+        x: &Prepared,
+        z: &Prepared,
+        dpad: usize,
+        gamma: f32,
+        beta: &[f32],
+        y: &Prepared,
+        mask: &Prepared,
+    ) -> Result<StageOut> {
+        self.bump();
+        Ok(native::fgrad_from_x(
+            loss,
+            x.host(),
+            z.host(),
+            dpad,
+            gamma,
+            beta,
+            y.host(),
+            mask.host(),
+        ))
+    }
+
+    fn hd_from_x(
+        &self,
+        x: &Prepared,
+        z: &Prepared,
+        dpad: usize,
+        gamma: f32,
+        d: &[f32],
+        dcoef: &[f32],
+    ) -> Result<Vec<f32>> {
+        self.bump();
+        Ok(native::hd_from_x(x.host(), z.host(), dpad, gamma, d, dcoef))
+    }
+
+    fn matvec_from_x(
+        &self,
+        x: &Prepared,
+        z: &Prepared,
+        dpad: usize,
+        gamma: f32,
+        v: &[f32],
+    ) -> Result<Vec<f32>> {
+        self.bump();
+        Ok(native::matvec_from_x(x.host(), z.host(), dpad, gamma, v))
+    }
+
+    fn matvec_t_from_x(
+        &self,
+        x: &Prepared,
+        z: &Prepared,
+        dpad: usize,
+        gamma: f32,
+        r: &[f32],
+    ) -> Result<Vec<f32>> {
+        self.bump();
+        Ok(native::matvec_t_from_x(x.host(), z.host(), dpad, gamma, r))
     }
 }
 

@@ -357,6 +357,87 @@ impl Engine {
         Self::vec_f32(&out[0], "hd out")
     }
 
+    // ---- streaming (from-features) fused variants: the C tile is
+    // recomputed with the `kernel_block` module once per dispatch, staged
+    // to a transient device buffer, and consumed by the follow-on module.
+    // Same modules, same tile bits as the materialized path — only where
+    // the tile lives differs (no persistent C buffers).
+
+    /// Streaming fused f/grad: tile from (x, z), then the fgrad module.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fgrad_from_x_b(
+        &self,
+        loss: &str,
+        x: &xla::PjRtBuffer,
+        z: &xla::PjRtBuffer,
+        dpad: usize,
+        gamma: f32,
+        beta: &[f32],
+        y: &xla::PjRtBuffer,
+        mask: &xla::PjRtBuffer,
+    ) -> Result<StageOut> {
+        let tile = self.kernel_block_b(x, z, dpad, gamma)?;
+        let cb = self.upload(&tile, &[TB, TM])?;
+        let name = format!("fgrad_{loss}");
+        let bb = self.upload(beta, &[beta.len()])?;
+        let out = self.exec_b(&name, &[&cb, &bb, y, mask])?;
+        Ok(StageOut {
+            loss: Self::scalar_f32(&out[0], "loss")?,
+            vec: Self::vec_f32(&out[1], "grad")?,
+            dcoef: Self::vec_f32(&out[2], "dcoef")?,
+        })
+    }
+
+    /// Streaming fused Hd: tile from (x, z), then the hd_tile module.
+    pub fn hd_from_x_b(
+        &self,
+        x: &xla::PjRtBuffer,
+        z: &xla::PjRtBuffer,
+        dpad: usize,
+        gamma: f32,
+        d: &[f32],
+        dcoef: &[f32],
+    ) -> Result<Vec<f32>> {
+        let tile = self.kernel_block_b(x, z, dpad, gamma)?;
+        let cb = self.upload(&tile, &[TB, TM])?;
+        let db = self.upload(d, &[d.len()])?;
+        let dc = self.upload(dcoef, &[dcoef.len()])?;
+        let out = self.exec_b("hd_tile", &[&cb, &db, &dc])?;
+        Self::vec_f32(&out[0], "hd out")
+    }
+
+    /// Streaming matvec: tile from (x, z), then C v.
+    pub fn matvec_from_x_b(
+        &self,
+        x: &xla::PjRtBuffer,
+        z: &xla::PjRtBuffer,
+        dpad: usize,
+        gamma: f32,
+        v: &[f32],
+    ) -> Result<Vec<f32>> {
+        let tile = self.kernel_block_b(x, z, dpad, gamma)?;
+        let cb = self.upload(&tile, &[TB, TM])?;
+        let vb = self.upload(v, &[v.len()])?;
+        let out = self.exec_b("matvec", &[&cb, &vb])?;
+        Self::vec_f32(&out[0], "matvec out")
+    }
+
+    /// Streaming transposed matvec: tile from (x, z), then Cᵀ r.
+    pub fn matvec_t_from_x_b(
+        &self,
+        x: &xla::PjRtBuffer,
+        z: &xla::PjRtBuffer,
+        dpad: usize,
+        gamma: f32,
+        r: &[f32],
+    ) -> Result<Vec<f32>> {
+        let tile = self.kernel_block_b(x, z, dpad, gamma)?;
+        let cb = self.upload(&tile, &[TB, TM])?;
+        let rb = self.upload(r, &[r.len()])?;
+        let out = self.exec_b("matvec_t", &[&cb, &rb])?;
+        Self::vec_f32(&out[0], "matvec_t out")
+    }
+
     /// Prediction tile: decision values for TB test rows against one basis
     /// tile: kernel_block + matvec fused.
     pub fn predict_block(

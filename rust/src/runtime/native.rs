@@ -131,6 +131,68 @@ pub fn hd_tile(c_tile: &[f32], d: &[f32], dcoef: &[f32]) -> Vec<f32> {
     matvec_t(c_tile, &z)
 }
 
+// ---- streaming (from-features) fused ops: the C tile is recomputed from
+// the feature/basis tiles once per dispatch instead of being stored. The
+// tile math is `kernel_block` verbatim, so results are bit-identical to the
+// materialized path; only where the tile lives differs.
+
+/// Streaming fused f/grad: C tile from (x, z), then `fgrad`. The tile is
+/// computed ONCE and reused for both the matvec and the matvec_t inside
+/// this dispatch.
+#[allow(clippy::too_many_arguments)]
+pub fn fgrad_from_x(
+    loss: Loss,
+    x_tile: &[f32],
+    z_tile: &[f32],
+    dpad: usize,
+    gamma: f32,
+    beta: &[f32],
+    y: &[f32],
+    mask: &[f32],
+) -> StageOut {
+    let c = kernel_block(x_tile, z_tile, dpad, gamma);
+    fgrad(loss, &c, beta, y, mask)
+}
+
+/// Streaming fused Hd: C tile from (x, z), then Cᵀ(D(C d)) — one tile
+/// computation feeding both the matvec and the matvec_t.
+pub fn hd_from_x(
+    x_tile: &[f32],
+    z_tile: &[f32],
+    dpad: usize,
+    gamma: f32,
+    d: &[f32],
+    dcoef: &[f32],
+) -> Vec<f32> {
+    let c = kernel_block(x_tile, z_tile, dpad, gamma);
+    hd_tile(&c, d, dcoef)
+}
+
+/// Streaming matvec: C tile from (x, z), then C v (multi-column-tile f/g/Hd
+/// passes, where the loss stage sits between the matvec and matvec_t).
+pub fn matvec_from_x(
+    x_tile: &[f32],
+    z_tile: &[f32],
+    dpad: usize,
+    gamma: f32,
+    v: &[f32],
+) -> Vec<f32> {
+    let c = kernel_block(x_tile, z_tile, dpad, gamma);
+    matvec(&c, v)
+}
+
+/// Streaming transposed matvec: C tile from (x, z), then Cᵀ r.
+pub fn matvec_t_from_x(
+    x_tile: &[f32],
+    z_tile: &[f32],
+    dpad: usize,
+    gamma: f32,
+    r: &[f32],
+) -> Vec<f32> {
+    let c = kernel_block(x_tile, z_tile, dpad, gamma);
+    matvec_t(&c, r)
+}
+
 /// Squared-distance tile (K-means multi-tile path).
 pub fn dist2_block(x_tile: &[f32], z_tile: &[f32], d: usize) -> Vec<f32> {
     assert_eq!(x_tile.len(), TB * d);
@@ -307,6 +369,49 @@ mod tests {
         assert!((f.loss - s.loss).abs() < 1e-3);
         for (a, b) in f.vec.iter().zip(&grad) {
             assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn from_x_ops_match_materialized_tile_bitwise() {
+        let mut rng = Rng::new(11);
+        let d = 32;
+        let x = rand_vec(&mut rng, TB * d, 1.0);
+        let z = rand_vec(&mut rng, TM * d, 1.0);
+        let beta = rand_vec(&mut rng, TM, 0.2);
+        let r = rand_vec(&mut rng, TB, 0.5);
+        let y: Vec<f32> = (0..TB).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let mask = vec![1.0f32; TB];
+        let dcoef = vec![1.0f32; TB];
+        let c = kernel_block(&x, &z, d, 0.4);
+
+        let want = fgrad(Loss::SqHinge, &c, &beta, &y, &mask);
+        let got = fgrad_from_x(Loss::SqHinge, &x, &z, d, 0.4, &beta, &y, &mask);
+        assert_eq!(want.loss.to_bits(), got.loss.to_bits());
+        for (a, b) in want.vec.iter().zip(&got.vec) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in want.dcoef.iter().zip(&got.dcoef) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
+        for (a, b) in hd_tile(&c, &beta, &dcoef)
+            .iter()
+            .zip(&hd_from_x(&x, &z, d, 0.4, &beta, &dcoef))
+        {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in matvec(&c, &beta)
+            .iter()
+            .zip(&matvec_from_x(&x, &z, d, 0.4, &beta))
+        {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in matvec_t(&c, &r)
+            .iter()
+            .zip(&matvec_t_from_x(&x, &z, d, 0.4, &r))
+        {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 

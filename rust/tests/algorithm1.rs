@@ -5,7 +5,7 @@ use std::sync::Arc;
 
 use dkm::baselines::{train_linearized, train_ppacksvm, PPackOptions};
 use dkm::cluster::CostModel;
-use dkm::config::settings::{Backend, BasisSelection, ExecutorChoice, Loss, Settings};
+use dkm::config::settings::{Backend, BasisSelection, CStorage, ExecutorChoice, Loss, Settings};
 use dkm::coordinator::dist::DistProblem;
 use dkm::coordinator::trainer::{build_cluster, train_stagewise};
 use dkm::coordinator::tron::Objective;
@@ -26,6 +26,8 @@ fn settings(m: usize, nodes: usize) -> Settings {
         basis: BasisSelection::Random,
         backend: Backend::Native,
         executor: ExecutorChoice::Serial,
+        c_storage: CStorage::Materialized,
+        c_memory_budget: 256 << 20,
         max_iters: 60,
         tol: 1e-3,
         seed: 42,

@@ -1,0 +1,253 @@
+//! C-storage equivalence: the tentpole contract that training with
+//! `--c-storage streaming` (no stored C; kernel tiles recomputed per
+//! dispatch) and `--c-storage auto` (budgeted mix) is BIT-IDENTICAL to the
+//! materialized reference — same β bits, same TRON trajectory, same
+//! evaluation counts — across executors, basis modes, and the stage-wise
+//! path, while streaming holds only O(1 tile) of C per node.
+//!
+//! Test names end in `serial_exec` / `threads_exec`; CI runs each group
+//! explicitly so storage×executor equivalence is enforced on every push.
+
+use std::sync::Arc;
+
+use dkm::cluster::CostModel;
+use dkm::config::settings::{
+    Backend, BasisSelection, CStorage, ExecutorChoice, Loss, Settings,
+};
+use dkm::coordinator::trainer::train_stagewise;
+use dkm::coordinator::{train, CBlockStore, TrainOutput, WorkerNode};
+use dkm::data::{synth, Dataset};
+use dkm::runtime::tiles::{TB, TM};
+use dkm::runtime::make_backend;
+
+fn settings(
+    m: usize,
+    nodes: usize,
+    storage: CStorage,
+    executor: ExecutorChoice,
+) -> Settings {
+    Settings {
+        dataset: "covtype_like".into(),
+        m,
+        nodes,
+        lambda: 0.01,
+        sigma: 2.0,
+        loss: Loss::SqHinge,
+        basis: BasisSelection::Random,
+        backend: Backend::Native,
+        executor,
+        c_storage: storage,
+        c_memory_budget: 256 << 20,
+        max_iters: 40,
+        tol: 1e-3,
+        seed: 42,
+        kmeans_iters: 2,
+        kmeans_max_m: 512,
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+fn data(n: usize, ntest: usize, seed: u64) -> (Dataset, Dataset) {
+    let mut spec = synth::spec("covtype_like");
+    spec.n_train = n;
+    spec.n_test = ntest;
+    synth::generate(&spec, seed)
+}
+
+fn assert_bit_identical(a: &TrainOutput, b: &TrainOutput, what: &str) {
+    assert_eq!(a.model.beta.len(), b.model.beta.len(), "{what}");
+    for (i, (x, y)) in a.model.beta.iter().zip(&b.model.beta).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: beta[{i}] {x} vs {y}");
+    }
+    assert_eq!(a.fg_evals, b.fg_evals, "{what}");
+    assert_eq!(a.hd_evals, b.hd_evals, "{what}");
+    assert_eq!(a.stats.iterations, b.stats.iterations, "{what}");
+    assert_eq!(
+        a.stats.final_f.to_bits(),
+        b.stats.final_f.to_bits(),
+        "{what}"
+    );
+}
+
+/// The acceptance criterion: streaming and auto train bit-identically to
+/// materialized, for single-tile AND multi-tile m, on the serial executor —
+/// and streaming's peak per-node C-block footprint is exactly one tile.
+#[test]
+fn storage_modes_bit_identical_serial_exec() {
+    let (tr, _) = data(1600, 200, 7);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    for m in [96usize, 300] {
+        let reference = train(
+            &settings(m, 4, CStorage::Materialized, ExecutorChoice::Serial),
+            &tr,
+            Arc::clone(&backend),
+            CostModel::free(),
+        )
+        .unwrap();
+        assert_eq!(reference.recomputed_tiles, 0);
+        assert_eq!(reference.sim.recompute_flops(), 0);
+
+        let streaming = train(
+            &settings(m, 4, CStorage::Streaming, ExecutorChoice::Serial),
+            &tr,
+            Arc::clone(&backend),
+            CostModel::free(),
+        )
+        .unwrap();
+        assert_bit_identical(&reference, &streaming, &format!("streaming m={m}"));
+        // O(1 tile) of C held per node, recompute charged to the ledger.
+        assert_eq!(streaming.peak_c_bytes, TB * TM * 4, "m={m}");
+        assert!(reference.peak_c_bytes > streaming.peak_c_bytes, "m={m}");
+        // Random basis: streaming caches its W-share rows (reported apart
+        // from the C block); materialized reads them from C directly.
+        assert!(streaming.peak_w_cache_bytes > 0, "m={m}");
+        assert_eq!(reference.peak_w_cache_bytes, 0, "m={m}");
+        assert!(streaming.recomputed_tiles > 0, "m={m}");
+        assert!(streaming.sim.recompute_flops() > 0, "m={m}");
+
+        // Auto with a budget for exactly one materialized row of tiles per
+        // node: a genuine mix (400 rows/node = 2 row tiles).
+        let ct = m.div_ceil(TM).max(1);
+        let mut s = settings(m, 4, CStorage::Auto, ExecutorChoice::Serial);
+        s.c_memory_budget = ct * TB * TM * 4 * 2;
+        let auto = train(&s, &tr, Arc::clone(&backend), CostModel::free()).unwrap();
+        assert_bit_identical(&reference, &auto, &format!("auto m={m}"));
+        assert!(auto.peak_c_bytes < reference.peak_c_bytes, "m={m}");
+        assert!(auto.peak_c_bytes > TB * TM * 4, "m={m}");
+        assert!(auto.recomputed_tiles > 0, "m={m}");
+        assert!(
+            auto.recomputed_tiles < streaming.recomputed_tiles,
+            "m={m}: auto {} vs streaming {}",
+            auto.recomputed_tiles,
+            streaming.recomputed_tiles
+        );
+    }
+}
+
+/// K-means basis (explicit W shares — no W-row cache involved) must also be
+/// storage-independent.
+#[test]
+fn kmeans_basis_storage_modes_bit_identical_serial_exec() {
+    let (tr, _) = data(900, 150, 13);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let mut runs = Vec::new();
+    for storage in [CStorage::Materialized, CStorage::Streaming] {
+        let mut s = settings(24, 3, storage, ExecutorChoice::Serial);
+        s.basis = BasisSelection::KMeans;
+        runs.push(train(&s, &tr, Arc::clone(&backend), CostModel::free()).unwrap());
+    }
+    assert_bit_identical(&runs[0], &runs[1], "kmeans streaming");
+    assert_eq!(runs[0].model.basis, runs[1].model.basis);
+    // Explicit W shares live outside the store: no W-row cache either way.
+    assert_eq!(runs[1].peak_w_cache_bytes, 0);
+}
+
+/// Stage-wise growth (dirty-column recompute, W-row cache extension,
+/// warm-started β) is bit-identical between materialized and streaming.
+/// The schedule crosses the TM=256 column-tile boundary twice so the
+/// partial-tile incremental recompute/re-prepare path runs end-to-end.
+#[test]
+fn stagewise_storage_modes_bit_identical_serial_exec() {
+    let (tr, _) = data(1300, 150, 19);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let stages = [200usize, 400, 600];
+    let mut s = settings(32, 4, CStorage::Materialized, ExecutorChoice::Serial);
+    s.max_iters = 30;
+    let mat = train_stagewise(&s, &tr, Arc::clone(&backend), CostModel::free(), &stages)
+        .unwrap();
+    let mut s = settings(32, 4, CStorage::Streaming, ExecutorChoice::Serial);
+    s.max_iters = 30;
+    let st = train_stagewise(&s, &tr, Arc::clone(&backend), CostModel::free(), &stages)
+        .unwrap();
+    assert_eq!(mat.len(), st.len());
+    let mut prev_recomputed = 0u64;
+    for (stage, (a, b)) in mat.iter().zip(&st).enumerate() {
+        assert_eq!(a.m, b.m, "stage {stage}");
+        assert_eq!(a.stats.iterations, b.stats.iterations, "stage {stage}");
+        for (i, (x, y)) in a.model.beta.iter().zip(&b.model.beta).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "stage {stage} beta[{i}]");
+        }
+        assert_eq!(a.recomputed_tiles, 0, "materialized never recomputes");
+        assert!(
+            b.recomputed_tiles > prev_recomputed,
+            "stage {stage}: streaming recompute must grow"
+        );
+        prev_recomputed = b.recomputed_tiles;
+    }
+}
+
+/// Storage × executor: streaming under real worker threads is bit-identical
+/// to materialized under the serial loop — the full cross-product contract.
+#[test]
+fn storage_modes_bit_identical_threads_exec() {
+    let (tr, _) = data(1400, 150, 11);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    for m in [96usize, 300] {
+        let mut reference = None;
+        for storage in [CStorage::Materialized, CStorage::Streaming, CStorage::Auto] {
+            for exec in [
+                ExecutorChoice::Serial,
+                ExecutorChoice::Threads { cap: 4 },
+            ] {
+                let mut s = settings(m, 5, storage, exec);
+                s.max_iters = 25;
+                if storage == CStorage::Auto {
+                    let ct = m.div_ceil(TM).max(1);
+                    s.c_memory_budget = ct * TB * TM * 4 * 2;
+                }
+                let out = train(&s, &tr, Arc::clone(&backend), CostModel::free()).unwrap();
+                match &reference {
+                    None => reference = Some(out),
+                    Some(want) => assert_bit_identical(
+                        want,
+                        &out,
+                        &format!("m={m} {}/{}", s.c_storage.name(), s.executor.name()),
+                    ),
+                }
+            }
+        }
+    }
+}
+
+/// Satellite regression: shrinking m used to re-zero C but recompute only
+/// the caller's `dirty_cols`, leaving stale zero columns. The store must
+/// force a full recompute on any shrink.
+#[test]
+fn shrink_path_forces_full_recompute_serial_exec() {
+    let (tr, _) = data(400, 50, 23);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let dpad = backend.pad_d(tr.d()).unwrap();
+    let basis_big = tr.x.gather_rows(&(0..300).collect::<Vec<_>>());
+    let basis_small = tr.x.gather_rows(&(0..100).collect::<Vec<_>>());
+    let zt_big = dkm::coordinator::basis::tiles_of(&basis_big, dpad);
+    let zt_small = dkm::coordinator::basis::tiles_of(&basis_small, dpad);
+
+    let mut node = WorkerNode::new(tr.x.clone(), tr.y.clone(), dpad);
+    node.compute_c_block(backend.as_ref(), &zt_big, 300, 0.125, 0..2)
+        .unwrap();
+    assert_eq!(node.cstore.col_tiles(), 2);
+    // Shrink with a deliberately stale (empty) dirty range.
+    node.compute_c_block(backend.as_ref(), &zt_small, 100, 0.125, 1..1)
+        .unwrap();
+    assert_eq!(node.cstore.col_tiles(), 1);
+
+    let mut fresh = WorkerNode::new(tr.x.clone(), tr.y.clone(), dpad);
+    fresh
+        .compute_c_block(backend.as_ref(), &zt_small, 100, 0.125, 0..1)
+        .unwrap();
+
+    let v: Vec<f32> = (0..TM).map(|i| (i as f32 * 0.01).sin()).collect();
+    for i in 0..node.row_tiles() {
+        let a = node
+            .cstore
+            .matvec_tile(backend.as_ref(), i, 0, &v)
+            .unwrap();
+        let b = fresh
+            .cstore
+            .matvec_tile(backend.as_ref(), i, 0, &v)
+            .unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "row tile {i}");
+        }
+    }
+}

@@ -6,7 +6,8 @@
 use std::sync::Arc;
 
 use dkm::cluster::{Cluster, CostModel, Executor};
-use dkm::config::settings::{Backend, BasisSelection, ExecutorChoice, Loss, Settings};
+use dkm::config::settings::{Backend, BasisSelection, CStorage, ExecutorChoice, Loss, Settings};
+use dkm::coordinator::trainer::train_stagewise;
 use dkm::coordinator::train;
 use dkm::data::{synth, Dataset};
 use dkm::metrics::Step;
@@ -24,6 +25,8 @@ fn settings(m: usize, nodes: usize, executor: ExecutorChoice) -> Settings {
         basis: BasisSelection::Random,
         backend: Backend::Native,
         executor,
+        c_storage: CStorage::Materialized,
+        c_memory_budget: 256 << 20,
         max_iters: 60,
         tol: 1e-3,
         seed: 42,
@@ -123,6 +126,38 @@ fn kmeans_basis_training_is_bit_identical_across_executors() {
     }
     // The basis itself (K-means centers) must match exactly, too.
     assert_eq!(runs[0].model.basis, runs[1].model.basis);
+}
+
+/// The stage-wise path (basis growth, dirty-column recompute, warm-started
+/// β) rides the executor too; its per-stage output must be bit-identical
+/// between the serial loop and real worker threads.
+#[test]
+fn stagewise_training_is_bit_identical_across_executors() {
+    let (tr, _) = data(1300, 150, 17);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let stages = [32usize, 96, 192];
+    let mut s = settings(32, 4, ExecutorChoice::Serial);
+    s.max_iters = 30;
+    let serial = train_stagewise(&s, &tr, Arc::clone(&backend), CostModel::free(), &stages)
+        .unwrap();
+    let mut st = settings(32, 4, ExecutorChoice::Threads { cap: 4 });
+    st.max_iters = 30;
+    let threaded = train_stagewise(&st, &tr, Arc::clone(&backend), CostModel::free(), &stages)
+        .unwrap();
+    assert_eq!(serial.len(), threaded.len());
+    for (stage, (a, b)) in serial.iter().zip(&threaded).enumerate() {
+        assert_eq!(a.m, b.m, "stage {stage}");
+        assert_eq!(a.stats.iterations, b.stats.iterations, "stage {stage}");
+        assert_eq!(
+            a.stats.final_f.to_bits(),
+            b.stats.final_f.to_bits(),
+            "stage {stage}"
+        );
+        assert_eq!(a.model.beta.len(), b.model.beta.len(), "stage {stage}");
+        for (i, (x, y)) in a.model.beta.iter().zip(&b.model.beta).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "stage {stage} beta[{i}]");
+        }
+    }
 }
 
 /// AllReduce determinism under both executors, for vectors and scalars.

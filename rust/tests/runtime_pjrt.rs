@@ -174,6 +174,56 @@ fn kmeans_and_predict_pjrt_match_native() {
 }
 
 #[test]
+fn streaming_from_x_ops_pjrt_match_native() {
+    require_artifacts!();
+    let pjrt = PjrtCompute::new("artifacts").unwrap();
+    let native = NativeCompute::new();
+    let mut rng = Rng::new(12);
+    let d = 64usize;
+    let x = rand_vec(&mut rng, TB * d, 1.0);
+    let z = rand_vec(&mut rng, TM * d, 1.0);
+    let beta = rand_vec(&mut rng, TM, 0.2);
+    let r = rand_vec(&mut rng, TB, 0.5);
+    let y: Vec<f32> = (0..TB).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    let mask = vec![1.0f32; TB];
+    let dcoef = vec![1.0f32; TB];
+    let xp = pjrt.prepare(&x, &[TB, d]).unwrap();
+    let zp = pjrt.prepare(&z, &[TM, d]).unwrap();
+    let yp = pjrt.prepare(&y, &[TB]).unwrap();
+    let mp = pjrt.prepare(&mask, &[TB]).unwrap();
+    let xn = native.prepare(&x, &[TB, d]).unwrap();
+    let zn = native.prepare(&z, &[TM, d]).unwrap();
+    let yn = native.prepare(&y, &[TB]).unwrap();
+    let mn = native.prepare(&mask, &[TB]).unwrap();
+    let a = pjrt
+        .fgrad_from_x(Loss::SqHinge, &xp, &zp, d, 0.4, &beta, &yp, &mp)
+        .unwrap();
+    let b = native
+        .fgrad_from_x(Loss::SqHinge, &xn, &zn, d, 0.4, &beta, &yn, &mn)
+        .unwrap();
+    assert!((a.loss - b.loss).abs() < 1e-3 * (1.0 + b.loss.abs()));
+    assert_close(&a.vec, &b.vec, 1e-3, "fgrad_from_x");
+    assert_close(
+        &pjrt.hd_from_x(&xp, &zp, d, 0.4, &beta, &dcoef).unwrap(),
+        &native.hd_from_x(&xn, &zn, d, 0.4, &beta, &dcoef).unwrap(),
+        1e-3,
+        "hd_from_x",
+    );
+    assert_close(
+        &pjrt.matvec_from_x(&xp, &zp, d, 0.4, &beta).unwrap(),
+        &native.matvec_from_x(&xn, &zn, d, 0.4, &beta).unwrap(),
+        1e-3,
+        "matvec_from_x",
+    );
+    assert_close(
+        &pjrt.matvec_t_from_x(&xp, &zp, d, 0.4, &r).unwrap(),
+        &native.matvec_t_from_x(&xn, &zn, d, 0.4, &r).unwrap(),
+        1e-3,
+        "matvec_t_from_x",
+    );
+}
+
+#[test]
 fn end_to_end_training_pjrt_equals_native() {
     require_artifacts!();
     let mut spec = synth::spec("covtype_like");
@@ -190,6 +240,8 @@ fn end_to_end_training_pjrt_equals_native() {
         basis: BasisSelection::Random,
         backend: Backend::Pjrt,
         executor: ExecutorChoice::Serial,
+        c_storage: dkm::config::settings::CStorage::Materialized,
+        c_memory_budget: 256 << 20,
         max_iters: 40,
         tol: 1e-3,
         seed: 42,
