@@ -3,8 +3,9 @@
 //!
 //! Paper: on the crude Hadoop AllReduce, Covtype's *Total time* speed-up
 //! flattens (the 5N·C latency term is independent of p and dominates when
-//! local compute is small), while *Other time* (everything but TRON)
-//! scales well; MNIST8m's heavy kernel compute makes even Total time scale
+//! local compute is small), while *Other time* (the non-TRON Algorithm-1
+//! steps — test-set prediction is NOT one and is excluded) scales well;
+//! MNIST8m's heavy kernel compute makes even Total time scale
 //! near-linearly. p is swept on the simulated-time ledger: per-node
 //! compute is measured, communication is priced C + D·B per tree level.
 //! Covtype used 25 nodes as reference in the paper; MNIST8m used 100.

@@ -10,10 +10,18 @@
 //!   and the reference semantics for the simulated `C + D·B` ledger.
 //! * [`ThreadedExecutor`] — real OS worker threads (scoped, so node state
 //!   is borrowed, not moved): one thread per logical node up to a
-//!   configurable cap. This is what makes the row-block parallelism of the
-//!   paper *actually* parallel on a multi-core host.
+//!   configurable cap, spawned fresh for every phase. This is what makes
+//!   the row-block parallelism of the paper *actually* parallel on a
+//!   multi-core host.
+//! * [`PooledExecutor`] — the same worker model behind a **persistent
+//!   pool**: threads are spawned once (when the executor is built, i.e.
+//!   once per `Cluster` lifetime) and parked between phases; each phase is
+//!   dispatched to them as a borrowed closure through a hand-rolled scoped
+//!   lifetime erasure (no external deps). This kills the per-phase
+//!   spawn+join cost, which matters once streaming C storage turns every
+//!   TRON evaluation into many small dispatches.
 //!
-//! Both executors preserve the contract the rest of the system relies on:
+//! All executors preserve the contract the rest of the system relies on:
 //!
 //! 1. **Results are collected in node order** — `run` returns `out[j]` from
 //!    node j regardless of which thread computed it or when it finished.
@@ -31,8 +39,12 @@
 //! deterministic). The simulated *compute* ledger is MEASURED, so it is
 //! most faithful on the serial executor: under the threaded executor each
 //! node's wall time can include cross-worker contention (time-slicing when
-//! workers exceed cores, shared memory bandwidth). Use `serial` for
-//! Fig-2/Table-4-grade ledger experiments, `threads` for real wall-clock.
+//! workers exceed cores, shared memory bandwidth); the pooled executor has
+//! the same caveat. Use `serial` for Fig-2/Table-4-grade ledger
+//! experiments, `pool` (or `threads`) for real wall-clock.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
 
 use super::tree::Tree;
 
@@ -63,11 +75,11 @@ impl SerialExecutor {
 /// Threads are spawned per phase (scoped, so node state is borrowed with
 /// no `'static` gymnastics) rather than parked in a persistent pool. That
 /// costs one spawn+join per worker per phase — tens of microseconds —
-/// which is noise against real per-node phase work (kernel tiles, TRON
-/// partials are ms-scale per node) but can mute the speedup on toy-scale
-/// runs. A persistent pool (no external deps allowed here, so it would
-/// need hand-rolled unsafe lifetime erasure) is the designated next
-/// optimization if profiling ever shows spawn overhead on a real workload.
+/// which is noise against ms-scale per-node phase work but adds up once
+/// streaming C storage issues many small dispatches per phase. Use
+/// [`PooledExecutor`] (`--exec pool`) to amortize the spawn cost; this
+/// spawn-per-phase variant stays as the zero-state baseline the
+/// `exec_speedup` bench compares against.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ThreadedExecutor {
     /// Maximum number of worker threads (>= 1).
@@ -132,11 +144,307 @@ impl ThreadedExecutor {
     }
 }
 
+/// A phase handed to the pool: the borrowed task, lifetime-erased to a
+/// RAW fat pointer (a raw pointer may dangle harmlessly, so a worker that
+/// copies a job it does not participate in owes no validity to it), plus
+/// the number of participating workers. The erasure is sound because only
+/// participants (index < `workers`) ever dereference `task`, and
+/// [`PooledExecutor::run_phase`] blocks until every participant has
+/// finished before the pointee goes out of scope (the job is cleared,
+/// under the same lock, the moment the phase completes).
+#[derive(Clone, Copy)]
+struct Job {
+    task: *const (dyn Fn(usize) + Sync),
+    workers: usize,
+}
+
+// SAFETY: the pointer is only dereferenced by phase participants while the
+// dispatching thread keeps the pointee alive; `run`'s `F: Sync` bound is
+// what makes sharing the closure itself across workers sound.
+unsafe impl Send for Job {}
+
+/// Pool state guarded by one mutex: the current phase (epoch-stamped so a
+/// parked worker runs each phase exactly once), the completion countdown,
+/// and the first panic payload captured from a worker.
+struct PoolState {
+    epoch: u64,
+    job: Option<Job>,
+    remaining: usize,
+    panic: Option<Box<dyn std::any::Any + Send>>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers park here between phases.
+    work: Condvar,
+    /// The dispatching thread parks here until `remaining` hits zero.
+    done: Condvar,
+}
+
+impl PoolShared {
+    fn worker_loop(&self, index: usize) {
+        let mut seen = 0u64;
+        loop {
+            let job = {
+                let mut st = self.state.lock().unwrap();
+                loop {
+                    if st.shutdown {
+                        return;
+                    }
+                    if st.epoch != seen {
+                        seen = st.epoch;
+                        // Break out only with a phase this worker actually
+                        // participates in. Anything else is benign: the
+                        // phase may already be over (completion gates on
+                        // its participants only, so an idle worker can
+                        // wake after `run_phase` cleared the job — a
+                        // worker that late is never a participant, since
+                        // participants hold the phase open), or this
+                        // worker may simply not be among the phase's
+                        // chunks. Either way, keep waiting without
+                        // blocking the tiny phase on idle threads.
+                        match st.job {
+                            Some(job) if index < job.workers => break job,
+                            _ => {}
+                        }
+                    }
+                    st = self.work.wait(st).unwrap();
+                }
+            };
+            // Contain a panicking task so the pool survives it; the
+            // payload is re-thrown on the dispatching thread.
+            let result = {
+                // SAFETY: this worker is a participant of the phase `job`
+                // belongs to (checked under the lock above), so run_phase
+                // is still blocked on the `remaining` decrement below —
+                // the borrowed closure behind the pointer is alive. The
+                // reference is scoped to this block: it is gone before the
+                // decrement that lets run_phase return.
+                let task = unsafe { &*job.task };
+                catch_unwind(AssertUnwindSafe(|| task(index)))
+            };
+            let mut st = self.state.lock().unwrap();
+            if let Err(payload) = result {
+                if st.panic.is_none() {
+                    st.panic = Some(payload);
+                }
+            }
+            st.remaining -= 1;
+            if st.remaining == 0 {
+                self.done.notify_all();
+            }
+        }
+    }
+}
+
+/// Owns the worker handles; dropped only by the last executor clone (the
+/// workers themselves never hold one), so its `Drop` can join them.
+struct PoolHandle {
+    shared: Arc<PoolShared>,
+    /// Serializes phases from cloned executor handles sharing this pool.
+    dispatch: Mutex<()>,
+    threads: usize,
+    /// Only touched here (set once) and in `Drop` (`&mut self`) — no lock.
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for PoolHandle {
+    fn drop(&mut self) {
+        {
+            // Tolerate a poisoned state mutex: shutdown must still reach
+            // the workers (and a second panic during unwind would abort).
+            let mut st = self
+                .shared
+                .state
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in std::mem::take(&mut self.handles) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Runs nodes on a **persistent** worker pool: `threads` OS threads are
+/// spawned once when the executor is built and parked on a condvar between
+/// phases. Dispatching a phase costs one lock + wakeup instead of a
+/// spawn+join per worker, so the executor stays cheap when a phase is
+/// small — the many-small-dispatch shape streaming C storage produces.
+///
+/// Scheduling is otherwise identical to [`ThreadedExecutor`] (same
+/// contiguous chunks, same in-worker metering, same node-order result
+/// collection), so training output is bit-identical across all executors.
+/// Worker panics are caught in the worker (the pool survives), and the
+/// first payload in completion order is re-thrown on the dispatching
+/// thread once the phase has fully drained.
+#[derive(Clone)]
+pub struct PooledExecutor {
+    pool: Arc<PoolHandle>,
+}
+
+impl std::fmt::Debug for PooledExecutor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PooledExecutor")
+            .field("threads", &self.pool.threads)
+            .finish()
+    }
+}
+
+impl PooledExecutor {
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                job: None,
+                remaining: 0,
+                panic: None,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        // A 1-thread pool never dispatches (run() serves single-worker
+        // phases on the calling thread, like the other executors), so
+        // don't park an OS thread that no phase will ever reach.
+        let handles = if threads >= 2 {
+            (0..threads)
+                .map(|i| {
+                    let shared = Arc::clone(&shared);
+                    std::thread::Builder::new()
+                        .name(format!("dkm-pool-{i}"))
+                        .spawn(move || shared.worker_loop(i))
+                        .expect("spawn pool worker")
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        PooledExecutor {
+            pool: Arc::new(PoolHandle {
+                shared,
+                dispatch: Mutex::new(()),
+                threads,
+                handles,
+            }),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.threads
+    }
+
+    /// Dispatch one phase to the parked workers and block until every
+    /// PARTICIPATING worker (index < `workers`) has finished it. The
+    /// borrowed `task` is lifetime-erased for the trip through the pool;
+    /// blocking here — and clearing the job under the lock before
+    /// returning — is what makes that sound: no worker can reach the
+    /// erased borrow after this returns.
+    fn run_phase(&self, workers: usize, task: &(dyn Fn(usize) + Sync)) {
+        // A prior phase that re-threw a worker panic unwound while holding
+        // this lock, poisoning it — but only after its phase fully drained
+        // (remaining == 0, job cleared), so the state is consistent and
+        // the poison flag can be dismissed.
+        let _phase = self
+            .pool
+            .dispatch
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        let shared = &self.pool.shared;
+        // SAFETY: only the lifetime is erased (the fat-pointer layout is
+        // unchanged); participants dereference the pointer solely while
+        // this call keeps the phase open, and the job is cleared under the
+        // lock before this function returns.
+        let task: *const (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(task)
+        };
+        let mut st = shared.state.lock().unwrap();
+        debug_assert_eq!(st.remaining, 0, "phase dispatched while one is in flight");
+        st.job = Some(Job { task, workers });
+        // Completion is gated on the participating workers only; idle pool
+        // threads beyond `workers` observe the epoch at their leisure.
+        st.remaining = workers;
+        st.epoch += 1;
+        shared.work.notify_all();
+        while st.remaining > 0 {
+            st = shared.done.wait(st).unwrap();
+        }
+        st.job = None;
+        let panic = st.panic.take();
+        drop(st);
+        if let Some(payload) = panic {
+            resume_unwind(payload);
+        }
+    }
+
+    pub fn run<N, T, F>(&self, nodes: &mut [N], f: &F) -> (Vec<T>, f64)
+    where
+        N: Send,
+        T: Send,
+        F: Fn(usize, &mut N) -> T + Sync,
+    {
+        let p = nodes.len();
+        let workers = self.pool.threads.min(p).max(1);
+        if workers <= 1 {
+            return SerialExecutor.run(nodes, f);
+        }
+        let mut slots: Vec<Option<(T, f64)>> = Vec::with_capacity(p);
+        slots.resize_with(p, || None);
+        let chunk = p.div_ceil(workers);
+        {
+            // Same contiguous chunking as ThreadedExecutor; each worker
+            // claims its own chunk exactly once through the Mutex (the
+            // per-phase cost of handing `&mut` chunks through a shared
+            // closure — one uncontended lock per worker per phase).
+            let chunks: Vec<Mutex<Option<(usize, &mut [N], &mut [Option<(T, f64)>])>>> = nodes
+                .chunks_mut(chunk)
+                .zip(slots.chunks_mut(chunk))
+                .enumerate()
+                .map(|(w, (nc, sc))| Mutex::new(Some((w * chunk, nc, sc))))
+                .collect();
+            let task = |w: usize| {
+                let (first, node_chunk, slot_chunk) = chunks[w]
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .expect("chunk claimed exactly once per phase");
+                for (i, (node, slot)) in
+                    node_chunk.iter_mut().zip(slot_chunk.iter_mut()).enumerate()
+                {
+                    // Per-node wall time is measured inside the worker
+                    // thread; the coordinator takes the max afterwards.
+                    let start = std::time::Instant::now();
+                    let out = f(first + i, node);
+                    *slot = Some((out, start.elapsed().as_secs_f64()));
+                }
+            };
+            self.run_phase(chunks.len(), &task);
+        }
+        let mut max_secs = 0.0f64;
+        let out = slots
+            .into_iter()
+            .map(|s| {
+                let (v, secs) = s.expect("pool worker filled every slot");
+                max_secs = max_secs.max(secs);
+                v
+            })
+            .collect();
+        (out, max_secs)
+    }
+}
+
 /// The configured execution strategy for a [`super::Cluster`].
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+///
+/// `Clone` on the pooled variant shares the underlying pool (the workers
+/// are joined when the last clone drops).
+#[derive(Clone, Debug)]
 pub enum Executor {
     Serial(SerialExecutor),
     Threaded(ThreadedExecutor),
+    Pooled(PooledExecutor),
 }
 
 impl Default for Executor {
@@ -154,11 +462,19 @@ impl Executor {
         Executor::Threaded(ThreadedExecutor::new(threads))
     }
 
-    /// Human-readable name for reports ("serial" / "threads:N").
+    /// Spawns the persistent pool immediately: workers are parked once per
+    /// executor (in practice once per `Cluster` lifetime) and reused by
+    /// every subsequent phase.
+    pub fn pooled(threads: usize) -> Executor {
+        Executor::Pooled(PooledExecutor::new(threads))
+    }
+
+    /// Human-readable name for reports ("serial" / "threads:N" / "pool:N").
     pub fn name(&self) -> String {
         match self {
             Executor::Serial(_) => "serial".to_string(),
             Executor::Threaded(t) => format!("threads:{}", t.threads),
+            Executor::Pooled(p) => format!("pool:{}", p.threads()),
         }
     }
 
@@ -173,6 +489,7 @@ impl Executor {
         match self {
             Executor::Serial(e) => e.run(nodes, f),
             Executor::Threaded(e) => e.run(nodes, f),
+            Executor::Pooled(e) => e.run(nodes, f),
         }
     }
 
@@ -303,5 +620,108 @@ mod tests {
         assert_eq!(Executor::serial().name(), "serial");
         assert_eq!(Executor::threaded(6).name(), "threads:6");
         assert_eq!(Executor::threaded(0).name(), "threads:1");
+        assert_eq!(Executor::pooled(6).name(), "pool:6");
+        assert_eq!(Executor::pooled(0).name(), "pool:1");
+    }
+
+    #[test]
+    fn pool_matches_serial_and_threaded_results_in_node_order() {
+        let f = |j: usize, n: &mut u64| {
+            *n += 1;
+            (j * 10) as u64 + *n
+        };
+        let mut a = vec![5u64; 13];
+        let mut b = vec![5u64; 13];
+        let (ra, _) = SerialExecutor.run(&mut a, &f);
+        let (rb, _) = PooledExecutor::new(4).run(&mut b, &f);
+        assert_eq!(ra, rb);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pool_mutates_every_node_exactly_once_any_cap() {
+        for threads in [1usize, 2, 3, 7, 64] {
+            let pool = PooledExecutor::new(threads);
+            let mut nodes: Vec<u32> = vec![0; 7];
+            let (out, _) = pool.run(&mut nodes, &|j, n| {
+                *n += 1;
+                j
+            });
+            assert_eq!(out, (0..7).collect::<Vec<_>>(), "threads={threads}");
+            assert!(nodes.iter().all(|&n| n == 1), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn pool_reuses_the_same_parked_workers_across_phases() {
+        use std::collections::HashSet;
+        let pool = PooledExecutor::new(4);
+        let mut per_phase: Vec<HashSet<std::thread::ThreadId>> = Vec::new();
+        for _ in 0..50 {
+            let ids: Mutex<HashSet<std::thread::ThreadId>> = Mutex::new(HashSet::new());
+            let mut nodes = vec![(); 8];
+            pool.run(&mut nodes, &|_, _| {
+                ids.lock().unwrap().insert(std::thread::current().id());
+            });
+            per_phase.push(ids.into_inner().unwrap());
+        }
+        // Persistent pool: every phase ran on a subset of ONE fixed set of
+        // worker threads (spawn-per-phase would mint fresh ids each time).
+        let all: HashSet<_> = per_phase.iter().flatten().copied().collect();
+        assert!(all.len() > 1, "expected >1 pool worker");
+        assert!(all.len() <= 4, "more distinct worker ids than pool threads");
+    }
+
+    #[test]
+    fn pool_panic_propagates_and_pool_survives() {
+        let pool = PooledExecutor::new(3);
+        let mut nodes = vec![0u32; 6];
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(&mut nodes, &|j, _: &mut u32| {
+                if j == 4 {
+                    panic!("node 4 exploded");
+                }
+            });
+        }));
+        let payload = caught.expect_err("worker panic must propagate to the caller");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .unwrap_or("<non-str payload>");
+        assert!(msg.contains("node 4 exploded"), "{msg}");
+        // The pool survived the panic: the next phase runs normally.
+        let mut nodes = vec![0u32; 6];
+        let (out, _) = pool.run(&mut nodes, &|j, n| {
+            *n = 1;
+            j
+        });
+        assert_eq!(out, (0..6).collect::<Vec<_>>());
+        assert!(nodes.iter().all(|&n| n == 1));
+    }
+
+    #[test]
+    fn pool_single_worker_falls_back_to_serial_semantics() {
+        let pool = PooledExecutor::new(1);
+        let mut nodes = vec![0u32; 5];
+        let (out, _) = pool.run(&mut nodes, &|j, n| {
+            *n = j as u32;
+            j * 2
+        });
+        assert_eq!(out, vec![0, 2, 4, 6, 8]);
+    }
+
+    #[test]
+    fn cloned_pool_executors_share_workers_safely() {
+        use std::collections::HashSet;
+        let pool = PooledExecutor::new(2);
+        let clone = pool.clone();
+        let ids: Mutex<HashSet<std::thread::ThreadId>> = Mutex::new(HashSet::new());
+        for p in [&pool, &clone] {
+            let mut nodes = vec![(); 4];
+            p.run(&mut nodes, &|_, _| {
+                ids.lock().unwrap().insert(std::thread::current().id());
+            });
+        }
+        assert!(ids.into_inner().unwrap().len() <= 2);
     }
 }

@@ -66,9 +66,17 @@ impl SimClock {
         Step::all().iter().map(|s| self.step_secs(*s)).sum()
     }
 
-    /// Everything except TRON — the paper's "Other time" (Fig 2).
+    /// The paper's "Other time" (Fig 2): every Algorithm-1 step except
+    /// TRON (the shared [`Step::is_other`] predicate, so this can never
+    /// diverge from the wall-clock series). `Predict` is not an
+    /// Algorithm-1 step (it is reported separately), so it is excluded
+    /// rather than silently folded in by a `total - tron` subtraction.
     pub fn other_secs(&self) -> f64 {
-        self.total_secs() - self.step_secs(Step::Tron)
+        Step::all()
+            .iter()
+            .filter(|s| s.is_other())
+            .map(|s| self.step_secs(*s))
+            .sum()
     }
 
     pub fn comm_instances(&self) -> u64 {
@@ -134,6 +142,16 @@ mod tests {
         assert!((c.other_secs() - 3.0).abs() < 1e-12);
         assert_eq!(c.comm_instances(), 4);
         assert_eq!(c.comm_bytes(), 400);
+    }
+
+    #[test]
+    fn other_secs_excludes_predict() {
+        let mut c = SimClock::new(CostModel::free());
+        c.add_compute(Step::Kernel, 2.0);
+        c.add_compute(Step::Tron, 3.0);
+        c.add_compute(Step::Predict, 7.0);
+        assert!((c.other_secs() - 2.0).abs() < 1e-12, "{}", c.other_secs());
+        assert!((c.total_secs() - 12.0).abs() < 1e-12);
     }
 
     #[test]

@@ -64,28 +64,41 @@ impl BasisSelection {
 pub enum ExecutorChoice {
     /// Deterministic single-thread loop (the metering reference).
     Serial,
-    /// Scoped OS worker threads, one per logical node up to `cap`
-    /// (`cap = 0` means "one per available core").
+    /// Scoped OS worker threads spawned per phase, one per logical node up
+    /// to `cap` (`cap = 0` means "one per available core").
     Threads { cap: usize },
+    /// Persistent worker pool: the same worker model as `Threads`, but the
+    /// threads are parked once per cluster lifetime and reused by every
+    /// phase — no per-phase spawn/join cost.
+    Pool { cap: usize },
 }
 
 impl ExecutorChoice {
     pub fn parse(s: &str) -> Result<ExecutorChoice> {
+        fn cap_of(n: &str) -> Result<usize> {
+            let cap: usize = n
+                .parse()
+                .map_err(|e| anyhow::anyhow!("executor thread cap {n:?}: {e}"))?;
+            if cap == 0 {
+                anyhow::bail!("executor thread cap must be > 0");
+            }
+            Ok(cap)
+        }
         match s {
             "serial" => Ok(ExecutorChoice::Serial),
             "threads" => Ok(ExecutorChoice::Threads { cap: 0 }),
-            other => match other.strip_prefix("threads:") {
-                Some(n) => {
-                    let cap: usize = n
-                        .parse()
-                        .map_err(|e| anyhow::anyhow!("executor thread cap {n:?}: {e}"))?;
-                    if cap == 0 {
-                        anyhow::bail!("executor thread cap must be > 0");
-                    }
-                    Ok(ExecutorChoice::Threads { cap })
+            "pool" => Ok(ExecutorChoice::Pool { cap: 0 }),
+            other => {
+                if let Some(n) = other.strip_prefix("threads:") {
+                    Ok(ExecutorChoice::Threads { cap: cap_of(n)? })
+                } else if let Some(n) = other.strip_prefix("pool:") {
+                    Ok(ExecutorChoice::Pool { cap: cap_of(n)? })
+                } else {
+                    anyhow::bail!(
+                        "unknown executor {other:?} (serial|threads[:N]|pool[:N])"
+                    )
                 }
-                None => anyhow::bail!("unknown executor {other:?} (serial|threads|threads:N)"),
-            },
+            }
         }
     }
 
@@ -94,23 +107,30 @@ impl ExecutorChoice {
             ExecutorChoice::Serial => "serial".to_string(),
             ExecutorChoice::Threads { cap: 0 } => "threads".to_string(),
             ExecutorChoice::Threads { cap } => format!("threads:{cap}"),
+            ExecutorChoice::Pool { cap: 0 } => "pool".to_string(),
+            ExecutorChoice::Pool { cap } => format!("pool:{cap}"),
         }
     }
 
     /// Resolve to a concrete cluster executor (`cap = 0` → core count).
+    /// For `Pool` this spawns the persistent workers right here — once per
+    /// cluster lifetime, not per phase.
     pub fn to_executor(self) -> crate::cluster::Executor {
+        fn resolved(cap: usize) -> usize {
+            if cap == 0 {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+            } else {
+                cap
+            }
+        }
         match self {
             ExecutorChoice::Serial => crate::cluster::Executor::serial(),
             ExecutorChoice::Threads { cap } => {
-                let threads = if cap == 0 {
-                    std::thread::available_parallelism()
-                        .map(|n| n.get())
-                        .unwrap_or(1)
-                } else {
-                    cap
-                };
-                crate::cluster::Executor::threaded(threads)
+                crate::cluster::Executor::threaded(resolved(cap))
             }
+            ExecutorChoice::Pool { cap } => crate::cluster::Executor::pooled(resolved(cap)),
         }
     }
 }
@@ -125,6 +145,11 @@ pub enum CStorage {
     /// No stored C: every f/g/Hd dispatch recomputes its kernel tile from
     /// the prepared feature/basis tiles (O(1 tile) bytes per node).
     Streaming,
+    /// Streaming plus a row-tile-scoped scratch of O(col_tiles) tiles: the
+    /// tile recomputed for the matvec half of an evaluation is kept until
+    /// the matvec_t half of the same evaluation consumes it, halving the
+    /// streamed recompute for m > TM at bounded extra memory.
+    StreamingRowbuf,
     /// Materialize row tiles while they fit `c_memory_budget`, stream the
     /// rest — memory becomes a dial instead of a cap.
     Auto,
@@ -135,9 +160,12 @@ impl CStorage {
         match s {
             "materialized" => Ok(CStorage::Materialized),
             "streaming" => Ok(CStorage::Streaming),
+            "streaming:rowbuf" => Ok(CStorage::StreamingRowbuf),
             "auto" => Ok(CStorage::Auto),
             other => {
-                anyhow::bail!("unknown C storage {other:?} (materialized|streaming|auto)")
+                anyhow::bail!(
+                    "unknown C storage {other:?} (materialized|streaming|streaming:rowbuf|auto)"
+                )
             }
         }
     }
@@ -146,6 +174,7 @@ impl CStorage {
         match self {
             CStorage::Materialized => "materialized",
             CStorage::Streaming => "streaming",
+            CStorage::StreamingRowbuf => "streaming:rowbuf",
             CStorage::Auto => "auto",
         }
     }
@@ -401,6 +430,23 @@ mod tests {
     }
 
     #[test]
+    fn pool_executor_parse_forms() {
+        assert_eq!(
+            ExecutorChoice::parse("pool").unwrap(),
+            ExecutorChoice::Pool { cap: 0 }
+        );
+        assert_eq!(
+            ExecutorChoice::parse("pool:6").unwrap(),
+            ExecutorChoice::Pool { cap: 6 }
+        );
+        assert!(ExecutorChoice::parse("pool:0").is_err());
+        assert!(ExecutorChoice::parse("pool:x").is_err());
+        assert_eq!(ExecutorChoice::Pool { cap: 6 }.name(), "pool:6");
+        assert_eq!(ExecutorChoice::Pool { cap: 0 }.name(), "pool");
+        assert_eq!(ExecutorChoice::Pool { cap: 3 }.to_executor().name(), "pool:3");
+    }
+
+    #[test]
     fn executor_setting_applies_from_kv() {
         let mut s = Settings::default();
         let mut kv = BTreeMap::new();
@@ -419,9 +465,15 @@ mod tests {
             CStorage::Materialized
         );
         assert_eq!(CStorage::parse("streaming").unwrap(), CStorage::Streaming);
+        assert_eq!(
+            CStorage::parse("streaming:rowbuf").unwrap(),
+            CStorage::StreamingRowbuf
+        );
         assert_eq!(CStorage::parse("auto").unwrap(), CStorage::Auto);
         assert!(CStorage::parse("mmap").is_err());
+        assert!(CStorage::parse("streaming:colbuf").is_err());
         assert_eq!(CStorage::Streaming.name(), "streaming");
+        assert_eq!(CStorage::StreamingRowbuf.name(), "streaming:rowbuf");
         let mut s = Settings::default();
         let mut kv = BTreeMap::new();
         kv.insert("c_storage".to_string(), "streaming".to_string());

@@ -22,6 +22,10 @@ pub trait Objective {
 pub struct TronOptions {
     /// Stop when ‖g‖ ≤ tol · ‖g₀‖.
     pub tol: f32,
+    /// Bound on TOTAL outer passes (accepted + rejected steps). Every pass
+    /// costs one f/g evaluation, so `fg_evals ≤ max_iters + 1` no matter
+    /// how the objective behaves — a persistently rejecting objective
+    /// cannot burn unbounded evaluations.
     pub max_iters: usize,
     /// Relative CG residual tolerance.
     pub cg_tol: f32,
@@ -45,6 +49,7 @@ impl Default for TronOptions {
 
 #[derive(Clone, Debug, Default)]
 pub struct TronStats {
+    /// ACCEPTED outer steps (zero when convergence needed no step).
     pub iterations: usize,
     pub fg_evals: usize,
     pub hd_evals: usize,
@@ -96,12 +101,19 @@ pub fn minimize(
         return Ok((x, stats));
     }
 
-    let mut iter = 1;
-    while iter <= opts.max_iters {
+    // `accepted` counts successful steps (the f_history curve); `passes`
+    // counts EVERY trip through the loop. Bounding passes — not accepts —
+    // is what bounds the work: a rejected step still pays a full f/g
+    // evaluation, and an objective that rejects forever used to spin here
+    // until the `delta` underflow guard fired (if it ever did).
+    let mut accepted = 0usize;
+    let mut passes = 0usize;
+    while passes < opts.max_iters {
         if gnorm <= opts.tol as f64 * gnorm0 {
             stats.converged = true;
             break;
         }
+        passes += 1;
         let (s, r, cg_steps) = trcg(obj, &g, delta, opts)?;
         stats.hd_evals += cg_steps;
 
@@ -117,7 +129,10 @@ pub fn minimize(
         let prered = -0.5 * (gs - dot64(&s, &r));
         let actred = f - f_new;
         let snorm = norm64(&s);
-        if iter == 1 {
+        // LIBLINEAR clamps the initial radius to the first step length
+        // ONCE, on the very first pass — not again on every rejected pass
+        // before the first accept.
+        if passes == 1 {
             delta = delta.min(snorm);
         }
 
@@ -146,10 +161,10 @@ pub fn minimize(
             gnorm = norm64(&g);
             stats.f_history.push(f);
             stats.gnorm_history.push(gnorm);
-            iter += 1;
+            accepted += 1;
             if opts.verbose {
                 eprintln!(
-                    "tron it {iter:4} f {f:.6e} |g| {gnorm:.3e} delta {delta:.3e} cg {cg_steps}"
+                    "tron it {accepted:4} f {f:.6e} |g| {gnorm:.3e} delta {delta:.3e} cg {cg_steps}"
                 );
             }
         } else if opts.verbose {
@@ -170,7 +185,12 @@ pub fn minimize(
             break;
         }
     }
-    stats.iterations = iter.min(opts.max_iters);
+    // A run can hit the tolerance exactly on its last permitted pass; the
+    // top-of-loop check never sees it, so re-check before reporting.
+    if gnorm <= opts.tol as f64 * gnorm0 {
+        stats.converged = true;
+    }
+    stats.iterations = accepted;
     stats.final_f = f;
     stats.final_gnorm = gnorm;
     Ok((x, stats))
@@ -363,6 +383,65 @@ mod tests {
         };
         let (_, stats) = minimize(&mut q, &vec![0.0; 30], &opts).unwrap();
         assert!(stats.iterations <= 2);
+        assert!(stats.fg_evals <= 3, "work not bounded: {}", stats.fg_evals);
+    }
+
+    /// An objective TRON always rejects: f is constant (actred = 0) while
+    /// the gradient stays nonzero and the curvature is zero, so every step
+    /// predicts a reduction it never delivers. Before the pass bound, this
+    /// burned one f/g evaluation per `delta`-halving until the 1e-30
+    /// underflow guard — ~100 evaluations regardless of `max_iters`.
+    struct AlwaysReject {
+        n: usize,
+    }
+
+    impl Objective for AlwaysReject {
+        fn dim(&self) -> usize {
+            self.n
+        }
+
+        fn eval_fg(&mut self, _x: &[f32]) -> Result<(f64, Vec<f32>)> {
+            Ok((0.0, vec![1.0; self.n]))
+        }
+
+        fn eval_hd(&mut self, _d: &[f32]) -> Result<Vec<f32>> {
+            Ok(vec![0.0; self.n])
+        }
+    }
+
+    #[test]
+    fn rejecting_objective_is_bounded_by_max_iters() {
+        let mut obj = AlwaysReject { n: 8 };
+        let opts = TronOptions {
+            max_iters: 5,
+            ..TronOptions::default()
+        };
+        let (x, stats) = minimize(&mut obj, &vec![0.0; 8], &opts).unwrap();
+        // One evaluation at x0 plus at most one per outer pass.
+        assert!(
+            stats.fg_evals <= opts.max_iters + 1,
+            "unbounded rejected passes: {} fg evals",
+            stats.fg_evals
+        );
+        assert_eq!(stats.iterations, 0, "no step was ever accepted");
+        assert!(!stats.converged);
+        assert_eq!(x, vec![0.0; 8], "rejected steps must not move x");
+    }
+
+    #[test]
+    fn iterations_counts_accepted_steps_only() {
+        // Zero accepted steps (gradient already zero): iterations = 0.
+        let mut q = spd_quad(5, 4);
+        q.b = vec![0.0; 5];
+        let (_, stats) = minimize(&mut q, &vec![0.0; 5], &TronOptions::default()).unwrap();
+        assert_eq!(stats.iterations, 0);
+        // A convergent run: the loss curve has exactly one entry per
+        // accepted step plus the initial f.
+        let mut q = spd_quad(15, 3);
+        let (_, stats) = minimize(&mut q, &vec![1.0; 15], &TronOptions::default()).unwrap();
+        assert!(stats.iterations >= 1);
+        assert_eq!(stats.f_history.len(), stats.iterations + 1);
+        assert!(stats.fg_evals >= stats.iterations + 1);
     }
 
     #[test]

@@ -19,8 +19,10 @@
 //! * [`cluster`] — the Hadoop-AllReduce substitute: worker nodes, a binary
 //!   AllReduce tree, the `C + D·B` communication cost model of §4.4, and
 //!   the pluggable **execution layer** ([`cluster::exec`]): node-local
-//!   phases run either on the deterministic serial loop or on real OS
-//!   worker threads (`--exec threads[:N]`), with bit-identical results.
+//!   phases run on the deterministic serial loop, on OS worker threads
+//!   spawned per phase (`--exec threads[:N]`), or on a persistent worker
+//!   pool parked across phases (`--exec pool[:N]`), with bit-identical
+//!   results.
 //! * [`runtime`] — the `Send + Sync` tile-compute backends: pure-Rust
 //!   native math (always built) and, behind the off-by-default `pjrt`
 //!   cargo feature, the PJRT engine loading AOT artifacts (HLO text
@@ -29,10 +31,12 @@
 //!   basis selection (random / distributed K-means), stage-wise growth —
 //!   including the **memory-bounded kernel-operator layer**
 //!   ([`coordinator::cstore`]): each node's C row block lives behind a
-//!   `CBlockStore` (`--c-storage materialized|streaming|auto`) that either
-//!   stores the kernel tiles, recomputes them per dispatch from the
-//!   prepared feature/basis tiles (O(1 tile) of C per node), or mixes the
-//!   two under a byte budget — with bit-identical training output.
+//!   `CBlockStore` (`--c-storage materialized|streaming|streaming:rowbuf|
+//!   auto`) that stores the kernel tiles (held once on native — prepared
+//!   operands alias the host tiles), recomputes them per dispatch from the
+//!   prepared feature/basis tiles (O(1 tile) of C per node; `rowbuf` adds
+//!   a row-scoped scratch that halves the recompute for m > TM), or mixes
+//!   the two under a byte budget — with bit-identical training output.
 //! * [`baselines`] — formulation (3) (Zhang et al. linearization) and
 //!   P-packSVM (Zhu et al.), the paper's comparators.
 //! * [`linalg`], [`rng`], [`data`], [`config`], [`metrics`] — substrates.

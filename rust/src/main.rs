@@ -73,12 +73,15 @@ Common flags:
   --loss            sqhinge | logistic | squared
   --basis           random | kmeans | auto
   --backend         pjrt | native
-  --exec            serial | threads | threads:N   (execution layer: metered
-                    serial loop, or real OS worker threads — bit-identical
-                    results, threads:N caps the worker count)
-  --c-storage       materialized | streaming | auto   (C-block memory model:
-                    stored kernel rows, per-dispatch recompute, or a
-                    budgeted mix — bit-identical results)
+  --exec            serial | threads[:N] | pool[:N]   (execution layer:
+                    metered serial loop, OS worker threads spawned per
+                    phase, or a persistent worker pool parked across phases
+                    — bit-identical results, :N caps the worker count)
+  --c-storage       materialized | streaming | streaming:rowbuf | auto
+                    (C-block memory model: stored kernel rows, per-dispatch
+                    recompute, recompute with a row-scoped tile scratch
+                    that halves it for m > TM, or a budgeted mix —
+                    bit-identical results)
   --c-memory-budget per-node byte budget for --c-storage auto (e.g. 256m)
   --cost            free | hadoop | mpi   (simulated comm cost model)
   --stages a,b,c    stage-wise m schedule (stagewise command)

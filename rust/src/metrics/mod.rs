@@ -45,6 +45,19 @@ impl Step {
             Step::Predict,
         ]
     }
+
+    /// True for the steps of Algorithm 1 proper — prediction is reported
+    /// separately and never belongs to a training-time series.
+    pub fn is_algorithm1(&self) -> bool {
+        !matches!(self, Step::Predict)
+    }
+
+    /// True for the Fig-2 "Other time" series: the Algorithm-1 steps minus
+    /// TRON. Shared by the wall-clock and simulated ledgers so the two
+    /// series can never diverge in what they count.
+    pub fn is_other(&self) -> bool {
+        self.is_algorithm1() && !matches!(self, Step::Tron)
+    }
 }
 
 /// Wall-clock timers per step + free-form counters.
@@ -83,9 +96,17 @@ impl Metrics {
         self.wall.values().map(|d| d.as_secs_f64()).sum()
     }
 
-    /// Total excluding TRON — the paper's "Other time" series in Fig 2.
+    /// The paper's "Other time" series in Fig 2: every Algorithm-1 step
+    /// except TRON (see [`Step::is_other`]). `Predict` is documented as
+    /// NOT an Algorithm-1 step (reported separately), so it is excluded —
+    /// `total - tron` would silently fold test-set prediction into the
+    /// training-time series.
     pub fn other_secs(&self) -> f64 {
-        self.total_secs() - self.wall_secs(Step::Tron)
+        self.wall
+            .iter()
+            .filter(|(s, _)| s.is_other())
+            .map(|(_, d)| d.as_secs_f64())
+            .sum()
     }
 
     pub fn bump(&mut self, key: &str, by: u64) {
@@ -193,12 +214,17 @@ mod tests {
     }
 
     #[test]
-    fn other_excludes_tron() {
+    fn other_excludes_tron_and_predict() {
         let mut m = Metrics::new();
         m.add_wall(Step::Tron, Duration::from_secs(3));
         m.add_wall(Step::Kernel, Duration::from_secs(2));
         assert!((m.other_secs() - 2.0).abs() < 1e-9);
         assert!((m.total_secs() - 5.0).abs() < 1e-9);
+        // Predict is not an Algorithm-1 step: it counts toward the total
+        // but must NOT leak into the Fig-2 "Other time" series.
+        m.add_wall(Step::Predict, Duration::from_secs(7));
+        assert!((m.other_secs() - 2.0).abs() < 1e-9, "{}", m.other_secs());
+        assert!((m.total_secs() - 12.0).abs() < 1e-9);
     }
 
     #[test]

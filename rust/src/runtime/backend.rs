@@ -20,13 +20,18 @@ use super::{native, AssignOut, StageOut};
 use super::tiles::{TB, TM};
 
 /// An operand prepared for repeated hot-path use: resident on the PJRT
-/// device (one upload, zero per-call transfer) or a pinned host copy for
+/// device (one upload, zero per-call transfer) or a pinned host buffer for
 /// the native backend. Created once per C tile / feature panel after the
 /// kernel-computation step; every TRON f/g/Hd call then ships only the
 /// O(TB + TM) small vectors. This is the §Perf "persistent device buffer"
 /// optimization (see EXPERIMENTS.md §Perf for before/after).
+///
+/// The host variant is an `Arc` so a caller that must ALSO keep the tile
+/// on the host (the materialized C store serves `row_dot` from host tiles)
+/// can share one buffer with its prepared copy via
+/// [`Compute::prepare_shared`] instead of holding the data twice.
 pub enum Prepared {
-    Host(Vec<f32>),
+    Host(Arc<Vec<f32>>),
     #[cfg(feature = "pjrt")]
     Device(xla::PjRtBuffer),
 }
@@ -54,6 +59,17 @@ impl Prepared {
         match self {
             Prepared::Device(b) => Ok(b),
             Prepared::Host(_) => anyhow::bail!("host-prepared operand used on PJRT backend"),
+        }
+    }
+
+    /// True when this prepared operand is the SAME host allocation as
+    /// `host` (a zero-copy [`Compute::prepare_shared`] result) — i.e. it
+    /// contributes no extra bytes beyond the host buffer itself.
+    pub fn aliases(&self, host: &Arc<Vec<f32>>) -> bool {
+        match self {
+            Prepared::Host(v) => Arc::ptr_eq(v, host),
+            #[cfg(feature = "pjrt")]
+            Prepared::Device(_) => false,
         }
     }
 }
@@ -107,6 +123,27 @@ pub trait Compute: Send + Sync {
 
     /// Prepare an operand for repeated use (shape `dims`, row-major).
     fn prepare(&self, data: &[f32], dims: &[usize]) -> Result<Prepared>;
+
+    /// Prepare an operand the caller also keeps on the host. Backends that
+    /// execute from host memory may alias the buffer (zero-copy — the
+    /// native path does); device backends upload a copy as usual.
+    ///
+    /// CONTRACT: this method and [`Compute::prepared_aliases_host`] must be
+    /// overridden TOGETHER — the flag is how byte accounting and the Auto
+    /// storage budget price what this method returns. (Per-`Prepared`
+    /// truth is available via [`Prepared::aliases`]; the flag exists so
+    /// the budget can be priced before any tile is built.)
+    fn prepare_shared(&self, data: &Arc<Vec<f32>>, dims: &[usize]) -> Result<Prepared> {
+        self.prepare(data, dims)
+    }
+
+    /// True when [`Compute::prepare_shared`] aliases the host buffer
+    /// instead of copying: a materialized C row tile then costs ONE tile
+    /// of memory, not two (host copy + prepared copy). Keep in lockstep
+    /// with `prepare_shared` — see the contract note there.
+    fn prepared_aliases_host(&self) -> bool {
+        false
+    }
 
     fn kernel_block_p(
         &self,
@@ -474,7 +511,17 @@ impl Compute for NativeCompute {
     }
 
     fn prepare(&self, data: &[f32], _dims: &[usize]) -> Result<Prepared> {
-        Ok(Prepared::Host(data.to_vec()))
+        Ok(Prepared::Host(Arc::new(data.to_vec())))
+    }
+
+    fn prepare_shared(&self, data: &Arc<Vec<f32>>, _dims: &[usize]) -> Result<Prepared> {
+        // Native executes straight from host memory: share the caller's
+        // buffer instead of copying it (the materialized-store halving).
+        Ok(Prepared::Host(Arc::clone(data)))
+    }
+
+    fn prepared_aliases_host(&self) -> bool {
+        true
     }
 
     fn kernel_block_p(

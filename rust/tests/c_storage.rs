@@ -1,12 +1,15 @@
 //! C-storage equivalence: the tentpole contract that training with
 //! `--c-storage streaming` (no stored C; kernel tiles recomputed per
-//! dispatch) and `--c-storage auto` (budgeted mix) is BIT-IDENTICAL to the
-//! materialized reference — same β bits, same TRON trajectory, same
-//! evaluation counts — across executors, basis modes, and the stage-wise
-//! path, while streaming holds only O(1 tile) of C per node.
+//! dispatch), `--c-storage streaming:rowbuf` (streaming with a
+//! row-tile-scoped tile scratch that halves the recompute for m > TM) and
+//! `--c-storage auto` (budgeted mix) is BIT-IDENTICAL to the materialized
+//! reference — same β bits, same TRON trajectory, same evaluation counts —
+//! across executors, basis modes, and the stage-wise path, while streaming
+//! holds only O(1 tile) (rowbuf: O(col_tiles) tiles) of C per node.
 //!
-//! Test names end in `serial_exec` / `threads_exec`; CI runs each group
-//! explicitly so storage×executor equivalence is enforced on every push.
+//! Test names end in `serial_exec` / `threads_exec` / `pool_exec`; CI runs
+//! each group explicitly so storage×executor equivalence is enforced on
+//! every push.
 
 use std::sync::Arc;
 
@@ -69,14 +72,18 @@ fn assert_bit_identical(a: &TrainOutput, b: &TrainOutput, what: &str) {
     );
 }
 
-/// The acceptance criterion: streaming and auto train bit-identically to
-/// materialized, for single-tile AND multi-tile m, on the serial executor —
-/// and streaming's peak per-node C-block footprint is exactly one tile.
+/// The acceptance criterion: streaming, streaming:rowbuf and auto train
+/// bit-identically to materialized, for single-tile AND multi-tile m, on
+/// the serial executor — streaming's peak per-node C-block footprint is
+/// exactly one tile (rowbuf: col_tiles tiles), and for m > TM the rowbuf
+/// scratch performs about HALF the kernel-tile recomputes of plain
+/// streaming.
 #[test]
 fn storage_modes_bit_identical_serial_exec() {
     let (tr, _) = data(1600, 200, 7);
     let backend = make_backend(Backend::Native, "artifacts").unwrap();
     for m in [96usize, 300] {
+        let ct = m.div_ceil(TM).max(1);
         let reference = train(
             &settings(m, 4, CStorage::Materialized, ExecutorChoice::Serial),
             &tr,
@@ -86,6 +93,10 @@ fn storage_modes_bit_identical_serial_exec() {
         .unwrap();
         assert_eq!(reference.recomputed_tiles, 0);
         assert_eq!(reference.sim.recompute_flops(), 0);
+        // Native shares each host tile with its prepared copy: the
+        // materialized peak is EXACTLY the tile grid, held once
+        // (400 rows/node = 2 row tiles).
+        assert_eq!(reference.peak_c_bytes, 2 * ct * TB * TM * 4, "m={m}");
 
         let streaming = train(
             &settings(m, 4, CStorage::Streaming, ExecutorChoice::Serial),
@@ -105,15 +116,58 @@ fn storage_modes_bit_identical_serial_exec() {
         assert!(streaming.recomputed_tiles > 0, "m={m}");
         assert!(streaming.sim.recompute_flops() > 0, "m={m}");
 
+        let rowbuf = train(
+            &settings(m, 4, CStorage::StreamingRowbuf, ExecutorChoice::Serial),
+            &tr,
+            Arc::clone(&backend),
+            CostModel::free(),
+        )
+        .unwrap();
+        assert_bit_identical(&reference, &rowbuf, &format!("rowbuf m={m}"));
+        // Bounded scratch: O(col_tiles) tiles per node, nothing more.
+        assert_eq!(rowbuf.peak_c_bytes, ct * TB * TM * 4, "m={m}");
+        assert!(rowbuf.recomputed_tiles > 0, "m={m}");
+        if m > TM {
+            // Multi-tile evaluations touch every tile twice (matvec +
+            // matvec_t); the scratch serves the second touch, so rowbuf
+            // performs about half the recomputes (the remainder over an
+            // exact half is the shared one-time W-cache build).
+            assert!(
+                rowbuf.recomputed_tiles * 100 < streaming.recomputed_tiles * 55,
+                "m={m}: rowbuf {} not ~half of streaming {}",
+                rowbuf.recomputed_tiles,
+                streaming.recomputed_tiles
+            );
+            assert!(
+                rowbuf.recomputed_tiles * 2 >= streaming.recomputed_tiles / 2,
+                "m={m}: rowbuf {} suspiciously low vs streaming {}",
+                rowbuf.recomputed_tiles,
+                streaming.recomputed_tiles
+            );
+        } else {
+            // Single-tile m uses the fused dispatches: one tile compute
+            // per dispatch either way for multi-row-tile shards (exactly
+            // equal here — 400 rows/node = 2 row tiles); a single-row-tile
+            // shard could only do BETTER (its scratch survives across
+            // dispatches), hence <=.
+            assert!(
+                rowbuf.recomputed_tiles <= streaming.recomputed_tiles,
+                "m={m}: rowbuf {} vs streaming {}",
+                rowbuf.recomputed_tiles,
+                streaming.recomputed_tiles
+            );
+        }
+
         // Auto with a budget for exactly one materialized row of tiles per
-        // node: a genuine mix (400 rows/node = 2 row tiles).
-        let ct = m.div_ceil(TM).max(1);
+        // node: a genuine mix (400 rows/node = 2 row tiles). One row costs
+        // ct tiles on native (host/prepared buffer shared).
         let mut s = settings(m, 4, CStorage::Auto, ExecutorChoice::Serial);
-        s.c_memory_budget = ct * TB * TM * 4 * 2;
+        s.c_memory_budget = ct * TB * TM * 4;
         let auto = train(&s, &tr, Arc::clone(&backend), CostModel::free()).unwrap();
         assert_bit_identical(&reference, &auto, &format!("auto m={m}"));
+        // Exactly one materialized row of tiles plus the transient tile.
+        assert_eq!(auto.peak_c_bytes, (ct + 1) * TB * TM * 4, "m={m}");
         assert!(auto.peak_c_bytes < reference.peak_c_bytes, "m={m}");
-        assert!(auto.peak_c_bytes > TB * TM * 4, "m={m}");
         assert!(auto.recomputed_tiles > 0, "m={m}");
         assert!(
             auto.recomputed_tiles < streaming.recomputed_tiles,
@@ -143,9 +197,10 @@ fn kmeans_basis_storage_modes_bit_identical_serial_exec() {
 }
 
 /// Stage-wise growth (dirty-column recompute, W-row cache extension,
-/// warm-started β) is bit-identical between materialized and streaming.
-/// The schedule crosses the TM=256 column-tile boundary twice so the
-/// partial-tile incremental recompute/re-prepare path runs end-to-end.
+/// warm-started β, rowbuf scratch invalidation) is bit-identical between
+/// materialized and both streaming variants. The schedule crosses the
+/// TM=256 column-tile boundary twice so the partial-tile incremental
+/// recompute/re-prepare path runs end-to-end.
 #[test]
 fn stagewise_storage_modes_bit_identical_serial_exec() {
     let (tr, _) = data(1300, 150, 19);
@@ -155,36 +210,45 @@ fn stagewise_storage_modes_bit_identical_serial_exec() {
     s.max_iters = 30;
     let mat = train_stagewise(&s, &tr, Arc::clone(&backend), CostModel::free(), &stages)
         .unwrap();
-    let mut s = settings(32, 4, CStorage::Streaming, ExecutorChoice::Serial);
-    s.max_iters = 30;
-    let st = train_stagewise(&s, &tr, Arc::clone(&backend), CostModel::free(), &stages)
-        .unwrap();
-    assert_eq!(mat.len(), st.len());
-    let mut prev_recomputed = 0u64;
-    for (stage, (a, b)) in mat.iter().zip(&st).enumerate() {
-        assert_eq!(a.m, b.m, "stage {stage}");
-        assert_eq!(a.stats.iterations, b.stats.iterations, "stage {stage}");
-        for (i, (x, y)) in a.model.beta.iter().zip(&b.model.beta).enumerate() {
-            assert_eq!(x.to_bits(), y.to_bits(), "stage {stage} beta[{i}]");
+    for storage in [CStorage::Streaming, CStorage::StreamingRowbuf] {
+        let mut s = settings(32, 4, storage, ExecutorChoice::Serial);
+        s.max_iters = 30;
+        let st = train_stagewise(&s, &tr, Arc::clone(&backend), CostModel::free(), &stages)
+            .unwrap();
+        assert_eq!(mat.len(), st.len());
+        let mut prev_recomputed = 0u64;
+        for (stage, (a, b)) in mat.iter().zip(&st).enumerate() {
+            let what = format!("{} stage {stage}", storage.name());
+            assert_eq!(a.m, b.m, "{what}");
+            assert_eq!(a.stats.iterations, b.stats.iterations, "{what}");
+            for (i, (x, y)) in a.model.beta.iter().zip(&b.model.beta).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{what} beta[{i}]");
+            }
+            assert_eq!(a.recomputed_tiles, 0, "materialized never recomputes");
+            assert!(
+                b.recomputed_tiles > prev_recomputed,
+                "{what}: streaming recompute must grow"
+            );
+            prev_recomputed = b.recomputed_tiles;
         }
-        assert_eq!(a.recomputed_tiles, 0, "materialized never recomputes");
-        assert!(
-            b.recomputed_tiles > prev_recomputed,
-            "stage {stage}: streaming recompute must grow"
-        );
-        prev_recomputed = b.recomputed_tiles;
     }
 }
 
-/// Storage × executor: streaming under real worker threads is bit-identical
-/// to materialized under the serial loop — the full cross-product contract.
+/// Storage × executor: streaming (both variants) under real worker threads
+/// is bit-identical to materialized under the serial loop — the full
+/// cross-product contract.
 #[test]
 fn storage_modes_bit_identical_threads_exec() {
     let (tr, _) = data(1400, 150, 11);
     let backend = make_backend(Backend::Native, "artifacts").unwrap();
     for m in [96usize, 300] {
         let mut reference = None;
-        for storage in [CStorage::Materialized, CStorage::Streaming, CStorage::Auto] {
+        for storage in [
+            CStorage::Materialized,
+            CStorage::Streaming,
+            CStorage::StreamingRowbuf,
+            CStorage::Auto,
+        ] {
             for exec in [
                 ExecutorChoice::Serial,
                 ExecutorChoice::Threads { cap: 4 },
@@ -193,7 +257,7 @@ fn storage_modes_bit_identical_threads_exec() {
                 s.max_iters = 25;
                 if storage == CStorage::Auto {
                     let ct = m.div_ceil(TM).max(1);
-                    s.c_memory_budget = ct * TB * TM * 4 * 2;
+                    s.c_memory_budget = ct * TB * TM * 4;
                 }
                 let out = train(&s, &tr, Arc::clone(&backend), CostModel::free()).unwrap();
                 match &reference {
@@ -205,6 +269,40 @@ fn storage_modes_bit_identical_threads_exec() {
                     ),
                 }
             }
+        }
+    }
+}
+
+/// Storage × the persistent-pool executor: every storage mode under the
+/// pool is bit-identical to materialized under the serial loop. Streaming
+/// is the pool's motivating workload (many small dispatches per phase), so
+/// this cell of the matrix is enforced explicitly in CI.
+#[test]
+fn storage_modes_bit_identical_pool_exec() {
+    let (tr, _) = data(1400, 150, 11);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    for m in [96usize, 300] {
+        let mut s = settings(m, 5, CStorage::Materialized, ExecutorChoice::Serial);
+        s.max_iters = 25;
+        let reference = train(&s, &tr, Arc::clone(&backend), CostModel::free()).unwrap();
+        for storage in [
+            CStorage::Materialized,
+            CStorage::Streaming,
+            CStorage::StreamingRowbuf,
+            CStorage::Auto,
+        ] {
+            let mut s = settings(m, 5, storage, ExecutorChoice::Pool { cap: 4 });
+            s.max_iters = 25;
+            if storage == CStorage::Auto {
+                let ct = m.div_ceil(TM).max(1);
+                s.c_memory_budget = ct * TB * TM * 4;
+            }
+            let out = train(&s, &tr, Arc::clone(&backend), CostModel::free()).unwrap();
+            assert_bit_identical(
+                &reference,
+                &out,
+                &format!("m={m} {}/pool", s.c_storage.name()),
+            );
         }
     }
 }

@@ -1,7 +1,10 @@
 //! Executor equivalence: the tentpole contract that training on the
-//! threaded execution layer is BIT-IDENTICAL to the serial reference —
-//! same β bits, same evaluation counts, same TRON trajectory — and that
-//! every collective reduces in the same deterministic order under both.
+//! threaded execution layer — spawn-per-phase threads AND the persistent
+//! worker pool — is BIT-IDENTICAL to the serial reference: same β bits,
+//! same evaluation counts, same TRON trajectory, and every collective
+//! reduces in the same deterministic order under every executor. Plus the
+//! pool-specific behaviors: worker-panic propagation (with pool survival)
+//! and worker reuse across many small phases (the streaming shape).
 
 use std::sync::Arc;
 
@@ -43,10 +46,11 @@ fn data(n: usize, ntest: usize, seed: u64) -> (Dataset, Dataset) {
     synth::generate(&spec, seed)
 }
 
-/// The acceptance-criterion test: serial and threaded training on
-/// covtype_like produce bit-identical β and identical fg/hd eval counts.
+/// The acceptance-criterion test: serial, spawn-per-phase threaded and
+/// persistent-pool training on covtype_like produce bit-identical β and
+/// identical fg/hd eval counts.
 #[test]
-fn threaded_training_is_bit_identical_to_serial() {
+fn threaded_and_pooled_training_are_bit_identical_to_serial() {
     let (tr, _) = data(1600, 200, 7);
     let backend = make_backend(Backend::Native, "artifacts").unwrap();
     let serial = train(
@@ -56,9 +60,15 @@ fn threaded_training_is_bit_identical_to_serial() {
         CostModel::hadoop_crude(),
     )
     .unwrap();
-    for cap in [2usize, 8] {
-        let threaded = train(
-            &settings(96, 8, ExecutorChoice::Threads { cap }),
+    for exec in [
+        ExecutorChoice::Threads { cap: 2 },
+        ExecutorChoice::Threads { cap: 8 },
+        ExecutorChoice::Pool { cap: 2 },
+        ExecutorChoice::Pool { cap: 8 },
+    ] {
+        let name = exec.name();
+        let other = train(
+            &settings(96, 8, exec),
             &tr,
             Arc::clone(&backend),
             CostModel::hadoop_crude(),
@@ -66,28 +76,34 @@ fn threaded_training_is_bit_identical_to_serial() {
         .unwrap();
         assert_eq!(
             serial.model.beta.len(),
-            threaded.model.beta.len(),
-            "cap={cap}"
+            other.model.beta.len(),
+            "exec={name}"
         );
         for (i, (a, b)) in serial
             .model
             .beta
             .iter()
-            .zip(&threaded.model.beta)
+            .zip(&other.model.beta)
             .enumerate()
         {
-            assert_eq!(a.to_bits(), b.to_bits(), "cap={cap} beta[{i}]: {a} vs {b}");
+            assert_eq!(a.to_bits(), b.to_bits(), "exec={name} beta[{i}]: {a} vs {b}");
         }
-        assert_eq!(serial.fg_evals, threaded.fg_evals, "cap={cap}");
-        assert_eq!(serial.hd_evals, threaded.hd_evals, "cap={cap}");
+        assert_eq!(serial.fg_evals, other.fg_evals, "exec={name}");
+        assert_eq!(serial.hd_evals, other.hd_evals, "exec={name}");
         assert_eq!(
-            serial.stats.iterations, threaded.stats.iterations,
-            "cap={cap}"
+            serial.stats.iterations, other.stats.iterations,
+            "exec={name}"
         );
         assert_eq!(
             serial.stats.final_f.to_bits(),
-            threaded.stats.final_f.to_bits(),
-            "cap={cap}"
+            other.stats.final_f.to_bits(),
+            "exec={name}"
+        );
+        // The communication ledger is executor-independent too.
+        assert_eq!(
+            serial.sim.comm_bytes(),
+            other.sim.comm_bytes(),
+            "exec={name}"
         );
     }
 }
@@ -99,13 +115,19 @@ fn threaded_training_multi_tile_m_is_bit_identical() {
     let (tr, _) = data(1400, 200, 11);
     let backend = make_backend(Backend::Native, "artifacts").unwrap();
     let mut runs = Vec::new();
-    for exec in [ExecutorChoice::Serial, ExecutorChoice::Threads { cap: 4 }] {
+    for exec in [
+        ExecutorChoice::Serial,
+        ExecutorChoice::Threads { cap: 4 },
+        ExecutorChoice::Pool { cap: 4 },
+    ] {
         let mut s = settings(300, 5, exec);
         s.max_iters = 25;
         runs.push(train(&s, &tr, Arc::clone(&backend), CostModel::free()).unwrap());
     }
-    for (a, b) in runs[0].model.beta.iter().zip(&runs[1].model.beta) {
-        assert_eq!(a.to_bits(), b.to_bits());
+    for other in &runs[1..] {
+        for (a, b) in runs[0].model.beta.iter().zip(&other.model.beta) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 }
 
@@ -116,16 +138,22 @@ fn kmeans_basis_training_is_bit_identical_across_executors() {
     let (tr, _) = data(900, 150, 13);
     let backend = make_backend(Backend::Native, "artifacts").unwrap();
     let mut runs = Vec::new();
-    for exec in [ExecutorChoice::Serial, ExecutorChoice::Threads { cap: 3 }] {
+    for exec in [
+        ExecutorChoice::Serial,
+        ExecutorChoice::Threads { cap: 3 },
+        ExecutorChoice::Pool { cap: 3 },
+    ] {
         let mut s = settings(24, 3, exec);
         s.basis = BasisSelection::KMeans;
         runs.push(train(&s, &tr, Arc::clone(&backend), CostModel::free()).unwrap());
     }
-    for (a, b) in runs[0].model.beta.iter().zip(&runs[1].model.beta) {
-        assert_eq!(a.to_bits(), b.to_bits());
+    for other in &runs[1..] {
+        for (a, b) in runs[0].model.beta.iter().zip(&other.model.beta) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // The basis itself (K-means centers) must match exactly, too.
+        assert_eq!(runs[0].model.basis, other.model.basis);
     }
-    // The basis itself (K-means centers) must match exactly, too.
-    assert_eq!(runs[0].model.basis, runs[1].model.basis);
 }
 
 /// The stage-wise path (basis growth, dirty-column recompute, warm-started
@@ -140,29 +168,35 @@ fn stagewise_training_is_bit_identical_across_executors() {
     s.max_iters = 30;
     let serial = train_stagewise(&s, &tr, Arc::clone(&backend), CostModel::free(), &stages)
         .unwrap();
-    let mut st = settings(32, 4, ExecutorChoice::Threads { cap: 4 });
-    st.max_iters = 30;
-    let threaded = train_stagewise(&st, &tr, Arc::clone(&backend), CostModel::free(), &stages)
-        .unwrap();
-    assert_eq!(serial.len(), threaded.len());
-    for (stage, (a, b)) in serial.iter().zip(&threaded).enumerate() {
-        assert_eq!(a.m, b.m, "stage {stage}");
-        assert_eq!(a.stats.iterations, b.stats.iterations, "stage {stage}");
-        assert_eq!(
-            a.stats.final_f.to_bits(),
-            b.stats.final_f.to_bits(),
-            "stage {stage}"
-        );
-        assert_eq!(a.model.beta.len(), b.model.beta.len(), "stage {stage}");
-        for (i, (x, y)) in a.model.beta.iter().zip(&b.model.beta).enumerate() {
-            assert_eq!(x.to_bits(), y.to_bits(), "stage {stage} beta[{i}]");
+    for exec in [
+        ExecutorChoice::Threads { cap: 4 },
+        ExecutorChoice::Pool { cap: 4 },
+    ] {
+        let name = exec.name();
+        let mut st = settings(32, 4, exec);
+        st.max_iters = 30;
+        let other = train_stagewise(&st, &tr, Arc::clone(&backend), CostModel::free(), &stages)
+            .unwrap();
+        assert_eq!(serial.len(), other.len());
+        for (stage, (a, b)) in serial.iter().zip(&other).enumerate() {
+            assert_eq!(a.m, b.m, "{name} stage {stage}");
+            assert_eq!(a.stats.iterations, b.stats.iterations, "{name} stage {stage}");
+            assert_eq!(
+                a.stats.final_f.to_bits(),
+                b.stats.final_f.to_bits(),
+                "{name} stage {stage}"
+            );
+            assert_eq!(a.model.beta.len(), b.model.beta.len(), "{name} stage {stage}");
+            for (i, (x, y)) in a.model.beta.iter().zip(&b.model.beta).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{name} stage {stage} beta[{i}]");
+            }
         }
     }
 }
 
-/// AllReduce determinism under both executors, for vectors and scalars.
+/// AllReduce determinism under every executor, for vectors and scalars.
 #[test]
-fn allreduce_bit_identical_under_both_executors() {
+fn allreduce_bit_identical_under_all_executors() {
     for p in [1usize, 3, 8, 20] {
         let mut rng = Rng::new(p as u64);
         let partials: Vec<Vec<f32>> = (0..p)
@@ -170,17 +204,19 @@ fn allreduce_bit_identical_under_both_executors() {
             .collect();
         let scalars: Vec<f32> = partials.iter().map(|v| v[7.min(v.len() - 1)]).collect();
         let mut serial = Cluster::new(vec![(); p], 2, CostModel::free());
-        let mut threaded =
-            Cluster::new(vec![(); p], 2, CostModel::free()).with_executor(Executor::threaded(4));
         let a = serial.allreduce_sum(Step::Tron, partials.clone());
-        let b = threaded.allreduce_sum(Step::Tron, partials);
-        assert_eq!(a.len(), b.len());
-        for (x, y) in a.iter().zip(&b) {
-            assert_eq!(x.to_bits(), y.to_bits(), "p={p}");
-        }
         let sa = serial.allreduce_scalar(Step::Tron, scalars.clone());
-        let sb = threaded.allreduce_scalar(Step::Tron, scalars);
-        assert_eq!(sa.to_bits(), sb.to_bits(), "p={p}");
+        for exec in [Executor::threaded(4), Executor::pooled(4)] {
+            let name = exec.name();
+            let mut other = Cluster::new(vec![(); p], 2, CostModel::free()).with_executor(exec);
+            let b = other.allreduce_sum(Step::Tron, partials.clone());
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "p={p} exec={name}");
+            }
+            let sb = other.allreduce_scalar(Step::Tron, scalars.clone());
+            assert_eq!(sa.to_bits(), sb.to_bits(), "p={p} exec={name}");
+        }
     }
 }
 
@@ -205,17 +241,72 @@ fn threaded_metering_is_max_over_nodes() {
 /// error, naming the first failing node in node order.
 #[test]
 fn threaded_node_failure_is_reported_in_node_order() {
+    for exec in [Executor::threaded(6), Executor::pooled(6)] {
+        let name = exec.name();
+        let mut cl = Cluster::new(vec![(); 6], 2, CostModel::free()).with_executor(exec);
+        let err = cl
+            .try_par_compute(Step::Kernel, |j, _| {
+                if j >= 3 {
+                    anyhow::bail!("shard {j} corrupt")
+                }
+                Ok(j)
+            })
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("node 3"), "{name}: {msg}");
+        assert!(msg.contains("shard 3 corrupt"), "{name}: {msg}");
+    }
+}
+
+/// A PANICKING worker (not a structured error) must propagate the panic to
+/// the dispatching thread — and the pool must survive it: its parked
+/// workers keep serving later phases of the same cluster.
+#[test]
+fn pool_worker_panic_propagates_and_pool_stays_usable() {
     let mut cl =
-        Cluster::new(vec![(); 6], 2, CostModel::free()).with_executor(Executor::threaded(6));
-    let err = cl
-        .try_par_compute(Step::Kernel, |j, _| {
-            if j >= 3 {
-                anyhow::bail!("shard {j} corrupt")
+        Cluster::new(vec![0u32; 6], 2, CostModel::free()).with_executor(Executor::pooled(3));
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        cl.par_compute(Step::Kernel, |j, _| {
+            if j == 4 {
+                panic!("worker died on node 4");
             }
-            Ok(j)
-        })
-        .unwrap_err();
-    let msg = format!("{err:#}");
-    assert!(msg.contains("node 3"), "{msg}");
-    assert!(msg.contains("shard 3 corrupt"), "{msg}");
+        });
+    }));
+    assert!(caught.is_err(), "worker panic must reach the caller");
+    // Same cluster, same pool: the next phase runs to completion.
+    let out = cl.par_compute(Step::Kernel, |j, n| {
+        *n = j as u32 + 1;
+        j
+    });
+    assert_eq!(out, vec![0, 1, 2, 3, 4, 5]);
+    assert_eq!(cl.node(5), &6);
+}
+
+/// The streaming-dispatch shape: many small phases against one persistent
+/// pool. Every phase must reuse the SAME parked workers (no per-phase
+/// spawn) and keep results in node order.
+#[test]
+fn pool_reuse_across_many_small_phases() {
+    use std::collections::HashSet;
+    use std::sync::Mutex;
+    let p = 8;
+    let mut cl =
+        Cluster::new(vec![0u64; p], 2, CostModel::free()).with_executor(Executor::pooled(4));
+    let ids: Mutex<HashSet<std::thread::ThreadId>> = Mutex::new(HashSet::new());
+    for phase in 0..300u64 {
+        let out = cl.par_compute(Step::Tron, |j, n| {
+            *n += 1;
+            ids.lock().unwrap().insert(std::thread::current().id());
+            (phase, j)
+        });
+        assert_eq!(out, (0..p).map(|j| (phase, j)).collect::<Vec<_>>());
+    }
+    for j in 0..p {
+        assert_eq!(cl.node(j), &300, "node {j} missed a phase");
+    }
+    let ids = ids.into_inner().unwrap();
+    // 300 phases, but only the pool's fixed worker set ever ran them —
+    // spawn-per-phase would have minted hundreds of distinct thread ids.
+    assert!(ids.len() > 1, "expected real parallelism");
+    assert!(ids.len() <= 4, "worker ids exceed pool size: {}", ids.len());
 }
