@@ -13,6 +13,12 @@
 //! parked pool. The pool must be at parity or better — that is the whole
 //! point of parking the workers.
 //!
+//! A third section compares the FUSED evaluation pipeline (one
+//! compute+reduce phase — one barrier, one AllReduce round-trip — per
+//! TRON evaluation) against the split reference (barrier + 2 reductions
+//! per f/g): reduce round-trips per evaluation, µs per evaluation, and
+//! the simulated comm seconds, with β bit-identity asserted.
+//!
 //! Run: cargo bench --bench exec_speedup
 //! (DKM_BENCH_SCALE scales the dataset; DKM_THREADS caps the workers.)
 
@@ -22,7 +28,7 @@ mod common;
 use std::sync::Arc;
 
 use dkm::cluster::{CostModel, Cluster, Executor};
-use dkm::config::settings::ExecutorChoice;
+use dkm::config::settings::{EvalPipeline, ExecutorChoice};
 use dkm::coordinator::train;
 use dkm::metrics::{Step, Table};
 
@@ -180,6 +186,68 @@ fn main() {
         pool_secs <= spawn_secs * 1.5,
         "pool dispatch slower than spawn-per-phase: {pool_secs:.4}s vs {spawn_secs:.4}s"
     );
+
+    // --- fused vs split evaluation pipeline (rounds + µs per evaluation) ---
+    // The fused pipeline runs each TRON evaluation as ONE compute+reduce
+    // phase (one barrier, one AllReduce round-trip); the split pipeline is
+    // the paper's literal barrier + 2 reductions per f/g. Same bytes, same
+    // β bits — only synchronization rounds (and hence latency) change.
+    let mut pipe_outs = Vec::new();
+    for pipeline in [EvalPipeline::Fused, EvalPipeline::Split] {
+        let mut s = common::settings("covtype_like", m, nodes);
+        s.executor = ExecutorChoice::Pool { cap };
+        s.eval_pipeline = pipeline;
+        let out = train(&s, &train_ds, Arc::clone(&backend), CostModel::hadoop_crude())
+            .expect("training failed");
+        pipe_outs.push((pipeline, out));
+    }
+    let mut pt = Table::new(&[
+        "pipeline",
+        "evals",
+        "reduce_rts",
+        "rts/eval",
+        "barriers",
+        "tron_wall_us/eval",
+        "sim_tron_comm_s",
+    ]);
+    for (pipeline, out) in &pipe_outs {
+        let evals = (out.fg_evals + out.hd_evals) as f64;
+        pt.row(&[
+            pipeline.name().into(),
+            format!("{}", out.fg_evals + out.hd_evals),
+            format!("{}", out.sim.comm_rounds()),
+            format!("{:.2}", out.sim.comm_rounds() as f64 / evals),
+            format!("{}", out.sim.barriers()),
+            format!("{:.1}", out.wall.wall_secs(Step::Tron) / evals * 1e6),
+            format!("{:.3}", out.sim.comm_secs(Step::Tron)),
+        ]);
+    }
+    println!("\nfused vs split evaluation pipeline (pool executor, hadoop-crude comm):");
+    print!("{}", pt.render());
+    let (_, fused_out) = &pipe_outs[0];
+    let (_, split_out) = &pipe_outs[1];
+    let same_pipeline = fused_out
+        .model
+        .beta
+        .iter()
+        .zip(&split_out.model.beta)
+        .all(|(a, b)| a.to_bits() == b.to_bits());
+    println!(
+        "β bit-identical fused vs split: {}",
+        if same_pipeline { "YES" } else { "NO (BUG!)" }
+    );
+    // The fused contract: exactly one reduce round-trip per evaluation,
+    // and never more simulated comm time than the split path.
+    assert_eq!(
+        fused_out.sim.comm_rounds(),
+        (fused_out.fg_evals + fused_out.hd_evals) as u64,
+        "fused path must cost one round-trip per evaluation"
+    );
+    assert!(
+        fused_out.sim.comm_secs(Step::Tron) <= split_out.sim.comm_secs(Step::Tron),
+        "fused simulated comm regressed past split"
+    );
+    assert!(same_pipeline, "pipeline equivalence violated");
 
     println!(
         "\nsimulated {nodes}-node ledger of the pool run (comm is priced \

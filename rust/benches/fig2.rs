@@ -9,11 +9,17 @@
 //! near-linearly. p is swept on the simulated-time ledger: per-node
 //! compute is measured, communication is priced C + D·B per tree level.
 //! Covtype used 25 nodes as reference in the paper; MNIST8m used 100.
+//!
+//! Runs use the default FUSED evaluation pipeline (one AllReduce
+//! round-trip per TRON evaluation); each sweep ends with a fused-vs-split
+//! comparison at the largest p, where the latency term the fusion halves
+//! is most dominant.
 
 #[path = "common/mod.rs"]
 mod common;
 
 use dkm::cluster::CostModel;
+use dkm::config::settings::EvalPipeline;
 use dkm::coordinator::train;
 use dkm::metrics::{Step, Table};
 use std::sync::Arc;
@@ -42,27 +48,55 @@ fn run(name: &str, n: usize, ntest: usize, m: usize, ps: &[usize]) {
             out.sim.total_secs(),
             out.sim.other_secs(),
             out.sim.comm_secs(Step::Tron),
+            out.sim.comm_rounds(),
             out.stats.iterations,
         ));
         println!("  done {name} p={p}");
     }
-    let (_, t_ref, o_ref, _, _) = rows[0];
+    let (_, t_ref, o_ref, _, _, _) = rows[0];
     println!("\n--- {name} (n={}, m={m}; reference p={}) ---", train_ds.n(), ps[0]);
     let mut table = Table::new(&[
-        "nodes", "total_s", "other_s", "tron_comm_s", "speedup total", "speedup other", "iters",
+        "nodes",
+        "total_s",
+        "other_s",
+        "tron_comm_s",
+        "reduce_rts",
+        "speedup total",
+        "speedup other",
+        "iters",
     ]);
-    for &(p, total, other, comm, iters) in &rows {
+    for &(p, total, other, comm, rts, iters) in &rows {
         table.row(&[
             p.to_string(),
             format!("{total:.2}"),
             format!("{other:.2}"),
             format!("{comm:.2}"),
+            rts.to_string(),
             format!("{:.2}", t_ref / total * ps[0] as f64),
             format!("{:.2}", o_ref / other * ps[0] as f64),
             iters.to_string(),
         ]);
     }
     print!("{}", table.render());
+
+    // Fused-vs-split at the largest p — the latency-collapse regime where
+    // halving the AllReduce round-trips matters most.
+    let p = *ps.last().unwrap();
+    let mut s = common::settings(name, m, p);
+    s.eval_pipeline = EvalPipeline::Split;
+    let split = train(&s, &train_ds, Arc::clone(&backend), scaled_hadoop()).unwrap();
+    let &(_, fused_total, _, fused_comm, fused_rts, _) = rows.last().unwrap();
+    let evals = (split.fg_evals + split.hd_evals) as f64;
+    println!(
+        "fused vs split at p={p}: {fused_rts} vs {} reduce round-trips \
+         ({:.2} vs {:.2} rts/eval), tron comm {fused_comm:.2}s vs {:.2}s, \
+         total {fused_total:.2}s vs {:.2}s",
+        split.sim.comm_rounds(),
+        fused_rts as f64 / evals,
+        split.sim.comm_rounds() as f64 / evals,
+        split.sim.comm_secs(Step::Tron),
+        split.sim.total_secs(),
+    );
 }
 
 fn main() {

@@ -28,6 +28,10 @@
 //! 2. **Reductions walk the same tree in the same order** — [`Executor::
 //!    reduce`] uses one shared bottom-up walk, so floating-point sums are
 //!    bit-identical across executors (fp addition order never changes).
+//!    [`Executor::run_reduce`] fuses compute and reduction into ONE phase
+//!    (the last worker to finish folds the partials before anyone parks)
+//!    using that same walk, so fused and two-step results are bit-identical
+//!    too — only the number of barriers changes.
 //! 3. **Metering is per-node** — each node's wall time is measured around
 //!    its own `f` invocation (inside the worker thread for the threaded
 //!    executor) and the phase is charged the MAX across nodes, the
@@ -44,9 +48,105 @@
 //! experiments, `pool` (or `threads`) for real wall-clock.
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use super::tree::Tree;
+use crate::Result;
+
+/// Outcome of a fused compute+reduce phase: the tree-summed vector, or the
+/// FIRST failing node in node order with its error (the same reporting
+/// contract as `Cluster::try_par_compute`).
+pub type ReduceOutcome = std::result::Result<Vec<f32>, (usize, anyhow::Error)>;
+
+/// Shared state of one fused compute+reduce phase: per-node result slots,
+/// the countdown of workers still computing, and the finished outcome. The
+/// LAST worker to finish its chunk performs the tree fold right there —
+/// still inside the phase, so the pool never re-parks between the compute
+/// half and the reduction, and the threaded executor never bounces back to
+/// the coordinator thread between them.
+struct FusedPhase<'t> {
+    tree: &'t Tree,
+    /// One slot per node: (node partial or error, node compute seconds).
+    /// Workers only touch their own chunk's slots, so every lock is
+    /// uncontended; the mutexes exist to hand the slots to whichever
+    /// worker finishes last.
+    slots: Vec<Mutex<Option<(Result<Vec<f32>>, f64)>>>,
+    /// Workers that have not finished their chunk yet.
+    pending: AtomicUsize,
+    /// Set exactly once, by the finishing worker.
+    out: Mutex<Option<(ReduceOutcome, f64)>>,
+}
+
+impl<'t> FusedPhase<'t> {
+    fn new(tree: &'t Tree, p: usize, workers: usize) -> Self {
+        let mut slots = Vec::with_capacity(p);
+        slots.resize_with(p, || Mutex::new(None));
+        FusedPhase {
+            tree,
+            slots,
+            pending: AtomicUsize::new(workers),
+            out: Mutex::new(None),
+        }
+    }
+
+    fn record(&self, j: usize, r: Result<Vec<f32>>, secs: f64) {
+        *self.slots[j].lock().unwrap() = Some((r, secs));
+    }
+
+    /// Called by each worker after its chunk; the last one runs the fold.
+    fn worker_done(&self) {
+        if self.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.finish();
+        }
+    }
+
+    /// Collect every slot in node order and tree-fold the partials with
+    /// the SAME deterministic bottom-up walk as the two-step AllReduce —
+    /// that shared walk is what makes the fused path bit-identical to
+    /// compute-then-reduce. The fold itself is O(p·len) on small vectors
+    /// and deliberately NOT part of the metered compute time (the split
+    /// path's reduction is priced as communication, never compute).
+    fn finish(&self) {
+        let mut partials = Vec::with_capacity(self.slots.len());
+        let mut first_err: Option<(usize, anyhow::Error)> = None;
+        let mut max_secs = 0.0f64;
+        for (j, slot) in self.slots.iter().enumerate() {
+            let (r, secs) = slot
+                .lock()
+                .unwrap()
+                .take()
+                .expect("fused phase filled every slot");
+            max_secs = max_secs.max(secs);
+            match r {
+                Ok(v) => partials.push(v),
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some((j, e));
+                    }
+                }
+            }
+        }
+        let outcome = match first_err {
+            Some(err) => Err(err),
+            None => {
+                let len = partials[0].len();
+                for v in &partials {
+                    assert_eq!(v.len(), len, "fused reduce length mismatch");
+                }
+                Ok(reduce_sum_tree(self.tree, partials))
+            }
+        };
+        *self.out.lock().unwrap() = Some((outcome, max_secs));
+    }
+
+    fn take(self) -> (ReduceOutcome, f64) {
+        self.out
+            .into_inner()
+            .unwrap()
+            .expect("fused phase completed without an outcome")
+    }
+}
 
 /// Runs every node one after another on the calling thread.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -65,6 +165,24 @@ impl SerialExecutor {
             max_secs = max_secs.max(start.elapsed().as_secs_f64());
         }
         (out, max_secs)
+    }
+
+    /// Fused compute+reduce, serial reference: every node's flat partial
+    /// is computed (and metered) in node order, then tree-folded in place.
+    /// One "phase" — the reference semantics the parallel executors must
+    /// reproduce bit for bit.
+    pub fn run_reduce<N, F>(&self, tree: &Tree, nodes: &mut [N], f: &F) -> (ReduceOutcome, f64)
+    where
+        F: Fn(usize, &mut N) -> Result<Vec<f32>>,
+    {
+        let phase = FusedPhase::new(tree, nodes.len(), 1);
+        for (j, node) in nodes.iter_mut().enumerate() {
+            let start = std::time::Instant::now();
+            let r = f(j, node);
+            phase.record(j, r, start.elapsed().as_secs_f64());
+        }
+        phase.worker_done();
+        phase.take()
     }
 }
 
@@ -141,6 +259,39 @@ impl ThreadedExecutor {
             })
             .collect();
         (out, max_secs)
+    }
+
+    /// Fused compute+reduce on scoped worker threads: same contiguous
+    /// chunking as [`ThreadedExecutor::run`], but the LAST worker to
+    /// finish folds all partials down the tree before the scope joins —
+    /// compute and reduction share one spawn/join cycle.
+    pub fn run_reduce<N, F>(&self, tree: &Tree, nodes: &mut [N], f: &F) -> (ReduceOutcome, f64)
+    where
+        N: Send,
+        F: Fn(usize, &mut N) -> Result<Vec<f32>> + Sync,
+    {
+        let p = nodes.len();
+        let workers = self.threads.min(p).max(1);
+        if workers <= 1 {
+            return SerialExecutor.run_reduce(tree, nodes, f);
+        }
+        let chunk = p.div_ceil(workers);
+        let phase = FusedPhase::new(tree, p, nodes.chunks_mut(chunk).len());
+        std::thread::scope(|scope| {
+            for (w, node_chunk) in nodes.chunks_mut(chunk).enumerate() {
+                let first = w * chunk;
+                let phase = &phase;
+                scope.spawn(move || {
+                    for (i, node) in node_chunk.iter_mut().enumerate() {
+                        let start = std::time::Instant::now();
+                        let r = f(first + i, node);
+                        phase.record(first + i, r, start.elapsed().as_secs_f64());
+                    }
+                    phase.worker_done();
+                });
+            }
+        });
+        phase.take()
     }
 }
 
@@ -434,6 +585,49 @@ impl PooledExecutor {
             .collect();
         (out, max_secs)
     }
+
+    /// Fused compute+reduce on the persistent pool: ONE dispatch wakes the
+    /// workers, each computes its chunk's partials, and the last to finish
+    /// folds them down the tree — all before anyone re-parks. This is the
+    /// primitive that turns a TRON evaluation into a single barrier
+    /// instead of a compute phase plus separate reductions.
+    pub fn run_reduce<N, F>(&self, tree: &Tree, nodes: &mut [N], f: &F) -> (ReduceOutcome, f64)
+    where
+        N: Send,
+        F: Fn(usize, &mut N) -> Result<Vec<f32>> + Sync,
+    {
+        let p = nodes.len();
+        let workers = self.pool.threads.min(p).max(1);
+        if workers <= 1 {
+            return SerialExecutor.run_reduce(tree, nodes, f);
+        }
+        let chunk = p.div_ceil(workers);
+        let chunks: Vec<Mutex<Option<(usize, &mut [N])>>> = nodes
+            .chunks_mut(chunk)
+            .enumerate()
+            .map(|(w, nc)| Mutex::new(Some((w * chunk, nc))))
+            .collect();
+        let n_chunks = chunks.len();
+        let phase = FusedPhase::new(tree, p, n_chunks);
+        {
+            let phase = &phase;
+            let task = move |w: usize| {
+                let (first, node_chunk) = chunks[w]
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .expect("chunk claimed exactly once per phase");
+                for (i, node) in node_chunk.iter_mut().enumerate() {
+                    let start = std::time::Instant::now();
+                    let r = f(first + i, node);
+                    phase.record(first + i, r, start.elapsed().as_secs_f64());
+                }
+                phase.worker_done();
+            };
+            self.run_phase(n_chunks, &task);
+        }
+        phase.take()
+    }
 }
 
 /// The configured execution strategy for a [`super::Cluster`].
@@ -490,6 +684,27 @@ impl Executor {
             Executor::Serial(e) => e.run(nodes, f),
             Executor::Threaded(e) => e.run(nodes, f),
             Executor::Pooled(e) => e.run(nodes, f),
+        }
+    }
+
+    /// Fused compute+reduce: apply `f` to every node AND tree-sum the flat
+    /// f32 partials inside the SAME phase (for the pool: one dispatch, no
+    /// re-park between compute and reduction). Returns the reduced vector
+    /// — or the first failing node in node order — plus the MAX per-node
+    /// compute time (the fold is excluded, mirroring the split path where
+    /// the reduction is priced as communication). The fold is the shared
+    /// deterministic bottom-up walk, so the result is bit-identical to
+    /// [`Executor::run`] followed by [`Executor::reduce`] on every
+    /// executor.
+    pub fn run_reduce<N, F>(&self, tree: &Tree, nodes: &mut [N], f: &F) -> (ReduceOutcome, f64)
+    where
+        N: Send,
+        F: Fn(usize, &mut N) -> Result<Vec<f32>> + Sync,
+    {
+        match self {
+            Executor::Serial(e) => e.run_reduce(tree, nodes, f),
+            Executor::Threaded(e) => e.run_reduce(tree, nodes, f),
+            Executor::Pooled(e) => e.run_reduce(tree, nodes, f),
         }
     }
 
@@ -708,6 +923,77 @@ mod tests {
             j * 2
         });
         assert_eq!(out, vec![0, 2, 4, 6, 8]);
+    }
+
+    #[test]
+    fn run_reduce_matches_run_plus_reduce_on_every_executor() {
+        for p in [1usize, 2, 5, 8, 13] {
+            let tree = Tree::new(p, 2);
+            let partial = |j: usize| -> Vec<f32> {
+                (0..9).map(|i| ((j * 17 + i) as f32).sin()).collect()
+            };
+            // Reference: two-step compute then tree fold.
+            let two_step = {
+                let mut nodes: Vec<usize> = (0..p).collect();
+                let (parts, _) = SerialExecutor.run(&mut nodes, &|j, _n: &mut usize| partial(j));
+                reduce_sum_tree(&tree, parts)
+            };
+            for exec in [Executor::serial(), Executor::threaded(4), Executor::pooled(4)] {
+                let name = exec.name();
+                let mut nodes: Vec<usize> = (0..p).collect();
+                let (out, _) =
+                    exec.run_reduce(&tree, &mut nodes, &|j, _n: &mut usize| Ok(partial(j)));
+                let got = out.unwrap_or_else(|(j, e)| panic!("node {j}: {e}"));
+                assert_eq!(got.len(), two_step.len(), "p={p} exec={name}");
+                for (a, b) in got.iter().zip(&two_step) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "p={p} exec={name}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_reduce_mutates_every_node_and_reports_first_error_in_node_order() {
+        for exec in [Executor::serial(), Executor::threaded(3), Executor::pooled(3)] {
+            let name = exec.name();
+            let tree = Tree::new(7, 2);
+            let mut nodes = vec![0u32; 7];
+            let (out, _) = exec.run_reduce(&tree, &mut nodes, &|j, n: &mut u32| {
+                *n += 1;
+                if j >= 4 {
+                    anyhow::bail!("node {j} bad");
+                }
+                Ok(vec![j as f32])
+            });
+            let (j, e) = out.expect_err("must fail");
+            assert_eq!(j, 4, "{name}: first error must be node 4, got {j}: {e}");
+            // A synchronous phase runs every node to completion regardless.
+            assert!(nodes.iter().all(|&n| n == 1), "{name}");
+        }
+    }
+
+    #[test]
+    fn pool_run_reduce_panic_propagates_and_pool_survives() {
+        let pool = PooledExecutor::new(3);
+        let tree = Tree::new(6, 2);
+        let mut nodes = vec![0u32; 6];
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_reduce(&tree, &mut nodes, &|j, _: &mut u32| {
+                if j == 2 {
+                    panic!("fused phase worker died");
+                }
+                Ok(vec![1.0f32])
+            });
+        }));
+        assert!(caught.is_err(), "mid-fused-phase panic must propagate");
+        // The pool survived: the next fused phase completes normally.
+        let mut nodes = vec![0u32; 6];
+        let (out, _) = pool.run_reduce(&tree, &mut nodes, &|_, n: &mut u32| {
+            *n = 1;
+            Ok(vec![1.0f32])
+        });
+        assert_eq!(out.unwrap(), vec![6.0]);
+        assert!(nodes.iter().all(|&n| n == 1));
     }
 
     #[test]

@@ -19,6 +19,8 @@ pub struct SimClock {
     comm_instances: u64,
     comm_bytes: u64,
     recompute_flops: u64,
+    barriers: u64,
+    reduce_round_trips: u64,
 }
 
 impl SimClock {
@@ -30,6 +32,8 @@ impl SimClock {
             comm_instances: 0,
             comm_bytes: 0,
             recompute_flops: 0,
+            barriers: 0,
+            reduce_round_trips: 0,
         }
     }
 
@@ -42,7 +46,11 @@ impl SimClock {
     }
 
     /// `rounds` sequential tree levels, each one communication instance of
-    /// `bytes` (edges within a level run in parallel).
+    /// `bytes` (edges within a level run in parallel). This is the
+    /// low-level one-way meter (broadcast/gather legs) and feeds
+    /// [`SimClock::comm_instances`] — NOT [`SimClock::comm_rounds`], which
+    /// counts whole collectives. Price a reduce through
+    /// [`SimClock::add_reduce`] so it is counted as a round-trip.
     pub fn add_comm_rounds(&mut self, step: Step, rounds: usize, bytes: usize) {
         let secs = rounds as f64 * self.cost.instance(bytes);
         *self.comm.entry(step).or_default() += secs;
@@ -85,6 +93,37 @@ impl SimClock {
 
     pub fn comm_bytes(&self) -> u64 {
         self.comm_bytes
+    }
+
+    /// Count one global synchronization point: a dispatched compute phase
+    /// or a collective. The fused compute+reduce path is one barrier where
+    /// the split path is a compute barrier plus one per reduction — this
+    /// counter is what makes that saving observable.
+    pub fn add_barrier(&mut self) {
+        self.barriers += 1;
+    }
+
+    /// Global synchronization points so far (phases + collectives).
+    pub fn barriers(&self) -> u64 {
+        self.barriers
+    }
+
+    /// Meter one full tree-reduce round-trip (`rounds` sequential levels —
+    /// up pass + down pass — of a `bytes` buffer) and count it toward
+    /// [`SimClock::comm_rounds`]. One-way broadcast/gather metering goes
+    /// through [`SimClock::add_comm_rounds`] directly and is NOT a
+    /// round-trip.
+    pub fn add_reduce(&mut self, step: Step, rounds: usize, bytes: usize) {
+        self.add_comm_rounds(step, rounds, bytes);
+        self.reduce_round_trips += 1;
+    }
+
+    /// AllReduce round-trips issued (an up+down tree pass counts as ONE;
+    /// a zero-depth single-node tree still counts its collective). The
+    /// fused evaluation pipeline drops this from 2 to 1 per f/g
+    /// evaluation.
+    pub fn comm_rounds(&self) -> u64 {
+        self.reduce_round_trips
     }
 
     /// Charge extra FLOPs spent recomputing kernel tiles (the streaming
@@ -162,6 +201,20 @@ mod tests {
         assert!(r.contains("load"));
         assert!(!r.contains("predict"));
         assert!(!r.contains("recompute"));
+    }
+
+    #[test]
+    fn barriers_and_reduce_round_trips_count_separately() {
+        let mut c = SimClock::new(CostModel::free());
+        assert_eq!(c.barriers(), 0);
+        assert_eq!(c.comm_rounds(), 0);
+        c.add_barrier();
+        c.add_reduce(Step::Tron, 4, 64);
+        c.add_comm_rounds(Step::Tron, 2, 8); // one-way: no round-trip
+        assert_eq!(c.barriers(), 1);
+        assert_eq!(c.comm_rounds(), 1);
+        assert_eq!(c.comm_instances(), 6);
+        assert_eq!(c.comm_bytes(), 4 * 64 + 2 * 8);
     }
 
     #[test]

@@ -8,6 +8,7 @@ pub struct Tree {
     arity: usize,
     depth: usize,
     bottom_up: Vec<usize>,
+    subtree: Vec<usize>,
 }
 
 impl Tree {
@@ -22,11 +23,18 @@ impl Tree {
         // Heap numbering gives parent(j) < j, so descending id order is a
         // valid bottom-up (children-before-parents) schedule.
         let bottom_up: Vec<usize> = (1..p).rev().collect();
+        // Subtree sizes (node included), folded children-before-parents —
+        // what a gather edge from node j actually carries.
+        let mut subtree = vec![1usize; p];
+        for &j in &bottom_up {
+            subtree[(j - 1) / arity] += subtree[j];
+        }
         Tree {
             p,
             arity,
             depth,
             bottom_up,
+            subtree,
         }
     }
 
@@ -75,6 +83,25 @@ impl Tree {
     /// Level (distance from root) of node j.
     pub fn level(&self, j: usize) -> usize {
         Self::level_of(j, self.arity)
+    }
+
+    /// Number of nodes in j's subtree, j included (1 for a leaf). In a
+    /// gather, the edge j→parent carries exactly this many per-node
+    /// payloads.
+    pub fn subtree_size(&self, j: usize) -> usize {
+        self.subtree[j]
+    }
+
+    /// Largest subtree hanging from any node at `level` — the volume of
+    /// the busiest edge of that gather level (edges within a level run in
+    /// parallel, so this is what prices the level). Zero when the level is
+    /// past the tree's depth.
+    pub fn max_subtree_at_level(&self, level: usize) -> usize {
+        (0..self.p)
+            .filter(|&j| self.level(j) == level)
+            .map(|j| self.subtree[j])
+            .max()
+            .unwrap_or(0)
     }
 }
 
@@ -140,5 +167,27 @@ mod tests {
     #[should_panic(expected = "arity")]
     fn rejects_unary_tree() {
         Tree::new(4, 1);
+    }
+
+    #[test]
+    fn subtree_sizes_partition_the_tree() {
+        for (p, arity) in [(1usize, 2usize), (4, 2), (7, 2), (20, 3), (33, 4)] {
+            let t = Tree::new(p, arity);
+            assert_eq!(t.subtree_size(0), p, "root subtree is the whole tree");
+            for j in 0..p {
+                let child_sum: usize = t.children(j).iter().map(|&c| t.subtree_size(c)).sum();
+                assert_eq!(t.subtree_size(j), 1 + child_sum, "p={p} node {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn max_subtree_per_level_binary_four_nodes() {
+        // p=4, arity 2: node 1 owns {1,3}, node 2 owns {2}, node 3 is a leaf.
+        let t = Tree::new(4, 2);
+        assert_eq!(t.max_subtree_at_level(0), 4);
+        assert_eq!(t.max_subtree_at_level(1), 2);
+        assert_eq!(t.max_subtree_at_level(2), 1);
+        assert_eq!(t.max_subtree_at_level(3), 0, "past the depth");
     }
 }

@@ -135,6 +135,39 @@ impl ExecutorChoice {
     }
 }
 
+/// How the TRON evaluations of step 4 drive the cluster (the
+/// [`crate::coordinator::dist`] layer). Both pipelines are bit-identical;
+/// only the barrier/round-trip count — and hence the simulated (and real)
+/// latency — changes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvalPipeline {
+    /// One fused phase per evaluation: node partials (scalars + gradient
+    /// tiles packed into one flat buffer) are computed and tree-reduced
+    /// inside a single dispatch — one barrier, one AllReduce round-trip.
+    Fused,
+    /// The paper's literal 4a/4b/4c call structure: a compute barrier,
+    /// then separate scalar and m-vector AllReduces. Kept as the metering
+    /// reference and for before/after comparisons.
+    Split,
+}
+
+impl EvalPipeline {
+    pub fn parse(s: &str) -> Result<EvalPipeline> {
+        match s {
+            "fused" => Ok(EvalPipeline::Fused),
+            "split" => Ok(EvalPipeline::Split),
+            other => anyhow::bail!("unknown eval pipeline {other:?} (fused|split)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EvalPipeline::Fused => "fused",
+            EvalPipeline::Split => "split",
+        }
+    }
+}
+
 /// How each node stores its kernel row block C_j (the
 /// [`crate::coordinator::cstore`] layer).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -236,6 +269,10 @@ pub struct Settings {
     pub executor: ExecutorChoice,
     /// How each node stores its kernel row block C_j.
     pub c_storage: CStorage,
+    /// Fused (one barrier + one AllReduce per TRON evaluation) or split
+    /// (the paper's literal compute + 2-reduce sequence) evaluation
+    /// pipeline — bit-identical results either way.
+    pub eval_pipeline: EvalPipeline,
     /// Per-node byte budget for `CStorage::Auto` (materialize C row tiles
     /// while they fit, stream the rest).
     pub c_memory_budget: usize,
@@ -270,6 +307,7 @@ impl Default for Settings {
             },
             executor: ExecutorChoice::Serial,
             c_storage: CStorage::Materialized,
+            eval_pipeline: EvalPipeline::Fused,
             c_memory_budget: 256 << 20,
             max_iters: 300,
             tol: 1e-3,
@@ -320,6 +358,7 @@ impl Settings {
                 "backend" => self.backend = Backend::parse(v)?,
                 "executor" => self.executor = ExecutorChoice::parse(v)?,
                 "c_storage" => self.c_storage = CStorage::parse(v)?,
+                "eval_pipeline" => self.eval_pipeline = EvalPipeline::parse(v)?,
                 "c_memory_budget" => self.c_memory_budget = parse_bytes(v)?,
                 "max_iters" => {
                     self.max_iters = v.parse().map_err(|e| anyhow::anyhow!("max_iters: {e}"))?
@@ -481,6 +520,20 @@ mod tests {
         s.apply(&kv).unwrap();
         assert_eq!(s.c_storage, CStorage::Streaming);
         assert_eq!(s.c_memory_budget, 64 << 20);
+    }
+
+    #[test]
+    fn eval_pipeline_parse_and_apply() {
+        assert_eq!(EvalPipeline::parse("fused").unwrap(), EvalPipeline::Fused);
+        assert_eq!(EvalPipeline::parse("split").unwrap(), EvalPipeline::Split);
+        assert!(EvalPipeline::parse("turbo").is_err());
+        assert_eq!(EvalPipeline::Fused.name(), "fused");
+        assert_eq!(Settings::default().eval_pipeline, EvalPipeline::Fused);
+        let mut s = Settings::default();
+        let mut kv = BTreeMap::new();
+        kv.insert("eval_pipeline".to_string(), "split".to_string());
+        s.apply(&kv).unwrap();
+        assert_eq!(s.eval_pipeline, EvalPipeline::Split);
     }
 
     #[test]

@@ -7,22 +7,39 @@
 //! ```
 //!
 //! Per evaluation: β (or d) is broadcast down the tree; every node computes
-//! its row-block partials with tile ops on the compute backend; partial
-//! m-vectors and scalars are AllReduce-summed back up. The master (node 0)
+//! its row-block partials with tile ops on the compute backend; the partial
+//! scalars and m-vector come back summed up the tree. The master (node 0)
 //! then assembles f/g/Hd — all O(m) work, exactly the paper's split.
+//!
+//! Two pipelines drive the cluster, bit-identical by construction:
+//!
+//! * **Fused** (default): each node packs its two scalars and its padded
+//!   gradient tiles into ONE flat buffer (`[loss, reg, grad…]`, length
+//!   m_padded + 2) and the cluster's fused compute+reduce phase tree-sums
+//!   it inside the same dispatch — one barrier and one AllReduce
+//!   round-trip per f/g evaluation (and one per Hd). This is the
+//!   communication-round optimization Hsieh et al. argue for when latency,
+//!   not bytes, dominates.
+//! * **Split**: the paper's literal call structure — a compute barrier,
+//!   then a scalar AllReduce (4a) and an m-vector AllReduce (4b). Kept as
+//!   the metering reference; both paths fold the same f32 partials in the
+//!   same deterministic tree order, so β is bit-identical between them.
 
 use std::sync::Arc;
 
 use crate::cluster::Cluster;
-use crate::config::settings::Loss;
+use crate::config::settings::{EvalPipeline, Loss};
 use crate::metrics::Step;
 use crate::runtime::tiles::TM;
 use crate::runtime::Compute;
 use crate::Result;
 
 use super::cstore::CBlockStore;
-use super::node::{pad_m_tiles, unpad_m_tiles, WorkerNode};
+use super::node::{pad_m_tiles, unpad_m_flat, WorkerNode};
 use super::tron::Objective;
+
+/// Leading scalar slots of the fused f/g reduce buffer: `[loss, reg]`.
+const FG_SCALARS: usize = 2;
 
 /// The distributed formulation-(4) objective over a simulated cluster.
 pub struct DistProblem<'a> {
@@ -31,6 +48,8 @@ pub struct DistProblem<'a> {
     pub m: usize,
     pub lambda: f32,
     pub loss: Loss,
+    /// Fused one-phase evaluations (default) or the split reference path.
+    pub pipeline: EvalPipeline,
     /// Count of fg / hd evaluations (the 4a/4b/4c call counts of §4.4).
     pub fg_evals: usize,
     pub hd_evals: usize,
@@ -50,19 +69,28 @@ impl<'a> DistProblem<'a> {
             m,
             lambda,
             loss,
+            pipeline: EvalPipeline::Fused,
             fg_evals: 0,
             hd_evals: 0,
         }
+    }
+
+    /// Builder-style pipeline selection.
+    pub fn with_pipeline(mut self, pipeline: EvalPipeline) -> Self {
+        self.pipeline = pipeline;
+        self
     }
 
     fn col_tiles(&self) -> usize {
         self.m.div_ceil(TM).max(1)
     }
 
-    /// Node-local loss+gradient partial for one node. Returns
-    /// (loss_partial, reg_partial, grad_tiles) and refreshes the node's
-    /// cached Gauss-Newton diagonal. All C applications go through the
-    /// node's [`crate::coordinator::cstore::CBlockStore`], so the same code
+    /// Node-local loss+gradient partial for one node, emitted FLAT for the
+    /// reduce tree: `out[0]` = loss partial, `out[1]` = βᵀ(Wβ) partial,
+    /// `out[2..]` = the padded gradient (element k of ∇f at flat index
+    /// `FG_SCALARS + k`). Also refreshes the node's cached Gauss-Newton
+    /// diagonal. All C applications go through the node's
+    /// [`crate::coordinator::cstore::CBlockStore`], so the same code
     /// serves materialized and streaming storage bit-identically.
     fn node_fg(
         node: &mut WorkerNode,
@@ -71,10 +99,9 @@ impl<'a> DistProblem<'a> {
         v_tiles: &[Vec<f32>],
         beta: &[f32],
         lambda: f32,
-    ) -> Result<(f32, f32, Vec<Vec<f32>>)> {
+    ) -> Result<Vec<f32>> {
         let ct = node.cstore.col_tiles();
-        let mut loss_partial = 0.0f32;
-        let mut grad_tiles = vec![vec![0.0f32; TM]; ct];
+        let mut out = vec![0.0f32; FG_SCALARS + ct * TM];
         assert!(
             node.cstore.ready(),
             "compute_c_block must run before TRON"
@@ -84,11 +111,12 @@ impl<'a> DistProblem<'a> {
             node.row_tiles(),
             "prepare_hot must run before TRON"
         );
+        let mut loss_partial = 0.0f32;
         for i in 0..node.row_tiles() {
             if ct == 1 {
                 // Fused per-tile dispatch: one call instead of three (the
                 // streaming store computes its kernel tile once inside it).
-                let out = node.cstore.fgrad_tile(
+                let tile_out = node.cstore.fgrad_tile(
                     backend,
                     loss,
                     i,
@@ -96,11 +124,14 @@ impl<'a> DistProblem<'a> {
                     &node.y_prep[i],
                     &node.mask_prep[i],
                 )?;
-                loss_partial += out.loss;
-                for (g, v) in grad_tiles[0].iter_mut().zip(&out.vec) {
+                loss_partial += tile_out.loss;
+                for (g, v) in out[FG_SCALARS..FG_SCALARS + TM]
+                    .iter_mut()
+                    .zip(&tile_out.vec)
+                {
                     *g += v;
                 }
-                node.dcoef_tiles[i] = out.dcoef;
+                node.dcoef_tiles[i] = tile_out.dcoef;
             } else {
                 // o = Σ_j C_ij β_j
                 let mut o = vec![0.0f32; crate::runtime::tiles::TB];
@@ -114,37 +145,42 @@ impl<'a> DistProblem<'a> {
                 loss_partial += stage.loss;
                 for j in 0..ct {
                     let part = node.cstore.matvec_t_tile(backend, i, j, &stage.vec)?;
-                    for (g, v) in grad_tiles[j].iter_mut().zip(&part) {
+                    let dst = &mut out[FG_SCALARS + j * TM..FG_SCALARS + (j + 1) * TM];
+                    for (g, v) in dst.iter_mut().zip(&part) {
                         *g += v;
                     }
                 }
                 node.dcoef_tiles[i] = stage.dcoef;
             }
         }
-        // Regularizer part: this node's (Wβ) entries.
+        // Regularizer part: this node's (Wβ) entries. Flat tile layout puts
+        // gradient element k at FG_SCALARS + k directly.
         let mut reg_partial = 0.0f32;
         for (k, wv) in node.wv_entries(backend, v_tiles)? {
             reg_partial += beta[k] * wv;
-            grad_tiles[k / TM][k % TM] += lambda * wv;
+            out[FG_SCALARS + k] += lambda * wv;
         }
-        Ok((loss_partial, reg_partial, grad_tiles))
+        out[0] = loss_partial;
+        out[1] = reg_partial;
+        Ok(out)
     }
 
-    /// Node-local Hd partial using the cached diagonal.
+    /// Node-local Hd partial using the cached diagonal, emitted FLAT
+    /// (padded Hd element k at index k).
     fn node_hd(
         node: &WorkerNode,
         backend: &dyn Compute,
         v_tiles: &[Vec<f32>],
         lambda: f32,
-    ) -> Result<Vec<Vec<f32>>> {
+    ) -> Result<Vec<f32>> {
         let ct = node.cstore.col_tiles();
-        let mut hd_tiles = vec![vec![0.0f32; TM]; ct];
+        let mut out = vec![0.0f32; ct * TM];
         for i in 0..node.row_tiles() {
             if ct == 1 {
                 let part =
                     node.cstore
                         .hd_tile(backend, i, &v_tiles[0], &node.dcoef_tiles[i])?;
-                for (h, v) in hd_tiles[0].iter_mut().zip(&part) {
+                for (h, v) in out[..TM].iter_mut().zip(&part) {
                     *h += v;
                 }
             } else {
@@ -160,7 +196,8 @@ impl<'a> DistProblem<'a> {
                 }
                 for j in 0..ct {
                     let part = node.cstore.matvec_t_tile(backend, i, j, &z)?;
-                    for (h, v) in hd_tiles[j].iter_mut().zip(&part) {
+                    let dst = &mut out[j * TM..(j + 1) * TM];
+                    for (h, v) in dst.iter_mut().zip(&part) {
                         *h += v;
                     }
                 }
@@ -168,9 +205,14 @@ impl<'a> DistProblem<'a> {
         }
         // λ(Wd) entries.
         for (k, wv) in node.wv_entries(backend, v_tiles)? {
-            hd_tiles[k / TM][k % TM] += lambda * wv;
+            out[k] += lambda * wv;
         }
-        Ok(hd_tiles)
+        Ok(out)
+    }
+
+    /// Assemble f from the reduced `[loss, reg, …]` buffer head.
+    fn assemble_f(&self, loss_sum: f32, reg_sum: f32) -> f64 {
+        0.5 * self.lambda as f64 * reg_sum as f64 + loss_sum as f64
     }
 }
 
@@ -179,9 +221,10 @@ impl Objective for DistProblem<'_> {
         self.m
     }
 
-    /// Steps 4a + 4b: broadcast β; nodes compute partials; two AllReduce
-    /// instances (scalars for f, an m-vector for ∇f) — the paper's call
-    /// structure.
+    /// Steps 4a + 4b: broadcast β; nodes compute flat partials; the fused
+    /// pipeline tree-sums scalars AND gradient in the same phase (one
+    /// barrier + one AllReduce round-trip), the split pipeline replays the
+    /// paper's compute barrier + two AllReduce instances.
     fn eval_fg(&mut self, beta: &[f32]) -> Result<(f64, Vec<f32>)> {
         assert_eq!(beta.len(), self.m);
         self.fg_evals += 1;
@@ -191,32 +234,37 @@ impl Objective for DistProblem<'_> {
         let backend = Arc::clone(&self.backend);
         let loss = self.loss;
         let lambda = self.lambda;
-        let partials = self.cluster.try_par_compute(Step::Tron, |_, node| {
-            Self::node_fg(node, backend.as_ref(), loss, &v_tiles, beta, lambda)
-        })?;
-        // AllReduce 1: the two scalars (4a).
-        let scalar_partials: Vec<Vec<f32>> = partials
-            .iter()
-            .map(|(l, r, _)| vec![*l, *r])
-            .collect();
-        let scalars = self.cluster.allreduce_sum(Step::Tron, scalar_partials);
-        // AllReduce 2: the gradient m-vector (4b).
-        let grad_partials: Vec<Vec<f32>> = partials
-            .into_iter()
-            .map(|(_, _, g)| g.concat())
-            .collect();
-        let grad_padded = self.cluster.allreduce_sum(Step::Tron, grad_partials);
-        let grad_tiles: Vec<Vec<f32>> = grad_padded
-            .chunks(TM)
-            .map(|c| c.to_vec())
-            .collect();
-        let grad = unpad_m_tiles(&grad_tiles, self.m);
-        let f = 0.5 * self.lambda as f64 * scalars[1] as f64 + scalars[0] as f64;
-        Ok((f, grad))
+        match self.pipeline {
+            EvalPipeline::Fused => {
+                let reduced = self.cluster.try_par_compute_reduce(Step::Tron, |_, node| {
+                    Self::node_fg(node, backend.as_ref(), loss, &v_tiles, beta, lambda)
+                })?;
+                let f = self.assemble_f(reduced[0], reduced[1]);
+                let grad = unpad_m_flat(&reduced[FG_SCALARS..], self.m);
+                Ok((f, grad))
+            }
+            EvalPipeline::Split => {
+                let partials = self.cluster.try_par_compute(Step::Tron, |_, node| {
+                    Self::node_fg(node, backend.as_ref(), loss, &v_tiles, beta, lambda)
+                })?;
+                // AllReduce 1: the two scalars (4a).
+                let scalar_partials: Vec<Vec<f32>> =
+                    partials.iter().map(|p| vec![p[0], p[1]]).collect();
+                let scalars = self.cluster.allreduce_sum(Step::Tron, scalar_partials);
+                // AllReduce 2: the gradient m-vector (4b).
+                let grad_partials: Vec<Vec<f32>> = partials
+                    .into_iter()
+                    .map(|mut p| p.split_off(FG_SCALARS))
+                    .collect();
+                let grad_padded = self.cluster.allreduce_sum(Step::Tron, grad_partials);
+                let f = self.assemble_f(scalars[0], scalars[1]);
+                Ok((f, unpad_m_flat(&grad_padded, self.m)))
+            }
+        }
     }
 
     /// Step 4c: same sequence as the gradient with β replaced by d and the
-    /// cached D diagonal.
+    /// cached D diagonal (fused: one phase; split: barrier + AllReduce).
     fn eval_hd(&mut self, d: &[f32]) -> Result<Vec<f32>> {
         assert_eq!(d.len(), self.m);
         self.hd_evals += 1;
@@ -225,12 +273,20 @@ impl Objective for DistProblem<'_> {
             .broadcast_meter(Step::Tron, self.m * std::mem::size_of::<f32>());
         let backend = Arc::clone(&self.backend);
         let lambda = self.lambda;
-        let partials = self.cluster.try_par_compute(Step::Tron, |_, node| {
-            Self::node_hd(node, backend.as_ref(), &v_tiles, lambda)
-        })?;
-        let hd_partials: Vec<Vec<f32>> = partials.into_iter().map(|t| t.concat()).collect();
-        let hd_padded = self.cluster.allreduce_sum(Step::Tron, hd_partials);
-        let hd_tiles: Vec<Vec<f32>> = hd_padded.chunks(TM).map(|c| c.to_vec()).collect();
-        Ok(unpad_m_tiles(&hd_tiles, self.m))
+        match self.pipeline {
+            EvalPipeline::Fused => {
+                let reduced = self.cluster.try_par_compute_reduce(Step::Tron, |_, node| {
+                    Self::node_hd(node, backend.as_ref(), &v_tiles, lambda)
+                })?;
+                Ok(unpad_m_flat(&reduced, self.m))
+            }
+            EvalPipeline::Split => {
+                let partials = self.cluster.try_par_compute(Step::Tron, |_, node| {
+                    Self::node_hd(node, backend.as_ref(), &v_tiles, lambda)
+                })?;
+                let hd_padded = self.cluster.allreduce_sum(Step::Tron, partials);
+                Ok(unpad_m_flat(&hd_padded, self.m))
+            }
+        }
     }
 }

@@ -266,19 +266,26 @@ pub fn pad_m_tiles(v: &[f32], col_tiles: usize) -> Vec<Vec<f32>> {
     out
 }
 
-/// Flatten TM tiles back to an m-vector.
-pub fn unpad_m_tiles(tiles: &[Vec<f32>], m: usize) -> Vec<f32> {
-    let mut out = Vec::with_capacity(m);
-    for k in 0..m {
-        out.push(tiles[k / TM][k % TM]);
-    }
-    out
+/// Read an m-vector straight out of a FLAT padded buffer: concatenated TM
+/// tiles place element k at index k, so the only padding is the tail and
+/// no per-tile re-chunking round-trip is needed. This is the unpad for
+/// reduce buffers, which arrive flat (the per-tile inverse lives only in
+/// this module's tests, pinning the layout equivalence).
+pub fn unpad_m_flat(flat: &[f32], m: usize) -> Vec<f32> {
+    assert!(flat.len() >= m, "flat buffer shorter than m");
+    flat[..m].to_vec()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::rng::Rng;
+
+    /// Per-tile unpad (element k from tile k/TM, offset k%TM) — the shape
+    /// the hot path no longer uses; kept here to pin the flat layout.
+    fn unpad_m_tiles(tiles: &[Vec<f32>], m: usize) -> Vec<f32> {
+        (0..m).map(|k| tiles[k / TM][k % TM]).collect()
+    }
 
     #[test]
     fn feature_tiles_pad_rows_and_width() {
@@ -303,6 +310,15 @@ mod tests {
         assert_eq!(tiles[0][255], 255.0);
         assert_eq!(tiles[1][0], 256.0);
         assert_eq!(unpad_m_tiles(&tiles, 300), v);
+    }
+
+    #[test]
+    fn flat_unpad_matches_tiled_unpad() {
+        let v: Vec<f32> = (0..300).map(|i| (i as f32).sin()).collect();
+        let tiles = pad_m_tiles(&v, 2);
+        let flat = tiles.concat();
+        assert_eq!(unpad_m_flat(&flat, 300), unpad_m_tiles(&tiles, 300));
+        assert_eq!(unpad_m_flat(&flat, 300), v);
     }
 
     #[test]

@@ -150,7 +150,8 @@ pub fn train(
             basis_sel.m(),
             settings.lambda,
             settings.loss,
-        );
+        )
+        .with_pipeline(settings.eval_pipeline);
         let opts = TronOptions {
             tol: settings.tol,
             max_iters: settings.max_iters,
@@ -175,6 +176,10 @@ pub fn train(
     cluster
         .clock
         .add_recompute_flops(recomputed_tiles * kernel_tile_flops(dpad));
+    // Mirror the ledger's synchronization counters into the wall metrics
+    // so both reports can show rounds next to seconds.
+    wall.bump("barriers", cluster.clock.barriers());
+    wall.bump("comm_rounds", cluster.clock.comm_rounds());
 
     Ok(TrainOutput {
         model: TrainedModel {
@@ -279,7 +284,8 @@ pub fn train_stagewise(
             m,
             settings.lambda,
             settings.loss,
-        );
+        )
+        .with_pipeline(settings.eval_pipeline);
         let opts = TronOptions {
             tol: settings.tol,
             max_iters: settings.max_iters,
@@ -309,7 +315,7 @@ pub fn train_stagewise(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::settings::{Backend, BasisSelection, CStorage, ExecutorChoice};
+    use crate::config::settings::{Backend, BasisSelection, CStorage, EvalPipeline, ExecutorChoice};
     use crate::data::synth;
     use crate::runtime::make_backend;
 
@@ -325,6 +331,7 @@ mod tests {
             backend: Backend::Native,
             executor: ExecutorChoice::Serial,
             c_storage: CStorage::Materialized,
+            eval_pipeline: EvalPipeline::Fused,
             c_memory_budget: 256 << 20,
             max_iters: 60,
             tol: 1e-3,

@@ -34,7 +34,7 @@ fn main() {
 
 const TRAIN_FLAGS: &[&str] = &[
     "dataset", "libsvm", "ntest", "ntrain", "m", "nodes", "lambda", "sigma", "loss", "basis",
-    "backend", "exec", "c-storage", "c-memory-budget", "max-iters", "tol", "seed",
+    "backend", "exec", "c-storage", "c-memory-budget", "eval-pipeline", "max-iters", "tol", "seed",
     "kmeans-iters", "artifacts", "config", "stages", "pack", "epochs", "verbose", "cost",
 ];
 
@@ -83,6 +83,10 @@ Common flags:
                     that halves it for m > TM, or a budgeted mix —
                     bit-identical results)
   --c-memory-budget per-node byte budget for --c-storage auto (e.g. 256m)
+  --eval-pipeline   fused | split   (TRON evaluation pipeline: one fused
+                    compute+reduce phase per evaluation — one barrier, one
+                    AllReduce round-trip — or the paper's literal compute +
+                    2-reduce sequence; bit-identical results)
   --cost            free | hadoop | mpi   (simulated comm cost model)
   --stages a,b,c    stage-wise m schedule (stagewise command)
   --config FILE     key=value settings file (CLI flags override)
@@ -108,6 +112,7 @@ fn settings_from(args: &Args) -> Result<Settings> {
         ("exec", "executor"),
         ("c-storage", "c_storage"),
         ("c-memory-budget", "c_memory_budget"),
+        ("eval-pipeline", "eval_pipeline"),
         ("max-iters", "max_iters"),
         ("tol", "tol"),
         ("seed", "seed"),
@@ -166,6 +171,13 @@ fn print_run_report(out: &dkm::coordinator::TrainOutput, acc: f64, verbose: bool
         out.stats.final_gnorm
     );
     println!(
+        "comm: {} barriers, {} AllReduce round-trips, {} tree-level instances, {} bytes",
+        out.sim.barriers(),
+        out.sim.comm_rounds(),
+        out.sim.comm_instances(),
+        out.sim.comm_bytes(),
+    );
+    println!(
         "c-storage: peak {:.2} MiB of C per node (+ {:.2} MiB W-row cache), {} kernel-tile recomputes",
         out.peak_c_bytes as f64 / (1 << 20) as f64,
         out.peak_w_cache_bytes as f64 / (1 << 20) as f64,
@@ -182,7 +194,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let cost = cost_from(args)?;
     let (train_ds, test_ds) = load_data(args, &s)?;
     println!(
-        "dataset {} n={} d={} ntest={} | m={} p={} λ={} σ={} loss={} backend={:?} exec={} c-storage={}",
+        "dataset {} n={} d={} ntest={} | m={} p={} λ={} σ={} loss={} backend={:?} exec={} c-storage={} eval-pipeline={}",
         train_ds.name,
         train_ds.n(),
         train_ds.d(),
@@ -195,6 +207,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         s.backend,
         s.executor.name(),
         s.c_storage.name(),
+        s.eval_pipeline.name(),
     );
     let backend = make_backend(s.backend, &s.artifacts_dir)?;
     let out = train(&s, &train_ds, Arc::clone(&backend), cost)?;

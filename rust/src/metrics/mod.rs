@@ -113,6 +113,19 @@ impl Metrics {
         *self.counters.entry(key.to_string()).or_default() += by;
     }
 
+    /// Global synchronization points of the run (compute phases +
+    /// collectives) — mirrored from the cluster ledger by the trainer so
+    /// wall-clock reports can show rounds next to seconds.
+    pub fn barriers(&self) -> u64 {
+        self.counter("barriers")
+    }
+
+    /// AllReduce round-trips of the run (an up+down tree pass counts as
+    /// one) — mirrored from the cluster ledger by the trainer.
+    pub fn comm_rounds(&self) -> u64 {
+        self.counter("comm_rounds")
+    }
+
     pub fn counter(&self, key: &str) -> u64 {
         self.counters.get(key).copied().unwrap_or(0)
     }

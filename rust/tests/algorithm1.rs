@@ -5,7 +5,9 @@ use std::sync::Arc;
 
 use dkm::baselines::{train_linearized, train_ppacksvm, PPackOptions};
 use dkm::cluster::CostModel;
-use dkm::config::settings::{Backend, BasisSelection, CStorage, ExecutorChoice, Loss, Settings};
+use dkm::config::settings::{
+    Backend, BasisSelection, CStorage, EvalPipeline, ExecutorChoice, Loss, Settings,
+};
 use dkm::coordinator::dist::DistProblem;
 use dkm::coordinator::trainer::{build_cluster, train_stagewise};
 use dkm::coordinator::tron::Objective;
@@ -27,6 +29,7 @@ fn settings(m: usize, nodes: usize) -> Settings {
         backend: Backend::Native,
         executor: ExecutorChoice::Serial,
         c_storage: CStorage::Materialized,
+        eval_pipeline: EvalPipeline::Fused,
         c_memory_budget: 256 << 20,
         max_iters: 60,
         tol: 1e-3,

@@ -15,7 +15,7 @@ use std::sync::Arc;
 
 use dkm::cluster::CostModel;
 use dkm::config::settings::{
-    Backend, BasisSelection, CStorage, ExecutorChoice, Loss, Settings,
+    Backend, BasisSelection, CStorage, EvalPipeline, ExecutorChoice, Loss, Settings,
 };
 use dkm::coordinator::trainer::train_stagewise;
 use dkm::coordinator::{train, CBlockStore, TrainOutput, WorkerNode};
@@ -40,6 +40,7 @@ fn settings(
         backend: Backend::Native,
         executor,
         c_storage: storage,
+        eval_pipeline: EvalPipeline::Fused,
         c_memory_budget: 256 << 20,
         max_iters: 40,
         tol: 1e-3,

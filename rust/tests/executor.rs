@@ -5,11 +5,20 @@
 //! reduces in the same deterministic order under every executor. Plus the
 //! pool-specific behaviors: worker-panic propagation (with pool survival)
 //! and worker reuse across many small phases (the streaming shape).
+//!
+//! The training runs here drive TRON through the FUSED evaluation
+//! pipeline (the default): every full-training / multi-tile-m /
+//! stage-wise bit-identity assertion below is therefore also a
+//! `run_reduce` bit-identity assertion across serial, threads and pool.
+//! The raw fused-phase primitive and its failure modes are covered at the
+//! bottom; fused-vs-split equivalence lives in `rust/tests/fused_eval.rs`.
 
 use std::sync::Arc;
 
 use dkm::cluster::{Cluster, CostModel, Executor};
-use dkm::config::settings::{Backend, BasisSelection, CStorage, ExecutorChoice, Loss, Settings};
+use dkm::config::settings::{
+    Backend, BasisSelection, CStorage, EvalPipeline, ExecutorChoice, Loss, Settings,
+};
 use dkm::coordinator::trainer::train_stagewise;
 use dkm::coordinator::train;
 use dkm::data::{synth, Dataset};
@@ -29,6 +38,7 @@ fn settings(m: usize, nodes: usize, executor: ExecutorChoice) -> Settings {
         backend: Backend::Native,
         executor,
         c_storage: CStorage::Materialized,
+        eval_pipeline: EvalPipeline::Fused,
         c_memory_budget: 256 << 20,
         max_iters: 60,
         tol: 1e-3,
@@ -217,6 +227,78 @@ fn allreduce_bit_identical_under_all_executors() {
             let sb = other.allreduce_scalar(Step::Tron, scalars.clone());
             assert_eq!(sa.to_bits(), sb.to_bits(), "p={p} exec={name}");
         }
+    }
+}
+
+/// The fused compute+reduce phase is bit-identical to compute-then-reduce
+/// under every executor, for any node count (including p cut mid-chunk).
+#[test]
+fn fused_phase_bit_identical_across_executors() {
+    for p in [1usize, 3, 8, 20] {
+        let mut rng = Rng::new(40 + p as u64);
+        let data: Vec<Vec<f32>> = (0..p)
+            .map(|_| (0..33).map(|_| rng.normal_f32()).collect())
+            .collect();
+        // Reference: the split path on the serial executor.
+        let mut split = Cluster::new(data.clone(), 2, CostModel::free());
+        let parts = split.par_compute(Step::Tron, |_, n: &mut Vec<f32>| n.clone());
+        let want = split.allreduce_sum(Step::Tron, parts);
+        for exec in [Executor::serial(), Executor::threaded(4), Executor::pooled(4)] {
+            let name = exec.name();
+            let mut fused =
+                Cluster::new(data.clone(), 2, CostModel::free()).with_executor(exec);
+            let got = fused.par_compute_reduce(Step::Tron, |_, n: &mut Vec<f32>| n.clone());
+            assert_eq!(got.len(), want.len());
+            for (x, y) in got.iter().zip(&want) {
+                assert_eq!(x.to_bits(), y.to_bits(), "p={p} exec={name}");
+            }
+        }
+    }
+}
+
+/// A worker PANICKING mid-fused-phase (after some partials are already
+/// recorded) must propagate to the coordinator — and the pool must keep
+/// serving later fused phases of the same cluster.
+#[test]
+fn fused_phase_worker_panic_propagates_and_pool_survives() {
+    let mut cl =
+        Cluster::new(vec![0u32; 6], 2, CostModel::free()).with_executor(Executor::pooled(3));
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        cl.par_compute_reduce(Step::Tron, |j, _| {
+            if j == 4 {
+                panic!("worker died mid-fused-phase on node 4");
+            }
+            vec![j as f32; 8]
+        });
+    }));
+    assert!(caught.is_err(), "mid-fused-phase panic must reach the caller");
+    // Same cluster, same pool: the next fused phase completes and reduces.
+    let out = cl.par_compute_reduce(Step::Tron, |j, n| {
+        *n = j as u32 + 1;
+        vec![1.0f32]
+    });
+    assert_eq!(out, vec![6.0]);
+    assert_eq!(cl.node(5), &6);
+}
+
+/// Structured node failures inside a fused phase surface the same
+/// node-ordered error as try_par_compute, on every executor.
+#[test]
+fn fused_phase_node_failure_is_reported_in_node_order() {
+    for exec in [Executor::serial(), Executor::threaded(6), Executor::pooled(6)] {
+        let name = exec.name();
+        let mut cl = Cluster::new(vec![(); 6], 2, CostModel::free()).with_executor(exec);
+        let err = cl
+            .try_par_compute_reduce(Step::Tron, |j, _| {
+                if j >= 3 {
+                    anyhow::bail!("partial {j} corrupt")
+                }
+                Ok(vec![j as f32])
+            })
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("node 3"), "{name}: {msg}");
+        assert!(msg.contains("partial 3 corrupt"), "{name}: {msg}");
     }
 }
 

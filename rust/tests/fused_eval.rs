@@ -1,0 +1,260 @@
+//! Fused evaluation pipeline: the tentpole contract that driving every
+//! TRON evaluation through ONE fused compute+reduce phase (one barrier,
+//! one AllReduce round-trip) is BIT-IDENTICAL to the split reference
+//! pipeline (compute barrier + separate scalar and m-vector AllReduces) —
+//! across executors, C-storage modes, multi-tile m and stage-wise growth —
+//! while the metered synchronization counts drop exactly as advertised:
+//! `comm_rounds()` = fg_evals + hd_evals (split: 2·fg + hd) and the
+//! per-evaluation barrier count drops to one.
+//!
+//! Test names end in `serial_exec` / `threads_exec` / `pool_exec`; CI runs
+//! each group explicitly next to the c_storage matrix.
+
+use std::sync::Arc;
+
+use dkm::cluster::{CostModel, Tree};
+use dkm::config::settings::{
+    Backend, BasisSelection, CStorage, EvalPipeline, ExecutorChoice, Loss, Settings,
+};
+use dkm::coordinator::trainer::train_stagewise;
+use dkm::coordinator::{train, TrainOutput};
+use dkm::data::{synth, Dataset};
+use dkm::runtime::make_backend;
+
+fn settings(
+    m: usize,
+    nodes: usize,
+    executor: ExecutorChoice,
+    pipeline: EvalPipeline,
+) -> Settings {
+    Settings {
+        dataset: "covtype_like".into(),
+        m,
+        nodes,
+        lambda: 0.01,
+        sigma: 2.0,
+        loss: Loss::SqHinge,
+        basis: BasisSelection::Random,
+        backend: Backend::Native,
+        executor,
+        c_storage: CStorage::Materialized,
+        eval_pipeline: pipeline,
+        c_memory_budget: 256 << 20,
+        max_iters: 40,
+        tol: 1e-3,
+        seed: 42,
+        kmeans_iters: 2,
+        kmeans_max_m: 512,
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+fn data(n: usize, ntest: usize, seed: u64) -> (Dataset, Dataset) {
+    let mut spec = synth::spec("covtype_like");
+    spec.n_train = n;
+    spec.n_test = ntest;
+    synth::generate(&spec, seed)
+}
+
+fn assert_bit_identical(a: &TrainOutput, b: &TrainOutput, what: &str) {
+    assert_eq!(a.model.beta.len(), b.model.beta.len(), "{what}");
+    for (i, (x, y)) in a.model.beta.iter().zip(&b.model.beta).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: beta[{i}] {x} vs {y}");
+    }
+    assert_eq!(a.fg_evals, b.fg_evals, "{what}");
+    assert_eq!(a.hd_evals, b.hd_evals, "{what}");
+    assert_eq!(a.stats.iterations, b.stats.iterations, "{what}");
+    assert_eq!(
+        a.stats.final_f.to_bits(),
+        b.stats.final_f.to_bits(),
+        "{what}"
+    );
+}
+
+/// Fused vs split full training on the serial reference executor, for
+/// every C-storage mode: β bits, eval counts and the byte ledger must
+/// match exactly — only latency rounds may differ.
+#[test]
+fn fused_matches_split_all_storage_modes_serial_exec() {
+    let (tr, _) = data(1500, 200, 7);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    for storage in [
+        CStorage::Materialized,
+        CStorage::Streaming,
+        CStorage::StreamingRowbuf,
+        CStorage::Auto,
+    ] {
+        let run = |pipeline| {
+            let mut s = settings(96, 6, ExecutorChoice::Serial, pipeline);
+            s.c_storage = storage;
+            train(&s, &tr, Arc::clone(&backend), CostModel::hadoop_crude()).unwrap()
+        };
+        let fused = run(EvalPipeline::Fused);
+        let split = run(EvalPipeline::Split);
+        assert_bit_identical(&fused, &split, storage.name());
+        assert_eq!(
+            fused.sim.comm_bytes(),
+            split.sim.comm_bytes(),
+            "{}: fusion must not change the byte volume",
+            storage.name()
+        );
+    }
+}
+
+/// Fused vs split under spawn-per-phase worker threads, multi-tile m (two
+/// basis column tiles — the unfused matvec/matvec_t partial shape).
+#[test]
+fn fused_matches_split_multi_tile_m_threads_exec() {
+    let (tr, _) = data(1400, 200, 11);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let mut outs = Vec::new();
+    for pipeline in [EvalPipeline::Fused, EvalPipeline::Split] {
+        let mut s = settings(300, 5, ExecutorChoice::Threads { cap: 4 }, pipeline);
+        s.max_iters = 25;
+        outs.push(train(&s, &tr, Arc::clone(&backend), CostModel::free()).unwrap());
+    }
+    assert_bit_identical(&outs[0], &outs[1], "multi-tile threads");
+    // Multi-tile serial reference: the executor contract and the pipeline
+    // contract must compose.
+    let mut s = settings(300, 5, ExecutorChoice::Serial, EvalPipeline::Fused);
+    s.max_iters = 25;
+    let serial = train(&s, &tr, Arc::clone(&backend), CostModel::free()).unwrap();
+    assert_bit_identical(&outs[0], &serial, "fused threads vs fused serial");
+}
+
+/// Fused vs split on the persistent pool (the executor whose re-park the
+/// fusion eliminates), plus stage-wise growth riding the fused path.
+#[test]
+fn fused_matches_split_and_stagewise_pool_exec() {
+    let (tr, _) = data(1300, 150, 17);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let fused = train(
+        &settings(96, 8, ExecutorChoice::Pool { cap: 4 }, EvalPipeline::Fused),
+        &tr,
+        Arc::clone(&backend),
+        CostModel::hadoop_crude(),
+    )
+    .unwrap();
+    let split = train(
+        &settings(96, 8, ExecutorChoice::Pool { cap: 4 }, EvalPipeline::Split),
+        &tr,
+        Arc::clone(&backend),
+        CostModel::hadoop_crude(),
+    )
+    .unwrap();
+    assert_bit_identical(&fused, &split, "pool");
+
+    // Stage-wise growth (dirty-column recompute, warm-started β): the
+    // fused pipeline on the pool must match the split pipeline serially.
+    let stages = [32usize, 96, 192];
+    let mut sf = settings(32, 4, ExecutorChoice::Pool { cap: 4 }, EvalPipeline::Fused);
+    sf.max_iters = 30;
+    let mut ss = settings(32, 4, ExecutorChoice::Serial, EvalPipeline::Split);
+    ss.max_iters = 30;
+    let fused_stages =
+        train_stagewise(&sf, &tr, Arc::clone(&backend), CostModel::free(), &stages).unwrap();
+    let split_stages =
+        train_stagewise(&ss, &tr, Arc::clone(&backend), CostModel::free(), &stages).unwrap();
+    assert_eq!(fused_stages.len(), split_stages.len());
+    for (stage, (a, b)) in fused_stages.iter().zip(&split_stages).enumerate() {
+        assert_eq!(a.m, b.m, "stage {stage}");
+        assert_eq!(a.stats.iterations, b.stats.iterations, "stage {stage}");
+        for (i, (x, y)) in a.model.beta.iter().zip(&b.model.beta).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "stage {stage} beta[{i}]");
+        }
+    }
+}
+
+/// The metering acceptance criterion: on the fused path every f/g AND
+/// every Hd evaluation costs exactly ONE barrier and ONE AllReduce
+/// round-trip — comm_rounds() == fg + hd — where the split path pays two
+/// round-trips per f/g (comm_rounds() == 2·fg + hd) and a barrier per
+/// collective. Byte volume is identical; only latency rounds drop.
+#[test]
+fn fused_metering_drops_rounds_and_barriers_serial_exec() {
+    let (tr, _) = data(1200, 150, 23);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let p = 6;
+    let lat = CostModel {
+        latency_s: 0.01,
+        per_byte_s: 0.0,
+    };
+    let fused = train(
+        &settings(96, p, ExecutorChoice::Serial, EvalPipeline::Fused),
+        &tr,
+        Arc::clone(&backend),
+        lat,
+    )
+    .unwrap();
+    let split = train(
+        &settings(96, p, ExecutorChoice::Serial, EvalPipeline::Split),
+        &tr,
+        Arc::clone(&backend),
+        lat,
+    )
+    .unwrap();
+    let (fg, hd) = (fused.fg_evals as u64, fused.hd_evals as u64);
+    assert_eq!(split.fg_evals as u64, fg, "same trajectory");
+    assert!(fg > 0 && hd > 0);
+
+    // Round-trips: exactly one per evaluation on the fused path (the
+    // random-basis run issues no other collectives).
+    assert_eq!(fused.sim.comm_rounds(), fg + hd);
+    assert_eq!(split.sim.comm_rounds(), 2 * fg + hd);
+    // Barriers: fused saves the 2 extra sync points per f/g (scalar +
+    // gradient AllReduce) and 1 per Hd (its AllReduce).
+    assert_eq!(
+        split.sim.barriers() - fused.sim.barriers(),
+        2 * fg + hd,
+        "fused {} vs split {}",
+        fused.sim.barriers(),
+        split.sim.barriers()
+    );
+    // The wall-clock metrics mirror the ledger counters.
+    assert_eq!(fused.wall.comm_rounds(), fused.sim.comm_rounds());
+    assert_eq!(fused.wall.barriers(), fused.sim.barriers());
+
+    // Same bytes through the tree; the saving is pure latency: with a
+    // per-byte-free model the split path pays exactly 2·depth extra
+    // latency rounds per f/g evaluation.
+    assert_eq!(fused.sim.comm_bytes(), split.sim.comm_bytes());
+    let depth = Tree::new(p, 2).depth() as f64;
+    let fused_tron = fused.sim.comm_secs(dkm::metrics::Step::Tron);
+    let split_tron = split.sim.comm_secs(dkm::metrics::Step::Tron);
+    let want_saving = fg as f64 * 2.0 * depth * 0.01;
+    assert!(
+        (split_tron - fused_tron - want_saving).abs() < 1e-9,
+        "fused {fused_tron} split {split_tron} want saving {want_saving}"
+    );
+    // And the split path's compute seconds describe the same work: the
+    // fused phase meters compute identically (max over nodes, fold
+    // excluded), so both totals are the same order — not a bit-compare
+    // (they are measured wall times), but both strictly positive.
+    assert!(fused.sim.compute_secs(dkm::metrics::Step::Tron) > 0.0);
+    assert!(split.sim.compute_secs(dkm::metrics::Step::Tron) > 0.0);
+}
+
+/// Same metering law under the pool executor with streaming storage — the
+/// combination the fusion was built for (many small dispatches, workers
+/// never re-park between compute and reduce).
+#[test]
+fn fused_metering_drops_rounds_streaming_pool_exec() {
+    let (tr, _) = data(900, 100, 29);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let run = |pipeline| {
+        let mut s = settings(64, 4, ExecutorChoice::Pool { cap: 3 }, pipeline);
+        s.c_storage = CStorage::StreamingRowbuf;
+        train(&s, &tr, Arc::clone(&backend), CostModel::hadoop_crude()).unwrap()
+    };
+    let fused = run(EvalPipeline::Fused);
+    let split = run(EvalPipeline::Split);
+    assert_bit_identical(&fused, &split, "streaming pool");
+    let (fg, hd) = (fused.fg_evals as u64, fused.hd_evals as u64);
+    assert_eq!(fused.sim.comm_rounds(), fg + hd);
+    assert_eq!(split.sim.comm_rounds(), 2 * fg + hd);
+    assert_eq!(fused.sim.comm_bytes(), split.sim.comm_bytes());
+    assert!(
+        fused.sim.comm_secs(dkm::metrics::Step::Tron)
+            < split.sim.comm_secs(dkm::metrics::Step::Tron)
+    );
+}

@@ -241,6 +241,7 @@ fn end_to_end_training_pjrt_equals_native() {
         backend: Backend::Pjrt,
         executor: ExecutorChoice::Serial,
         c_storage: dkm::config::settings::CStorage::Materialized,
+        eval_pipeline: dkm::config::settings::EvalPipeline::Fused,
         c_memory_budget: 256 << 20,
         max_iters: 40,
         tol: 1e-3,
