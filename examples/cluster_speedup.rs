@@ -1,7 +1,8 @@
 //! Parallel speed-up on the simulated cluster (the Fig-2 experiment in
-//! miniature): sweep the node count p, report simulated Total time and
-//! Other (non-TRON) time, and show the latency-accumulation effect that
-//! flattens Covtype's total-time speed-up on a crude AllReduce.
+//! miniature): sweep the node count p — one `Session` per p, solved once —
+//! report simulated Total time and Other (non-TRON) time, and show the
+//! latency-accumulation effect that flattens Covtype's total-time speed-up
+//! on a crude AllReduce.
 //!
 //! Run: cargo run --release --example cluster_speedup
 
@@ -9,7 +10,7 @@ use std::sync::Arc;
 
 use dkm::cluster::CostModel;
 use dkm::config::settings::{Backend, Settings};
-use dkm::coordinator::train;
+use dkm::coordinator::Session;
 use dkm::data::synth;
 use dkm::metrics::{Step, Table};
 use dkm::runtime::make_backend;
@@ -30,17 +31,18 @@ fn main() -> dkm::Result<()> {
             max_iters: 100,
             ..Settings::default().with_dataset_defaults("covtype_like")
         };
-        let out = train(
+        let mut session = Session::build(
             &settings,
             &train_ds,
             Arc::clone(&backend),
             CostModel::hadoop_crude(),
         )?;
+        let solve = session.solve()?;
         rows.push((
             p,
-            out.sim.total_secs(),
-            out.sim.other_secs(),
-            out.sim.comm_secs(Step::Tron),
+            solve.sim.total_secs(),
+            solve.sim.other_secs(),
+            solve.sim.comm_secs(Step::Tron),
         ));
     }
     let (_, t1, o1, _) = rows[0];

@@ -1,6 +1,7 @@
-//! Quickstart: train a Nyström kernel SVM (formulation (4)) on a small
-//! synthetic dataset with the full three-layer stack (PJRT artifacts if
-//! available, native fallback otherwise) and print the accuracy.
+//! Quickstart: drive one stateful `Session` end to end — build the
+//! sharded cluster once, solve (Algorithm 1's TRON), score the test set
+//! through the distributed metered predict path, then warm re-solve the
+//! SAME session at a second λ without recomputing the kernel blocks.
 //!
 //! Run: cargo run --release --example quickstart
 
@@ -8,8 +9,9 @@ use std::sync::Arc;
 
 use dkm::cluster::CostModel;
 use dkm::config::settings::{Backend, Settings};
-use dkm::coordinator::train;
+use dkm::coordinator::Session;
 use dkm::data::synth;
+use dkm::metrics::Step;
 use dkm::runtime::make_backend;
 
 fn main() -> dkm::Result<()> {
@@ -45,23 +47,52 @@ fn main() -> dkm::Result<()> {
     };
     println!("backend: {}", backend.name());
 
-    // 4. Train (Algorithm 1) and evaluate.
-    let out = train(&settings, &train_ds, Arc::clone(&backend), CostModel::hadoop_crude())?;
-    let acc = out.model.accuracy(backend.as_ref(), &test_ds)?;
+    // 4. Build the session (shard + basis + kernel blocks) and solve.
+    let mut session = Session::build(
+        &settings,
+        &train_ds,
+        Arc::clone(&backend),
+        CostModel::hadoop_crude(),
+    )?;
+    let solve = session.solve()?;
+    // Scoring is distributed over the live cluster and metered as its own
+    // `predict` step in the ledgers below.
+    let acc = session.accuracy(&test_ds)?;
 
     println!(
         "trained m={} in {} TRON iterations ({} f/g evals, {} Hd evals)",
-        settings.m,
-        out.stats.iterations,
-        out.fg_evals,
-        out.hd_evals
+        session.m(),
+        solve.stats.iterations,
+        solve.fg_evals,
+        solve.hd_evals
     );
     println!(
         "objective: {:.2} -> {:.2}",
-        out.stats.f_history.first().unwrap(),
-        out.stats.final_f
+        solve.stats.f_history.first().unwrap(),
+        solve.stats.final_f
     );
     println!("test accuracy: {acc:.4}");
-    println!("\nsimulated 8-node ledger:\n{}", out.sim.report());
+
+    // 5. The session advantage: re-solve at a different λ on the SAME
+    //    cluster — no resharding, no kernel recomputation, β warm-started.
+    session.set_lambda(settings.lambda * 0.1)?;
+    let resolve = session.solve()?;
+    let acc2 = session.accuracy(&test_ds)?;
+    println!(
+        "warm re-solve at λ={}: {} iterations ({:.3}s), accuracy {acc2:.4}",
+        session.lambda(),
+        resolve.stats.iterations,
+        resolve.solve_wall_secs
+    );
+
+    println!("\nsimulated 8-node ledger (both solves + prediction):");
+    print!("{}", session.sim().report());
+    println!(
+        "predict wall: {:.3}s (one executor phase per batch); session totals: \
+         {} barriers, {} AllReduce round-trips",
+        session.wall().wall_secs(Step::Predict),
+        session.sim().barriers(),
+        session.sim().comm_rounds()
+    );
     Ok(())
 }

@@ -124,31 +124,45 @@ pub fn select_kmeans(
     })
 }
 
-/// The paper's adaptive policy.
-pub fn select(
+/// Resolve the configured selection policy at an explicit basis size
+/// (`Auto` is the paper's size-adaptive rule, so it needs the m it will
+/// actually select — stage-wise callers pass the stage size).
+pub fn method_for(settings: &Settings, m: usize) -> BasisSelection {
+    match settings.basis {
+        BasisSelection::Auto => {
+            if m <= settings.kmeans_max_m {
+                BasisSelection::KMeans
+            } else {
+                BasisSelection::Random
+            }
+        }
+        other => other,
+    }
+}
+
+/// Select an m-point basis by the CONFIGURED method (`settings.basis`,
+/// resolved at this m). This is the single selection entry point:
+/// `Session::build` passes `settings.m` (the stage-wise path sets that to
+/// the first stage's size via `growth_settings`).
+pub fn select_for_m(
     cluster: &mut Cluster<WorkerNode>,
     backend: &Arc<dyn Compute>,
     settings: &Settings,
+    m: usize,
     d: usize,
     dpad: usize,
 ) -> Result<Basis> {
-    let use_kmeans = match settings.basis {
-        BasisSelection::Random => false,
-        BasisSelection::KMeans => true,
-        BasisSelection::Auto => settings.m <= settings.kmeans_max_m,
-    };
-    if use_kmeans {
-        select_kmeans(
+    match method_for(settings, m) {
+        BasisSelection::KMeans => select_kmeans(
             cluster,
             backend,
-            settings.m,
+            m,
             settings.kmeans_iters,
             d,
             dpad,
             settings.seed,
-        )
-    } else {
-        select_random(cluster, settings.m, d, dpad, settings.seed)
+        ),
+        _ => select_random(cluster, m, d, dpad, settings.seed),
     }
 }
 

@@ -12,19 +12,27 @@
 //!   the master.
 //! * [`basis`] — basis selection: random (paper's large-m default),
 //!   distributed K-means (small m), and the auto policy of §3.2.
-//! * [`trainer`] — the end-to-end Algorithm-1 driver + stage-wise basis
-//!   growth (§3, "Stage-wise addition of basis points").
-//! * [`predict`] — distributed test-set scoring with the trained model.
+//! * [`session`] — the stateful `Session` handle: ONE owner of the
+//!   cluster/backend/basis/β that amortizes setup across solves, stage-wise
+//!   growth, λ/loss re-solves and distributed prediction.
+//! * [`trainer`] — the one-shot entry points (`train`, `train_stagewise`),
+//!   thin wrappers over a `Session`, plus the `TrainedModel` bundle.
+//! * [`model_io`] — `TrainedModel` persistence (save/load, bit-exact).
+//! * [`predict`] — serial test-set scoring with a trained model snapshot
+//!   (cluster-resident sessions score through `Session::predict`).
 
 pub mod basis;
 pub mod cstore;
 pub mod dist;
+pub mod model_io;
 pub mod node;
 pub mod predict;
+pub mod session;
 pub mod trainer;
 pub mod tron;
 
 pub use cstore::{make_store, CBlockStore};
 pub use node::WorkerNode;
-pub use trainer::{train, TrainOutput, TrainedModel};
+pub use session::{growth_settings, Session, Solve};
+pub use trainer::{train, train_stagewise, StageOutput, TrainOutput, TrainedModel};
 pub use tron::{TronOptions, TronStats};

@@ -1,0 +1,247 @@
+//! Model persistence: serialize a [`TrainedModel`] (basis, β, γ, loss) so
+//! a training session's snapshot can be shipped to a serving process and
+//! loaded without the training data or cluster.
+//!
+//! The format is a dependency-free little-endian binary:
+//!
+//! ```text
+//! magic   8 bytes  b"DKMMODL1"
+//! loss    1 byte   0 = sqhinge, 1 = logistic, 2 = squared
+//! gamma   4 bytes  f32 LE
+//! m       8 bytes  u64 LE (basis rows)
+//! d       8 bytes  u64 LE (feature width)
+//! basis   m·d·4    f32 LE, row-major
+//! beta    m·4      f32 LE
+//! ```
+//!
+//! f32 bits round-trip exactly (`to_le_bytes`/`from_le_bytes`), so a
+//! loaded model predicts BIT-IDENTICALLY to the one that was saved —
+//! asserted by the tests here and in `rust/tests/session.rs`.
+
+use std::path::Path;
+
+use crate::config::settings::Loss;
+use crate::linalg::Mat;
+use crate::Result;
+
+use super::trainer::TrainedModel;
+
+const MAGIC: &[u8; 8] = b"DKMMODL1";
+
+fn loss_tag(loss: Loss) -> u8 {
+    match loss {
+        Loss::SqHinge => 0,
+        Loss::Logistic => 1,
+        Loss::Squared => 2,
+    }
+}
+
+fn loss_from_tag(tag: u8) -> Result<Loss> {
+    match tag {
+        0 => Ok(Loss::SqHinge),
+        1 => Ok(Loss::Logistic),
+        2 => Ok(Loss::Squared),
+        other => anyhow::bail!("unknown loss tag {other} in model file"),
+    }
+}
+
+/// Serialize `model` to `path` (overwrites).
+pub fn save(model: &TrainedModel, path: impl AsRef<Path>) -> Result<()> {
+    let m = model.basis.rows();
+    let d = model.basis.cols();
+    anyhow::ensure!(
+        model.beta.len() == m,
+        "model has {} coefficients for {} basis rows",
+        model.beta.len(),
+        m
+    );
+    let mut buf = Vec::with_capacity(8 + 1 + 4 + 16 + 4 * (m * d + m));
+    buf.extend_from_slice(MAGIC);
+    buf.push(loss_tag(model.loss));
+    buf.extend_from_slice(&model.gamma.to_le_bytes());
+    buf.extend_from_slice(&(m as u64).to_le_bytes());
+    buf.extend_from_slice(&(d as u64).to_le_bytes());
+    for &v in model.basis.as_slice() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    for &v in &model.beta {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path.as_ref(), &buf)
+        .map_err(|e| anyhow::anyhow!("write {}: {e}", path.as_ref().display()))
+}
+
+/// Bounds-checked sequential reader over the file bytes.
+struct Reader<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.off + n <= self.buf.len(),
+            "model file truncated at byte {} (need {} more)",
+            self.off,
+            n
+        );
+        let out = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+}
+
+/// Load a model previously written by [`save`].
+pub fn load(path: impl AsRef<Path>) -> Result<TrainedModel> {
+    let path = path.as_ref();
+    let buf =
+        std::fs::read(path).map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+    let mut r = Reader { buf: &buf, off: 0 };
+    anyhow::ensure!(
+        r.take(8)? == MAGIC,
+        "{} is not a DKM model file (bad magic)",
+        path.display()
+    );
+    let loss = loss_from_tag(r.u8()?)?;
+    let gamma = r.f32()?;
+    let m = r.u64()? as usize;
+    let d = r.u64()? as usize;
+    // Guard against a corrupt header asking for an absurd allocation.
+    let want = m
+        .checked_mul(d)
+        .and_then(|md| md.checked_add(m))
+        .and_then(|f| f.checked_mul(4))
+        .ok_or_else(|| anyhow::anyhow!("model header overflows (m={m}, d={d})"))?;
+    anyhow::ensure!(
+        r.off + want == buf.len(),
+        "model file size mismatch: header says m={m}, d={d} ({} payload bytes) but {} remain",
+        want,
+        buf.len() - r.off
+    );
+    // The exact-size check above already bounds the payload; decode it in
+    // bulk rather than one bounds-checked read per element, and split the
+    // buffer in place rather than copying the halves.
+    let mut basis_data: Vec<f32> = buf[r.off..]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let beta = basis_data.split_off(m * d);
+    Ok(TrainedModel {
+        basis: Mat::from_vec(m, d, basis_data),
+        beta,
+        gamma,
+        loss,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn sample_model(loss: Loss) -> TrainedModel {
+        let mut rng = Rng::new(17);
+        let m = 40;
+        let d = 9;
+        TrainedModel {
+            basis: Mat::from_fn(m, d, |_, _| rng.normal_f32()),
+            beta: (0..m).map(|_| 0.1 * rng.normal_f32()).collect(),
+            gamma: 0.37,
+            loss,
+        }
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("dkm_model_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn round_trip_is_bit_exact_for_every_loss() {
+        for loss in [Loss::SqHinge, Loss::Logistic, Loss::Squared] {
+            let model = sample_model(loss);
+            let path = tmp(&format!("rt_{}.dkm", loss.name()));
+            model.save(&path).unwrap();
+            let back = TrainedModel::load(&path).unwrap();
+            assert_eq!(back.loss, loss);
+            assert_eq!(back.gamma.to_bits(), model.gamma.to_bits());
+            assert_eq!(back.basis.rows(), model.basis.rows());
+            assert_eq!(back.basis.cols(), model.basis.cols());
+            for (a, b) in back.basis.as_slice().iter().zip(model.basis.as_slice()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            for (a, b) in back.beta.iter().zip(&model.beta) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            std::fs::remove_file(path).ok();
+        }
+    }
+
+    #[test]
+    fn loaded_model_predicts_bit_identically() {
+        let model = sample_model(Loss::SqHinge);
+        let path = tmp("predict.dkm");
+        model.save(&path).unwrap();
+        let back = TrainedModel::load(&path).unwrap();
+        let mut rng = Rng::new(3);
+        let x = Mat::from_fn(33, model.basis.cols(), |_, _| rng.normal_f32());
+        let backend = crate::runtime::backend::NativeCompute::new();
+        let a = model.predict(&backend, &x).unwrap();
+        let b = back.predict(&backend, &x).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic_truncation_and_size_mismatch() {
+        let model = sample_model(Loss::Squared);
+        let path = tmp("corrupt.dkm");
+        model.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+
+        let truncated = tmp("truncated.dkm");
+        std::fs::write(&truncated, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(load(&truncated).is_err());
+
+        let grown = tmp("grown.dkm");
+        let mut extra = bytes.clone();
+        extra.extend_from_slice(&[0u8; 4]);
+        std::fs::write(&grown, &extra).unwrap();
+        assert!(load(&grown).is_err());
+
+        bytes[0] = b'X';
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("magic"), "{err:#}");
+        for p in [path, truncated, grown] {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn save_rejects_inconsistent_model() {
+        let mut model = sample_model(Loss::SqHinge);
+        model.beta.pop();
+        assert!(save(&model, tmp("bad.dkm")).is_err());
+    }
+}

@@ -1,6 +1,14 @@
 //! Test-set scoring with a trained formulation-(4) model:
 //! o(x) = Σ_k β_k k(x, z̄_k), evaluated with the fused predict tile module
 //! (kernel block + matvec in one dispatch).
+//!
+//! [`score_rows`] is the shared per-shard scoring loop: the serial
+//! [`predict`] entry point runs it over the whole batch on the caller's
+//! thread, while [`super::session::Session::predict`] re-shards the batch
+//! over the live cluster and runs the SAME loop per node in one metered
+//! executor phase. Each row's score depends only on its own features
+//! (accumulated over the basis tiles in a fixed order), so any row
+//! partition scores bit-identically to any other.
 
 use crate::linalg::Mat;
 use crate::runtime::tiles::{TB, TM};
@@ -10,22 +18,29 @@ use crate::Result;
 use super::node::{pad_feature_tiles, pad_m_tiles};
 use super::trainer::TrainedModel;
 
-/// Decision values for every row of `x`.
-pub fn predict(backend: &dyn Compute, model: &TrainedModel, x: &Mat) -> Result<Vec<f32>> {
-    let dpad = backend.pad_d(model.basis.cols().max(x.cols()))?;
-    let z_tiles = super::basis::tiles_of(&model.basis, dpad);
-    let col_tiles = model.beta.len().div_ceil(TM).max(1);
-    assert_eq!(z_tiles.len(), col_tiles);
-    let beta_tiles = pad_m_tiles(&model.beta, col_tiles);
-    let x_tiles = pad_feature_tiles(x, dpad);
+/// Decision values for every row of `x` against TM×dpad padded basis tiles
+/// and TM-padded β tiles: one fused `predict_block` dispatch per
+/// (row tile × basis tile), accumulated in basis-tile order.
+pub fn score_rows(
+    backend: &dyn Compute,
+    x: &Mat,
+    z_tiles: &[Vec<f32>],
+    beta_tiles: &[Vec<f32>],
+    gamma: f32,
+    dpad: usize,
+) -> Result<Vec<f32>> {
     let n = x.rows();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let x_tiles = pad_feature_tiles(x, dpad);
     let mut scores = Vec::with_capacity(n);
     for (t, x_tile) in x_tiles.iter().enumerate() {
         let mut acc = vec![0.0f32; TB];
         for (j, z_tile) in z_tiles.iter().enumerate() {
             // β padding entries are zero, so the kernel values computed
             // against zero-padding basis rows contribute nothing.
-            let part = backend.predict_block(x_tile, z_tile, model.gamma, &beta_tiles[j], dpad)?;
+            let part = backend.predict_block(x_tile, z_tile, gamma, &beta_tiles[j], dpad)?;
             for (a, b) in acc.iter_mut().zip(&part) {
                 *a += b;
             }
@@ -34,6 +49,16 @@ pub fn predict(backend: &dyn Compute, model: &TrainedModel, x: &Mat) -> Result<V
         scores.extend_from_slice(&acc[..live]);
     }
     Ok(scores)
+}
+
+/// Decision values for every row of `x` (serial coordinator loop).
+pub fn predict(backend: &dyn Compute, model: &TrainedModel, x: &Mat) -> Result<Vec<f32>> {
+    let dpad = backend.pad_d(model.basis.cols().max(x.cols()))?;
+    let z_tiles = super::basis::tiles_of(&model.basis, dpad);
+    let col_tiles = model.beta.len().div_ceil(TM).max(1);
+    assert_eq!(z_tiles.len(), col_tiles);
+    let beta_tiles = pad_m_tiles(&model.beta, col_tiles);
+    score_rows(backend, x, &z_tiles, &beta_tiles, model.gamma, dpad)
 }
 
 #[cfg(test)]

@@ -1,0 +1,660 @@
+//! The stateful `Session` API: one handle that owns the sharded cluster,
+//! the compute backend, the current basis and β, and the run's metrics —
+//! built ONCE and then driven through as many solves, basis growths,
+//! hyper-parameter re-solves and prediction batches as the caller wants.
+//!
+//! The paper's headline advantages — cheap stage-wise addition of basis
+//! points (§3) and a distributed part that is simple to drive — are
+//! amortization arguments: the expensive state (data shards, the C row
+//! blocks, prepared operands, the worker pool) survives across solves.
+//! The one-shot [`super::trainer::train`] / `train_stagewise` entry points
+//! are thin wrappers over this type; block-solver systems in the same
+//! space (Hsieh et al., Tu et al.) expose the same shape of handle.
+//!
+//! Lifecycle:
+//!
+//! ```text
+//! Session::build(settings, &train, backend, cost)   // shard + basis + C
+//!   .solve()?                                       // TRON from current β
+//!   .grow_basis(m)?                                 // §3: dirty-tile C update, β zero-extended
+//!   .set_lambda(λ) / .set_loss(loss) / .reset_beta()// re-solve on the SAME C
+//!   .predict(&x)? / .accuracy(&test)?               // distributed, metered scoring
+//!   .model()                                        // snapshot for serving (save/load)
+//! ```
+//!
+//! Prediction is re-sharded over the SAME cluster and runs as ONE executor
+//! phase per batch (the fused `predict_block` tile op per node), metered
+//! under [`Step::Predict`] on both the wall [`Metrics`] and the simulated
+//! [`SimClock`] — the serving path the ROADMAP's live-cluster north star
+//! needs, instead of the serial coordinator loop in [`super::predict`].
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::cluster::{Cluster, CostModel, SimClock};
+use crate::config::settings::{BasisSelection, Loss, Settings};
+use crate::data::{shard_rows, Dataset};
+use crate::linalg::Mat;
+use crate::metrics::{Metrics, Step};
+use crate::runtime::tiles::TM;
+use crate::runtime::Compute;
+use crate::Result;
+
+use super::basis::{self, Basis};
+use super::cstore::CBlockStore;
+use super::dist::DistProblem;
+use super::node::{pad_m_tiles, WorkerNode};
+use super::predict::score_rows;
+use super::trainer::{build_cluster, TrainOutput, TrainedModel};
+use super::tron::{self, TronOptions, TronStats};
+
+/// FLOPs of one RBF kernel-tile computation at padded width `dpad` (the
+/// 2·TB·TM·D inner-product count the micro bench uses).
+fn kernel_tile_flops(dpad: usize) -> u64 {
+    2 * (crate::runtime::tiles::TB * TM * dpad) as u64
+}
+
+/// Report of one [`Session::solve`] call: the TRON statistics of THIS
+/// solve plus a snapshot of the session's cumulative ledgers.
+#[derive(Clone)]
+pub struct Solve {
+    pub stats: TronStats,
+    /// f/g and Hd evaluation counts of this solve (4a/4b/4c calls).
+    pub fg_evals: usize,
+    pub hd_evals: usize,
+    /// Wall seconds this solve took (TRON only; build/grow are metered on
+    /// the session's cumulative wall clock).
+    pub solve_wall_secs: f64,
+    /// Cumulative session wall clock (every step so far).
+    pub wall: Metrics,
+    /// Cumulative simulated p-node ledger.
+    pub sim: SimClock,
+    /// Peak C-block bytes held by any node so far (the `--c-storage` dial).
+    pub peak_c_bytes: usize,
+    /// Peak bytes of the streamed-row W-share cache on any node.
+    pub peak_w_cache_bytes: usize,
+    /// Cumulative kernel-tile recomputations across all nodes (streaming
+    /// overhead; charged to the sim ledger as FLOPs).
+    pub recomputed_tiles: u64,
+}
+
+/// A live training/serving session over the simulated cluster.
+pub struct Session {
+    settings: Settings,
+    backend: Arc<dyn Compute>,
+    cluster: Cluster<WorkerNode>,
+    basis: Basis,
+    beta: Vec<f32>,
+    wall: Metrics,
+    /// Unpadded feature width of the training data.
+    d: usize,
+    /// Padded feature width in use (fixed at build).
+    dpad: usize,
+    /// Kernel γ = 1/(2σ²), fixed at build (σ shapes C, which is resident).
+    gamma: f32,
+    /// The loss the CURRENT β was solved under — [`Session::model`] stamps
+    /// this, not the configured-for-next-solve `settings.loss`, so a
+    /// snapshot taken between `set_loss` and the next solve is not
+    /// mislabeled.
+    solved_loss: Loss,
+    fg_evals: usize,
+    hd_evals: usize,
+    /// Recompute tiles already charged to the ledger as FLOPs.
+    charged_tiles: u64,
+    /// Ledger counters already mirrored into the wall metrics.
+    mirrored_barriers: u64,
+    mirrored_rounds: u64,
+    /// Set when a growth's C-column install failed part-way: the nodes'
+    /// kernel state is inconsistent with the basis, so solve/predict/grow
+    /// refuse to run rather than silently use stale C blocks.
+    poisoned: bool,
+}
+
+impl Session {
+    /// Algorithm-1 steps 1–3: shard the data over `settings.nodes` workers
+    /// (with the configured executor and C-storage mode), select the basis
+    /// by the CONFIGURED method (`settings.basis`, resolved at
+    /// `settings.m`), install W shares, and compute the C row blocks.
+    /// β starts at zero; no TRON runs until [`Session::solve`].
+    pub fn build(
+        settings: &Settings,
+        train_ds: &Dataset,
+        backend: Arc<dyn Compute>,
+        cost: CostModel,
+    ) -> Result<Session> {
+        settings.validate()?;
+        let mut wall = Metrics::new();
+        let dpad = backend.pad_d(train_ds.d())?;
+
+        // Step 1: data loading / sharding.
+        let mut cluster = wall.time(Step::Load, || {
+            build_cluster(train_ds, settings.nodes, dpad, cost)
+        });
+        cluster.set_executor(settings.executor.to_executor());
+        for node in cluster.nodes_mut() {
+            node.set_c_storage(settings.c_storage, settings.c_memory_budget);
+        }
+        // Simulated: each node ingests its n/p shard (disk-bound in the
+        // paper; we charge the measured shard-build time as compute).
+        let load_wall = wall.wall_secs(Step::Load);
+        cluster
+            .clock
+            .add_compute(Step::Load, load_wall / settings.nodes as f64);
+
+        // Step 2 (+ K-means when configured): basis selection & broadcast.
+        let basis_sel = wall.time(Step::BasisBcast, || {
+            basis::select_for_m(&mut cluster, &backend, settings, settings.m, train_ds.d(), dpad)
+        })?;
+
+        let m = basis_sel.m();
+        let col_tiles = basis_sel.col_tiles();
+        let mut session = Session {
+            gamma: settings.gamma(),
+            solved_loss: settings.loss,
+            settings: settings.clone(),
+            backend,
+            cluster,
+            basis: basis_sel,
+            beta: vec![0.0f32; m],
+            wall,
+            d: train_ds.d(),
+            dpad,
+            fg_evals: 0,
+            hd_evals: 0,
+            charged_tiles: 0,
+            mirrored_barriers: 0,
+            mirrored_rounds: 0,
+            poisoned: false,
+        };
+        // Step 3: kernel computation (all column tiles dirty on first build).
+        session.install_columns(0..col_tiles)?;
+        Ok(session)
+    }
+
+    /// Step 3 worker: (re)install W shares and the C-block columns in
+    /// `dirty` on every node, then refresh the prepared hot-path operands.
+    /// Wall-timed under [`Step::Kernel`], exactly like the one-shot path.
+    fn install_columns(&mut self, dirty: std::ops::Range<usize>) -> Result<()> {
+        let t0 = Instant::now();
+        basis::install_w_shares(&mut self.cluster, &self.backend, &self.basis, self.gamma, self.dpad)?;
+        let m = self.basis.m();
+        let gamma = self.gamma;
+        // Prepare the basis tiles once; all nodes (and the streaming
+        // stores, for the life of the session) share the same operands.
+        let z_prep = Arc::new(
+            self.basis
+                .z_tiles
+                .iter()
+                .map(|t| self.backend.prepare(t, &[TM, self.dpad]))
+                .collect::<Result<Vec<_>>>()?,
+        );
+        let backend2 = Arc::clone(&self.backend);
+        self.cluster.try_par_compute(Step::Kernel, |_, node| {
+            node.compute_c_block_p(backend2.as_ref(), &z_prep, m, gamma, dirty.clone())?;
+            node.prepare_hot(backend2.as_ref())
+        })?;
+        self.wall.add_wall(Step::Kernel, t0.elapsed());
+        // Keep the wall counters in lockstep with the ledger even before
+        // the first solve (build/grow phases bump barriers too).
+        self.sync_counters();
+        Ok(())
+    }
+
+    /// Step 4: TRON from the CURRENT β (zero after build; the previous
+    /// solution after a solve; zero-extended after growth — the paper's
+    /// warm starts). Returns this solve's [`Solve`] report.
+    pub fn solve(&mut self) -> Result<Solve> {
+        self.check_healthy()?;
+        let t0 = Instant::now();
+        let m = self.basis.m();
+        debug_assert_eq!(self.beta.len(), m);
+        let lambda = self.settings.lambda;
+        let loss = self.settings.loss;
+        let opts = TronOptions {
+            tol: self.settings.tol,
+            max_iters: self.settings.max_iters,
+            ..TronOptions::default()
+        };
+        let (beta, stats, fg, hd) = {
+            let mut problem = DistProblem::new(
+                &mut self.cluster,
+                Arc::clone(&self.backend),
+                m,
+                lambda,
+                loss,
+            )
+            .with_pipeline(self.settings.eval_pipeline);
+            let (beta, stats) = tron::minimize(&mut problem, &self.beta, &opts)?;
+            (beta, stats, problem.fg_evals, problem.hd_evals)
+        };
+        self.beta = beta;
+        self.solved_loss = loss;
+        self.fg_evals += fg;
+        self.hd_evals += hd;
+        let solve_wall = t0.elapsed();
+        self.wall.add_wall(Step::Tron, solve_wall);
+
+        // Honest storage accounting: charge the kernel-tile recompute this
+        // solve added (cumulative counters, so charge the delta once).
+        let (peak_c, peak_w, tiles) = self.storage_stats();
+        let fresh = tiles - self.charged_tiles;
+        self.cluster
+            .clock
+            .add_recompute_flops(fresh * kernel_tile_flops(self.dpad));
+        self.charged_tiles = tiles;
+        self.sync_counters();
+
+        Ok(Solve {
+            stats,
+            fg_evals: fg,
+            hd_evals: hd,
+            solve_wall_secs: solve_wall.as_secs_f64(),
+            wall: self.wall.clone(),
+            sim: self.cluster.clock.clone(),
+            peak_c_bytes: peak_c,
+            peak_w_cache_bytes: peak_w,
+            recomputed_tiles: tiles,
+        })
+    }
+
+    /// Stage-wise basis growth (§3): append fresh random training rows up
+    /// to `m` total, recompute ONLY the dirty C column tiles, and
+    /// zero-extend β so the next [`Session::solve`] warm-starts from the
+    /// current solution. Requires a training-row basis — k-means centers
+    /// are not training rows and cannot be grown (clear error instead of
+    /// the silent fallback the old stage-wise path had).
+    pub fn grow_basis(&mut self, m: usize) -> Result<()> {
+        self.check_healthy()?;
+        let old = self.basis.m();
+        anyhow::ensure!(
+            m > old,
+            "grow_basis: target m={m} must exceed the current m={old}"
+        );
+        anyhow::ensure!(
+            self.basis.train_rows.is_some(),
+            "basis growth requires a training-row basis (--basis random): the current \
+             basis was selected by k-means, whose centers are not training rows"
+        );
+        let t0 = Instant::now();
+        basis::grow_random(
+            &mut self.cluster,
+            &mut self.basis,
+            m - old,
+            self.d,
+            self.dpad,
+            self.settings.seed ^ m as u64,
+        )?;
+        self.wall.add_wall(Step::BasisBcast, t0.elapsed());
+        // Warm start: zero-extend β for the new points. Done BEFORE the
+        // column install so β.len() == basis.m() holds even if a backend
+        // error aborts the install below.
+        self.beta.resize(m, 0.0);
+        // Dirty tiles: the one containing `old` (possibly partial) onward.
+        let dirty = (old / TM)..self.basis.col_tiles();
+        if let Err(e) = self.install_columns(dirty) {
+            // Some nodes may have rebuilt their stores for the grown basis
+            // and others not — poison the session so solve/predict cannot
+            // run against inconsistent kernel state.
+            self.poisoned = true;
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    /// Change λ for subsequent solves. C and W are unchanged, so the next
+    /// [`Session::solve`] is a warm re-solve on the already-materialized
+    /// kernel state — the amortization a λ sweep wants.
+    pub fn set_lambda(&mut self, lambda: f32) -> Result<()> {
+        anyhow::ensure!(lambda > 0.0, "lambda must be > 0");
+        self.settings.lambda = lambda;
+        Ok(())
+    }
+
+    /// Change the loss for subsequent solves (same C, same W).
+    pub fn set_loss(&mut self, loss: Loss) {
+        self.settings.loss = loss;
+    }
+
+    /// Reset β to zero: the next solve is a COLD solve on the live cluster
+    /// (bit-identical to a fresh `train()` at the current settings, since
+    /// basis selection does not depend on λ or the loss).
+    pub fn reset_beta(&mut self) {
+        for b in &mut self.beta {
+            *b = 0.0;
+        }
+    }
+
+    /// Snapshot the current model (basis, β, γ, and the loss the current β
+    /// was SOLVED under — not a loss configured after the last solve) —
+    /// e.g. to [`TrainedModel::save`] for a serving process.
+    pub fn model(&self) -> TrainedModel {
+        TrainedModel {
+            basis: self.basis.z.clone(),
+            beta: self.beta.clone(),
+            gamma: self.gamma,
+            loss: self.solved_loss,
+        }
+    }
+
+    /// Distributed batch scoring: the batch is re-sharded over the SAME
+    /// cluster and scored in ONE executor phase (each node runs the fused
+    /// `predict_block` tile op over its shard), metered under
+    /// [`Step::Predict`] on both the wall clock and the simulated ledger
+    /// (β broadcast down the tree, one compute barrier, score gather up).
+    /// Bit-identical to the serial [`super::predict::predict`] loop: each
+    /// row's score depends only on its own features, accumulated over the
+    /// basis tiles in the same order.
+    pub fn predict(&mut self, x: &Mat) -> Result<Vec<f32>> {
+        self.check_healthy()?;
+        // Narrower batches are fine — trailing absent (sparse) features are
+        // zeros, exactly how the serial scoring path pads them. Wider
+        // batches are unrepresentable against this basis.
+        anyhow::ensure!(
+            x.cols() <= self.d,
+            "predict: batch has {} features but the session was trained on {}",
+            x.cols(),
+            self.d
+        );
+        let t0 = Instant::now();
+        let p = self.cluster.p();
+        let shards = shard_rows(x.rows(), p);
+        // Shards are contiguous row ranges: one panel copy per node (the
+        // in-process stand-in for shipping the shard), no per-row index
+        // gather — and no copy at all on a single-node cluster, where the
+        // lone "shard" is the batch itself.
+        let per_node: Vec<Mat> = if p == 1 {
+            Vec::new()
+        } else {
+            shards
+                .iter()
+                .map(|r| {
+                    Mat::from_vec(r.len(), x.cols(), x.row_panel(r.start, r.end).to_vec())
+                })
+                .collect()
+        };
+        let beta_tiles = pad_m_tiles(&self.beta, self.basis.col_tiles());
+        // β ships down the tree (the basis is already resident on every
+        // node from training); scores gather back up.
+        self.cluster
+            .broadcast_meter(Step::Predict, self.basis.m() * std::mem::size_of::<f32>());
+        let backend = Arc::clone(&self.backend);
+        let z_tiles = &self.basis.z_tiles;
+        let gamma = self.gamma;
+        let dpad = self.dpad;
+        let parts = self.cluster.try_par_compute(Step::Predict, |j, _node| {
+            let shard = if p == 1 { x } else { &per_node[j] };
+            score_rows(backend.as_ref(), shard, z_tiles, &beta_tiles, gamma, dpad)
+        })?;
+        let max_shard = shards.iter().map(|r| r.len()).max().unwrap_or(0);
+        self.cluster
+            .gather_meter(Step::Predict, max_shard * std::mem::size_of::<f32>());
+        self.wall.add_wall(Step::Predict, t0.elapsed());
+        self.sync_counters();
+        Ok(parts.concat())
+    }
+
+    /// Test accuracy through the distributed, metered predict path.
+    pub fn accuracy(&mut self, test: &Dataset) -> Result<f64> {
+        let scores = self.predict(&test.x)?;
+        Ok(crate::metrics::accuracy(&scores, &test.y))
+    }
+
+    // ---- introspection ----
+
+    /// Cumulative wall clock (Load/BasisBcast/Kernel/Tron/Predict).
+    pub fn wall(&self) -> &Metrics {
+        &self.wall
+    }
+
+    /// Cumulative simulated p-node ledger.
+    pub fn sim(&self) -> &SimClock {
+        &self.cluster.clock
+    }
+
+    pub fn beta(&self) -> &[f32] {
+        &self.beta
+    }
+
+    /// Current basis size m.
+    pub fn m(&self) -> usize {
+        self.basis.m()
+    }
+
+    /// Cluster size p.
+    pub fn p(&self) -> usize {
+        self.cluster.p()
+    }
+
+    pub fn lambda(&self) -> f32 {
+        self.settings.lambda
+    }
+
+    /// The loss configured for the NEXT solve (snapshots via
+    /// [`Session::model`] carry the loss the current β was solved under).
+    pub fn loss(&self) -> Loss {
+        self.settings.loss
+    }
+
+    /// Cumulative f/g and Hd evaluation counts across all solves.
+    pub fn evals(&self) -> (usize, usize) {
+        (self.fg_evals, self.hd_evals)
+    }
+
+    /// Peak per-node storage: (C-block bytes, W-row-cache bytes).
+    pub fn peak_bytes(&self) -> (usize, usize) {
+        let (c, w, _) = self.storage_stats();
+        (c, w)
+    }
+
+    /// Refuse to operate on a session whose last growth failed part-way
+    /// (inconsistent per-node kernel state).
+    fn check_healthy(&self) -> Result<()> {
+        anyhow::ensure!(
+            !self.poisoned,
+            "session is poisoned: a basis growth failed while rebuilding the C blocks, \
+             leaving per-node kernel state inconsistent — build a fresh session"
+        );
+        Ok(())
+    }
+
+    fn storage_stats(&self) -> (usize, usize, u64) {
+        let mut tiles = 0u64;
+        let mut peak_c = 0usize;
+        let mut peak_w = 0usize;
+        for j in 0..self.cluster.p() {
+            let store = &self.cluster.node(j).cstore;
+            tiles += store.recomputed_tiles();
+            peak_c = peak_c.max(store.peak_c_bytes());
+            peak_w = peak_w.max(store.w_cache_bytes());
+        }
+        (peak_c, peak_w, tiles)
+    }
+
+    /// Mirror the ledger's synchronization counters into the wall metrics
+    /// (delta since the last mirror) so both reports show rounds next to
+    /// seconds.
+    fn sync_counters(&mut self) {
+        let b = self.cluster.clock.barriers();
+        let r = self.cluster.clock.comm_rounds();
+        self.wall.bump("barriers", b - self.mirrored_barriers);
+        self.wall.bump("comm_rounds", r - self.mirrored_rounds);
+        self.mirrored_barriers = b;
+        self.mirrored_rounds = r;
+    }
+
+    /// Consume the session into the one-shot [`TrainOutput`] shape (the
+    /// `train()` wrapper's return).
+    pub(crate) fn into_output(self, solve: Solve) -> TrainOutput {
+        TrainOutput {
+            model: TrainedModel {
+                basis: self.basis.z,
+                beta: self.beta,
+                gamma: self.gamma,
+                loss: self.solved_loss,
+            },
+            stats: solve.stats,
+            wall: self.wall,
+            sim: self.cluster.clock.clone(),
+            fg_evals: solve.fg_evals,
+            hd_evals: solve.hd_evals,
+            peak_c_bytes: solve.peak_c_bytes,
+            peak_w_cache_bytes: solve.peak_w_cache_bytes,
+            recomputed_tiles: solve.recomputed_tiles,
+        }
+    }
+}
+
+/// Resolve settings for a stage-wise run: the first stage's size becomes
+/// `m` (so the basis policy is evaluated at the size it will actually
+/// select), the configured basis method is honored for the initial stage,
+/// and combinations growth cannot support are rejected up front — k-means
+/// centers are not training rows, so a multi-stage run cannot use
+/// `--basis kmeans` (clear error), while the adaptive `auto` policy
+/// resolves to the growth-capable random selection.
+pub fn growth_settings(settings: &Settings, stages: &[usize]) -> Result<Settings> {
+    anyhow::ensure!(!stages.is_empty(), "need at least one stage");
+    anyhow::ensure!(
+        stages.windows(2).all(|w| w[1] > w[0]),
+        "stages must be strictly increasing"
+    );
+    let mut s = settings.clone();
+    s.m = stages[0];
+    if stages.len() > 1 {
+        match s.basis {
+            BasisSelection::Random => {}
+            BasisSelection::Auto => s.basis = BasisSelection::Random,
+            BasisSelection::KMeans => anyhow::bail!(
+                "stage-wise growth cannot use --basis kmeans: cluster centers are not \
+                 training rows, and growth appends training rows to the basis \
+                 (use --basis random or auto for staged runs, or a single stage)"
+            ),
+        }
+    }
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::settings::{Backend, CStorage, EvalPipeline, ExecutorChoice};
+    use crate::data::synth;
+    use crate::runtime::make_backend;
+
+    fn tiny_settings(m: usize, nodes: usize) -> Settings {
+        Settings {
+            dataset: "covtype_like".into(),
+            m,
+            nodes,
+            lambda: 0.01,
+            sigma: 2.0,
+            loss: Loss::SqHinge,
+            basis: BasisSelection::Random,
+            backend: Backend::Native,
+            executor: ExecutorChoice::Serial,
+            c_storage: CStorage::Materialized,
+            eval_pipeline: EvalPipeline::Fused,
+            c_memory_budget: 256 << 20,
+            max_iters: 40,
+            tol: 1e-3,
+            seed: 42,
+            kmeans_iters: 2,
+            kmeans_max_m: 512,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+
+    fn tiny_data() -> (Dataset, Dataset) {
+        let mut spec = synth::spec("covtype_like");
+        spec.n_train = 900;
+        spec.n_test = 300;
+        synth::generate(&spec, 5)
+    }
+
+    #[test]
+    fn build_solve_predict_works_and_meters_predict() {
+        let (train_ds, test_ds) = tiny_data();
+        let backend = make_backend(Backend::Native, "artifacts").unwrap();
+        let mut sess =
+            Session::build(&tiny_settings(64, 3), &train_ds, backend, CostModel::free())
+                .unwrap();
+        assert_eq!(sess.m(), 64);
+        assert_eq!(sess.beta().len(), 64);
+        let solve = sess.solve().unwrap();
+        assert!(solve.stats.final_f < solve.stats.f_history[0]);
+        let barriers_before = sess.sim().barriers();
+        let acc = sess.accuracy(&test_ds).unwrap();
+        assert!(acc > 0.5, "accuracy {acc}");
+        // One metered executor phase per predict batch.
+        assert_eq!(sess.sim().barriers(), barriers_before + 1);
+        assert!(sess.wall().wall_secs(Step::Predict) > 0.0);
+        assert!(sess.sim().step_secs(Step::Predict) > 0.0);
+        // Mirrored counters agree with the ledger.
+        assert_eq!(sess.wall().barriers(), sess.sim().barriers());
+        assert_eq!(sess.wall().comm_rounds(), sess.sim().comm_rounds());
+    }
+
+    #[test]
+    fn grow_requires_more_columns_and_training_rows() {
+        let (train_ds, _) = tiny_data();
+        let backend = make_backend(Backend::Native, "artifacts").unwrap();
+        let mut sess = Session::build(
+            &tiny_settings(64, 3),
+            &train_ds,
+            Arc::clone(&backend),
+            CostModel::free(),
+        )
+        .unwrap();
+        assert!(sess.grow_basis(64).is_err(), "must grow strictly");
+        sess.grow_basis(96).unwrap();
+        assert_eq!(sess.m(), 96);
+        assert_eq!(sess.beta().len(), 96);
+
+        let mut s = tiny_settings(24, 3);
+        s.basis = BasisSelection::KMeans;
+        let mut km =
+            Session::build(&s, &train_ds, backend, CostModel::free()).unwrap();
+        let err = km.grow_basis(48).unwrap_err();
+        assert!(format!("{err:#}").contains("k-means"), "{err:#}");
+    }
+
+    #[test]
+    fn growth_settings_policy() {
+        let mut s = tiny_settings(400, 2);
+        let g = growth_settings(&s, &[32, 64]).unwrap();
+        assert_eq!(g.m, 32);
+        assert_eq!(g.basis, BasisSelection::Random);
+        s.basis = BasisSelection::Auto;
+        assert_eq!(
+            growth_settings(&s, &[32, 64]).unwrap().basis,
+            BasisSelection::Random
+        );
+        // Single-stage kmeans is honored.
+        s.basis = BasisSelection::KMeans;
+        assert_eq!(
+            growth_settings(&s, &[32]).unwrap().basis,
+            BasisSelection::KMeans
+        );
+        let err = growth_settings(&s, &[32, 64]).unwrap_err();
+        assert!(format!("{err:#}").contains("kmeans"), "{err:#}");
+        assert!(growth_settings(&s, &[]).is_err());
+        assert!(growth_settings(&s, &[64, 32]).is_err());
+    }
+
+    #[test]
+    fn lambda_and_loss_updates_apply_to_next_solve() {
+        let (train_ds, test_ds) = tiny_data();
+        let backend = make_backend(Backend::Native, "artifacts").unwrap();
+        let mut sess =
+            Session::build(&tiny_settings(64, 2), &train_ds, backend, CostModel::free())
+                .unwrap();
+        sess.solve().unwrap();
+        assert!(sess.set_lambda(0.0).is_err());
+        sess.set_lambda(0.001).unwrap();
+        assert_eq!(sess.lambda(), 0.001);
+        sess.set_loss(Loss::Logistic);
+        let warm = sess.solve().unwrap();
+        assert!(warm.stats.final_f.is_finite());
+        let acc = sess.accuracy(&test_ds).unwrap();
+        assert!(acc > 0.5, "post-update accuracy {acc}");
+    }
+}

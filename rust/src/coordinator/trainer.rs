@@ -1,22 +1,26 @@
-//! The Algorithm-1 driver: data loading → basis communication → kernel
-//! computation → TRON optimization, with per-step wall timers and the
-//! simulated cluster ledger. Also the stage-wise training mode of §3.
+//! One-shot training entry points and the trained-model bundle.
+//!
+//! [`train`] and [`train_stagewise`] are thin wrappers over the stateful
+//! [`Session`](super::session::Session) handle — build once, solve (and
+//! grow) on the live cluster, snapshot the output. All the Algorithm-1
+//! sequencing (sharding → basis → kernel → TRON) lives in
+//! [`super::session`]; these wrappers only adapt it to the fire-and-forget
+//! shape the benches and simple callers want.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::cluster::{Cluster, CostModel, SimClock};
 use crate::config::settings::{Loss, Settings};
 use crate::data::{shard_rows, Dataset};
 use crate::linalg::Mat;
-use crate::metrics::{Metrics, Step};
+use crate::metrics::Metrics;
 use crate::runtime::Compute;
 use crate::Result;
 
-use super::basis::{self, Basis};
-use super::cstore::CBlockStore;
-use super::dist::DistProblem;
 use super::node::WorkerNode;
-use super::tron::{self, TronOptions, TronStats};
+use super::session::{growth_settings, Session};
+use super::tron::TronStats;
 
 /// A trained formulation-(4) kernel machine.
 #[derive(Clone)]
@@ -31,7 +35,9 @@ pub struct TrainedModel {
 }
 
 impl TrainedModel {
-    /// Decision values for a feature matrix.
+    /// Decision values for a feature matrix (serial coordinator loop; use
+    /// [`Session::predict`](super::session::Session::predict) for the
+    /// distributed, metered path on a live cluster).
     pub fn predict(&self, backend: &dyn Compute, x: &Mat) -> Result<Vec<f32>> {
         super::predict::predict(backend, self, x)
     }
@@ -40,6 +46,17 @@ impl TrainedModel {
     pub fn accuracy(&self, backend: &dyn Compute, test: &Dataset) -> Result<f64> {
         let scores = self.predict(backend, &test.x)?;
         Ok(crate::metrics::accuracy(&scores, &test.y))
+    }
+
+    /// Serialize to `path` (see [`super::model_io`] for the format); the
+    /// loaded model predicts bit-identically.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        super::model_io::save(self, path)
+    }
+
+    /// Load a model previously written by [`TrainedModel::save`].
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<TrainedModel> {
+        super::model_io::load(path)
     }
 }
 
@@ -64,14 +81,8 @@ pub struct TrainOutput {
     pub recomputed_tiles: u64,
 }
 
-/// FLOPs of one RBF kernel-tile computation at padded width `dpad` (the
-/// 2·TB·TM·D inner-product count the micro bench uses).
-fn kernel_tile_flops(dpad: usize) -> u64 {
-    2 * (crate::runtime::tiles::TB * crate::runtime::tiles::TM * dpad) as u64
-}
-
 /// Step 1: shard the training set over p nodes. The cluster starts on the
-/// serial executor; the trainer swaps in `Settings::executor` right after
+/// serial executor; the session swaps in `Settings::executor` right after
 /// (results are bit-identical either way — only wall-clock changes).
 pub fn build_cluster(
     train: &Dataset,
@@ -90,113 +101,16 @@ pub fn build_cluster(
     Cluster::new(nodes, 2, cost)
 }
 
-/// Full Algorithm-1 run.
+/// Full Algorithm-1 run: build a [`Session`], solve once, snapshot.
 pub fn train(
     settings: &Settings,
     train_ds: &Dataset,
     backend: Arc<dyn Compute>,
     cost: CostModel,
 ) -> Result<TrainOutput> {
-    settings.validate()?;
-    let mut wall = Metrics::new();
-    let dpad = backend.pad_d(train_ds.d())?;
-
-    // Step 1: data loading / sharding.
-    let mut cluster = wall.time(Step::Load, || {
-        build_cluster(train_ds, settings.nodes, dpad, cost)
-    });
-    cluster.set_executor(settings.executor.to_executor());
-    for node in cluster.nodes_mut() {
-        node.set_c_storage(settings.c_storage, settings.c_memory_budget);
-    }
-    // Simulated: each node ingests its n/p shard (disk-bound in the paper;
-    // we charge the measured shard-build time as the compute part).
-    let load_wall = wall.wall_secs(Step::Load);
-    cluster.clock.add_compute(Step::Load, load_wall / settings.nodes as f64);
-
-    // Steps 2 (+ K-means when enabled): basis selection & broadcast.
-    let basis_sel = wall.time(Step::BasisBcast, || {
-        basis::select(&mut cluster, &backend, settings, train_ds.d(), dpad)
-    })?;
-
-    // Step 3: kernel computation (C row blocks; W shares).
-    wall.time(Step::Kernel, || -> Result<()> {
-        basis::install_w_shares(&mut cluster, &backend, &basis_sel, settings.gamma(), dpad)?;
-        let m = basis_sel.m();
-        let gamma = settings.gamma();
-        // Prepare the basis tiles once; all nodes (and the streaming
-        // stores, for the life of the run) share the same operands.
-        let z_prep = Arc::new(
-            basis_sel
-                .z_tiles
-                .iter()
-                .map(|t| backend.prepare(t, &[crate::runtime::tiles::TM, dpad]))
-                .collect::<Result<Vec<_>>>()?,
-        );
-        let backend2 = Arc::clone(&backend);
-        let col_tiles = basis_sel.col_tiles();
-        cluster.try_par_compute(Step::Kernel, |_, node| {
-            node.compute_c_block_p(backend2.as_ref(), &z_prep, m, gamma, 0..col_tiles)?;
-            node.prepare_hot(backend2.as_ref())
-        })?;
-        Ok(())
-    })?;
-
-    // Step 4: TRON on the master.
-    let (beta, stats, fg, hd) = wall.time(Step::Tron, || -> Result<_> {
-        let mut problem = DistProblem::new(
-            &mut cluster,
-            Arc::clone(&backend),
-            basis_sel.m(),
-            settings.lambda,
-            settings.loss,
-        )
-        .with_pipeline(settings.eval_pipeline);
-        let opts = TronOptions {
-            tol: settings.tol,
-            max_iters: settings.max_iters,
-            ..TronOptions::default()
-        };
-        let beta0 = vec![0.0f32; basis_sel.m()];
-        let (beta, stats) = tron::minimize(&mut problem, &beta0, &opts)?;
-        Ok((beta, stats, problem.fg_evals, problem.hd_evals))
-    })?;
-
-    // Honest memory/compute accounting for the storage mode: peak C bytes
-    // held per node, and the kernel-tile recompute charged to the ledger.
-    let mut recomputed_tiles = 0u64;
-    let mut peak_c_bytes = 0usize;
-    let mut peak_w_cache_bytes = 0usize;
-    for j in 0..cluster.p() {
-        let store = &cluster.node(j).cstore;
-        recomputed_tiles += store.recomputed_tiles();
-        peak_c_bytes = peak_c_bytes.max(store.peak_c_bytes());
-        peak_w_cache_bytes = peak_w_cache_bytes.max(store.w_cache_bytes());
-    }
-    cluster
-        .clock
-        .add_recompute_flops(recomputed_tiles * kernel_tile_flops(dpad));
-    // Mirror the ledger's synchronization counters into the wall metrics
-    // so both reports can show rounds next to seconds.
-    wall.bump("barriers", cluster.clock.barriers());
-    wall.bump("comm_rounds", cluster.clock.comm_rounds());
-
-    Ok(TrainOutput {
-        model: TrainedModel {
-            basis: basis_sel.z,
-            beta,
-            gamma: settings.gamma(),
-            loss: settings.loss,
-        },
-        stats,
-        wall,
-        sim: cluster.clock,
-        fg_evals: fg,
-        hd_evals: hd,
-        peak_c_bytes,
-        peak_w_cache_bytes,
-        recomputed_tiles,
-    })
+    let mut session = Session::build(settings, train_ds, backend, cost)?;
+    let solve = session.solve()?;
+    Ok(session.into_output(solve))
 }
 
 /// One stage of a stage-wise run.
@@ -214,7 +128,11 @@ pub struct StageOutput {
 /// basis points and re-optimize with β warm-started by zero-extension —
 /// "one can use the β obtained for a set of basis points to initialize a
 /// good β when new basis points are added" — recomputing only the new
-/// columns of C.
+/// columns of C. The configured basis method is honored for the initial
+/// stage; combinations growth cannot support (`--basis kmeans` with more
+/// than one stage) are rejected with a clear error, and `auto` resolves
+/// to the growth-capable random selection (see
+/// [`growth_settings`](super::session::growth_settings)).
 pub fn train_stagewise(
     settings: &Settings,
     train_ds: &Dataset,
@@ -222,91 +140,29 @@ pub fn train_stagewise(
     cost: CostModel,
     stages: &[usize],
 ) -> Result<Vec<StageOutput>> {
-    anyhow::ensure!(!stages.is_empty(), "need at least one stage");
-    anyhow::ensure!(
-        stages.windows(2).all(|w| w[1] > w[0]),
-        "stages must be strictly increasing"
-    );
-    let dpad = backend.pad_d(train_ds.d())?;
-    let mut cluster = build_cluster(train_ds, settings.nodes, dpad, cost);
-    cluster.set_executor(settings.executor.to_executor());
-    for node in cluster.nodes_mut() {
-        node.set_c_storage(settings.c_storage, settings.c_memory_budget);
-    }
+    let staged = growth_settings(settings, stages)?;
+    let t_build = Instant::now();
+    let mut session = Session::build(&staged, train_ds, backend, cost)?;
+    let build_secs = t_build.elapsed().as_secs_f64();
 
-    let mut outputs = Vec::new();
-    let mut basis_sel: Option<Basis> = None;
-    let mut beta: Vec<f32> = Vec::new();
-
-    for &m in stages {
-        let stage_start = std::time::Instant::now();
-        // Grow (or create) the basis; only dirty C column tiles recompute.
-        let dirty = match basis_sel.as_mut() {
-            None => {
-                let b = basis::select_random(&mut cluster, m, train_ds.d(), dpad, settings.seed)?;
-                basis_sel = Some(b);
-                0..basis_sel.as_ref().unwrap().col_tiles()
-            }
-            Some(b) => {
-                let old_cols = b.m();
-                basis::grow_random(
-                    &mut cluster,
-                    b,
-                    m - old_cols,
-                    train_ds.d(),
-                    dpad,
-                    settings.seed ^ m as u64,
-                )?;
-                // Dirty tiles: the one containing old_cols (partial) onward.
-                (old_cols / crate::runtime::tiles::TM)..b.col_tiles()
-            }
-        };
-        let b = basis_sel.as_ref().unwrap();
-        basis::install_w_shares(&mut cluster, &backend, b, settings.gamma(), dpad)?;
-        let gamma = settings.gamma();
-        let z_prep = Arc::new(
-            b.z_tiles
-                .iter()
-                .map(|t| backend.prepare(t, &[crate::runtime::tiles::TM, dpad]))
-                .collect::<Result<Vec<_>>>()?,
-        );
-        let backend2 = Arc::clone(&backend);
-        cluster.try_par_compute(Step::Kernel, |_, node| {
-            node.compute_c_block_p(backend2.as_ref(), &z_prep, m, gamma, dirty.clone())?;
-            node.prepare_hot(backend2.as_ref())
-        })?;
-
-        // Warm start: zero-extend β for the new points.
-        beta.resize(m, 0.0);
-        let mut problem = DistProblem::new(
-            &mut cluster,
-            Arc::clone(&backend),
-            m,
-            settings.lambda,
-            settings.loss,
-        )
-        .with_pipeline(settings.eval_pipeline);
-        let opts = TronOptions {
-            tol: settings.tol,
-            max_iters: settings.max_iters,
-            ..TronOptions::default()
-        };
-        let (beta_new, stats) = tron::minimize(&mut problem, &beta, &opts)?;
-        beta = beta_new;
-        let recomputed_tiles = (0..cluster.p())
-            .map(|j| cluster.node(j).cstore.recomputed_tiles())
-            .sum();
+    let mut outputs = Vec::with_capacity(stages.len());
+    for (i, &m) in stages.iter().enumerate() {
+        let t0 = Instant::now();
+        if i > 0 {
+            session.grow_basis(m)?;
+        }
+        let solve = session.solve()?;
+        let mut stage_wall_secs = t0.elapsed().as_secs_f64();
+        if i == 0 {
+            // The first stage pays the build (shard + basis + full C).
+            stage_wall_secs += build_secs;
+        }
         outputs.push(StageOutput {
             m,
-            model: TrainedModel {
-                basis: b.z.clone(),
-                beta: beta.clone(),
-                gamma: settings.gamma(),
-                loss: settings.loss,
-            },
-            stats,
-            stage_wall_secs: stage_start.elapsed().as_secs_f64(),
-            recomputed_tiles,
+            model: session.model(),
+            stats: solve.stats,
+            stage_wall_secs,
+            recomputed_tiles: solve.recomputed_tiles,
         });
     }
     Ok(outputs)
@@ -317,6 +173,7 @@ mod tests {
     use super::*;
     use crate::config::settings::{Backend, BasisSelection, CStorage, EvalPipeline, ExecutorChoice};
     use crate::data::synth;
+    use crate::metrics::Step;
     use crate::runtime::make_backend;
 
     fn tiny_settings(m: usize, nodes: usize) -> Settings {
@@ -465,6 +322,48 @@ mod tests {
         // Later stages should need no more iterations than a cold start
         // (warm start benefit) — allow slack for stochastic variation.
         assert!(stages[2].stats.iterations <= cold.stats.iterations + 20);
+    }
+
+    #[test]
+    fn stagewise_kmeans_initial_stage_honored_and_growth_rejected() {
+        let (train_ds, _) = tiny_data();
+        let backend = make_backend(Backend::Native, "artifacts").unwrap();
+        let mut s = tiny_settings(0, 3);
+        s.basis = BasisSelection::KMeans;
+        // Single stage: the configured k-means method is honored (the old
+        // path silently used random selection here).
+        let one = train_stagewise(
+            &s,
+            &train_ds,
+            Arc::clone(&backend),
+            CostModel::free(),
+            &[24],
+        )
+        .unwrap();
+        assert_eq!(one.len(), 1);
+        // Multi-stage: rejected with a pointed error instead of silently
+        // ignoring --basis kmeans.
+        let err = train_stagewise(
+            &s,
+            &train_ds,
+            Arc::clone(&backend),
+            CostModel::free(),
+            &[24, 48],
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("kmeans"), "{err:#}");
+        // Auto resolves to the growth-capable random policy.
+        s.basis = BasisSelection::Auto;
+        let staged = train_stagewise(
+            &s,
+            &train_ds,
+            backend,
+            CostModel::free(),
+            &[24, 48],
+        )
+        .unwrap();
+        assert_eq!(staged.len(), 2);
+        assert_eq!(staged[1].model.beta.len(), 48);
     }
 
     #[test]

@@ -29,7 +29,13 @@
 //!   lowered from JAX+Pallas at build time).
 //! * [`coordinator`] — the paper's contribution: Algorithm 1, TRON, losses,
 //!   basis selection (random / distributed K-means), stage-wise growth —
-//!   including the **memory-bounded kernel-operator layer**
+//!   driven through the **stateful Session API**
+//!   ([`coordinator::session`]): one `Session` owns the sharded cluster,
+//!   backend, basis, β and metrics across calls (`solve`, `grow_basis`,
+//!   `set_lambda`/`set_loss` re-solves, distributed metered `predict`,
+//!   `model` snapshots with save/load persistence); the one-shot
+//!   `train()`/`train_stagewise()` entry points are thin wrappers over it.
+//!   Includes the **memory-bounded kernel-operator layer**
 //!   ([`coordinator::cstore`]): each node's C row block lives behind a
 //!   `CBlockStore` (`--c-storage materialized|streaming|streaming:rowbuf|
 //!   auto`) that stores the kernel tiles (held once on native — prepared

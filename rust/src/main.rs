@@ -7,9 +7,16 @@
 //!   ppacksvm    P-packSVM baseline (Zhu et al.)
 //!   info        Show the artifact manifest the runtime would load
 //!
+//! `train` and `stagewise` drive one stateful `Session`: the cluster, the
+//! C blocks and the prepared operands are built ONCE and reused for every
+//! solve, growth stage, λ re-solve (`--lambda-sweep`) and prediction batch
+//! — prediction is re-sharded over the live cluster and shows up as its
+//! own metered `predict` step in both reports.
+//!
 //! Examples:
 //!   dkm train --dataset covtype_like --m 800 --nodes 8 --backend pjrt
 //!   dkm train --libsvm data/a9a --ntest 2000 --m 400 --sigma 2
+//!   dkm train --dataset covtype_like --lambda-sweep 0.05,0.01,0.002
 //!   dkm stagewise --dataset covtype_like --stages 100,400,1600
 //!   dkm linearized --dataset vehicle_like --m 400
 
@@ -19,7 +26,7 @@ use std::sync::Arc;
 use dkm::baselines::{train_linearized, train_ppacksvm, PPackOptions};
 use dkm::cluster::CostModel;
 use dkm::config::{Args, Settings};
-use dkm::coordinator::{train, trainer::train_stagewise};
+use dkm::coordinator::{growth_settings, Session, Solve};
 use dkm::data::{synth, Dataset};
 use dkm::metrics::{Step, Table};
 use dkm::runtime::{make_backend, Manifest};
@@ -36,6 +43,7 @@ const TRAIN_FLAGS: &[&str] = &[
     "dataset", "libsvm", "ntest", "ntrain", "m", "nodes", "lambda", "sigma", "loss", "basis",
     "backend", "exec", "c-storage", "c-memory-budget", "eval-pipeline", "max-iters", "tol", "seed",
     "kmeans-iters", "artifacts", "config", "stages", "pack", "epochs", "verbose", "cost",
+    "lambda-sweep", "save-model",
 ];
 
 fn run() -> Result<()> {
@@ -89,6 +97,12 @@ Common flags:
                     2-reduce sequence; bit-identical results)
   --cost            free | hadoop | mpi   (simulated comm cost model)
   --stages a,b,c    stage-wise m schedule (stagewise command)
+  --lambda-sweep a,b,c   after the main solve, warm re-solve the SAME
+                    session at each λ (C computed once; train command)
+  --save-model PATH save the trained model (basis, β, γ, loss) for a
+                    serving process; on `train` this is the main solve's
+                    model (a later --lambda-sweep does not affect it), on
+                    `stagewise` the final stage's model
   --config FILE     key=value settings file (CLI flags override)
 ";
 
@@ -150,41 +164,53 @@ fn load_data(args: &Args, s: &Settings) -> Result<(Dataset, Dataset)> {
     }
 }
 
-fn print_run_report(out: &dkm::coordinator::TrainOutput, acc: f64, verbose: bool) {
+fn parse_f32_list(spec: &str, flag: &str) -> Result<Vec<f32>> {
+    spec.split(',')
+        .map(|t| {
+            t.trim()
+                .parse()
+                .map_err(|e| anyhow::anyhow!("{flag}: {e}"))
+        })
+        .collect()
+}
+
+/// Session-state report: the cumulative wall clock and simulated ledger
+/// (INCLUDING the metered predict step) plus the last solve's statistics.
+fn print_run_report(session: &Session, solve: &Solve, acc: f64, verbose: bool) {
     println!("\n== Algorithm-1 wall clock (host) ==");
     let mut t = Table::new(&["step", "seconds"]);
     for step in Step::all() {
-        let secs = out.wall.wall_secs(step);
+        let secs = session.wall().wall_secs(step);
         if secs > 0.0 {
             t.row(&[step.name().into(), format!("{secs:.3}")]);
         }
     }
     print!("{}", t.render());
     println!("\n== Simulated p-node ledger (compute max/node + C+D·B comm) ==");
-    print!("{}", out.sim.report());
+    print!("{}", session.sim().report());
     println!(
         "tron: {} iterations, {} f/g evals, {} Hd evals, final f {:.6e}, |g| {:.3e}",
-        out.stats.iterations,
-        out.fg_evals,
-        out.hd_evals,
-        out.stats.final_f,
-        out.stats.final_gnorm
+        solve.stats.iterations,
+        solve.fg_evals,
+        solve.hd_evals,
+        solve.stats.final_f,
+        solve.stats.final_gnorm
     );
     println!(
         "comm: {} barriers, {} AllReduce round-trips, {} tree-level instances, {} bytes",
-        out.sim.barriers(),
-        out.sim.comm_rounds(),
-        out.sim.comm_instances(),
-        out.sim.comm_bytes(),
+        session.sim().barriers(),
+        session.sim().comm_rounds(),
+        session.sim().comm_instances(),
+        session.sim().comm_bytes(),
     );
     println!(
         "c-storage: peak {:.2} MiB of C per node (+ {:.2} MiB W-row cache), {} kernel-tile recomputes",
-        out.peak_c_bytes as f64 / (1 << 20) as f64,
-        out.peak_w_cache_bytes as f64 / (1 << 20) as f64,
-        out.recomputed_tiles
+        solve.peak_c_bytes as f64 / (1 << 20) as f64,
+        solve.peak_w_cache_bytes as f64 / (1 << 20) as f64,
+        solve.recomputed_tiles
     );
     if verbose {
-        println!("loss curve: {:?}", out.stats.f_history);
+        println!("loss curve: {:?}", solve.stats.f_history);
     }
     println!("test accuracy: {acc:.4}");
 }
@@ -210,13 +236,52 @@ fn cmd_train(args: &Args) -> Result<()> {
         s.eval_pipeline.name(),
     );
     let backend = make_backend(s.backend, &s.artifacts_dir)?;
-    let out = train(&s, &train_ds, Arc::clone(&backend), cost)?;
-    let acc = out.model.accuracy(backend.as_ref(), &test_ds)?;
-    print_run_report(&out, acc, args.bool("verbose"));
+    let mut session = Session::build(&s, &train_ds, Arc::clone(&backend), cost)?;
+    let solve = session.solve()?;
+    // Scoring goes through the session: distributed over the live cluster,
+    // metered as the `predict` step in both reports below.
+    let acc = session.accuracy(&test_ds)?;
+    print_run_report(&session, &solve, acc, args.bool("verbose"));
+
+    // Snapshot the reported main-solve model BEFORE any sweep mutates the
+    // session, so --save-model ships exactly the model reported above.
+    if let Some(path) = args.str_opt("save-model") {
+        session.model().save(path)?;
+        println!("model saved to {path} (λ={})", session.lambda());
+    }
+
+    if let Some(spec) = args.str_opt("lambda-sweep") {
+        let lambdas = parse_f32_list(spec, "--lambda-sweep")?;
+        println!(
+            "\n== λ sweep: warm re-solves on the live session (C computed once, β warm-started) =="
+        );
+        let mut t = Table::new(&[
+            "lambda", "tron_iters", "fg_evals", "final_f", "accuracy", "solve_secs",
+        ]);
+        for lam in lambdas {
+            session.set_lambda(lam)?;
+            let sv = session.solve()?;
+            let acc = session.accuracy(&test_ds)?;
+            t.row(&[
+                format!("{lam}"),
+                sv.stats.iterations.to_string(),
+                sv.fg_evals.to_string(),
+                format!("{:.6e}", sv.stats.final_f),
+                format!("{acc:.4}"),
+                format!("{:.3}", sv.solve_wall_secs),
+            ]);
+        }
+        print!("{}", t.render());
+    }
     Ok(())
 }
 
 fn cmd_stagewise(args: &Args) -> Result<()> {
+    anyhow::ensure!(
+        args.str_opt("lambda-sweep").is_none(),
+        "--lambda-sweep is a `train` flag; on `stagewise` each stage already \
+         re-solves the live session (run `dkm train --lambda-sweep ...` instead)"
+    );
     let s = settings_from(args)?;
     let cost = cost_from(args)?;
     let stages: Vec<usize> = args
@@ -226,18 +291,36 @@ fn cmd_stagewise(args: &Args) -> Result<()> {
         .collect::<Result<_>>()?;
     let (train_ds, test_ds) = load_data(args, &s)?;
     let backend = make_backend(s.backend, &s.artifacts_dir)?;
-    let outs = train_stagewise(&s, &train_ds, Arc::clone(&backend), cost, &stages)?;
-    let mut t = Table::new(&["m", "accuracy", "tron_iters", "stage_secs"]);
-    for st in &outs {
-        let acc = st.model.accuracy(backend.as_ref(), &test_ds)?;
+    // One session for the whole schedule: grow + warm re-solve in place.
+    let staged = growth_settings(&s, &stages)?;
+    let mut session = Session::build(&staged, &train_ds, Arc::clone(&backend), cost)?;
+    let mut t = Table::new(&["m", "accuracy", "tron_iters", "fg_evals", "solve_secs"]);
+    for (i, &m) in stages.iter().enumerate() {
+        if i > 0 {
+            session.grow_basis(m)?;
+        }
+        let solve = session.solve()?;
+        let acc = session.accuracy(&test_ds)?;
         t.row(&[
-            st.m.to_string(),
+            m.to_string(),
             format!("{acc:.4}"),
-            st.stats.iterations.to_string(),
-            format!("{:.2}", st.stage_wall_secs),
+            solve.stats.iterations.to_string(),
+            solve.fg_evals.to_string(),
+            format!("{:.2}", solve.solve_wall_secs),
         ]);
     }
     print!("{}", t.render());
+    println!("\n== session ledger (all stages + prediction) ==");
+    print!("{}", session.sim().report());
+    println!(
+        "comm: {} barriers, {} AllReduce round-trips",
+        session.sim().barriers(),
+        session.sim().comm_rounds()
+    );
+    if let Some(path) = args.str_opt("save-model") {
+        session.model().save(path)?;
+        println!("model saved to {path}");
+    }
     Ok(())
 }
 

@@ -1,0 +1,321 @@
+//! Session API contract: the stateful `Session` handle is the ONE code
+//! path behind `train()` / `train_stagewise()`, so driving it by hand must
+//! be bit-identical to the wrappers across storage × executor; growing a
+//! live session matches the stage-wise wrapper stage by stage; a re-solve
+//! on a live session (λ or loss changed, β reset) is bit-identical to a
+//! cold `train()` at those settings (the kernel state does not depend on
+//! them); warm re-solves reach the same solution quality; distributed
+//! `predict` is bit-identical to the serial coordinator loop and is
+//! metered as its own `predict` step (one executor phase per batch); and a
+//! saved/loaded model predicts bit-identically.
+//!
+//! Test names end in `serial_exec` / `threads_exec` / `pool_exec`; CI runs
+//! each group explicitly next to the c_storage / fused_eval matrices.
+
+use std::sync::Arc;
+
+use dkm::cluster::CostModel;
+use dkm::config::settings::{
+    Backend, BasisSelection, CStorage, EvalPipeline, ExecutorChoice, Loss, Settings,
+};
+use dkm::coordinator::{train, train_stagewise, Session, TrainOutput};
+use dkm::data::{synth, Dataset};
+use dkm::metrics::Step;
+use dkm::runtime::make_backend;
+use dkm::runtime::Compute;
+
+fn settings(
+    m: usize,
+    nodes: usize,
+    storage: CStorage,
+    executor: ExecutorChoice,
+) -> Settings {
+    Settings {
+        dataset: "covtype_like".into(),
+        m,
+        nodes,
+        lambda: 0.01,
+        sigma: 2.0,
+        loss: Loss::SqHinge,
+        basis: BasisSelection::Random,
+        backend: Backend::Native,
+        executor,
+        c_storage: storage,
+        eval_pipeline: EvalPipeline::Fused,
+        c_memory_budget: 256 << 20,
+        max_iters: 40,
+        tol: 1e-3,
+        seed: 42,
+        kmeans_iters: 2,
+        kmeans_max_m: 512,
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+fn data(n: usize, ntest: usize, seed: u64) -> (Dataset, Dataset) {
+    let mut spec = synth::spec("covtype_like");
+    spec.n_train = n;
+    spec.n_test = ntest;
+    synth::generate(&spec, seed)
+}
+
+fn backend() -> Arc<dyn Compute> {
+    make_backend(Backend::Native, "artifacts").unwrap()
+}
+
+fn assert_beta_bits(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: beta length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: beta[{i}] {x} vs {y}");
+    }
+}
+
+/// Manual build+solve on a Session vs the `train()` wrapper: same β bits,
+/// same evaluation counts, same final objective — for single-tile and
+/// multi-tile m, across storage modes, on the given executor.
+fn session_matches_train(executor: ExecutorChoice) {
+    let (train_ds, test_ds) = data(1200, 320, 3);
+    let be = backend();
+    for storage in [
+        CStorage::Materialized,
+        CStorage::Streaming,
+        CStorage::StreamingRowbuf,
+        CStorage::Auto,
+    ] {
+        for m in [96usize, 300] {
+            let s = settings(m, 4, storage, executor);
+            let what = format!("{} m={m} exec={}", storage.name(), executor.name());
+            let wrapped: TrainOutput =
+                train(&s, &train_ds, Arc::clone(&be), CostModel::free()).unwrap();
+            let mut sess =
+                Session::build(&s, &train_ds, Arc::clone(&be), CostModel::free()).unwrap();
+            let solve = sess.solve().unwrap();
+            assert_beta_bits(sess.beta(), &wrapped.model.beta, &what);
+            assert_eq!(solve.fg_evals, wrapped.fg_evals, "{what}");
+            assert_eq!(solve.hd_evals, wrapped.hd_evals, "{what}");
+            assert_eq!(
+                solve.stats.final_f.to_bits(),
+                wrapped.stats.final_f.to_bits(),
+                "{what}"
+            );
+            assert_eq!(solve.peak_c_bytes, wrapped.peak_c_bytes, "{what}");
+            assert_eq!(solve.recomputed_tiles, wrapped.recomputed_tiles, "{what}");
+            // The session's model snapshot ships the same predictions.
+            let snap = sess.model();
+            let a = snap.predict(be.as_ref(), &test_ds.x).unwrap();
+            let b = wrapped.model.predict(be.as_ref(), &test_ds.x).unwrap();
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{what}: prediction");
+            }
+        }
+    }
+}
+
+#[test]
+fn session_matches_train_serial_exec() {
+    session_matches_train(ExecutorChoice::Serial);
+}
+
+#[test]
+fn session_matches_train_threads_exec() {
+    session_matches_train(ExecutorChoice::Threads { cap: 4 });
+}
+
+#[test]
+fn session_matches_train_pool_exec() {
+    session_matches_train(ExecutorChoice::Pool { cap: 4 });
+}
+
+/// Growing a live session stage by stage is bit-identical to the
+/// `train_stagewise` wrapper (and crosses a TM tile boundary).
+fn grow_matches_stagewise(executor: ExecutorChoice, storage: CStorage) {
+    let (train_ds, _) = data(1100, 200, 9);
+    let be = backend();
+    let stages = [48usize, 160, 288];
+    let s = settings(48, 3, storage, executor);
+    let what = format!("{} exec={}", storage.name(), executor.name());
+    let wrapped = train_stagewise(
+        &s,
+        &train_ds,
+        Arc::clone(&be),
+        CostModel::free(),
+        &stages,
+    )
+    .unwrap();
+    let mut sess = Session::build(&s, &train_ds, Arc::clone(&be), CostModel::free()).unwrap();
+    for (i, &m) in stages.iter().enumerate() {
+        if i > 0 {
+            sess.grow_basis(m).unwrap();
+        }
+        let solve = sess.solve().unwrap();
+        assert_eq!(sess.m(), m, "{what}");
+        assert_beta_bits(sess.beta(), &wrapped[i].model.beta, &format!("{what} stage {m}"));
+        assert_eq!(
+            solve.stats.final_f.to_bits(),
+            wrapped[i].stats.final_f.to_bits(),
+            "{what} stage {m}"
+        );
+    }
+}
+
+#[test]
+fn grow_basis_matches_stagewise_serial_exec() {
+    grow_matches_stagewise(ExecutorChoice::Serial, CStorage::Materialized);
+}
+
+#[test]
+fn grow_basis_matches_stagewise_streaming_pool_exec() {
+    grow_matches_stagewise(ExecutorChoice::Pool { cap: 4 }, CStorage::StreamingRowbuf);
+}
+
+/// λ / loss re-solves on a live session: with β reset, the re-solve is
+/// BIT-IDENTICAL to a cold `train()` at those settings (basis selection
+/// and C do not depend on λ or the loss); without the reset, the warm
+/// re-solve reaches the same solution quality.
+#[test]
+fn lambda_and_loss_resolve_match_cold_train_serial_exec() {
+    let (train_ds, test_ds) = data(1200, 320, 3);
+    let be = backend();
+    // Let TRON run to convergence: the warm-vs-cold quality comparison
+    // below is only meaningful when neither path hits the iteration cap.
+    let s = Settings {
+        max_iters: 120,
+        ..settings(96, 4, CStorage::Materialized, ExecutorChoice::Serial)
+    };
+    let mut sess = Session::build(&s, &train_ds, Arc::clone(&be), CostModel::free()).unwrap();
+    sess.solve().unwrap();
+
+    // Cold λ re-solve == cold train at λ2.
+    let lambda2 = 0.002f32;
+    sess.set_lambda(lambda2).unwrap();
+    sess.reset_beta();
+    let re = sess.solve().unwrap();
+    let cold = train(
+        &Settings {
+            lambda: lambda2,
+            ..s.clone()
+        },
+        &train_ds,
+        Arc::clone(&be),
+        CostModel::free(),
+    )
+    .unwrap();
+    assert_beta_bits(sess.beta(), &cold.model.beta, "cold λ re-solve");
+    assert_eq!(re.fg_evals, cold.fg_evals);
+    assert_eq!(re.stats.final_f.to_bits(), cold.stats.final_f.to_bits());
+
+    // Warm λ re-solve (no reset) reaches the same quality.
+    sess.set_lambda(s.lambda).unwrap();
+    sess.reset_beta();
+    sess.solve().unwrap(); // back at λ1's solution
+    sess.set_lambda(lambda2).unwrap();
+    let warm = sess.solve().unwrap();
+    let rel = (warm.stats.final_f - cold.stats.final_f).abs() / cold.stats.final_f.abs();
+    assert!(
+        rel < 1e-2,
+        "warm {} vs cold {} (rel {rel})",
+        warm.stats.final_f,
+        cold.stats.final_f
+    );
+    let acc_warm = sess.accuracy(&test_ds).unwrap();
+    let acc_cold = cold.model.accuracy(be.as_ref(), &test_ds).unwrap();
+    assert!(
+        (acc_warm - acc_cold).abs() < 0.03,
+        "warm {acc_warm} vs cold {acc_cold}"
+    );
+
+    // Cold loss re-solve == cold train at that loss.
+    sess.set_loss(Loss::Squared);
+    sess.reset_beta();
+    sess.set_lambda(s.lambda).unwrap();
+    sess.solve().unwrap();
+    let cold_sq = train(
+        &Settings {
+            loss: Loss::Squared,
+            ..s.clone()
+        },
+        &train_ds,
+        Arc::clone(&be),
+        CostModel::free(),
+    )
+    .unwrap();
+    assert_beta_bits(sess.beta(), &cold_sq.model.beta, "cold loss re-solve");
+}
+
+/// Distributed predict over the live cluster is bit-identical to the
+/// serial coordinator loop, for any p (including p > 1 with a ragged last
+/// shard and more nodes than score tiles), and is metered as ONE executor
+/// phase per batch under `Step::Predict` on both ledgers.
+fn predict_bit_identical(executor: ExecutorChoice) {
+    let (train_ds, test_ds) = data(1000, 333, 7);
+    let be = backend();
+    for p in [1usize, 3, 8] {
+        let s = settings(300, p, CStorage::Materialized, executor);
+        let what = format!("p={p} exec={}", executor.name());
+        // A priced cost model so the predict comm metering is observable.
+        let mut sess =
+            Session::build(&s, &train_ds, Arc::clone(&be), CostModel::hadoop_crude()).unwrap();
+        sess.solve().unwrap();
+        let serial = sess.model().predict(be.as_ref(), &test_ds.x).unwrap();
+
+        let barriers0 = sess.sim().barriers();
+        let rounds0 = sess.sim().comm_rounds();
+        let distributed = sess.predict(&test_ds.x).unwrap();
+        assert_eq!(distributed.len(), serial.len(), "{what}");
+        for (i, (a, b)) in distributed.iter().zip(&serial).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{what}: score[{i}] {a} vs {b}");
+        }
+        // One metered executor phase (barrier) per batch; the gather is
+        // one-way so no AllReduce round-trip is added.
+        assert_eq!(sess.sim().barriers(), barriers0 + 1, "{what}");
+        assert_eq!(sess.sim().comm_rounds(), rounds0, "{what}");
+        assert!(sess.wall().wall_secs(Step::Predict) > 0.0, "{what}");
+        assert!(sess.sim().step_secs(Step::Predict) > 0.0, "{what}");
+        // Sim comm was metered too (β broadcast + score gather) on p > 1.
+        if p > 1 {
+            assert!(sess.sim().comm_secs(Step::Predict) > 0.0, "{what}");
+        }
+        // Each batch is its own phase.
+        sess.predict(&test_ds.x).unwrap();
+        assert_eq!(sess.sim().barriers(), barriers0 + 2, "{what}");
+    }
+}
+
+#[test]
+fn predict_bit_identical_serial_exec() {
+    predict_bit_identical(ExecutorChoice::Serial);
+}
+
+#[test]
+fn predict_bit_identical_threads_exec() {
+    predict_bit_identical(ExecutorChoice::Threads { cap: 4 });
+}
+
+#[test]
+fn predict_bit_identical_pool_exec() {
+    predict_bit_identical(ExecutorChoice::Pool { cap: 4 });
+}
+
+/// Save → load → predict is bit-identical to the live session's model, so
+/// a session's snapshot can be shipped to a serving process.
+#[test]
+fn saved_model_round_trips_and_predicts_bit_identically_serial_exec() {
+    let (train_ds, test_ds) = data(900, 250, 5);
+    let be = backend();
+    let s = settings(96, 3, CStorage::Materialized, ExecutorChoice::Serial);
+    let mut sess = Session::build(&s, &train_ds, Arc::clone(&be), CostModel::free()).unwrap();
+    sess.solve().unwrap();
+    let live = sess.predict(&test_ds.x).unwrap();
+
+    let dir = std::env::temp_dir().join("dkm_session_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.dkm");
+    sess.model().save(&path).unwrap();
+    let shipped = dkm::coordinator::TrainedModel::load(&path).unwrap();
+    let served = shipped.predict(be.as_ref(), &test_ds.x).unwrap();
+    assert_eq!(served.len(), live.len());
+    for (a, b) in served.iter().zip(&live) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    std::fs::remove_file(path).ok();
+}
