@@ -207,6 +207,8 @@ fn main() {
         "reduce_rts",
         "rts/eval",
         "barriers",
+        "dispatches",
+        "disp/eval",
         "tron_wall_us/eval",
         "sim_tron_comm_s",
     ]);
@@ -218,6 +220,8 @@ fn main() {
             format!("{}", out.sim.comm_rounds()),
             format!("{:.2}", out.sim.comm_rounds() as f64 / evals),
             format!("{}", out.sim.barriers()),
+            format!("{}", out.sim.dispatches()),
+            format!("{:.2}", out.sim.dispatches() as f64 / evals),
             format!("{:.1}", out.wall.wall_secs(Step::Tron) / evals * 1e6),
             format!("{:.3}", out.sim.comm_secs(Step::Tron)),
         ]);
@@ -247,6 +251,17 @@ fn main() {
         fused_out.sim.comm_secs(Step::Tron) <= split_out.sim.comm_secs(Step::Tron),
         "fused simulated comm regressed past split"
     );
+    // The whole-node block ops: ONE backend dispatch per node per TRON
+    // evaluation on the native backend (this workload spans multiple
+    // column tiles), independent of the communication pipeline.
+    for (pipeline, out) in &pipe_outs {
+        assert_eq!(
+            out.sim.dispatches(),
+            nodes as u64 * (out.fg_evals + out.hd_evals) as u64,
+            "{}: expected one dispatch per node per evaluation",
+            pipeline.name()
+        );
+    }
     assert!(same_pipeline, "pipeline equivalence violated");
 
     println!(

@@ -1,15 +1,78 @@
 //! Micro benchmarks: the building-block costs behind every table —
-//! AllReduce round-trips, kernel-tile throughput (PJRT vs native), tile
-//! dispatch overhead, TRON op latency.
+//! AllReduce round-trips, kernel-tile throughput (PJRT vs native), SIMD
+//! microkernel GFLOP/s vs a naive scalar baseline, tile dispatch
+//! overhead, TRON op latency, and dispatches per TRON evaluation
+//! (per-tile drivers vs the whole-node block ops).
 
 #[path = "common/mod.rs"]
 mod common;
 
+use std::sync::Arc;
+
 use dkm::cluster::{Cluster, CostModel};
+use dkm::config::settings::{CStorage, Loss};
+use dkm::coordinator::make_store;
 use dkm::linalg::Mat;
 use dkm::metrics::{Step, Table};
 use dkm::rng::Rng;
+use dkm::runtime::backend::NativeCompute;
+use dkm::runtime::native;
 use dkm::runtime::tiles::{TB, TM};
+use dkm::runtime::Compute;
+
+// ---- naive scalar baselines (the "before" of the SIMD microkernels) ----
+// Sequential-accumulation textbook forms: the reductions cannot be
+// auto-vectorized (f32 addition is not associative), so these measure what
+// the microkernels replaced.
+
+fn kernel_block_naive(x: &[f32], z: &[f32], d: usize, gamma: f32) -> Vec<f32> {
+    let mut out = vec![0.0f32; TB * TM];
+    for i in 0..TB {
+        for k in 0..TM {
+            let mut d2 = 0.0f32;
+            for t in 0..d {
+                let diff = x[i * d + t] - z[k * d + t];
+                d2 += diff * diff;
+            }
+            out[i * TM + k] = (-gamma * d2).exp();
+        }
+    }
+    out
+}
+
+fn gemm_nn_naive(a: &Mat, b: &Mat) -> Mat {
+    let mut out = Mat::zeros(a.rows(), b.cols());
+    for i in 0..a.rows() {
+        for j in 0..b.cols() {
+            let mut s = 0.0f32;
+            for k in 0..a.cols() {
+                s += a.at(i, k) * b.at(k, j);
+            }
+            *out.at_mut(i, j) = s;
+        }
+    }
+    out
+}
+
+fn matvec_naive(a: &Mat, x: &[f32], y: &mut [f32]) {
+    for i in 0..a.rows() {
+        let mut s = 0.0f32;
+        for (av, xv) in a.row(i).iter().zip(x) {
+            s += av * xv;
+        }
+        y[i] = s;
+    }
+}
+
+fn matvec_t_naive(a: &Mat, r: &[f32], y: &mut [f32]) {
+    for j in 0..a.cols() {
+        let mut s = 0.0f32;
+        for i in 0..a.rows() {
+            s += r[i] * a.at(i, j);
+        }
+        y[j] = s;
+    }
+}
 
 fn time<T>(reps: usize, mut f: impl FnMut() -> T) -> f64 {
     // one warmup
@@ -62,6 +125,76 @@ fn main() {
         ]);
     }
     print!("{}", table.render());
+
+    // --- SIMD microkernels vs naive scalar baselines, GFLOP/s ---
+    println!(
+        "\nSIMD microkernels vs naive scalar baselines \
+         (kernel/gemm: TBxTMxd; matvec: TBxd), GFLOP/s:"
+    );
+    let mut table = Table::new(&["op", "d", "scalar GF/s", "simd GF/s", "speedup"]);
+    let mut min_speedup_at_256p = f64::INFINITY;
+    for d in [64usize, 256, 784] {
+        let x: Vec<f32> = (0..TB * d).map(|_| rng.normal_f32()).collect();
+        let z: Vec<f32> = (0..TM * d).map(|_| rng.normal_f32()).collect();
+        let a = Mat::from_vec(TB, d, x.clone());
+        let b = Mat::from_vec(d, TM, (0..d * TM).map(|_| rng.normal_f32()).collect());
+        let xv: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let rv: Vec<f32> = (0..TB).map(|_| rng.normal_f32()).collect();
+        let mut yb = vec![0.0f32; TB];
+        let mut yd = vec![0.0f32; d];
+        let tile_flops = (2 * TB * TM * d) as f64;
+        let mv_flops = (2 * TB * d) as f64;
+        let reps = if d >= 784 { 5 } else { 10 };
+        let cases: [(&str, f64, f64, f64); 4] = [
+            (
+                "kernel_block",
+                tile_flops,
+                time(reps, || kernel_block_naive(&x, &z, d, 0.5)),
+                time(reps, || native::kernel_block(&x, &z, d, 0.5)),
+            ),
+            (
+                "gemm_nn",
+                tile_flops,
+                time(reps, || gemm_nn_naive(&a, &b)),
+                time(reps, || a.gemm_nn(&b)),
+            ),
+            (
+                "matvec",
+                mv_flops,
+                time(50, || matvec_naive(&a, &xv, &mut yb)),
+                time(50, || a.matvec(&xv, &mut yb)),
+            ),
+            (
+                "matvec_t",
+                mv_flops,
+                time(50, || matvec_t_naive(&a, &rv, &mut yd)),
+                time(50, || a.matvec_t(&rv, &mut yd)),
+            ),
+        ];
+        for (op, flops, s_naive, s_simd) in cases {
+            let speedup = s_naive / s_simd;
+            if d >= 256 && (op == "kernel_block" || op == "gemm_nn") {
+                min_speedup_at_256p = min_speedup_at_256p.min(speedup);
+            }
+            table.row(&[
+                op.into(),
+                d.to_string(),
+                format!("{:.2}", flops / s_naive / 1e9),
+                format!("{:.2}", flops / s_simd / 1e9),
+                format!("{:.1}x", speedup),
+            ]);
+        }
+    }
+    print!("{}", table.render());
+    // The tentpole throughput contract: register-blocked kernels at least
+    // double the scalar baseline on the wide shapes. (Skipped under the
+    // scalar-fallback CI feature, whose whole point is to defeat SIMD.)
+    if cfg!(not(feature = "scalar-fallback")) {
+        assert!(
+            min_speedup_at_256p >= 2.0,
+            "kernel_block/gemm_nn speedup at d >= 256 fell below 2x: {min_speedup_at_256p:.2}x"
+        );
+    }
 
     // --- dispatch overhead: smallest op round trip ---
     let o: Vec<f32> = (0..TB).map(|_| rng.normal_f32()).collect();
@@ -186,6 +319,132 @@ fn main() {
         format!("{:.1}", s_hdx * 1e6),
         format!("{:.1}x", s_hdx / p_hdx),
     ]);
+    print!("{}", table.render());
+
+    // --- dispatches per TRON evaluation: per-tile vs whole-node block ---
+    // One node, 2 row tiles, driven through its CBlockStore three ways:
+    // the split per-tile loop (matvec + loss stage + matvec_t per column
+    // tile), the fused per-tile ops (single column tile only), and the
+    // whole-node block ops — backend call-count deltas per f/g and Hd
+    // evaluation. The block ops cost ONE dispatch regardless of shape.
+    println!("\ndispatches per evaluation (one node, 2 row tiles, materialized C):");
+    let nb = NativeCompute::new();
+    let dd = 64usize;
+    let rows = 300usize; // 2 row tiles of TB
+    let rt = 2usize;
+    let x_tiles: Vec<Vec<f32>> = (0..rt)
+        .map(|_| (0..TB * dd).map(|_| rng.normal_f32()).collect())
+        .collect();
+    let x_prep = Arc::new(
+        x_tiles
+            .iter()
+            .map(|t| nb.prepare(t, &[TB, dd]).unwrap())
+            .collect::<Vec<_>>(),
+    );
+    let y_tiles: Vec<Vec<f32>> = (0..rt).map(|_| vec![1.0f32; TB]).collect();
+    let masks: Vec<Vec<f32>> = (0..rt).map(|_| vec![1.0f32; TB]).collect();
+    let y_prep: Vec<_> = y_tiles.iter().map(|t| nb.prepare(t, &[TB]).unwrap()).collect();
+    let mask_prep: Vec<_> = masks.iter().map(|t| nb.prepare(t, &[TB]).unwrap()).collect();
+    let mut table = Table::new(&["driver", "col tiles", "f/g dispatches", "Hd dispatches"]);
+    for m_cols in [200usize, 300] {
+        let ct = m_cols.div_ceil(TM).max(1);
+        let z_tiles: Vec<Vec<f32>> = (0..ct)
+            .map(|_| (0..TM * dd).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let z_prep = Arc::new(
+            z_tiles
+                .iter()
+                .map(|t| nb.prepare(t, &[TM, dd]).unwrap())
+                .collect::<Vec<_>>(),
+        );
+        let mut store = make_store(CStorage::Materialized, 0);
+        store
+            .rebuild(&nb, &x_prep, &z_prep, rows, m_cols, 0.5, dd, 0..ct, &[])
+            .unwrap();
+        let v_tiles: Vec<Vec<f32>> = (0..ct)
+            .map(|_| (0..TM).map(|_| rng.normal_f32()).collect())
+            .collect();
+
+        // Whole-node block drive (also yields dcoef for the per-tile Hd).
+        let c0 = nb.call_count();
+        let blk = store
+            .fgrad_block(&nb, Loss::SqHinge, &v_tiles, &y_prep, &mask_prep, &y_tiles, &masks)
+            .unwrap();
+        let block_fg = nb.call_count() - c0;
+        let c0 = nb.call_count();
+        store.hd_block(&nb, &v_tiles, &blk.dcoef).unwrap();
+        let block_hd = nb.call_count() - c0;
+
+        // Split per-tile drive: the pre-block coordinator loop.
+        let c0 = nb.call_count();
+        for i in 0..rt {
+            let mut o = vec![0.0f32; TB];
+            for (j, vj) in v_tiles.iter().enumerate() {
+                let part = store.matvec_tile(&nb, i, j, vj).unwrap();
+                for (av, bv) in o.iter_mut().zip(&part) {
+                    *av += bv;
+                }
+            }
+            let stage = nb.loss_stage(Loss::SqHinge, &o, &y_tiles[i], &masks[i]).unwrap();
+            for j in 0..ct {
+                store.matvec_t_tile(&nb, i, j, &stage.vec).unwrap();
+            }
+        }
+        let split_fg = nb.call_count() - c0;
+        let c0 = nb.call_count();
+        for i in 0..rt {
+            let mut zv = vec![0.0f32; TB];
+            for (j, vj) in v_tiles.iter().enumerate() {
+                let part = store.matvec_tile(&nb, i, j, vj).unwrap();
+                for (av, bv) in zv.iter_mut().zip(&part) {
+                    *av += bv;
+                }
+            }
+            for (zi, w) in zv.iter_mut().zip(&blk.dcoef[i]) {
+                *zi *= w;
+            }
+            for j in 0..ct {
+                store.matvec_t_tile(&nb, i, j, &zv).unwrap();
+            }
+        }
+        let split_hd = nb.call_count() - c0;
+        table.row(&[
+            format!("per-tile split (2x{ct})"),
+            ct.to_string(),
+            split_fg.to_string(),
+            split_hd.to_string(),
+        ]);
+
+        // Fused per-tile ops exist for the single-column-tile shape only.
+        if ct == 1 {
+            let c0 = nb.call_count();
+            for i in 0..rt {
+                store
+                    .fgrad_tile(&nb, Loss::SqHinge, i, &v_tiles[0], &y_prep[i], &mask_prep[i])
+                    .unwrap();
+            }
+            let fused_fg = nb.call_count() - c0;
+            let c0 = nb.call_count();
+            for i in 0..rt {
+                store.hd_tile(&nb, i, &v_tiles[0], &blk.dcoef[i]).unwrap();
+            }
+            let fused_hd = nb.call_count() - c0;
+            table.row(&[
+                format!("per-tile fused (2x{ct})"),
+                ct.to_string(),
+                fused_fg.to_string(),
+                fused_hd.to_string(),
+            ]);
+        }
+        table.row(&[
+            format!("whole-node block (2x{ct})"),
+            ct.to_string(),
+            block_fg.to_string(),
+            block_hd.to_string(),
+        ]);
+        assert_eq!(block_fg, 1, "block f/g must be one dispatch");
+        assert_eq!(block_hd, 1, "block Hd must be one dispatch");
+    }
     print!("{}", table.render());
 
     // --- matvec_t guard: when does the xi != 0 sparsity skip pay? ---

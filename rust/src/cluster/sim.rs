@@ -21,6 +21,7 @@ pub struct SimClock {
     recompute_flops: u64,
     barriers: u64,
     reduce_round_trips: u64,
+    dispatches: u64,
 }
 
 impl SimClock {
@@ -34,6 +35,7 @@ impl SimClock {
             recompute_flops: 0,
             barriers: 0,
             reduce_round_trips: 0,
+            dispatches: 0,
         }
     }
 
@@ -126,6 +128,20 @@ impl SimClock {
         self.reduce_round_trips
     }
 
+    /// Count backend dispatches issued inside TRON evaluation phases (the
+    /// `Compute` call-count delta around each f/g and Hd phase). With the
+    /// whole-node block ops this is exactly ONE per node per evaluation on
+    /// the native backend, independent of how many (row × column) tiles
+    /// the node holds.
+    pub fn add_dispatches(&mut self, n: u64) {
+        self.dispatches += n;
+    }
+
+    /// Backend dispatches issued inside TRON evaluation phases so far.
+    pub fn dispatches(&self) -> u64 {
+        self.dispatches
+    }
+
     /// Charge extra FLOPs spent recomputing kernel tiles (the streaming
     /// C-storage tradeoff). The *time* of those FLOPs is already inside the
     /// measured per-phase compute; this keeps the count visible so benches
@@ -215,6 +231,15 @@ mod tests {
         assert_eq!(c.comm_rounds(), 1);
         assert_eq!(c.comm_instances(), 6);
         assert_eq!(c.comm_bytes(), 4 * 64 + 2 * 8);
+    }
+
+    #[test]
+    fn dispatches_accumulate() {
+        let mut c = SimClock::new(CostModel::free());
+        assert_eq!(c.dispatches(), 0);
+        c.add_dispatches(3);
+        c.add_dispatches(2);
+        assert_eq!(c.dispatches(), 5);
     }
 
     #[test]

@@ -45,7 +45,7 @@ use crate::config::settings::{CStorage, Loss};
 use crate::linalg::mat::dot;
 use crate::runtime::backend::Prepared;
 use crate::runtime::tiles::{TB, TM};
-use crate::runtime::{Compute, StageOut};
+use crate::runtime::{BlockOut, Compute, RowTiles, StageOut};
 use crate::Result;
 
 /// How a node's C row block is stored and applied. Implementations must be
@@ -121,6 +121,35 @@ pub trait CBlockStore: Send {
         i: usize,
         d_tile: &[f32],
         dcoef: &[f32],
+    ) -> Result<Vec<f32>>;
+
+    /// Whole-node fused f/g: ONE backend dispatch covering every
+    /// (row tile × column tile) of the block — both matvec halves plus the
+    /// loss stage — regardless of how the tiles are stored. Bit-identical
+    /// to driving the per-tile ops above (same accumulation order).
+    /// `y`/`mask` are the host label/mask tiles, `y_prep`/`mask_prep`
+    /// their prepared twins (single-column fused ops consume the prepared
+    /// form, the multi-column loss stage the host form).
+    #[allow(clippy::too_many_arguments)]
+    fn fgrad_block(
+        &self,
+        backend: &dyn Compute,
+        loss: Loss,
+        v_tiles: &[Vec<f32>],
+        y_prep: &[Prepared],
+        mask_prep: &[Prepared],
+        y: &[Vec<f32>],
+        mask: &[Vec<f32>],
+    ) -> Result<BlockOut>;
+
+    /// Whole-node fused Hd: ONE backend dispatch for the node's flat
+    /// `col_tiles·TM` Hd partial. `dcoef` holds the per-row-tile diagonals
+    /// cached by the last `fgrad_block`.
+    fn hd_block(
+        &self,
+        backend: &dyn Compute,
+        v_tiles: &[Vec<f32>],
+        dcoef: &[Vec<f32>],
     ) -> Result<Vec<f32>>;
 
     /// Dot of logical C row `row` with a tiled m-vector (FromC W shares).
@@ -572,6 +601,80 @@ impl Core {
         )
     }
 
+    /// Build the per-row-tile operand list for a whole-node block dispatch
+    /// and charge the streamed kernel-tile recompute the backend will
+    /// perform for it: 1 fused tile per streamed row tile when there is a
+    /// single column tile, `ct` buffered computes when the rowbuf scratch
+    /// keeps the row between the matvec halves, `2·ct` otherwise (both
+    /// halves recompute every tile) — the same per-evaluation charges the
+    /// per-tile dispatch paths above accrue.
+    fn block_rows<'s>(&'s self, ctx: &'s StreamCtx) -> Vec<RowTiles<'s>> {
+        let keep_row = self.rowbuf.is_some();
+        let rows: Vec<RowTiles<'s>> = self
+            .slots
+            .iter()
+            .enumerate()
+            .map(|(i, slot)| match slot {
+                Some(s) => RowTiles::Prepared(&s.preps),
+                None => RowTiles::FromX {
+                    x: &ctx.x_prep[i],
+                    keep_row,
+                },
+            })
+            .collect();
+        let streamed = self.slots.iter().filter(|s| s.is_none()).count() as u64;
+        if streamed > 0 {
+            let ct = self.col_tiles() as u64;
+            let per = if ct == 1 {
+                1
+            } else if keep_row {
+                ct
+            } else {
+                2 * ct
+            };
+            self.recomputed.fetch_add(streamed * per, Ordering::Relaxed);
+        }
+        rows
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn fgrad_block(
+        &self,
+        backend: &dyn Compute,
+        loss: Loss,
+        v_tiles: &[Vec<f32>],
+        y_prep: &[Prepared],
+        mask_prep: &[Prepared],
+        y: &[Vec<f32>],
+        mask: &[Vec<f32>],
+    ) -> Result<BlockOut> {
+        let ctx = self.ctx()?;
+        let rows = self.block_rows(ctx);
+        backend.fgrad_block(
+            loss,
+            &rows,
+            &ctx.z_prep[..],
+            ctx.dpad,
+            ctx.gamma,
+            v_tiles,
+            y_prep,
+            mask_prep,
+            y,
+            mask,
+        )
+    }
+
+    fn hd_block(
+        &self,
+        backend: &dyn Compute,
+        v_tiles: &[Vec<f32>],
+        dcoef: &[Vec<f32>],
+    ) -> Result<Vec<f32>> {
+        let ctx = self.ctx()?;
+        let rows = self.block_rows(ctx);
+        backend.hd_block(&rows, &ctx.z_prep[..], ctx.dpad, ctx.gamma, v_tiles, dcoef)
+    }
+
     fn row_dot(&self, row: usize, v_tiles: &[Vec<f32>]) -> Result<f32> {
         let ti = row / TB;
         if let Some(Some(slot)) = self.slots.get(ti) {
@@ -691,6 +794,29 @@ macro_rules! impl_cblock_store {
                 dcoef: &[f32],
             ) -> Result<Vec<f32>> {
                 self.0.hd_tile(backend, i, d_tile, dcoef)
+            }
+
+            fn fgrad_block(
+                &self,
+                backend: &dyn Compute,
+                loss: Loss,
+                v_tiles: &[Vec<f32>],
+                y_prep: &[Prepared],
+                mask_prep: &[Prepared],
+                y: &[Vec<f32>],
+                mask: &[Vec<f32>],
+            ) -> Result<BlockOut> {
+                self.0
+                    .fgrad_block(backend, loss, v_tiles, y_prep, mask_prep, y, mask)
+            }
+
+            fn hd_block(
+                &self,
+                backend: &dyn Compute,
+                v_tiles: &[Vec<f32>],
+                dcoef: &[Vec<f32>],
+            ) -> Result<Vec<f32>> {
+                self.0.hd_block(backend, v_tiles, dcoef)
             }
 
             fn row_dot(&self, row: usize, v_tiles: &[Vec<f32>]) -> Result<f32> {

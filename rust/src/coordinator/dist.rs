@@ -101,7 +101,6 @@ impl<'a> DistProblem<'a> {
         lambda: f32,
     ) -> Result<Vec<f32>> {
         let ct = node.cstore.col_tiles();
-        let mut out = vec![0.0f32; FG_SCALARS + ct * TM];
         assert!(
             node.cstore.ready(),
             "compute_c_block must run before TRON"
@@ -111,48 +110,21 @@ impl<'a> DistProblem<'a> {
             node.row_tiles(),
             "prepare_hot must run before TRON"
         );
-        let mut loss_partial = 0.0f32;
-        for i in 0..node.row_tiles() {
-            if ct == 1 {
-                // Fused per-tile dispatch: one call instead of three (the
-                // streaming store computes its kernel tile once inside it).
-                let tile_out = node.cstore.fgrad_tile(
-                    backend,
-                    loss,
-                    i,
-                    &v_tiles[0],
-                    &node.y_prep[i],
-                    &node.mask_prep[i],
-                )?;
-                loss_partial += tile_out.loss;
-                for (g, v) in out[FG_SCALARS..FG_SCALARS + TM]
-                    .iter_mut()
-                    .zip(&tile_out.vec)
-                {
-                    *g += v;
-                }
-                node.dcoef_tiles[i] = tile_out.dcoef;
-            } else {
-                // o = Σ_j C_ij β_j
-                let mut o = vec![0.0f32; crate::runtime::tiles::TB];
-                for j in 0..ct {
-                    let part = node.cstore.matvec_tile(backend, i, j, &v_tiles[j])?;
-                    for (a, b) in o.iter_mut().zip(&part) {
-                        *a += b;
-                    }
-                }
-                let stage = backend.loss_stage(loss, &o, &node.y_tiles[i], &node.masks[i])?;
-                loss_partial += stage.loss;
-                for j in 0..ct {
-                    let part = node.cstore.matvec_t_tile(backend, i, j, &stage.vec)?;
-                    let dst = &mut out[FG_SCALARS + j * TM..FG_SCALARS + (j + 1) * TM];
-                    for (g, v) in dst.iter_mut().zip(&part) {
-                        *g += v;
-                    }
-                }
-                node.dcoef_tiles[i] = stage.dcoef;
-            }
-        }
+        // ONE backend dispatch covers the whole C block — both matvec
+        // halves of every (row tile × column tile) with the loss stage in
+        // between, in the same accumulation order the per-tile loop used.
+        let blk = node.cstore.fgrad_block(
+            backend,
+            loss,
+            v_tiles,
+            &node.y_prep,
+            &node.mask_prep,
+            &node.y_tiles,
+            &node.masks,
+        )?;
+        let mut out = vec![0.0f32; FG_SCALARS + ct * TM];
+        out[FG_SCALARS..].copy_from_slice(&blk.grad);
+        node.dcoef_tiles = blk.dcoef;
         // Regularizer part: this node's (Wβ) entries. Flat tile layout puts
         // gradient element k at FG_SCALARS + k directly.
         let mut reg_partial = 0.0f32;
@@ -160,7 +132,7 @@ impl<'a> DistProblem<'a> {
             reg_partial += beta[k] * wv;
             out[FG_SCALARS + k] += lambda * wv;
         }
-        out[0] = loss_partial;
+        out[0] = blk.loss;
         out[1] = reg_partial;
         Ok(out)
     }
@@ -173,36 +145,10 @@ impl<'a> DistProblem<'a> {
         v_tiles: &[Vec<f32>],
         lambda: f32,
     ) -> Result<Vec<f32>> {
-        let ct = node.cstore.col_tiles();
-        let mut out = vec![0.0f32; ct * TM];
-        for i in 0..node.row_tiles() {
-            if ct == 1 {
-                let part =
-                    node.cstore
-                        .hd_tile(backend, i, &v_tiles[0], &node.dcoef_tiles[i])?;
-                for (h, v) in out[..TM].iter_mut().zip(&part) {
-                    *h += v;
-                }
-            } else {
-                let mut z = vec![0.0f32; crate::runtime::tiles::TB];
-                for j in 0..ct {
-                    let part = node.cstore.matvec_tile(backend, i, j, &v_tiles[j])?;
-                    for (a, b) in z.iter_mut().zip(&part) {
-                        *a += b;
-                    }
-                }
-                for (zi, w) in z.iter_mut().zip(&node.dcoef_tiles[i]) {
-                    *zi *= w;
-                }
-                for j in 0..ct {
-                    let part = node.cstore.matvec_t_tile(backend, i, j, &z)?;
-                    let dst = &mut out[j * TM..(j + 1) * TM];
-                    for (h, v) in dst.iter_mut().zip(&part) {
-                        *h += v;
-                    }
-                }
-            }
-        }
+        // ONE backend dispatch for the node's whole Hd partial.
+        let mut out = node
+            .cstore
+            .hd_block(backend, v_tiles, &node.dcoef_tiles)?;
         // λ(Wd) entries.
         for (k, wv) in node.wv_entries(backend, v_tiles)? {
             out[k] += lambda * wv;
@@ -234,14 +180,17 @@ impl Objective for DistProblem<'_> {
         let backend = Arc::clone(&self.backend);
         let loss = self.loss;
         let lambda = self.lambda;
-        match self.pipeline {
+        // Backend call-count delta around the evaluation = dispatches this
+        // evaluation issued (one per node with the whole-node block ops).
+        let calls0 = backend.call_count();
+        let out = match self.pipeline {
             EvalPipeline::Fused => {
                 let reduced = self.cluster.try_par_compute_reduce(Step::Tron, |_, node| {
                     Self::node_fg(node, backend.as_ref(), loss, &v_tiles, beta, lambda)
                 })?;
                 let f = self.assemble_f(reduced[0], reduced[1]);
                 let grad = unpad_m_flat(&reduced[FG_SCALARS..], self.m);
-                Ok((f, grad))
+                (f, grad)
             }
             EvalPipeline::Split => {
                 let partials = self.cluster.try_par_compute(Step::Tron, |_, node| {
@@ -258,9 +207,13 @@ impl Objective for DistProblem<'_> {
                     .collect();
                 let grad_padded = self.cluster.allreduce_sum(Step::Tron, grad_partials);
                 let f = self.assemble_f(scalars[0], scalars[1]);
-                Ok((f, unpad_m_flat(&grad_padded, self.m)))
+                (f, unpad_m_flat(&grad_padded, self.m))
             }
-        }
+        };
+        self.cluster
+            .clock
+            .add_dispatches(backend.call_count().saturating_sub(calls0));
+        Ok(out)
     }
 
     /// Step 4c: same sequence as the gradient with β replaced by d and the
@@ -273,20 +226,25 @@ impl Objective for DistProblem<'_> {
             .broadcast_meter(Step::Tron, self.m * std::mem::size_of::<f32>());
         let backend = Arc::clone(&self.backend);
         let lambda = self.lambda;
-        match self.pipeline {
+        let calls0 = backend.call_count();
+        let out = match self.pipeline {
             EvalPipeline::Fused => {
                 let reduced = self.cluster.try_par_compute_reduce(Step::Tron, |_, node| {
                     Self::node_hd(node, backend.as_ref(), &v_tiles, lambda)
                 })?;
-                Ok(unpad_m_flat(&reduced, self.m))
+                unpad_m_flat(&reduced, self.m)
             }
             EvalPipeline::Split => {
                 let partials = self.cluster.try_par_compute(Step::Tron, |_, node| {
                     Self::node_hd(node, backend.as_ref(), &v_tiles, lambda)
                 })?;
                 let hd_padded = self.cluster.allreduce_sum(Step::Tron, partials);
-                Ok(unpad_m_flat(&hd_padded, self.m))
+                unpad_m_flat(&hd_padded, self.m)
             }
-        }
+        };
+        self.cluster
+            .clock
+            .add_dispatches(backend.call_count().saturating_sub(calls0));
+        Ok(out)
     }
 }

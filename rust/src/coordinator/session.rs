@@ -104,6 +104,7 @@ pub struct Session {
     /// Ledger counters already mirrored into the wall metrics.
     mirrored_barriers: u64,
     mirrored_rounds: u64,
+    mirrored_dispatches: u64,
     /// Set when a growth's C-column install failed part-way: the nodes'
     /// kernel state is inconsistent with the basis, so solve/predict/grow
     /// refuse to run rather than silently use stale C blocks.
@@ -164,6 +165,7 @@ impl Session {
             charged_tiles: 0,
             mirrored_barriers: 0,
             mirrored_rounds: 0,
+            mirrored_dispatches: 0,
             poisoned: false,
         };
         // Step 3: kernel computation (all column tiles dirty on first build).
@@ -476,10 +478,13 @@ impl Session {
     fn sync_counters(&mut self) {
         let b = self.cluster.clock.barriers();
         let r = self.cluster.clock.comm_rounds();
+        let d = self.cluster.clock.dispatches();
         self.wall.bump("barriers", b - self.mirrored_barriers);
         self.wall.bump("comm_rounds", r - self.mirrored_rounds);
+        self.wall.bump("dispatches", d - self.mirrored_dispatches);
         self.mirrored_barriers = b;
         self.mirrored_rounds = r;
+        self.mirrored_dispatches = d;
     }
 
     /// Consume the session into the one-shot [`TrainOutput`] shape (the

@@ -6,6 +6,8 @@
 
 use std::fmt;
 
+use super::simd::{F32x, LANES};
+
 /// Row-major dense `rows x cols` matrix of f32.
 #[derive(Clone, PartialEq)]
 pub struct Mat {
@@ -149,6 +151,13 @@ impl Mat {
     }
 
     /// C = A B (B row-major `self.cols x n`).
+    ///
+    /// Register-blocked over the output row: two `F32x` output chunks stay
+    /// in registers across the whole k loop, so each 16-wide output block
+    /// costs one pass over A's row and B's column panel instead of k
+    /// read-modify-write sweeps of the output row. Per output element the
+    /// accumulation is still `Σ_k a_ik·b_kj` in ascending k from 0.0 —
+    /// bitwise identical to the unblocked axpy-per-k formulation.
     pub fn gemm_nn(&self, b: &Mat) -> Mat {
         assert_eq!(self.cols, b.rows, "inner dims");
         let n = b.cols;
@@ -161,8 +170,35 @@ impl Mat {
             // exp(−γd²), never exactly zero), so a per-element branch is
             // pure overhead in the innermost loop. Measured in the
             // `matvec_t guard` section of `cargo bench --bench micro`.
-            for (k, &aik) in ai.iter().enumerate() {
-                axpy(aik, b.row(k), orow);
+            let mut j = 0;
+            while j + 2 * LANES <= n {
+                let mut acc0 = F32x::zero();
+                let mut acc1 = F32x::zero();
+                for (k, &aik) in ai.iter().enumerate() {
+                    let brow = b.row(k);
+                    let s = F32x::splat(aik);
+                    acc0 = acc0.add(s.mul(F32x::load(&brow[j..])));
+                    acc1 = acc1.add(s.mul(F32x::load(&brow[j + LANES..])));
+                }
+                acc0.store(&mut orow[j..]);
+                acc1.store(&mut orow[j + LANES..]);
+                j += 2 * LANES;
+            }
+            while j + LANES <= n {
+                let mut acc = F32x::zero();
+                for (k, &aik) in ai.iter().enumerate() {
+                    acc = acc.add(F32x::splat(aik).mul(F32x::load(&b.row(k)[j..])));
+                }
+                acc.store(&mut orow[j..]);
+                j += LANES;
+            }
+            if j < n {
+                for (k, &aik) in ai.iter().enumerate() {
+                    let brow = b.row(k);
+                    for jj in j..n {
+                        orow[jj] += aik * brow[jj];
+                    }
+                }
             }
         }
         out
@@ -184,33 +220,107 @@ impl Mat {
     }
 }
 
-/// Unit-stride dot product; written so LLVM autovectorizes (4 accumulators).
+/// Unit-stride dot product — THE reduction of the accumulation-order
+/// contract (see [`crate::linalg::simd`]): two `F32x` accumulators over
+/// `2·LANES`-wide chunk pairs, one trailing `LANES` chunk into acc0,
+/// pairwise lane reduction, scalar tail in index order. Every blocked
+/// microkernel reproduces this order per element, so "blocked" never
+/// means "different bits".
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let n = a.len();
-    let chunks = n / 8;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for c in 0..chunks {
-        let i = c * 8;
-        s0 += a[i] * b[i] + a[i + 4] * b[i + 4];
-        s1 += a[i + 1] * b[i + 1] + a[i + 5] * b[i + 5];
-        s2 += a[i + 2] * b[i + 2] + a[i + 6] * b[i + 6];
-        s3 += a[i + 3] * b[i + 3] + a[i + 7] * b[i + 7];
+    let mut acc0 = F32x::zero();
+    let mut acc1 = F32x::zero();
+    let mut i = 0;
+    while i + 2 * LANES <= n {
+        acc0 = acc0.add(F32x::load(&a[i..]).mul(F32x::load(&b[i..])));
+        acc1 = acc1.add(F32x::load(&a[i + LANES..]).mul(F32x::load(&b[i + LANES..])));
+        i += 2 * LANES;
     }
-    let mut tail = 0.0f32;
-    for i in chunks * 8..n {
-        tail += a[i] * b[i];
+    if i + LANES <= n {
+        acc0 = acc0.add(F32x::load(&a[i..]).mul(F32x::load(&b[i..])));
+        i += LANES;
     }
-    s0 + s1 + s2 + s3 + tail
+    let mut s = acc0.add(acc1).hsum();
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
 }
 
-/// y += alpha * x, unit stride.
+/// Four simultaneous dot products against one shared right-hand side —
+/// the register-blocked core of the tile `matvec` and `kernel_block`.
+/// Each lane of the result is BITWISE equal to `dot(r_i, v)`: the per-row
+/// accumulator structure is `dot`'s exactly; blocking only shares the `v`
+/// loads across the four rows.
+#[inline]
+pub fn dot4(r0: &[f32], r1: &[f32], r2: &[f32], r3: &[f32], v: &[f32]) -> [f32; 4] {
+    let n = v.len();
+    debug_assert!(r0.len() == n && r1.len() == n && r2.len() == n && r3.len() == n);
+    let mut a00 = F32x::zero();
+    let mut a01 = F32x::zero();
+    let mut a10 = F32x::zero();
+    let mut a11 = F32x::zero();
+    let mut a20 = F32x::zero();
+    let mut a21 = F32x::zero();
+    let mut a30 = F32x::zero();
+    let mut a31 = F32x::zero();
+    let mut i = 0;
+    while i + 2 * LANES <= n {
+        let v0 = F32x::load(&v[i..]);
+        let v1 = F32x::load(&v[i + LANES..]);
+        a00 = a00.add(F32x::load(&r0[i..]).mul(v0));
+        a01 = a01.add(F32x::load(&r0[i + LANES..]).mul(v1));
+        a10 = a10.add(F32x::load(&r1[i..]).mul(v0));
+        a11 = a11.add(F32x::load(&r1[i + LANES..]).mul(v1));
+        a20 = a20.add(F32x::load(&r2[i..]).mul(v0));
+        a21 = a21.add(F32x::load(&r2[i + LANES..]).mul(v1));
+        a30 = a30.add(F32x::load(&r3[i..]).mul(v0));
+        a31 = a31.add(F32x::load(&r3[i + LANES..]).mul(v1));
+        i += 2 * LANES;
+    }
+    if i + LANES <= n {
+        let v0 = F32x::load(&v[i..]);
+        a00 = a00.add(F32x::load(&r0[i..]).mul(v0));
+        a10 = a10.add(F32x::load(&r1[i..]).mul(v0));
+        a20 = a20.add(F32x::load(&r2[i..]).mul(v0));
+        a30 = a30.add(F32x::load(&r3[i..]).mul(v0));
+        i += LANES;
+    }
+    let mut s = [
+        a00.add(a01).hsum(),
+        a10.add(a11).hsum(),
+        a20.add(a21).hsum(),
+        a30.add(a31).hsum(),
+    ];
+    while i < n {
+        s[0] += r0[i] * v[i];
+        s[1] += r1[i] * v[i];
+        s[2] += r2[i] * v[i];
+        s[3] += r3[i] * v[i];
+        i += 1;
+    }
+    s
+}
+
+/// y += alpha * x, unit stride, vectorized. Element-wise, so bitwise equal
+/// to the plain scalar loop for any length.
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
-        *yi += alpha * xi;
+    let n = y.len();
+    let a = F32x::splat(alpha);
+    let mut i = 0;
+    while i + LANES <= n {
+        let r = F32x::load(&y[i..]).add(a.mul(F32x::load(&x[i..])));
+        r.store(&mut y[i..]);
+        i += LANES;
+    }
+    while i < n {
+        y[i] += alpha * x[i];
+        i += 1;
     }
 }
 
@@ -291,5 +401,110 @@ mod tests {
     #[should_panic(expected = "shape/data mismatch")]
     fn from_vec_rejects_bad_shape() {
         Mat::from_vec(2, 2, vec![1.0; 5]);
+    }
+
+    /// Scalar re-statement of the documented accumulation order (lane
+    /// arrays instead of `F32x`); `dot` must match it BITWISE for every
+    /// shape — in both the vectorized and scalar-fallback builds, which
+    /// proves the two builds bit-identical transitively.
+    fn dot_contract_ref(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let mut acc0 = [0.0f32; 8];
+        let mut acc1 = [0.0f32; 8];
+        let mut i = 0;
+        while i + 16 <= n {
+            for l in 0..8 {
+                acc0[l] += a[i + l] * b[i + l];
+                acc1[l] += a[i + 8 + l] * b[i + 8 + l];
+            }
+            i += 16;
+        }
+        if i + 8 <= n {
+            for l in 0..8 {
+                acc0[l] += a[i + l] * b[i + l];
+            }
+            i += 8;
+        }
+        let c: Vec<f32> = (0..8).map(|l| acc0[l] + acc1[l]).collect();
+        let mut s = ((c[0] + c[1]) + (c[2] + c[3])) + ((c[4] + c[5]) + (c[6] + c[7]));
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[test]
+    fn dot_matches_contract_reference_bitwise() {
+        let mut rng = crate::rng::Rng::new(17);
+        for n in [0usize, 1, 5, 7, 8, 9, 15, 16, 17, 23, 31, 32, 100, 256, 784] {
+            let a: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            assert_eq!(
+                dot(&a, &b).to_bits(),
+                dot_contract_ref(&a, &b).to_bits(),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot4_matches_dot_bitwise() {
+        let mut rng = crate::rng::Rng::new(19);
+        for n in [0usize, 3, 8, 13, 16, 20, 64, 100, 784] {
+            let rows: Vec<Vec<f32>> = (0..4)
+                .map(|_| (0..n).map(|_| rng.normal_f32()).collect())
+                .collect();
+            let v: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let got = dot4(&rows[0], &rows[1], &rows[2], &rows[3], &v);
+            for r in 0..4 {
+                assert_eq!(
+                    got[r].to_bits(),
+                    dot(&rows[r], &v).to_bits(),
+                    "n={n} row={r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_matches_scalar_loop_bitwise() {
+        let mut rng = crate::rng::Rng::new(23);
+        for n in [0usize, 1, 7, 8, 9, 16, 31, 100] {
+            let x: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let y0: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let alpha = rng.normal_f32();
+            let mut got = y0.clone();
+            axpy(alpha, &x, &mut got);
+            for i in 0..n {
+                let want = y0[i] + alpha * x[i];
+                assert_eq!(got[i].to_bits(), want.to_bits(), "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_nn_matches_axpy_reference_bitwise() {
+        let mut rng = crate::rng::Rng::new(29);
+        // Odd shapes: output widths hitting the 16-wide, 8-wide and scalar
+        // tails of the blocked kernel.
+        for (rows, kk, n) in [(3usize, 11usize, 5usize), (4, 7, 16), (2, 9, 21), (5, 16, 40)] {
+            let a = Mat::from_fn(rows, kk, |_, _| rng.normal_f32());
+            let b = Mat::from_fn(kk, n, |_, _| rng.normal_f32());
+            let got = a.gemm_nn(&b);
+            let mut want = Mat::zeros(rows, n);
+            for i in 0..rows {
+                let ai = a.row(i);
+                let orow = want.row_mut(i);
+                for (k, &aik) in ai.iter().enumerate() {
+                    for (yi, xi) in orow.iter_mut().zip(b.row(k)) {
+                        *yi += aik * xi;
+                    }
+                }
+            }
+            for (x, y) in got.as_slice().iter().zip(want.as_slice()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{rows}x{kk}x{n}");
+            }
+        }
     }
 }

@@ -7,10 +7,14 @@
 //!   whole point of the paper's formulation (4) is to avoid it.
 //! * [`chol`] — Cholesky factorization (diagnostics, ridge solves in tests).
 //! * [`vecops`] — the O(m) vector kernels TRON runs on the master.
+//! * [`simd`] — the portable fixed-lane vector shim (with its
+//!   `scalar-fallback` feature gate) behind every microkernel, and the
+//!   accumulation-order contract they all share.
 
 pub mod chol;
 pub mod eig;
 pub mod mat;
+pub mod simd;
 pub mod vecops;
 
 pub use chol::cholesky_solve;

@@ -1,0 +1,150 @@
+//! Portable SIMD shim for the tile microkernels.
+//!
+//! Stable Rust has no `std::simd`, so the "vector type" here is a fixed
+//! `[f32; LANES]` wrapper whose lane-wise ops are written in the shape LLVM
+//! reliably turns into packed vector instructions at opt-level 2+. The
+//! `scalar-fallback` cargo feature swaps the lane-wise ops for plain indexed
+//! loops — same per-lane operations in the same order, so both builds are
+//! bit-identical by construction (CI runs the full tier-1 suite under both).
+//!
+//! ## Accumulation-order contract
+//!
+//! Every length-n reduction in the microkernels (`dot`, the inner products
+//! of `kernel_block`/`dist2_block`, the per-row dots of `matvec`) uses ONE
+//! order, defined by [`crate::linalg::mat::dot`]:
+//!
+//! 1. two `F32x` accumulators walk `2·LANES`-wide chunks in index order
+//!    (acc0 takes the even chunk of each pair, acc1 the odd);
+//! 2. one trailing `LANES`-wide chunk, if present, folds into acc0;
+//! 3. `(acc0 + acc1).hsum()` reduces lanes pairwise
+//!    (`((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`);
+//! 4. the scalar tail is added in index order.
+//!
+//! Register-blocked kernels may interleave several such reductions (sharing
+//! operand loads across rows), but each individual reduction follows the
+//! contract exactly, so a blocked kernel is bitwise equal to calling `dot`
+//! per element. Element-wise ops (`axpy`, `gemm_nn`'s k-accumulation) have
+//! no reduction and are bit-identical to their scalar forms trivially.
+//! No FMA anywhere: `a + b * c` must round twice, like the scalar code.
+
+/// Lane count of the portable vector type (256-bit f32 vectors).
+pub const LANES: usize = 8;
+
+/// Portable `f32 x LANES` vector. Plain data; all ops are by value.
+#[derive(Clone, Copy, Debug)]
+pub struct F32x(pub [f32; LANES]);
+
+impl F32x {
+    /// All lanes zero.
+    #[inline(always)]
+    pub fn zero() -> Self {
+        F32x([0.0; LANES])
+    }
+
+    /// All lanes `v`.
+    #[inline(always)]
+    pub fn splat(v: f32) -> Self {
+        F32x([v; LANES])
+    }
+
+    /// Load the first `LANES` elements of `s` (panics if shorter).
+    #[inline(always)]
+    pub fn load(s: &[f32]) -> Self {
+        let mut a = [0.0f32; LANES];
+        a.copy_from_slice(&s[..LANES]);
+        F32x(a)
+    }
+
+    /// Store into the first `LANES` elements of `out`.
+    #[inline(always)]
+    pub fn store(self, out: &mut [f32]) {
+        out[..LANES].copy_from_slice(&self.0);
+    }
+
+    /// Lane-wise addition.
+    #[cfg(not(feature = "scalar-fallback"))]
+    #[inline(always)]
+    pub fn add(self, o: F32x) -> F32x {
+        F32x(core::array::from_fn(|l| self.0[l] + o.0[l]))
+    }
+
+    /// Lane-wise addition (scalar reference path).
+    #[cfg(feature = "scalar-fallback")]
+    #[inline(always)]
+    pub fn add(self, o: F32x) -> F32x {
+        let mut r = [0.0f32; LANES];
+        let mut l = 0;
+        while l < LANES {
+            r[l] = self.0[l] + o.0[l];
+            l += 1;
+        }
+        F32x(r)
+    }
+
+    /// Lane-wise multiplication.
+    #[cfg(not(feature = "scalar-fallback"))]
+    #[inline(always)]
+    pub fn mul(self, o: F32x) -> F32x {
+        F32x(core::array::from_fn(|l| self.0[l] * o.0[l]))
+    }
+
+    /// Lane-wise multiplication (scalar reference path).
+    #[cfg(feature = "scalar-fallback")]
+    #[inline(always)]
+    pub fn mul(self, o: F32x) -> F32x {
+        let mut r = [0.0f32; LANES];
+        let mut l = 0;
+        while l < LANES {
+            r[l] = self.0[l] * o.0[l];
+            l += 1;
+        }
+        F32x(r)
+    }
+
+    /// Horizontal sum with a FIXED pairwise order (part of the accumulation
+    /// contract — do not replace with a sequential fold).
+    #[inline(always)]
+    pub fn hsum(self) -> f32 {
+        let a = self.0;
+        ((a[0] + a[1]) + (a[2] + a[3])) + ((a[4] + a[5]) + (a[6] + a[7]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lanes_is_eight() {
+        // hsum is written for 8 lanes; this pins the two together.
+        assert_eq!(LANES, 8);
+    }
+
+    #[test]
+    fn ops_are_lane_wise() {
+        let a = F32x([1., 2., 3., 4., 5., 6., 7., 8.]);
+        let b = F32x::splat(2.0);
+        assert_eq!(a.add(b).0, [3., 4., 5., 6., 7., 8., 9., 10.]);
+        assert_eq!(a.mul(b).0, [2., 4., 6., 8., 10., 12., 14., 16.]);
+        assert_eq!(a.hsum(), 36.0);
+    }
+
+    #[test]
+    fn load_store_round_trip() {
+        let src = [1.0f32, 2., 3., 4., 5., 6., 7., 8., 99.];
+        let v = F32x::load(&src);
+        let mut dst = [0.0f32; 9];
+        v.store(&mut dst);
+        assert_eq!(&dst[..8], &src[..8]);
+        assert_eq!(dst[8], 0.0);
+    }
+
+    #[test]
+    fn hsum_is_pairwise_not_sequential() {
+        // A vector crafted so pairwise and sequential summation round
+        // differently in f32 — pins the documented reduction order.
+        let v = F32x([1e8, 1.0, -1e8, 1.0, 0.5, 0.5, -0.25, -0.25]);
+        let pairwise = ((1e8f32 + 1.0) + (-1e8 + 1.0)) + ((0.5 + 0.5) + (-0.25 + -0.25));
+        assert_eq!(v.hsum().to_bits(), pairwise.to_bits());
+    }
+}

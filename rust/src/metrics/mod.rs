@@ -126,6 +126,13 @@ impl Metrics {
         self.counter("comm_rounds")
     }
 
+    /// Backend dispatches issued inside TRON evaluation phases — mirrored
+    /// from the cluster ledger by the trainer. One per node per evaluation
+    /// with the whole-node block ops on the native backend.
+    pub fn dispatches(&self) -> u64 {
+        self.counter("dispatches")
+    }
+
     pub fn counter(&self, key: &str) -> u64 {
         self.counters.get(key).copied().unwrap_or(0)
     }

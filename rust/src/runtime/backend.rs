@@ -15,9 +15,83 @@ use crate::Result;
 
 #[cfg(feature = "pjrt")]
 use super::engine::Engine;
-use super::{native, AssignOut, StageOut};
+use super::{native, AssignOut, BlockOut, StageOut};
 
 use super::tiles::{TB, TM};
+
+/// One row tile's worth of C-block operands for the per-evaluation block
+/// ops ([`Compute::fgrad_block`] / [`Compute::hd_block`]): either the
+/// materialized prepared C tiles (one per basis column tile) or the
+/// prepared feature tile to recompute them from.
+pub enum RowTiles<'a> {
+    /// Materialized: prepared C tiles, one per basis column tile.
+    Prepared(&'a [Prepared]),
+    /// Streamed: recompute each C tile from the prepared feature tile
+    /// inside the dispatch. `keep_row` asks the backend to hold all
+    /// `col_tiles` tiles of this row across the matvec and matvec_t halves
+    /// (rowbuf semantics — O(col_tiles)-tile transient memory); otherwise
+    /// each tile is recomputed per half (plain streaming — one transient
+    /// tile). With a single column tile the tile is always computed once
+    /// and consumed fused, whatever the flag says.
+    FromX { x: &'a Prepared, keep_row: bool },
+}
+
+/// Borrowed-or-computed C tile inside a native block dispatch.
+enum Tile<'a> {
+    Borrowed(&'a [f32]),
+    Owned(Vec<f32>),
+}
+
+impl Tile<'_> {
+    fn as_slice(&self) -> &[f32] {
+        match self {
+            Tile::Borrowed(s) => s,
+            Tile::Owned(v) => v,
+        }
+    }
+}
+
+/// Resolve column tile `j` of one row for the native block ops: borrow a
+/// materialized/kept tile, or recompute it from the feature tile. The
+/// recomputed tile is `native::kernel_block` verbatim, so which arm runs
+/// never changes bits — only where the tile lives and how often it is
+/// (re)built.
+fn block_tile<'a>(
+    row: &'a RowTiles<'a>,
+    kept: &'a Option<Vec<Vec<f32>>>,
+    z: &[Prepared],
+    dpad: usize,
+    gamma: f32,
+    j: usize,
+) -> Tile<'a> {
+    match row {
+        RowTiles::Prepared(preps) => Tile::Borrowed(preps[j].host()),
+        RowTiles::FromX { x, .. } => match kept {
+            Some(tiles) => Tile::Borrowed(&tiles[j]),
+            None => Tile::Owned(native::kernel_block(x.host(), z[j].host(), dpad, gamma)),
+        },
+    }
+}
+
+/// Rowbuf-style tile retention for one streamed row of a native block
+/// dispatch: all `ct` tiles computed up front (only when asked, and only
+/// worthwhile for ct > 1 — a single tile is consumed fused either way).
+fn keep_tiles(
+    row: &RowTiles<'_>,
+    ct: usize,
+    z: &[Prepared],
+    dpad: usize,
+    gamma: f32,
+) -> Option<Vec<Vec<f32>>> {
+    match row {
+        RowTiles::FromX { x, keep_row: true } if ct > 1 => Some(
+            (0..ct)
+                .map(|j| native::kernel_block(x.host(), z[j].host(), dpad, gamma))
+                .collect(),
+        ),
+        _ => None,
+    }
+}
 
 /// An operand prepared for repeated hot-path use: resident on the PJRT
 /// device (one upload, zero per-call transfer) or a pinned host buffer for
@@ -221,6 +295,223 @@ pub trait Compute: Send + Sync {
         gamma: f32,
         r: &[f32],
     ) -> Result<Vec<f32>>;
+
+    // ---- per-evaluation block ops: ONE dispatch per node ----
+    //
+    // One call covers every (row tile × column tile) of a node's C block —
+    // both matvec halves of an evaluation — instead of O(row_tiles ·
+    // col_tiles) per-tile dispatches. The loop structure inside the block
+    // replicates the per-tile formulation exactly (accumulation in (i, j)
+    // order from zeros, loss stage between the halves), so results are
+    // bit-identical to driving the per-tile ops from the coordinator;
+    // only the dispatch count changes.
+    //
+    // The default implementations below fan back out to the per-tile ops —
+    // that is the cfg-free PJRT fallback (a fused device-side block
+    // program is ROADMAP item 4(c)). The native backend overrides them
+    // with single-dispatch microkernel loops.
+
+    /// Fused per-node f/grad over all row tiles: o_i = Σ_j C_ij v_j, loss
+    /// stage per row tile, grad_j += C_ijᵀ resid_i — one `BlockOut` with
+    /// the node's loss partial, flat `ct·TM` gradient partial and per-row
+    /// dcoef. `y`/`mask` are the host tiles, `y_prep`/`mask_prep` their
+    /// prepared twins (the single-column fused ops consume the prepared
+    /// form, the multi-column loss stage the host form — exactly like the
+    /// per-tile formulation).
+    #[allow(clippy::too_many_arguments)]
+    fn fgrad_block(
+        &self,
+        loss: Loss,
+        rows: &[RowTiles<'_>],
+        z: &[Prepared],
+        dpad: usize,
+        gamma: f32,
+        v_tiles: &[Vec<f32>],
+        y_prep: &[Prepared],
+        mask_prep: &[Prepared],
+        y: &[Vec<f32>],
+        mask: &[Vec<f32>],
+    ) -> Result<BlockOut> {
+        let ct = z.len();
+        let mut grad = vec![0.0f32; ct * TM];
+        let mut loss_sum = 0.0f32;
+        let mut dcoef = Vec::with_capacity(rows.len());
+        for (i, row) in rows.iter().enumerate() {
+            if ct == 1 {
+                let stage = match row {
+                    RowTiles::Prepared(preps) => {
+                        self.fgrad_p(loss, &preps[0], &v_tiles[0], &y_prep[i], &mask_prep[i])?
+                    }
+                    RowTiles::FromX { x, .. } => self.fgrad_from_x(
+                        loss,
+                        x,
+                        &z[0],
+                        dpad,
+                        gamma,
+                        &v_tiles[0],
+                        &y_prep[i],
+                        &mask_prep[i],
+                    )?,
+                };
+                loss_sum += stage.loss;
+                for (g, v) in grad.iter_mut().zip(&stage.vec) {
+                    *g += v;
+                }
+                dcoef.push(stage.dcoef);
+                continue;
+            }
+            let mut o = vec![0.0f32; TB];
+            match row {
+                RowTiles::Prepared(preps) => {
+                    for (j, vj) in v_tiles.iter().enumerate() {
+                        let part = self.matvec_p(&preps[j], vj)?;
+                        for (a, b) in o.iter_mut().zip(&part) {
+                            *a += b;
+                        }
+                    }
+                    let stage = self.loss_stage(loss, &o, &y[i], &mask[i])?;
+                    loss_sum += stage.loss;
+                    for j in 0..ct {
+                        let part = self.matvec_t_p(&preps[j], &stage.vec)?;
+                        for (g, v) in grad[j * TM..(j + 1) * TM].iter_mut().zip(&part) {
+                            *g += v;
+                        }
+                    }
+                    dcoef.push(stage.dcoef);
+                }
+                RowTiles::FromX { x, keep_row: true } => {
+                    let tiles: Vec<Vec<f32>> = (0..ct)
+                        .map(|j| self.kernel_block_p(x, &z[j], dpad, gamma))
+                        .collect::<Result<_>>()?;
+                    for (j, vj) in v_tiles.iter().enumerate() {
+                        let part = self.matvec(&tiles[j], vj)?;
+                        for (a, b) in o.iter_mut().zip(&part) {
+                            *a += b;
+                        }
+                    }
+                    let stage = self.loss_stage(loss, &o, &y[i], &mask[i])?;
+                    loss_sum += stage.loss;
+                    for j in 0..ct {
+                        let part = self.matvec_t(&tiles[j], &stage.vec)?;
+                        for (g, v) in grad[j * TM..(j + 1) * TM].iter_mut().zip(&part) {
+                            *g += v;
+                        }
+                    }
+                    dcoef.push(stage.dcoef);
+                }
+                RowTiles::FromX { x, keep_row: false } => {
+                    for (j, vj) in v_tiles.iter().enumerate() {
+                        let part = self.matvec_from_x(x, &z[j], dpad, gamma, vj)?;
+                        for (a, b) in o.iter_mut().zip(&part) {
+                            *a += b;
+                        }
+                    }
+                    let stage = self.loss_stage(loss, &o, &y[i], &mask[i])?;
+                    loss_sum += stage.loss;
+                    for j in 0..ct {
+                        let part = self.matvec_t_from_x(x, &z[j], dpad, gamma, &stage.vec)?;
+                        for (g, v) in grad[j * TM..(j + 1) * TM].iter_mut().zip(&part) {
+                            *g += v;
+                        }
+                    }
+                    dcoef.push(stage.dcoef);
+                }
+            }
+        }
+        Ok(BlockOut {
+            loss: loss_sum,
+            grad,
+            dcoef,
+        })
+    }
+
+    /// Fused per-node Hd over all row tiles: z_i = D_i Σ_j C_ij v_j, then
+    /// out_j += C_ijᵀ z_i — the node's flat `ct·TM` Hd partial. `dcoef`
+    /// holds the per-row-tile diagonals cached by the last `fgrad_block`.
+    fn hd_block(
+        &self,
+        rows: &[RowTiles<'_>],
+        z: &[Prepared],
+        dpad: usize,
+        gamma: f32,
+        v_tiles: &[Vec<f32>],
+        dcoef: &[Vec<f32>],
+    ) -> Result<Vec<f32>> {
+        let ct = z.len();
+        let mut out = vec![0.0f32; ct * TM];
+        for (i, row) in rows.iter().enumerate() {
+            if ct == 1 {
+                let part = match row {
+                    RowTiles::Prepared(preps) => self.hd_p(&preps[0], &v_tiles[0], &dcoef[i])?,
+                    RowTiles::FromX { x, .. } => {
+                        self.hd_from_x(x, &z[0], dpad, gamma, &v_tiles[0], &dcoef[i])?
+                    }
+                };
+                for (g, v) in out.iter_mut().zip(&part) {
+                    *g += v;
+                }
+                continue;
+            }
+            let mut zv = vec![0.0f32; TB];
+            match row {
+                RowTiles::Prepared(preps) => {
+                    for (j, vj) in v_tiles.iter().enumerate() {
+                        let part = self.matvec_p(&preps[j], vj)?;
+                        for (a, b) in zv.iter_mut().zip(&part) {
+                            *a += b;
+                        }
+                    }
+                    for (zi, w) in zv.iter_mut().zip(&dcoef[i]) {
+                        *zi *= w;
+                    }
+                    for j in 0..ct {
+                        let part = self.matvec_t_p(&preps[j], &zv)?;
+                        for (g, v) in out[j * TM..(j + 1) * TM].iter_mut().zip(&part) {
+                            *g += v;
+                        }
+                    }
+                }
+                RowTiles::FromX { x, keep_row: true } => {
+                    let tiles: Vec<Vec<f32>> = (0..ct)
+                        .map(|j| self.kernel_block_p(x, &z[j], dpad, gamma))
+                        .collect::<Result<_>>()?;
+                    for (j, vj) in v_tiles.iter().enumerate() {
+                        let part = self.matvec(&tiles[j], vj)?;
+                        for (a, b) in zv.iter_mut().zip(&part) {
+                            *a += b;
+                        }
+                    }
+                    for (zi, w) in zv.iter_mut().zip(&dcoef[i]) {
+                        *zi *= w;
+                    }
+                    for j in 0..ct {
+                        let part = self.matvec_t(&tiles[j], &zv)?;
+                        for (g, v) in out[j * TM..(j + 1) * TM].iter_mut().zip(&part) {
+                            *g += v;
+                        }
+                    }
+                }
+                RowTiles::FromX { x, keep_row: false } => {
+                    for (j, vj) in v_tiles.iter().enumerate() {
+                        let part = self.matvec_from_x(x, &z[j], dpad, gamma, vj)?;
+                        for (a, b) in zv.iter_mut().zip(&part) {
+                            *a += b;
+                        }
+                    }
+                    for (zi, w) in zv.iter_mut().zip(&dcoef[i]) {
+                        *zi *= w;
+                    }
+                    for j in 0..ct {
+                        let part = self.matvec_t_from_x(x, &z[j], dpad, gamma, &zv)?;
+                        for (g, v) in out[j * TM..(j + 1) * TM].iter_mut().zip(&part) {
+                            *g += v;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
 }
 
 /// PJRT-backed compute (the paper stack: AOT JAX+Pallas artifacts).
@@ -621,6 +912,113 @@ impl Compute for NativeCompute {
     ) -> Result<Vec<f32>> {
         self.bump();
         Ok(native::matvec_t_from_x(x.host(), z.host(), dpad, gamma, r))
+    }
+
+    // Per-evaluation block ops: ONE bump for the whole node — this is the
+    // "one backend dispatch per node per evaluation" the dispatches()
+    // ledger counter observes. Loop structure mirrors the per-tile
+    // formulation exactly (see the trait-level default), so the override
+    // is bit-identical to it and to the pre-block per-tile coordinator
+    // loops; `block_tile` only decides where each C tile lives.
+
+    fn fgrad_block(
+        &self,
+        loss: Loss,
+        rows: &[RowTiles<'_>],
+        z: &[Prepared],
+        dpad: usize,
+        gamma: f32,
+        v_tiles: &[Vec<f32>],
+        _y_prep: &[Prepared],
+        _mask_prep: &[Prepared],
+        y: &[Vec<f32>],
+        mask: &[Vec<f32>],
+    ) -> Result<BlockOut> {
+        self.bump();
+        let ct = z.len();
+        let mut grad = vec![0.0f32; ct * TM];
+        let mut loss_sum = 0.0f32;
+        let mut dcoef = Vec::with_capacity(rows.len());
+        for (i, row) in rows.iter().enumerate() {
+            let kept = keep_tiles(row, ct, z, dpad, gamma);
+            if ct == 1 {
+                let t = block_tile(row, &kept, z, dpad, gamma, 0);
+                let stage = native::fgrad(loss, t.as_slice(), &v_tiles[0], &y[i], &mask[i]);
+                loss_sum += stage.loss;
+                for (g, v) in grad.iter_mut().zip(&stage.vec) {
+                    *g += v;
+                }
+                dcoef.push(stage.dcoef);
+                continue;
+            }
+            let mut o = vec![0.0f32; TB];
+            for (j, vj) in v_tiles.iter().enumerate() {
+                let t = block_tile(row, &kept, z, dpad, gamma, j);
+                let part = native::matvec(t.as_slice(), vj);
+                for (a, b) in o.iter_mut().zip(&part) {
+                    *a += b;
+                }
+            }
+            let stage = native::loss_stage(loss, &o, &y[i], &mask[i]);
+            loss_sum += stage.loss;
+            for j in 0..ct {
+                let t = block_tile(row, &kept, z, dpad, gamma, j);
+                let part = native::matvec_t(t.as_slice(), &stage.vec);
+                for (g, v) in grad[j * TM..(j + 1) * TM].iter_mut().zip(&part) {
+                    *g += v;
+                }
+            }
+            dcoef.push(stage.dcoef);
+        }
+        Ok(BlockOut {
+            loss: loss_sum,
+            grad,
+            dcoef,
+        })
+    }
+
+    fn hd_block(
+        &self,
+        rows: &[RowTiles<'_>],
+        z: &[Prepared],
+        dpad: usize,
+        gamma: f32,
+        v_tiles: &[Vec<f32>],
+        dcoef: &[Vec<f32>],
+    ) -> Result<Vec<f32>> {
+        self.bump();
+        let ct = z.len();
+        let mut out = vec![0.0f32; ct * TM];
+        for (i, row) in rows.iter().enumerate() {
+            let kept = keep_tiles(row, ct, z, dpad, gamma);
+            if ct == 1 {
+                let t = block_tile(row, &kept, z, dpad, gamma, 0);
+                let part = native::hd_tile(t.as_slice(), &v_tiles[0], &dcoef[i]);
+                for (g, v) in out.iter_mut().zip(&part) {
+                    *g += v;
+                }
+                continue;
+            }
+            let mut zv = vec![0.0f32; TB];
+            for (j, vj) in v_tiles.iter().enumerate() {
+                let t = block_tile(row, &kept, z, dpad, gamma, j);
+                let part = native::matvec(t.as_slice(), vj);
+                for (a, b) in zv.iter_mut().zip(&part) {
+                    *a += b;
+                }
+            }
+            for (zi, w) in zv.iter_mut().zip(&dcoef[i]) {
+                *zi *= w;
+            }
+            for j in 0..ct {
+                let t = block_tile(row, &kept, z, dpad, gamma, j);
+                let part = native::matvec_t(t.as_slice(), &zv);
+                for (g, v) in out[j * TM..(j + 1) * TM].iter_mut().zip(&part) {
+                    *g += v;
+                }
+            }
+        }
+        Ok(out)
     }
 }
 

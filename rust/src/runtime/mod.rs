@@ -29,7 +29,7 @@ pub mod native;
 pub mod tiles;
 
 pub use artifacts::Manifest;
-pub use backend::{make_backend, Compute};
+pub use backend::{make_backend, Compute, RowTiles};
 #[cfg(feature = "pjrt")]
 pub use engine::Engine;
 pub use tiles::{pad_dim, TiledMatrix, TB, TM};
@@ -40,6 +40,15 @@ pub struct StageOut {
     pub loss: f32,
     pub vec: Vec<f32>,
     pub dcoef: Vec<f32>,
+}
+
+/// Output of one per-node block evaluation (`Compute::fgrad_block`): the
+/// node's loss partial, its flat `col_tiles·TM` gradient partial, and the
+/// per-row-tile Gauss-Newton diagonals TRON caches for the Hd passes.
+pub struct BlockOut {
+    pub loss: f32,
+    pub grad: Vec<f32>,
+    pub dcoef: Vec<Vec<f32>>,
 }
 
 /// K-means assignment output for one row tile.

@@ -9,39 +9,83 @@
 use super::{AssignOut, StageOut};
 use super::tiles::{TB, TM};
 use crate::config::settings::Loss;
+use crate::linalg::mat::{dot, dot4};
 
-/// RBF kernel tile: x (TB, d), z (TM, d), row-major → (TB*TM).
-pub fn kernel_block(x_tile: &[f32], z_tile: &[f32], d: usize, gamma: f32) -> Vec<f32> {
+/// Shared tile-distance core of `kernel_block` and `dist2_block`:
+/// ||x||² + ||z||² − 2⟨x,z⟩ per (i,k), clamped at 0, like the Pallas
+/// kernel (not the naive difference loop) so numerics match closely.
+///
+/// Register-blocked 1×4: each x row is held against four z rows at a time
+/// via `dot4`, whose per-pair bits equal `dot(x_i, z_k)` exactly (the
+/// accumulation-order contract in `crate::linalg::simd`).
+fn dist2_core(x_tile: &[f32], z_tile: &[f32], d: usize) -> Vec<f32> {
     assert_eq!(x_tile.len(), TB * d);
     assert_eq!(z_tile.len(), TM * d);
-    let mut out = vec![0.0f32; TB * TM];
-    // ||x||^2 + ||z||^2 - 2 x.z, like the Pallas kernel (not the naive
-    // difference loop) so numerics match closely.
     let xsq: Vec<f32> = (0..TB)
-        .map(|i| crate::linalg::mat::dot(&x_tile[i * d..(i + 1) * d], &x_tile[i * d..(i + 1) * d]))
+        .map(|i| dot(&x_tile[i * d..(i + 1) * d], &x_tile[i * d..(i + 1) * d]))
         .collect();
     let zsq: Vec<f32> = (0..TM)
-        .map(|k| crate::linalg::mat::dot(&z_tile[k * d..(k + 1) * d], &z_tile[k * d..(k + 1) * d]))
+        .map(|k| dot(&z_tile[k * d..(k + 1) * d], &z_tile[k * d..(k + 1) * d]))
         .collect();
+    let mut out = vec![0.0f32; TB * TM];
     for i in 0..TB {
         let xi = &x_tile[i * d..(i + 1) * d];
         let orow = &mut out[i * TM..(i + 1) * TM];
-        for k in 0..TM {
+        let mut k = 0;
+        while k + 4 <= TM {
+            let dots = dot4(
+                &z_tile[k * d..(k + 1) * d],
+                &z_tile[(k + 1) * d..(k + 2) * d],
+                &z_tile[(k + 2) * d..(k + 3) * d],
+                &z_tile[(k + 3) * d..(k + 4) * d],
+                xi,
+            );
+            for (l, &dk) in dots.iter().enumerate() {
+                orow[k + l] = (xsq[i] + zsq[k + l] - 2.0 * dk).max(0.0);
+            }
+            k += 4;
+        }
+        while k < TM {
             let zk = &z_tile[k * d..(k + 1) * d];
-            let d2 = (xsq[i] + zsq[k] - 2.0 * crate::linalg::mat::dot(xi, zk)).max(0.0);
-            orow[k] = (-gamma * d2).exp();
+            orow[k] = (xsq[i] + zsq[k] - 2.0 * dot(xi, zk)).max(0.0);
+            k += 1;
         }
     }
     out
 }
 
-/// o = C v over one tile.
+/// RBF kernel tile: x (TB, d), z (TM, d), row-major → (TB*TM).
+pub fn kernel_block(x_tile: &[f32], z_tile: &[f32], d: usize, gamma: f32) -> Vec<f32> {
+    let mut out = dist2_core(x_tile, z_tile, d);
+    for v in out.iter_mut() {
+        *v = (-gamma * *v).exp();
+    }
+    out
+}
+
+/// o = C v over one tile. Register-blocked four rows at a time; each
+/// output element is bitwise `dot(c_row, v)`.
 pub fn matvec(c_tile: &[f32], v: &[f32]) -> Vec<f32> {
     assert_eq!(c_tile.len(), TB * TM);
     assert_eq!(v.len(), TM);
-    (0..TB)
-        .map(|i| crate::linalg::mat::dot(&c_tile[i * TM..(i + 1) * TM], v))
-        .collect()
+    let mut out = vec![0.0f32; TB];
+    let mut i = 0;
+    while i + 4 <= TB {
+        let dots = dot4(
+            &c_tile[i * TM..(i + 1) * TM],
+            &c_tile[(i + 1) * TM..(i + 2) * TM],
+            &c_tile[(i + 2) * TM..(i + 3) * TM],
+            &c_tile[(i + 3) * TM..(i + 4) * TM],
+            v,
+        );
+        out[i..i + 4].copy_from_slice(&dots);
+        i += 4;
+    }
+    while i < TB {
+        out[i] = dot(&c_tile[i * TM..(i + 1) * TM], v);
+        i += 1;
+    }
+    out
 }
 
 /// g = Cᵀ r over one tile.
@@ -193,26 +237,11 @@ pub fn matvec_t_from_x(
     matvec_t(&c, r)
 }
 
-/// Squared-distance tile (K-means multi-tile path).
+/// Squared-distance tile (K-means multi-tile path). Same `dist2_core` as
+/// `kernel_block` — the kernel tile is exactly `exp(-γ ·)` of this output,
+/// element for element.
 pub fn dist2_block(x_tile: &[f32], z_tile: &[f32], d: usize) -> Vec<f32> {
-    assert_eq!(x_tile.len(), TB * d);
-    assert_eq!(z_tile.len(), TM * d);
-    let mut out = vec![0.0f32; TB * TM];
-    let xsq: Vec<f32> = (0..TB)
-        .map(|i| crate::linalg::mat::dot(&x_tile[i * d..(i + 1) * d], &x_tile[i * d..(i + 1) * d]))
-        .collect();
-    let zsq: Vec<f32> = (0..TM)
-        .map(|k| crate::linalg::mat::dot(&z_tile[k * d..(k + 1) * d], &z_tile[k * d..(k + 1) * d]))
-        .collect();
-    for i in 0..TB {
-        let xi = &x_tile[i * d..(i + 1) * d];
-        for k in 0..TM {
-            out[i * TM + k] = (xsq[i] + zsq[k]
-                - 2.0 * crate::linalg::mat::dot(xi, &z_tile[k * d..(k + 1) * d]))
-            .max(0.0);
-        }
-    }
-    out
+    dist2_core(x_tile, z_tile, d)
 }
 
 /// K-means assignment over one row tile (rmask marks live rows).

@@ -1,0 +1,164 @@
+//! Dispatch metering: with the whole-node block ops, a TRON evaluation
+//! costs exactly ONE backend dispatch per node — per f/g and per Hd —
+//! regardless of how many (row × column) tiles the node holds, which
+//! C-storage mode it runs, and which communication pipeline drives the
+//! cluster. The communication counters (AllReduce round-trips, barriers)
+//! must stay exactly at the fused-pipeline contract: blocking dispatches
+//! changes compute fan-out only, never the comm schedule.
+
+use std::sync::Arc;
+
+use dkm::cluster::CostModel;
+use dkm::config::settings::{
+    Backend, BasisSelection, CStorage, EvalPipeline, ExecutorChoice, Loss, Settings,
+};
+use dkm::coordinator::train;
+use dkm::data::{synth, Dataset};
+use dkm::runtime::make_backend;
+
+fn settings(
+    m: usize,
+    nodes: usize,
+    executor: ExecutorChoice,
+    pipeline: EvalPipeline,
+) -> Settings {
+    Settings {
+        dataset: "covtype_like".into(),
+        m,
+        nodes,
+        lambda: 0.01,
+        sigma: 2.0,
+        loss: Loss::SqHinge,
+        // Random basis: the FromC W shares read cached C rows on the host,
+        // so TRON evaluations issue ONLY the block dispatches — the count
+        // below is exact, not a bound.
+        basis: BasisSelection::Random,
+        backend: Backend::Native,
+        executor,
+        c_storage: CStorage::Materialized,
+        eval_pipeline: pipeline,
+        c_memory_budget: 256 << 20,
+        max_iters: 25,
+        tol: 1e-3,
+        seed: 42,
+        kmeans_iters: 2,
+        kmeans_max_m: 512,
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+fn data(n: usize, ntest: usize, seed: u64) -> (Dataset, Dataset) {
+    let mut spec = synth::spec("covtype_like");
+    spec.n_train = n;
+    spec.n_test = ntest;
+    synth::generate(&spec, seed)
+}
+
+/// Multi-column-tile m (m = 300 spans two basis tiles): one dispatch per
+/// node per evaluation on both pipelines, with the PR-4 communication
+/// contract unchanged (fused: one round-trip per evaluation; split:
+/// 2·fg + hd; barrier difference exactly 2·fg + hd).
+#[test]
+fn one_dispatch_per_node_per_eval_multi_tile() {
+    let (tr, _) = data(1400, 200, 11);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let nodes = 5u64;
+    let mut outs = Vec::new();
+    for pipeline in [EvalPipeline::Fused, EvalPipeline::Split] {
+        let s = settings(300, nodes as usize, ExecutorChoice::Serial, pipeline);
+        let out = train(&s, &tr, Arc::clone(&backend), CostModel::hadoop_crude()).unwrap();
+        let (fg, hd) = (out.fg_evals as u64, out.hd_evals as u64);
+        assert!(fg > 0 && hd > 0, "degenerate run");
+        assert_eq!(
+            out.sim.dispatches(),
+            nodes * (fg + hd),
+            "{pipeline:?}: expected exactly one dispatch per node per evaluation"
+        );
+        // The wall-metrics mirror must agree with the simulated ledger.
+        assert_eq!(out.wall.dispatches(), out.sim.dispatches(), "{pipeline:?}");
+        match pipeline {
+            EvalPipeline::Fused => {
+                assert_eq!(out.sim.comm_rounds(), fg + hd, "fused comm contract")
+            }
+            EvalPipeline::Split => {
+                assert_eq!(out.sim.comm_rounds(), 2 * fg + hd, "split comm contract")
+            }
+        }
+        outs.push(out);
+    }
+    // Same trajectory on both pipelines, so the barrier saving of the
+    // fused pipeline is still exactly 2·fg + hd — blocking the node-local
+    // dispatches did not change any synchronization point.
+    let (fused, split) = (&outs[0], &outs[1]);
+    assert_eq!(fused.fg_evals, split.fg_evals);
+    assert_eq!(fused.hd_evals, split.hd_evals);
+    assert_eq!(
+        split.sim.barriers() - fused.sim.barriers(),
+        2 * fused.fg_evals as u64 + fused.hd_evals as u64
+    );
+    assert_eq!(fused.sim.dispatches(), split.sim.dispatches());
+}
+
+/// Single-column-tile m with several row tiles per node (2 nodes × 700
+/// rows = 3 row tiles each): still one dispatch per node per evaluation —
+/// the block op covers all row tiles, where the per-tile fused ops cost
+/// one dispatch per row tile.
+#[test]
+fn one_dispatch_per_node_single_col_tile_many_row_tiles_pool_exec() {
+    let (tr, _) = data(1400, 200, 7);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let s = settings(
+        96,
+        2,
+        ExecutorChoice::Pool { cap: 2 },
+        EvalPipeline::Fused,
+    );
+    let out = train(&s, &tr, Arc::clone(&backend), CostModel::free()).unwrap();
+    let evals = (out.fg_evals + out.hd_evals) as u64;
+    assert!(evals > 0);
+    assert_eq!(out.sim.dispatches(), 2 * evals);
+    assert_eq!(out.wall.dispatches(), out.sim.dispatches());
+}
+
+/// The dispatch count is storage-independent: streaming modes recompute
+/// kernel tiles INSIDE the node's single block dispatch, so the per-node
+/// dispatch count never grows with recompute — only `recomputed_tiles`
+/// does. β stays bit-identical across modes (the block ops replicate the
+/// per-tile accumulation order exactly).
+#[test]
+fn dispatch_count_is_storage_independent_multi_tile() {
+    let (tr, _) = data(1200, 200, 13);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let nodes = 4u64;
+    let mut reference: Option<(Vec<u32>, u64)> = None;
+    for storage in [
+        CStorage::Materialized,
+        CStorage::Streaming,
+        CStorage::StreamingRowbuf,
+        CStorage::Auto,
+    ] {
+        let mut s = settings(
+            300,
+            nodes as usize,
+            ExecutorChoice::Serial,
+            EvalPipeline::Fused,
+        );
+        s.c_storage = storage;
+        let out = train(&s, &tr, Arc::clone(&backend), CostModel::free()).unwrap();
+        let evals = (out.fg_evals + out.hd_evals) as u64;
+        assert_eq!(
+            out.sim.dispatches(),
+            nodes * evals,
+            "{}: dispatches must not scale with streamed recompute",
+            storage.name()
+        );
+        let bits: Vec<u32> = out.model.beta.iter().map(|b| b.to_bits()).collect();
+        match &reference {
+            None => reference = Some((bits, out.sim.dispatches())),
+            Some((ref_bits, ref_disp)) => {
+                assert_eq!(&bits, ref_bits, "{}: β must be bit-identical", storage.name());
+                assert_eq!(out.sim.dispatches(), *ref_disp, "{}", storage.name());
+            }
+        }
+    }
+}

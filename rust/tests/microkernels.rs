@@ -1,0 +1,178 @@
+//! Property tests for the register-blocked SIMD microkernels: every
+//! blocked kernel must be BITWISE equal to its unblocked per-element
+//! reference built from `linalg::mat::dot`/`axpy` (the accumulation-order
+//! contract of `linalg::simd`), across edge feature widths (not multiples
+//! of the lane width), zero-padded tails, and exact-zero inputs.
+//!
+//! These tests run unchanged under `--features scalar-fallback`: both
+//! builds must match the same scalar reference bitwise, which proves the
+//! vectorized and fallback builds bit-identical to each other.
+
+use dkm::linalg::mat::{axpy, dot};
+use dkm::rng::Rng;
+use dkm::runtime::native;
+use dkm::runtime::tiles::{TB, TM};
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32()).collect()
+}
+
+/// Feature widths that exercise every tail path of the lane-blocked dot:
+/// below one lane, exactly one lane, between one and two lanes, exactly
+/// the unrolled width, and past it with a scalar tail.
+const EDGE_D: [usize; 6] = [5, 8, 13, 16, 20, 37];
+
+#[test]
+fn kernel_block_matches_per_element_dot_reference_bitwise() {
+    let mut rng = Rng::new(101);
+    for d in EDGE_D {
+        let x = rand_vec(&mut rng, TB * d);
+        let z = rand_vec(&mut rng, TM * d);
+        let gamma = 0.37f32;
+        let got = native::kernel_block(&x, &z, d, gamma);
+        for i in (0..TB).step_by(41) {
+            let xi = &x[i * d..(i + 1) * d];
+            let xsq = dot(xi, xi);
+            for k in (0..TM).step_by(23) {
+                let zk = &z[k * d..(k + 1) * d];
+                let d2 = (xsq + dot(zk, zk) - 2.0 * dot(xi, zk)).max(0.0);
+                let want = (-gamma * d2).exp();
+                assert_eq!(
+                    got[i * TM + k].to_bits(),
+                    want.to_bits(),
+                    "d={d} i={i} k={k}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dist2_block_is_kernel_block_exponent_bitwise() {
+    let mut rng = Rng::new(103);
+    for d in [13usize, 32] {
+        let x = rand_vec(&mut rng, TB * d);
+        let z = rand_vec(&mut rng, TM * d);
+        let gamma = 0.5f32;
+        let d2 = native::dist2_block(&x, &z, d);
+        let k = native::kernel_block(&x, &z, d, gamma);
+        for (i, (kv, dv)) in k.iter().zip(&d2).enumerate() {
+            assert_eq!(
+                kv.to_bits(),
+                (-gamma * dv).exp().to_bits(),
+                "d={d} flat={i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn matvec_matches_row_dot_bitwise() {
+    let mut rng = Rng::new(107);
+    let c = rand_vec(&mut rng, TB * TM);
+    let v = rand_vec(&mut rng, TM);
+    let got = native::matvec(&c, &v);
+    for i in 0..TB {
+        let want = dot(&c[i * TM..(i + 1) * TM], &v);
+        assert_eq!(got[i].to_bits(), want.to_bits(), "row {i}");
+    }
+}
+
+#[test]
+fn matvec_t_matches_guarded_axpy_reference_bitwise() {
+    let mut rng = Rng::new(109);
+    let c = rand_vec(&mut rng, TB * TM);
+    // Residual with exact zeros AND a negative zero: the sparsity guard
+    // must skip both (−0.0 == 0.0), exactly like the reference.
+    let mut r = rand_vec(&mut rng, TB);
+    for i in (0..TB).step_by(3) {
+        r[i] = 0.0;
+    }
+    r[7] = -0.0;
+    let got = native::matvec_t(&c, &r);
+    let mut want = vec![0.0f32; TM];
+    for i in 0..TB {
+        if r[i] != 0.0 {
+            axpy(r[i], &c[i * TM..(i + 1) * TM], &mut want);
+        }
+    }
+    for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "col {j}");
+    }
+}
+
+/// Zero-padded row tail (a node's last row tile): residual entries past
+/// the live rows are exact zeros, so the blocked matvec_t must produce
+/// bitwise the same output as accumulating the live rows alone.
+#[test]
+fn matvec_t_zero_padded_row_tail_matches_live_prefix_bitwise() {
+    let mut rng = Rng::new(113);
+    let live = 100usize;
+    let c = rand_vec(&mut rng, TB * TM);
+    let mut r = vec![0.0f32; TB];
+    for ri in r.iter_mut().take(live) {
+        *ri = rng.normal_f32();
+    }
+    let got = native::matvec_t(&c, &r);
+    let mut want = vec![0.0f32; TM];
+    for i in 0..live {
+        if r[i] != 0.0 {
+            axpy(r[i], &c[i * TM..(i + 1) * TM], &mut want);
+        }
+    }
+    for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "col {j}");
+    }
+}
+
+/// Zero-padded basis tail (m < TM): v entries past the live columns are
+/// exact zeros, so zeroing the corresponding C columns must not change a
+/// single bit of the matvec (0·c and 0·0 are both exactly +0.0 for finite
+/// c, accumulated in identical chunk positions).
+#[test]
+fn matvec_zero_padded_v_tail_ignores_dead_columns_bitwise() {
+    let mut rng = Rng::new(127);
+    let live = 200usize;
+    let c = rand_vec(&mut rng, TB * TM);
+    let mut v = vec![0.0f32; TM];
+    for vi in v.iter_mut().take(live) {
+        *vi = rng.normal_f32();
+    }
+    let mut c_dead = c.clone();
+    for i in 0..TB {
+        for k in live..TM {
+            c_dead[i * TM + k] = 0.0;
+        }
+    }
+    let a = native::matvec(&c, &v);
+    let b = native::matvec(&c_dead, &v);
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "row {i}");
+    }
+}
+
+/// The streaming fused ops must stay bitwise equal to "kernel tile, then
+/// the plain op" — the property the C-storage bit-identity contract
+/// rests on — including at edge feature widths.
+#[test]
+fn from_x_ops_match_kernel_then_op_bitwise() {
+    let mut rng = Rng::new(131);
+    for d in [13usize, 32] {
+        let x = rand_vec(&mut rng, TB * d);
+        let z = rand_vec(&mut rng, TM * d);
+        let v = rand_vec(&mut rng, TM);
+        let r = rand_vec(&mut rng, TB);
+        let gamma = 0.25f32;
+        let c = native::kernel_block(&x, &z, d, gamma);
+        let mv = native::matvec_from_x(&x, &z, d, gamma, &v);
+        let mvt = native::matvec_t_from_x(&x, &z, d, gamma, &r);
+        let want_mv = native::matvec(&c, &v);
+        let want_mvt = native::matvec_t(&c, &r);
+        for (i, (a, b)) in mv.iter().zip(&want_mv).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "matvec_from_x d={d} row {i}");
+        }
+        for (j, (a, b)) in mvt.iter().zip(&want_mvt).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "matvec_t_from_x d={d} col {j}");
+        }
+    }
+}
