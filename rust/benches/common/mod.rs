@@ -66,3 +66,15 @@ pub fn header(title: &str, paper: &str) {
 pub fn clamp_m(m: usize, n_train: usize) -> usize {
     m.min(n_train / 2).max(16)
 }
+
+/// Write a machine-readable bench artifact (`BENCH_<name>.json`, in the
+/// directory the bench runs from) so the perf trajectory can be tracked
+/// across PRs. Failure to write is reported, never fatal — the printed
+/// table stays the source of truth.
+pub fn write_json(name: &str, json: &dkm::config::Json) {
+    let path = format!("BENCH_{name}.json");
+    match std::fs::write(&path, format!("{json}\n")) {
+        Ok(()) => println!("machine-readable report: {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}

@@ -271,4 +271,21 @@ fn main() {
         pooled.sim.report()
     );
     assert!(bit_identical, "executor equivalence violated");
+
+    let mut o = std::collections::BTreeMap::new();
+    let mut num = |k: &str, v: f64| {
+        o.insert(k.to_string(), dkm::config::Json::Num(v));
+    };
+    num("kernel_tron_serial_s", hot[0]);
+    num("kernel_tron_threads_s", hot[1]);
+    num("kernel_tron_pool_s", hot[2]);
+    num("threads_speedup", hot[0] / hot[1].max(1e-9));
+    num("pool_speedup", hot[0] / hot[2].max(1e-9));
+    num("spawn_us_per_phase", spawn_secs / phases as f64 * 1e6);
+    num("pool_us_per_phase", pool_secs / phases as f64 * 1e6);
+    let fused_evals = (fused_out.fg_evals + fused_out.hd_evals) as f64;
+    let split_evals = (split_out.fg_evals + split_out.hd_evals) as f64;
+    num("fused_rts_per_eval", fused_out.sim.comm_rounds() as f64 / fused_evals);
+    num("split_rts_per_eval", split_out.sim.comm_rounds() as f64 / split_evals);
+    common::write_json("exec_speedup", &dkm::config::Json::Obj(o));
 }

@@ -1,0 +1,200 @@
+//! SERVING — the concurrent prediction pipeline under load.
+//!
+//! Three sections:
+//!
+//! 1. **Overlap.** The same B test-set batches scored (a) one lockstep
+//!    dispatch per batch and (b) as ONE multi-slot `predict_many`
+//!    dispatch on the pooled executor, where workers pull (batch, shard)
+//!    items from any in-flight batch. Every score is asserted bit-identical
+//!    to the serial `predict.rs` reference, and on a multi-core host the
+//!    bench demonstrates >1 batch genuinely in flight (per-slot execution
+//!    spans overlap, or the grouped wall beats the summed per-batch walls).
+//! 2. **Closed loop.** N clients with exponential think time against the
+//!    bounded micro-batching queue (`dkm serve`'s loop, in-process):
+//!    qps + p50/p99 latency on the wall clock, barriers/batch + predict
+//!    seconds on the simulated ledger, every reply checked bit-identical.
+//! 3. **Machine-readable trajectory.** The headline numbers land in
+//!    `BENCH_serving.json` so later PRs can diff them.
+//!
+//! Run: cargo bench --bench serving
+//! (DKM_BENCH_SCALE scales the dataset; DKM_THREADS caps the workers.)
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use dkm::cluster::Executor;
+use dkm::config::Json;
+use dkm::coordinator::{train, ServingSession};
+use dkm::linalg::Mat;
+use dkm::metrics::Table;
+use dkm::serve::{run as serve_run, ServeConfig};
+
+fn main() {
+    common::header(
+        "SERVING — multi-slot concurrent batches + closed-loop micro-batching",
+        "ROADMAP serving tier; cf. Tu et al. (block saturation), Sindhwani & Avron (serving layer)",
+    );
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let cap: usize = std::env::var("DKM_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let workers = if cap == 0 { cores } else { cap };
+    println!("host cores: {cores}; serving workers: {workers}");
+
+    let (train_ds, test_ds) = common::dataset("covtype_like", 12_000, 1_000, 42);
+    let backend = common::native_backend();
+    let m = common::clamp_m(400, train_ds.n());
+    let nodes = 8;
+    let s = common::settings("covtype_like", m, nodes);
+    let out = train(&s, &train_ds, Arc::clone(&backend), common::free()).expect("training failed");
+    let model = out.model;
+
+    // The request pool and its serial reference scores (predict.rs — the
+    // bit-identity anchor for EVERYTHING below).
+    let expected = model
+        .predict(backend.as_ref(), &test_ds.x)
+        .expect("serial predict failed");
+
+    // --- section 1: lockstep per-batch dispatch vs one multi-slot phase ---
+    let nb = 8usize;
+    let bs = (test_ds.n() / nb).max(1);
+    let batches: Vec<Mat> = (0..nb)
+        .map(|b| {
+            let r0 = b * bs;
+            let r1 = ((b + 1) * bs).min(test_ds.n());
+            Mat::from_vec(
+                r1 - r0,
+                test_ds.x.cols(),
+                test_ds.x.row_panel(r0, r1).to_vec(),
+            )
+        })
+        .collect();
+    let refs: Vec<&Mat> = batches.iter().collect();
+
+    let pooled = ServingSession::load(
+        &model,
+        Arc::clone(&backend),
+        nodes,
+        Executor::pooled(workers),
+        common::free(),
+    )
+    .expect("serving load failed");
+
+    // (a) one dispatch per batch (the lockstep shape Session::predict has).
+    let t0 = std::time::Instant::now();
+    let mut lockstep_scores = Vec::with_capacity(nb);
+    let mut per_batch_sum = 0.0f64;
+    for x in &refs {
+        let t = std::time::Instant::now();
+        lockstep_scores.push(pooled.predict_batch(x).expect("predict failed"));
+        per_batch_sum += t.elapsed().as_secs_f64();
+    }
+    let lockstep_wall = t0.elapsed().as_secs_f64();
+
+    // (b) ALL batches in one multi-slot dispatch; a few rounds so one bad
+    // scheduling window can't hide the overlap.
+    let mut grouped_wall = f64::INFINITY;
+    let mut grouped_scores = Vec::new();
+    for _ in 0..3 {
+        let t = std::time::Instant::now();
+        grouped_scores = pooled.predict_many(&refs).expect("predict_many failed");
+        grouped_wall = grouped_wall.min(t.elapsed().as_secs_f64());
+    }
+
+    // Bit-identity: serial reference vs both paths, per batch.
+    let mut at = 0usize;
+    for (b, x) in refs.iter().enumerate() {
+        let want = &expected[at..at + x.rows()];
+        at += x.rows();
+        for (path, scores) in [("lockstep", &lockstep_scores[b]), ("grouped", &grouped_scores[b])] {
+            assert_eq!(scores.len(), want.len(), "batch {b} {path} length");
+            for (i, (a, w)) in scores.iter().zip(want).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    w.to_bits(),
+                    "batch {b} row {i}: {path} path diverged from serial ({a} vs {w})"
+                );
+            }
+        }
+    }
+    let peak = pooled.peak_slots_in_flight();
+    let mut t = Table::new(&["path", "dispatches", "barriers", "wall_s"]);
+    t.row(&[
+        "one-phase-per-batch".into(),
+        format!("{nb}"),
+        format!("{nb}"),
+        format!("{lockstep_wall:.4}"),
+    ]);
+    t.row(&[
+        "multi-slot (1 dispatch)".into(),
+        "1".into(),
+        "1".into(),
+        format!("{grouped_wall:.4}"),
+    ]);
+    print!("{}", t.render());
+    println!(
+        "peak batches in flight: {peak} | grouped {grouped_wall:.4}s vs per-batch sum {per_batch_sum:.4}s ({:.2}x)",
+        per_batch_sum / grouped_wall.max(1e-12),
+    );
+    println!("all {nb} batches bit-identical to the serial scoring loop: YES");
+    let overlapped = peak >= 2 || grouped_wall < per_batch_sum;
+    if workers >= 2 && nodes >= 2 {
+        assert!(
+            overlapped,
+            ">1 batch should be in flight on a multi-core host \
+             (peak {peak}, grouped {grouped_wall:.4}s, summed {per_batch_sum:.4}s)"
+        );
+    } else {
+        println!("single worker: overlap not expected (peak {peak})");
+    }
+
+    // --- section 2: closed-loop clients through the micro-batching queue ---
+    let cfg = ServeConfig {
+        clients: 8,
+        requests_per_client: common::scaled(256) / 8,
+        mean_think_ms: 0.2,
+        max_batch: 32,
+        max_delay_ms: 1.0,
+        slots: 4,
+        queue_cap: 512,
+        seed: 7,
+    };
+    let report = serve_run(&pooled, &test_ds.x, Some(&expected), &cfg).expect("serve run failed");
+    println!(
+        "\nclosed loop: {} clients × {} requests, flush at {} rows or {}ms, ≤{} micro-batches/dispatch",
+        cfg.clients, cfg.requests_per_client, cfg.max_batch, cfg.max_delay_ms, cfg.slots
+    );
+    print!("{}", report.render());
+    assert_eq!(report.mismatches, 0, "served replies diverged from serial");
+    assert!(
+        report.barriers_per_batch <= 1.0 + 1e-12,
+        "micro-batching must never cost more than one barrier per batch \
+         (got {:.3})",
+        report.barriers_per_batch
+    );
+
+    // --- section 3: machine-readable trajectory ---
+    let mut o = BTreeMap::new();
+    let mut num = |k: &str, v: f64| {
+        o.insert(k.to_string(), Json::Num(v));
+    };
+    num("qps", report.qps);
+    num("p50_ms", report.p50_ms);
+    num("p99_ms", report.p99_ms);
+    num("mean_ms", report.mean_ms);
+    num("requests", report.requests as f64);
+    num("batches", report.batches as f64);
+    num("barriers_per_batch", report.barriers_per_batch);
+    num("sim_predict_secs", report.sim_predict_secs);
+    num("peak_slots_in_flight", pooled.peak_slots_in_flight() as f64);
+    num("grouped_wall_s", grouped_wall);
+    num("per_batch_sum_s", per_batch_sum);
+    num("mismatches", report.mismatches as f64);
+    common::write_json("serving", &Json::Obj(o));
+}

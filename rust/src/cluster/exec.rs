@@ -46,6 +46,16 @@
 //! workers exceed cores, shared memory bandwidth); the pooled executor has
 //! the same caveat. Use `serial` for Fig-2/Table-4-grade ledger
 //! experiments, `pool` (or `threads`) for real wall-clock.
+//!
+//! **Multi-slot phases** ([`Executor::run_concurrent`]) extend the model
+//! from lockstep training to overlapping serving work: a phase carries
+//! SEVERAL independent slots (one per prediction batch), each with its own
+//! independent work items (one per shard), and workers PULL items from any
+//! in-flight slot through one global cursor — batch B+1 computes while
+//! batch B's last shards drain, inside a single dispatch. The collection
+//! contract is unchanged: results land in per-slot item order, and every
+//! item is a pure function of its own inputs, so each slot's outputs are
+//! bit-identical to running the slots one serial phase at a time.
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -148,6 +158,147 @@ impl<'t> FusedPhase<'t> {
     }
 }
 
+/// One slot of a multi-slot concurrent phase: `items` independent work
+/// units (for serving, one per shard of one prediction batch) evaluated by
+/// `run(i)`. Items of one slot must be independent of each other AND of
+/// every other slot — that independence is what lets workers interleave
+/// slots freely without breaking bit-identity.
+pub struct SlotWork<'a, T> {
+    /// Number of independent work items in this slot.
+    pub items: usize,
+    /// Evaluate item `i` (0-based within the slot).
+    pub run: &'a (dyn Fn(usize) -> T + Sync),
+}
+
+/// Per-slot outcome of [`Executor::run_concurrent`].
+pub struct SlotResult<T> {
+    /// Item outputs in item order — the same deterministic collection
+    /// contract as [`Executor::run`]'s node order.
+    pub items: Vec<T>,
+    /// MAX single-item seconds: the slot's metered phase duration under
+    /// the synchronous bulk model (comparable to a serial one-slot phase).
+    pub max_item_secs: f64,
+    /// Offsets (seconds from dispatch start) of the slot's first item
+    /// beginning and last item finishing. Two slots whose windows overlap
+    /// were in flight simultaneously — the observable the serving bench
+    /// uses to demonstrate >1 batch in flight.
+    pub started_at: f64,
+    pub finished_at: f64,
+}
+
+/// Shared state of one multi-slot phase: the flattened (slot, item) work
+/// list claimed through one atomic cursor, per-item result cells, and
+/// per-slot work-window bounds. The flattened list keeps slot order —
+/// FIFO across batches — so workers finish slot s before starting s+1
+/// unless s's tail is still draining, which is exactly when overlap pays.
+struct ConcurrentPhase<T> {
+    flat: Vec<(usize, usize)>,
+    next: AtomicUsize,
+    /// `out[s][i]`: (item output, item seconds). Each cell is written by
+    /// exactly one worker (the cursor hands every flat index out once),
+    /// so the locks are uncontended.
+    out: Vec<Vec<Mutex<Option<(T, f64)>>>>,
+    /// `spans[s]`: (first start, last end) offsets of slot s's items.
+    spans: Vec<Mutex<Option<(f64, f64)>>>,
+}
+
+impl<T: Send> ConcurrentPhase<T> {
+    fn new<'a>(slots: &[SlotWork<'a, T>]) -> Self {
+        let mut flat = Vec::with_capacity(slots.iter().map(|s| s.items).sum());
+        for (s, slot) in slots.iter().enumerate() {
+            flat.extend((0..slot.items).map(|i| (s, i)));
+        }
+        let out = slots
+            .iter()
+            .map(|slot| {
+                let mut v = Vec::with_capacity(slot.items);
+                v.resize_with(slot.items, || Mutex::new(None));
+                v
+            })
+            .collect();
+        let mut spans = Vec::with_capacity(slots.len());
+        spans.resize_with(slots.len(), || Mutex::new(None));
+        ConcurrentPhase {
+            flat,
+            next: AtomicUsize::new(0),
+            out,
+            spans,
+        }
+    }
+
+    /// Worker loop: claim flattened items through the cursor until none
+    /// remain. Runs identically on the calling thread (serial), scoped
+    /// threads, and parked pool workers.
+    fn drain<'a>(&self, slots: &[SlotWork<'a, T>], t0: std::time::Instant) {
+        loop {
+            let k = self.next.fetch_add(1, Ordering::Relaxed);
+            let Some(&(s, i)) = self.flat.get(k) else {
+                return;
+            };
+            let begin = t0.elapsed().as_secs_f64();
+            let start = std::time::Instant::now();
+            let v = (slots[s].run)(i);
+            let secs = start.elapsed().as_secs_f64();
+            let end = begin + secs;
+            *self.out[s][i].lock().unwrap() = Some((v, secs));
+            let mut span = self.spans[s].lock().unwrap();
+            *span = Some(match *span {
+                None => (begin, end),
+                Some((a, b)) => (a.min(begin), b.max(end)),
+            });
+        }
+    }
+
+    fn collect(self) -> Vec<SlotResult<T>> {
+        self.out
+            .into_iter()
+            .zip(self.spans)
+            .map(|(cells, span)| {
+                let mut max_item_secs = 0.0f64;
+                let items = cells
+                    .into_iter()
+                    .map(|c| {
+                        let (v, secs) = c
+                            .into_inner()
+                            .unwrap()
+                            .expect("concurrent phase filled every item");
+                        max_item_secs = max_item_secs.max(secs);
+                        v
+                    })
+                    .collect();
+                let (started_at, finished_at) = span.into_inner().unwrap().unwrap_or((0.0, 0.0));
+                SlotResult {
+                    items,
+                    max_item_secs,
+                    started_at,
+                    finished_at,
+                }
+            })
+            .collect()
+    }
+}
+
+/// Maximum number of slots simultaneously in flight, from their work
+/// windows (empty slots never fly). Windows that merely touch (one ends
+/// exactly where another starts) do not overlap.
+pub fn max_slots_in_flight<T>(results: &[SlotResult<T>]) -> usize {
+    let mut events: Vec<(f64, i32)> = Vec::with_capacity(2 * results.len());
+    for r in results {
+        if !r.items.is_empty() {
+            events.push((r.started_at, 1));
+            events.push((r.finished_at, -1));
+        }
+    }
+    // Process ends before starts at equal times so touching ≠ overlapping.
+    events.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    let (mut live, mut peak) = (0i32, 0i32);
+    for (_, delta) in events {
+        live += delta;
+        peak = peak.max(live);
+    }
+    peak.max(0) as usize
+}
+
 /// Runs every node one after another on the calling thread.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct SerialExecutor;
@@ -183,6 +334,15 @@ impl SerialExecutor {
         }
         phase.worker_done();
         phase.take()
+    }
+
+    /// Multi-slot phase, serial reference: items run on the calling thread
+    /// in flattened (slot, item) order — the zero-overlap semantics the
+    /// parallel executors must match bit for bit per slot.
+    pub fn run_concurrent<'a, T: Send>(&self, slots: &[SlotWork<'a, T>]) -> Vec<SlotResult<T>> {
+        let phase = ConcurrentPhase::new(slots);
+        phase.drain(slots, std::time::Instant::now());
+        phase.collect()
     }
 }
 
@@ -292,6 +452,27 @@ impl ThreadedExecutor {
             }
         });
         phase.take()
+    }
+
+    /// Multi-slot phase on scoped worker threads: up to `threads` workers
+    /// pull flattened (slot, item) work through the shared cursor, so a
+    /// worker idling past one slot's items flows straight into the next
+    /// slot's — overlap with no extra dispatch.
+    pub fn run_concurrent<'a, T: Send>(&self, slots: &[SlotWork<'a, T>]) -> Vec<SlotResult<T>> {
+        let total: usize = slots.iter().map(|s| s.items).sum();
+        let workers = self.threads.min(total).max(1);
+        if workers <= 1 {
+            return SerialExecutor.run_concurrent(slots);
+        }
+        let phase = ConcurrentPhase::new(slots);
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let phase = &phase;
+                scope.spawn(move || phase.drain(slots, t0));
+            }
+        });
+        phase.collect()
     }
 }
 
@@ -628,6 +809,27 @@ impl PooledExecutor {
         }
         phase.take()
     }
+
+    /// Multi-slot phase on the persistent pool: ONE dispatch wakes up to
+    /// `threads` parked workers, each of which pulls flattened (slot, item)
+    /// work through the shared cursor until every slot is drained. This is
+    /// the serving primitive: k prediction batches cost one barrier, and
+    /// batch B+1's shards compute while batch B's last shard drains.
+    pub fn run_concurrent<'a, T: Send>(&self, slots: &[SlotWork<'a, T>]) -> Vec<SlotResult<T>> {
+        let total: usize = slots.iter().map(|s| s.items).sum();
+        let workers = self.pool.threads.min(total).max(1);
+        if workers <= 1 {
+            return SerialExecutor.run_concurrent(slots);
+        }
+        let phase = ConcurrentPhase::new(slots);
+        {
+            let phase = &phase;
+            let t0 = std::time::Instant::now();
+            let task = move |_w: usize| phase.drain(slots, t0);
+            self.run_phase(workers, &task);
+        }
+        phase.collect()
+    }
 }
 
 /// The configured execution strategy for a [`super::Cluster`].
@@ -705,6 +907,23 @@ impl Executor {
             Executor::Serial(e) => e.run_reduce(tree, nodes, f),
             Executor::Threaded(e) => e.run_reduce(tree, nodes, f),
             Executor::Pooled(e) => e.run_reduce(tree, nodes, f),
+        }
+    }
+
+    /// Multi-slot concurrent phase: several independent slots of
+    /// independent work items, drained in ONE dispatch (one barrier) by
+    /// workers pulling from a shared cursor over the flattened
+    /// (slot, item) list. Results come back per slot in item order with
+    /// the slot's max item seconds (its synchronous metered duration) and
+    /// its work window for overlap observation. On the serial executor the
+    /// slots run strictly in order — the reference semantics; per-slot
+    /// outputs are bit-identical across executors because every item is an
+    /// independent pure computation.
+    pub fn run_concurrent<'a, T: Send>(&self, slots: &[SlotWork<'a, T>]) -> Vec<SlotResult<T>> {
+        match self {
+            Executor::Serial(e) => e.run_concurrent(slots),
+            Executor::Threaded(e) => e.run_concurrent(slots),
+            Executor::Pooled(e) => e.run_concurrent(slots),
         }
     }
 
@@ -1009,5 +1228,165 @@ mod tests {
             });
         }
         assert!(ids.into_inner().unwrap().len() <= 2);
+    }
+
+    fn all_executors() -> [Executor; 3] {
+        [Executor::serial(), Executor::threaded(4), Executor::pooled(4)]
+    }
+
+    #[test]
+    fn run_concurrent_matches_serial_per_slot_on_every_executor() {
+        let fns: Vec<Box<dyn Fn(usize) -> u64 + Sync>> = (0..5)
+            .map(|s| {
+                Box::new(move |i: usize| (s * 100 + i * 7 + 1) as u64) as Box<dyn Fn(usize) -> u64 + Sync>
+            })
+            .collect();
+        let make_slots = || -> Vec<SlotWork<'_, u64>> {
+            fns.iter()
+                .enumerate()
+                .map(|(s, f)| SlotWork {
+                    items: 1 + s % 4, // mixed sizes, incl. single-item slots
+                    run: f.as_ref(),
+                })
+                .collect()
+        };
+        let want: Vec<Vec<u64>> = SerialExecutor
+            .run_concurrent(&make_slots())
+            .into_iter()
+            .map(|r| r.items)
+            .collect();
+        for exec in all_executors() {
+            let got: Vec<Vec<u64>> = exec
+                .run_concurrent(&make_slots())
+                .into_iter()
+                .map(|r| r.items)
+                .collect();
+            assert_eq!(got, want, "exec={}", exec.name());
+        }
+    }
+
+    #[test]
+    fn run_concurrent_runs_every_item_exactly_once() {
+        use std::sync::atomic::AtomicU32;
+        for exec in all_executors() {
+            let counts: Vec<Vec<AtomicU32>> = (0..4)
+                .map(|s| (0..(3 + s)).map(|_| AtomicU32::new(0)).collect())
+                .collect();
+            let fns: Vec<Box<dyn Fn(usize) -> usize + Sync>> = (0..4)
+                .map(|s| {
+                    let counts = &counts;
+                    Box::new(move |i: usize| {
+                        counts[s][i].fetch_add(1, Ordering::SeqCst);
+                        i
+                    }) as Box<dyn Fn(usize) -> usize + Sync>
+                })
+                .collect();
+            let slots: Vec<SlotWork<'_, usize>> = fns
+                .iter()
+                .enumerate()
+                .map(|(s, f)| SlotWork {
+                    items: 3 + s,
+                    run: f.as_ref(),
+                })
+                .collect();
+            let results = exec.run_concurrent(&slots);
+            assert_eq!(results.len(), 4, "exec={}", exec.name());
+            for (s, slot) in counts.iter().enumerate() {
+                assert_eq!(results[s].items, (0..(3 + s)).collect::<Vec<_>>());
+                for (i, c) in slot.iter().enumerate() {
+                    assert_eq!(c.load(Ordering::SeqCst), 1, "slot {s} item {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_concurrent_handles_empty_slots_and_empty_phase() {
+        for exec in all_executors() {
+            let f = |i: usize| i as u64;
+            let slots = [
+                SlotWork { items: 0, run: &f },
+                SlotWork { items: 2, run: &f },
+                SlotWork { items: 0, run: &f },
+            ];
+            let r = exec.run_concurrent(&slots);
+            assert_eq!(r[0].items, Vec::<u64>::new(), "exec={}", exec.name());
+            assert_eq!(r[1].items, vec![0, 1]);
+            assert!(r[2].items.is_empty());
+            // An empty slot never flies: it cannot count toward occupancy.
+            assert_eq!(max_slots_in_flight(&r), 1);
+            let none: [SlotWork<'_, u64>; 0] = [];
+            assert!(exec.run_concurrent(&none).is_empty());
+        }
+    }
+
+    #[test]
+    fn run_concurrent_overlaps_slots_on_pool_and_threads() {
+        // Sleeping items overlap even on a single hardware core (sleep
+        // yields the CPU), so this is robust on tiny CI hosts.
+        for exec in [Executor::threaded(4), Executor::pooled(4)] {
+            let f = |_i: usize| std::thread::sleep(std::time::Duration::from_millis(10));
+            let slots = [
+                SlotWork { items: 2, run: &f },
+                SlotWork { items: 2, run: &f },
+            ];
+            let r = exec.run_concurrent(&slots);
+            assert!(
+                max_slots_in_flight(&r) >= 2,
+                "exec={}: expected both slots in flight (spans {:?} and {:?})",
+                exec.name(),
+                (r[0].started_at, r[0].finished_at),
+                (r[1].started_at, r[1].finished_at),
+            );
+        }
+        // The serial reference never overlaps slots.
+        let f = |_i: usize| std::thread::sleep(std::time::Duration::from_millis(1));
+        let slots = [
+            SlotWork { items: 2, run: &f },
+            SlotWork { items: 2, run: &f },
+        ];
+        let r = Executor::serial().run_concurrent(&slots);
+        assert_eq!(max_slots_in_flight(&r), 1);
+    }
+
+    #[test]
+    fn run_concurrent_pool_panic_propagates_and_pool_survives() {
+        let pool = PooledExecutor::new(3);
+        let f = |i: usize| {
+            if i == 3 {
+                panic!("slot item exploded");
+            }
+            i
+        };
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_concurrent(&[SlotWork { items: 5, run: &f }]);
+        }));
+        assert!(caught.is_err(), "item panic must propagate");
+        // Pool survives: the next multi-slot phase completes normally.
+        let ok = |i: usize| i * 2;
+        let r = pool.run_concurrent(&[
+            SlotWork { items: 3, run: &ok },
+            SlotWork { items: 1, run: &ok },
+        ]);
+        assert_eq!(r[0].items, vec![0, 2, 4]);
+        assert_eq!(r[1].items, vec![0]);
+    }
+
+    #[test]
+    fn max_slots_in_flight_counts_window_overlap() {
+        let slot = |s: f64, e: f64| SlotResult {
+            items: vec![0u8],
+            max_item_secs: e - s,
+            started_at: s,
+            finished_at: e,
+        };
+        // Touching windows are sequential, not overlapping.
+        assert_eq!(max_slots_in_flight(&[slot(0.0, 1.0), slot(1.0, 2.0)]), 1);
+        assert_eq!(max_slots_in_flight(&[slot(0.0, 2.0), slot(1.0, 3.0)]), 2);
+        assert_eq!(
+            max_slots_in_flight(&[slot(0.0, 3.0), slot(1.0, 2.0), slot(1.5, 2.5)]),
+            3
+        );
+        assert_eq!(max_slots_in_flight::<u8>(&[]), 0);
     }
 }

@@ -9,6 +9,7 @@
 use std::collections::BTreeMap;
 
 use super::cost::CostModel;
+use super::tree::Tree;
 use crate::metrics::Step;
 
 #[derive(Clone, Debug)]
@@ -58,6 +59,46 @@ impl SimClock {
         *self.comm.entry(step).or_default() += secs;
         self.comm_instances += rounds as u64;
         self.comm_bytes += (rounds * bytes) as u64;
+    }
+
+    /// Broadcast `bytes` from the root down `tree` (one instance per
+    /// level; edges within a level run in parallel).
+    pub fn meter_broadcast(&mut self, step: Step, tree: &Tree, bytes: usize) {
+        self.add_comm_rounds(step, tree.depth(), bytes);
+    }
+
+    /// Gather `bytes_per_node` up `tree`. A level-l edge carries its
+    /// sender's whole gathered subtree, and edges within a level run in
+    /// parallel — so each level is priced as ONE instance of the LARGEST
+    /// subtree transiting it, not the full p-node concatenation. A scatter
+    /// (root shipping each node its own shard, e.g. a serving batch's rows
+    /// fanning out) transits the same per-level volumes in the opposite
+    /// direction, so it is priced through this same meter.
+    pub fn meter_gather(&mut self, step: Step, tree: &Tree, bytes_per_node: usize) {
+        for level in 1..=tree.depth() {
+            let bytes = bytes_per_node * tree.max_subtree_at_level(level);
+            self.add_comm_rounds(step, 1, bytes);
+        }
+    }
+
+    /// Fold another ledger into this one: per-step compute/comm series and
+    /// every counter are summed. Used to combine a session's training
+    /// ledger with its interior-mutable predict meter into one cumulative
+    /// view; the cost model stays `self`'s (both sides of such a fold are
+    /// built from the same model).
+    pub fn merge(&mut self, other: &SimClock) {
+        for (s, v) in &other.compute {
+            *self.compute.entry(*s).or_default() += v;
+        }
+        for (s, v) in &other.comm {
+            *self.comm.entry(*s).or_default() += v;
+        }
+        self.comm_instances += other.comm_instances;
+        self.comm_bytes += other.comm_bytes;
+        self.recompute_flops += other.recompute_flops;
+        self.barriers += other.barriers;
+        self.reduce_round_trips += other.reduce_round_trips;
+        self.dispatches += other.dispatches;
     }
 
     pub fn compute_secs(&self, step: Step) -> f64 {
@@ -240,6 +281,54 @@ mod tests {
         c.add_dispatches(3);
         c.add_dispatches(2);
         assert_eq!(c.dispatches(), 5);
+    }
+
+    #[test]
+    fn merge_folds_series_and_counters() {
+        let mut a = SimClock::new(CostModel::free());
+        a.add_compute(Step::Tron, 2.0);
+        a.add_barrier();
+        a.add_dispatches(3);
+        let mut b = SimClock::new(CostModel {
+            latency_s: 1.0,
+            per_byte_s: 0.0,
+        });
+        b.add_compute(Step::Tron, 1.0);
+        b.add_compute(Step::Predict, 4.0);
+        b.add_comm_rounds(Step::Predict, 2, 8);
+        b.add_reduce(Step::Tron, 1, 4);
+        b.add_barrier();
+        b.add_barrier();
+        b.add_recompute_flops(10);
+        a.merge(&b);
+        assert!((a.compute_secs(Step::Tron) - 3.0).abs() < 1e-12);
+        assert!((a.compute_secs(Step::Predict) - 4.0).abs() < 1e-12);
+        assert!((a.comm_secs(Step::Predict) - 2.0).abs() < 1e-12);
+        assert_eq!(a.barriers(), 3);
+        assert_eq!(a.comm_rounds(), 1);
+        assert_eq!(a.comm_instances(), 3);
+        assert_eq!(a.comm_bytes(), 2 * 8 + 4);
+        assert_eq!(a.dispatches(), 3);
+        assert_eq!(a.recompute_flops(), 10);
+    }
+
+    #[test]
+    fn tree_meters_match_cluster_pricing() {
+        // Same p=4 binary-tree shape as the Cluster::gather_meter test:
+        // levels carry max-subtrees of 2 then 1 nodes.
+        let tree = Tree::new(4, 2);
+        let cost = CostModel {
+            latency_s: 0.5,
+            per_byte_s: 1e-2,
+        };
+        let mut c = SimClock::new(cost);
+        c.meter_gather(Step::Predict, &tree, 100);
+        let want = (0.5 + 200.0 * 1e-2) + (0.5 + 100.0 * 1e-2);
+        assert!((c.comm_secs(Step::Predict) - want).abs() < 1e-12);
+        let mut b = SimClock::new(cost);
+        b.meter_broadcast(Step::Predict, &tree, 100);
+        assert_eq!(b.comm_instances(), tree.depth() as u64);
+        assert_eq!(b.comm_bytes(), 100 * tree.depth() as u64);
     }
 
     #[test]

@@ -20,6 +20,9 @@
 //! * [`model_io`] — `TrainedModel` persistence (save/load, bit-exact).
 //! * [`predict`] — serial test-set scoring with a trained model snapshot
 //!   (cluster-resident sessions score through `Session::predict`).
+//! * [`serving`] — prediction-only sessions: a `TrainedModel` loaded onto
+//!   a serving cluster (basis tiles + β, no training state), `&self`
+//!   multi-slot batch scoring with a double-buffered β swap.
 
 pub mod basis;
 pub mod cstore;
@@ -27,12 +30,14 @@ pub mod dist;
 pub mod model_io;
 pub mod node;
 pub mod predict;
+pub mod serving;
 pub mod session;
 pub mod trainer;
 pub mod tron;
 
 pub use cstore::{make_store, CBlockStore};
 pub use node::WorkerNode;
+pub use serving::ServingSession;
 pub use session::{growth_settings, Session, Solve};
 pub use trainer::{train, train_stagewise, StageOutput, TrainOutput, TrainedModel};
 pub use tron::{TronOptions, TronStats};

@@ -1,0 +1,410 @@
+//! Prediction-only sessions: the serving tier of the ROADMAP's
+//! heavy-traffic story.
+//!
+//! A [`ServingSession`] is what a serving process loads a
+//! [`TrainedModel`] into: basis tiles + β tiles sharded over a p-node
+//! simulated cluster — NO training state (no data shards, no W shares,
+//! no C blocks), so it is cheap to stand up and its memory footprint is
+//! the model, not the training set. Three properties distinguish it from
+//! [`super::session::Session::predict`]:
+//!
+//! * **`&self` everywhere.** `predict_batch` / `predict_many` /
+//!   `set_beta` all take `&self`; serving threads share ONE session.
+//!   Metering lands on an interior-mutability ledger locked briefly
+//!   AFTER each compute phase.
+//! * **Multi-slot dispatch.** `predict_many` submits every batch as one
+//!   slot of a single [`Executor::run_concurrent`] phase: workers pull
+//!   (batch, node-shard) work items from ANY in-flight batch, so batch
+//!   B+1 computes while batch B's stragglers drain — the overlap the
+//!   lockstep one-phase-per-batch path cannot express. Per-slot
+//!   node-order collection keeps every batch's scores bit-identical to
+//!   the serial [`super::predict::predict`] loop.
+//! * **Double-buffered β.** The live β tiles sit behind an
+//!   `Arc` swap: each dispatch snapshots the current `Arc` once, and
+//!   [`ServingSession::set_beta`] installs a fresh one — a model refresh
+//!   never stalls (or torn-reads) in-flight batches. The basis is
+//!   immutable for the session's life (it shapes the resident tiles).
+//!
+//! Simulated-cost model: β updates and the one-time basis load are
+//! priced as tree broadcasts; each batch pays its row scatter down the
+//! tree, a per-batch compute term (max item seconds, the synchronous
+//! per-batch pricing — comparable to the serial path; the concurrency
+//! win shows up on the WALL clock and in barriers/batch), and a score
+//! gather back up. One barrier per *dispatch*, however many batches it
+//! carries — that is the ledger-visible saving.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::cluster::{max_slots_in_flight, CostModel, Executor, SimClock, SlotWork, Tree};
+use crate::data::shard_rows;
+use crate::linalg::Mat;
+use crate::metrics::{Metrics, Step};
+use crate::runtime::tiles::TM;
+use crate::runtime::Compute;
+use crate::Result;
+
+use super::basis::tiles_of;
+use super::node::pad_m_tiles;
+use super::predict::score_rows;
+use super::trainer::TrainedModel;
+
+/// Serving-side ledgers (sim + wall), interior-mutable so every entry
+/// point is `&self`.
+struct ServeMeter {
+    clock: SimClock,
+    wall: Metrics,
+}
+
+/// A prediction-only cluster session over a loaded [`TrainedModel`].
+pub struct ServingSession {
+    backend: Arc<dyn Compute>,
+    executor: Executor,
+    tree: Tree,
+    p: usize,
+    /// Unpadded feature width of the basis (widest batch representable).
+    d: usize,
+    dpad: usize,
+    gamma: f32,
+    m: usize,
+    col_tiles: usize,
+    /// TM×dpad padded basis tiles, resident on every node for the
+    /// session's life.
+    z_tiles: Vec<Vec<f32>>,
+    /// Live TM-padded β tiles behind an Arc swap (see module docs).
+    beta: Mutex<Arc<Vec<Vec<f32>>>>,
+    meter: Mutex<ServeMeter>,
+    batches: AtomicU64,
+    rows: AtomicU64,
+    /// Highest number of batches observed simultaneously in flight in any
+    /// one dispatch (from per-slot execution spans).
+    peak_slots: AtomicU64,
+}
+
+impl ServingSession {
+    /// Stand up a p-node serving cluster around `model`: tile the basis
+    /// once (broadcast-priced on the sim ledger with β, under
+    /// [`Step::BasisBcast`]), install β, no training state at all.
+    pub fn load(
+        model: &TrainedModel,
+        backend: Arc<dyn Compute>,
+        nodes: usize,
+        executor: Executor,
+        cost: CostModel,
+    ) -> Result<ServingSession> {
+        anyhow::ensure!(nodes >= 1, "serving cluster needs at least one node");
+        anyhow::ensure!(
+            model.basis.rows() == model.beta.len(),
+            "model is inconsistent: {} basis points but {} coefficients",
+            model.basis.rows(),
+            model.beta.len()
+        );
+        let t0 = Instant::now();
+        let d = model.basis.cols();
+        let dpad = backend.pad_d(d)?;
+        let m = model.beta.len();
+        let z_tiles = tiles_of(&model.basis, dpad);
+        let col_tiles = m.div_ceil(TM).max(1);
+        debug_assert_eq!(z_tiles.len(), col_tiles);
+        let beta_tiles = Arc::new(pad_m_tiles(&model.beta, col_tiles));
+        let tree = Tree::new(nodes, 2);
+        let mut meter = ServeMeter {
+            clock: SimClock::new(cost),
+            wall: Metrics::new(),
+        };
+        // Model shipping: basis rows + β down the tree, once.
+        let f32s = std::mem::size_of::<f32>();
+        meter
+            .clock
+            .meter_broadcast(Step::BasisBcast, &tree, m * d * f32s + m * f32s);
+        meter.wall.add_wall(Step::Load, t0.elapsed());
+        Ok(ServingSession {
+            backend,
+            executor,
+            tree,
+            p: nodes,
+            d,
+            dpad,
+            gamma: model.gamma,
+            m,
+            col_tiles,
+            z_tiles,
+            beta: Mutex::new(beta_tiles),
+            meter: Mutex::new(meter),
+            batches: AtomicU64::new(0),
+            rows: AtomicU64::new(0),
+            peak_slots: AtomicU64::new(0),
+        })
+    }
+
+    /// Score several independent batches in ONE multi-slot executor
+    /// dispatch: batch b is slot b, its p node-shards are the slot's work
+    /// items, and workers pull items from any unfinished batch. Returns
+    /// per-batch score vectors in submission order, each bit-identical to
+    /// the serial scoring loop (per-slot node-order collection + the fixed
+    /// basis-tile accumulation order inside [`score_rows`]).
+    pub fn predict_many(&self, batches: &[&Mat]) -> Result<Vec<Vec<f32>>> {
+        if batches.is_empty() {
+            return Ok(Vec::new());
+        }
+        for x in batches {
+            anyhow::ensure!(
+                x.cols() <= self.d,
+                "predict: batch has {} features but the model was trained on {}",
+                x.cols(),
+                self.d
+            );
+        }
+        let t0 = Instant::now();
+        let p = self.p;
+        // β double-buffer: ONE snapshot per dispatch. A concurrent
+        // `set_beta` swaps the Arc for later dispatches; this one keeps
+        // scoring the coefficients it started with.
+        let beta = Arc::clone(&self.beta.lock().unwrap());
+        let shards_per: Vec<Vec<std::ops::Range<usize>>> =
+            batches.iter().map(|x| shard_rows(x.rows(), p)).collect();
+        // Contiguous panel copy per (batch, node) — the in-process
+        // stand-in for shipping the shard; skipped entirely on p == 1
+        // where the lone shard is the batch itself.
+        let panels: Vec<Vec<Mat>> = batches
+            .iter()
+            .zip(&shards_per)
+            .map(|(x, shards)| {
+                if p == 1 {
+                    Vec::new()
+                } else {
+                    shards
+                        .iter()
+                        .map(|r| {
+                            Mat::from_vec(r.len(), x.cols(), x.row_panel(r.start, r.end).to_vec())
+                        })
+                        .collect()
+                }
+            })
+            .collect();
+        let closures: Vec<Box<dyn Fn(usize) -> Result<Vec<f32>> + Sync + '_>> = batches
+            .iter()
+            .enumerate()
+            .map(|(b, x)| {
+                let x: &Mat = x;
+                let panels = &panels[b];
+                let beta = &beta;
+                Box::new(move |j: usize| {
+                    let shard = if p == 1 { x } else { &panels[j] };
+                    score_rows(
+                        self.backend.as_ref(),
+                        shard,
+                        &self.z_tiles,
+                        beta.as_slice(),
+                        self.gamma,
+                        self.dpad,
+                    )
+                }) as Box<dyn Fn(usize) -> Result<Vec<f32>> + Sync + '_>
+            })
+            .collect();
+        let slots: Vec<SlotWork<Result<Vec<f32>>>> = closures
+            .iter()
+            .map(|c| SlotWork {
+                items: p,
+                run: c.as_ref(),
+            })
+            .collect();
+        let results = self.executor.run_concurrent(&slots);
+        self.peak_slots
+            .fetch_max(max_slots_in_flight(&results) as u64, Ordering::Relaxed);
+
+        let f32s = std::mem::size_of::<f32>();
+        let mut meter = self.meter.lock().unwrap();
+        // ONE barrier for the whole dispatch, however many batches it
+        // carried — vs one per batch on the lockstep path.
+        meter.clock.add_barrier();
+        meter.wall.bump("barriers", 1);
+        for (x, (shards, slot)) in batches.iter().zip(shards_per.iter().zip(&results)) {
+            let max_shard = shards.iter().map(|r| r.len()).max().unwrap_or(0);
+            // Rows scatter down the tree to their nodes (a scatter transits
+            // the same per-level volumes as a gather, in reverse)...
+            meter
+                .clock
+                .meter_gather(Step::Predict, &self.tree, max_shard * x.cols() * f32s);
+            // ...the per-batch compute term (synchronous pricing: the
+            // slowest shard; the overlap win is wall-clock + barriers)...
+            meter.clock.add_compute(Step::Predict, slot.max_item_secs);
+            // ...and the scores gather back up. β does NOT ship per batch:
+            // it is resident from load/set_beta — that, plus the shared
+            // barrier, is the serving path's whole comm story.
+            meter
+                .clock
+                .meter_gather(Step::Predict, &self.tree, max_shard * f32s);
+        }
+        meter.wall.add_wall(Step::Predict, t0.elapsed());
+        drop(meter);
+
+        let mut out = Vec::with_capacity(batches.len());
+        for (b, slot) in results.into_iter().enumerate() {
+            let mut scores = Vec::with_capacity(batches[b].rows());
+            for (j, item) in slot.items.into_iter().enumerate() {
+                match item {
+                    Ok(part) => scores.extend_from_slice(&part),
+                    Err(e) => {
+                        return Err(e.context(format!(
+                            "batch {b} node {j} failed during serving predict"
+                        )))
+                    }
+                }
+            }
+            self.rows.fetch_add(scores.len() as u64, Ordering::Relaxed);
+            out.push(scores);
+        }
+        self.batches
+            .fetch_add(batches.len() as u64, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    /// Score one batch (a `predict_many` dispatch with a single slot).
+    pub fn predict_batch(&self, x: &Mat) -> Result<Vec<f32>> {
+        let mut out = self.predict_many(&[x])?;
+        Ok(out.pop().expect("one slot in, one score vector out"))
+    }
+
+    /// Install fresh coefficients (same basis — e.g. a warm re-solve
+    /// shipped from a training cluster). Priced as a β tree broadcast;
+    /// in-flight batches finish on the snapshot they took, the NEXT
+    /// dispatch sees the new β.
+    pub fn set_beta(&self, beta: &[f32]) -> Result<()> {
+        anyhow::ensure!(
+            beta.len() == self.m,
+            "set_beta: got {} coefficients for an m={} model",
+            beta.len(),
+            self.m
+        );
+        let tiles = Arc::new(pad_m_tiles(beta, self.col_tiles));
+        let mut meter = self.meter.lock().unwrap();
+        meter
+            .clock
+            .meter_broadcast(Step::BasisBcast, &self.tree, self.m * std::mem::size_of::<f32>());
+        drop(meter);
+        *self.beta.lock().unwrap() = tiles;
+        Ok(())
+    }
+
+    // ---- introspection ----
+
+    /// Simulated serving ledger (model broadcasts, per-batch scatter /
+    /// compute / gather, one barrier per dispatch).
+    pub fn sim(&self) -> SimClock {
+        self.meter.lock().unwrap().clock.clone()
+    }
+
+    /// Wall clock (Load + Predict) and mirrored barrier count.
+    pub fn wall(&self) -> Metrics {
+        self.meter.lock().unwrap().wall.clone()
+    }
+
+    pub fn batches_served(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    pub fn rows_served(&self) -> u64 {
+        self.rows.load(Ordering::Relaxed)
+    }
+
+    /// Highest number of batches simultaneously in flight in any single
+    /// dispatch so far (1 on the serial executor; ≥2 shows real overlap).
+    pub fn peak_slots_in_flight(&self) -> u64 {
+        self.peak_slots.load(Ordering::Relaxed)
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::settings::Loss;
+    use crate::rng::Rng;
+    use crate::runtime::backend::NativeCompute;
+
+    fn tiny_model(m: usize, d: usize) -> TrainedModel {
+        let mut rng = Rng::new(7);
+        TrainedModel {
+            basis: Mat::from_fn(m, d, |_, _| rng.normal_f32()),
+            beta: (0..m).map(|_| 0.05 * rng.normal_f32()).collect(),
+            gamma: 0.25,
+            loss: Loss::SqHinge,
+        }
+    }
+
+    fn serving(m: usize, d: usize, p: usize) -> ServingSession {
+        ServingSession::load(
+            &tiny_model(m, d),
+            Arc::new(NativeCompute::new()),
+            p,
+            Executor::serial(),
+            CostModel::free(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn load_rejects_inconsistent_models_and_zero_nodes() {
+        let mut model = tiny_model(32, 6);
+        model.beta.pop();
+        let err = ServingSession::load(
+            &model,
+            Arc::new(NativeCompute::new()),
+            2,
+            Executor::serial(),
+            CostModel::free(),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("inconsistent"), "{err:#}");
+        let err = ServingSession::load(
+            &tiny_model(32, 6),
+            Arc::new(NativeCompute::new()),
+            0,
+            Executor::serial(),
+            CostModel::free(),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("at least one node"), "{err:#}");
+    }
+
+    #[test]
+    fn empty_dispatch_and_wide_batch_edges() {
+        let s = serving(32, 6, 2);
+        assert!(s.predict_many(&[]).unwrap().is_empty());
+        let wide = Mat::from_vec(1, 9, vec![0.0; 9]);
+        let err = s.predict_batch(&wide).unwrap_err();
+        assert!(format!("{err:#}").contains("9 features"), "{err:#}");
+        assert_eq!(s.batches_served(), 0);
+    }
+
+    #[test]
+    fn set_beta_validates_length_and_applies_next_dispatch() {
+        let model = tiny_model(48, 5);
+        let s = serving(48, 5, 3);
+        let mut rng = Rng::new(11);
+        let x = Mat::from_fn(10, 5, |_, _| rng.normal_f32());
+        let before = s.predict_batch(&x).unwrap();
+        assert!(s.set_beta(&vec![0.0; 47]).is_err(), "wrong length");
+        let doubled: Vec<f32> = model.beta.iter().map(|b| 2.0 * b).collect();
+        s.set_beta(&doubled).unwrap();
+        let after = s.predict_batch(&x).unwrap();
+        for (a, b) in after.iter().zip(&before) {
+            assert!((a - 2.0 * b).abs() <= 1e-5, "{a} vs 2·{b}");
+        }
+        assert_eq!(s.batches_served(), 2);
+        assert_eq!(s.rows_served(), 20);
+    }
+}

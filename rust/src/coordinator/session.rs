@@ -28,7 +28,7 @@
 //! [`SimClock`] — the serving path the ROADMAP's live-cluster north star
 //! needs, instead of the serial coordinator loop in [`super::predict`].
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::cluster::{Cluster, CostModel, SimClock};
@@ -78,6 +78,16 @@ pub struct Solve {
     pub recomputed_tiles: u64,
 }
 
+/// Prediction metering, split out of the session's training ledgers so
+/// scoring — which never mutates β, the basis, or the stores — can run
+/// through `&self`. Read paths share the session; only this lock is
+/// taken, briefly, after the compute phase. [`Session::sim`] and
+/// [`Session::wall`] fold it back into the cumulative view.
+struct PredictMeter {
+    clock: SimClock,
+    wall: Metrics,
+}
+
 /// A live training/serving session over the simulated cluster.
 pub struct Session {
     settings: Settings,
@@ -109,6 +119,9 @@ pub struct Session {
     /// kernel state is inconsistent with the basis, so solve/predict/grow
     /// refuse to run rather than silently use stale C blocks.
     poisoned: bool,
+    /// Interior-mutability ledger for `&self` predict calls (same cost
+    /// model as the cluster clock; folded in by `sim`/`wall`).
+    predict_meter: Mutex<PredictMeter>,
 }
 
 impl Session {
@@ -149,6 +162,10 @@ impl Session {
 
         let m = basis_sel.m();
         let col_tiles = basis_sel.col_tiles();
+        let predict_meter = Mutex::new(PredictMeter {
+            clock: SimClock::new(cluster.clock.cost()),
+            wall: Metrics::new(),
+        });
         let mut session = Session {
             gamma: settings.gamma(),
             solved_loss: settings.loss,
@@ -167,6 +184,7 @@ impl Session {
             mirrored_rounds: 0,
             mirrored_dispatches: 0,
             poisoned: false,
+            predict_meter,
         };
         // Step 3: kernel computation (all column tiles dirty on first build).
         session.install_columns(0..col_tiles)?;
@@ -251,8 +269,8 @@ impl Session {
             fg_evals: fg,
             hd_evals: hd,
             solve_wall_secs: solve_wall.as_secs_f64(),
-            wall: self.wall.clone(),
-            sim: self.cluster.clock.clone(),
+            wall: self.wall(),
+            sim: self.sim(),
             peak_c_bytes: peak_c,
             peak_w_cache_bytes: peak_w,
             recomputed_tiles: tiles,
@@ -346,7 +364,12 @@ impl Session {
     /// Bit-identical to the serial [`super::predict::predict`] loop: each
     /// row's score depends only on its own features, accumulated over the
     /// basis tiles in the same order.
-    pub fn predict(&mut self, x: &Mat) -> Result<Vec<f32>> {
+    ///
+    /// Takes `&self`: scoring never mutates β or the stores, so concurrent
+    /// read paths (serving threads, an accuracy sweep racing a report) can
+    /// share the session. The metering lands on an interior-mutability
+    /// side ledger, locked only AFTER the compute phase returns.
+    pub fn predict(&self, x: &Mat) -> Result<Vec<f32>> {
         self.check_healthy()?;
         // Narrower batches are fine — trailing absent (sparse) features are
         // zeros, exactly how the serial scoring path pads them. Wider
@@ -375,42 +398,67 @@ impl Session {
                 .collect()
         };
         let beta_tiles = pad_m_tiles(&self.beta, self.basis.col_tiles());
-        // β ships down the tree (the basis is already resident on every
-        // node from training); scores gather back up.
-        self.cluster
-            .broadcast_meter(Step::Predict, self.basis.m() * std::mem::size_of::<f32>());
         let backend = Arc::clone(&self.backend);
         let z_tiles = &self.basis.z_tiles;
         let gamma = self.gamma;
         let dpad = self.dpad;
-        let parts = self.cluster.try_par_compute(Step::Predict, |j, _node| {
+        // One read-only executor phase over p unit scratch slots (node
+        // state is untouched — exactly why this can be `&self`).
+        let mut scratch = vec![(); p];
+        let (parts, max_secs) = self.cluster.executor().run(&mut scratch, &|j, _: &mut ()| {
             let shard = if p == 1 { x } else { &per_node[j] };
             score_rows(backend.as_ref(), shard, z_tiles, &beta_tiles, gamma, dpad)
-        })?;
+        });
+        // β ships down the tree (the basis is already resident on every
+        // node from training); scores gather back up. Same pricing and
+        // error window as the old `&mut` path: on a node failure the
+        // broadcast, compute and barrier are already on the ledger but the
+        // gather (which never happens) and the wall step are not.
+        let tree = self.cluster.tree();
+        let mut meter = self.predict_meter.lock().unwrap();
+        meter
+            .clock
+            .meter_broadcast(Step::Predict, tree, self.basis.m() * std::mem::size_of::<f32>());
+        meter.clock.add_compute(Step::Predict, max_secs);
+        meter.clock.add_barrier();
+        meter.wall.bump("barriers", 1);
+        let mut out = Vec::with_capacity(x.rows());
+        for (j, part) in parts.into_iter().enumerate() {
+            match part {
+                Ok(scores) => out.extend_from_slice(&scores),
+                Err(e) => return Err(e.context(format!("node {j} failed during predict"))),
+            }
+        }
         let max_shard = shards.iter().map(|r| r.len()).max().unwrap_or(0);
-        self.cluster
-            .gather_meter(Step::Predict, max_shard * std::mem::size_of::<f32>());
-        self.wall.add_wall(Step::Predict, t0.elapsed());
-        self.sync_counters();
-        Ok(parts.concat())
+        meter
+            .clock
+            .meter_gather(Step::Predict, tree, max_shard * std::mem::size_of::<f32>());
+        meter.wall.add_wall(Step::Predict, t0.elapsed());
+        Ok(out)
     }
 
     /// Test accuracy through the distributed, metered predict path.
-    pub fn accuracy(&mut self, test: &Dataset) -> Result<f64> {
+    pub fn accuracy(&self, test: &Dataset) -> Result<f64> {
         let scores = self.predict(&test.x)?;
         Ok(crate::metrics::accuracy(&scores, &test.y))
     }
 
     // ---- introspection ----
 
-    /// Cumulative wall clock (Load/BasisBcast/Kernel/Tron/Predict).
-    pub fn wall(&self) -> &Metrics {
-        &self.wall
+    /// Cumulative wall clock (Load/BasisBcast/Kernel/Tron/Predict),
+    /// including `&self` predict calls (folded from the side ledger).
+    pub fn wall(&self) -> Metrics {
+        let mut w = self.wall.clone();
+        w.merge(&self.predict_meter.lock().unwrap().wall);
+        w
     }
 
-    /// Cumulative simulated p-node ledger.
-    pub fn sim(&self) -> &SimClock {
-        &self.cluster.clock
+    /// Cumulative simulated p-node ledger, including `&self` predict
+    /// calls (folded from the side ledger).
+    pub fn sim(&self) -> SimClock {
+        let mut s = self.cluster.clock.clone();
+        s.merge(&self.predict_meter.lock().unwrap().clock);
+        s
     }
 
     pub fn beta(&self) -> &[f32] {
@@ -490,6 +538,11 @@ impl Session {
     /// Consume the session into the one-shot [`TrainOutput`] shape (the
     /// `train()` wrapper's return).
     pub(crate) fn into_output(self, solve: Solve) -> TrainOutput {
+        let meter = self.predict_meter.into_inner().unwrap();
+        let mut wall = self.wall;
+        wall.merge(&meter.wall);
+        let mut sim = self.cluster.clock.clone();
+        sim.merge(&meter.clock);
         TrainOutput {
             model: TrainedModel {
                 basis: self.basis.z,
@@ -498,8 +551,8 @@ impl Session {
                 loss: self.solved_loss,
             },
             stats: solve.stats,
-            wall: self.wall,
-            sim: self.cluster.clock.clone(),
+            wall,
+            sim,
             fg_evals: solve.fg_evals,
             hd_evals: solve.hd_evals,
             peak_c_bytes: solve.peak_c_bytes,

@@ -45,6 +45,11 @@
 //!   the two under a byte budget — with bit-identical training output.
 //! * [`baselines`] — formulation (3) (Zhang et al. linearization) and
 //!   P-packSVM (Zhu et al.), the paper's comparators.
+//! * [`serve`] — the serving loop: a bounded request queue with adaptive
+//!   micro-batching (flush on max-batch or max-delay) in front of a
+//!   prediction-only [`coordinator::serving::ServingSession`], driven by
+//!   closed-loop clients and reported as qps + latency percentiles on
+//!   both the wall clock and the simulated ledger.
 //! * [`linalg`], [`rng`], [`data`], [`config`], [`metrics`] — substrates.
 
 // Numeric tile code indexes several parallel buffers per loop and threads
@@ -62,6 +67,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

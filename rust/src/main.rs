@@ -5,6 +5,8 @@
 //!   stagewise   Stage-wise basis growth (§3) with per-stage accuracy
 //!   linearized  Formulation-(3) baseline (Zhang et al.) with timing slices
 //!   ppacksvm    P-packSVM baseline (Zhu et al.)
+//!   serve       Closed-loop serving: micro-batching queue over a
+//!               prediction-only session (load a saved model or train one)
 //!   info        Show the artifact manifest the runtime would load
 //!
 //! `train` and `stagewise` drive one stateful `Session`: the cluster, the
@@ -19,6 +21,7 @@
 //!   dkm train --dataset covtype_like --lambda-sweep 0.05,0.01,0.002
 //!   dkm stagewise --dataset covtype_like --stages 100,400,1600
 //!   dkm linearized --dataset vehicle_like --m 400
+//!   dkm serve --model model.dkm --clients 16 --max-batch 64 --exec pool
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -26,7 +29,8 @@ use std::sync::Arc;
 use dkm::baselines::{train_linearized, train_ppacksvm, PPackOptions};
 use dkm::cluster::CostModel;
 use dkm::config::{Args, Settings};
-use dkm::coordinator::{growth_settings, Session, Solve};
+use dkm::coordinator::{growth_settings, Session, ServingSession, Solve, TrainedModel};
+use dkm::serve::ServeConfig;
 use dkm::data::{synth, Dataset};
 use dkm::metrics::{Step, Table};
 use dkm::runtime::{make_backend, Manifest};
@@ -44,6 +48,9 @@ const TRAIN_FLAGS: &[&str] = &[
     "backend", "exec", "c-storage", "c-memory-budget", "eval-pipeline", "max-iters", "tol", "seed",
     "kmeans-iters", "artifacts", "config", "stages", "pack", "epochs", "verbose", "cost",
     "lambda-sweep", "save-model",
+    // serve-only flags
+    "model", "clients", "requests", "think-ms", "max-batch", "max-delay-ms", "slots",
+    "queue-cap", "json",
 ];
 
 fn run() -> Result<()> {
@@ -59,6 +66,7 @@ fn run() -> Result<()> {
         "stagewise" => cmd_stagewise(&args),
         "linearized" => cmd_linearized(&args),
         "ppacksvm" => cmd_ppacksvm(&args),
+        "serve" => cmd_serve(&args),
         "info" => cmd_info(&args),
         _ => {
             print!("{}", HELP);
@@ -69,7 +77,7 @@ fn run() -> Result<()> {
 
 const HELP: &str = "dkm — distributed nonlinear kernel machines (Nyström formulation (4) + AllReduce TRON)
 
-USAGE: dkm <train|stagewise|linearized|ppacksvm|info> [--flags]
+USAGE: dkm <train|stagewise|linearized|ppacksvm|serve|info> [--flags]
 
 Common flags:
   --dataset NAME    vehicle_like | covtype_like | ccat_like | mnist8m_like
@@ -104,6 +112,22 @@ Common flags:
                     model (a later --lambda-sweep does not affect it), on
                     `stagewise` the final stage's model
   --config FILE     key=value settings file (CLI flags override)
+
+Serve flags (dkm serve; every reply is checked bit-identical to the
+serial scoring loop):
+  --model PATH      serve a model saved with --save-model (default: train
+                    one in-process first with the training flags above)
+  --clients N       closed-loop client threads (default 8)
+  --requests N      total requests, split across clients (default 512)
+  --think-ms X      mean exponential client think time ⇒ Poisson-ish
+                    arrivals (default 1.0; 0 = hammer)
+  --max-batch N     flush the queue at this many waiting rows (default 32)
+  --max-delay-ms X  ...or when the oldest request is this old (default 2)
+  --slots N         micro-batches per multi-slot dispatch: one flush
+                    drains up to N·max-batch rows into ONE executor phase
+                    sharing ONE barrier (default 4)
+  --queue-cap N     queue bound; full-queue submits block (default 1024)
+  --json PATH       also write the serve report as JSON
 ";
 
 fn settings_from(args: &Args) -> Result<Settings> {
@@ -366,6 +390,86 @@ fn cmd_ppacksvm(args: &Args) -> Result<()> {
         out.sim.comm_secs(Step::Tron),
     );
     println!("test accuracy: {acc:.4}");
+    Ok(())
+}
+
+fn f64_or(args: &Args, key: &str, default: f64) -> Result<f64> {
+    match args.str_opt(key) {
+        None => Ok(default),
+        Some(s) => s.parse().map_err(|e| anyhow::anyhow!("--{key}: {e}")),
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let s = settings_from(args)?;
+    let cost = cost_from(args)?;
+    let (train_ds, test_ds) = load_data(args, &s)?;
+    let backend = make_backend(s.backend, &s.artifacts_dir)?;
+    let model = match args.str_opt("model") {
+        Some(path) => {
+            let m = TrainedModel::load(path)?;
+            println!(
+                "loaded model from {path}: m={} d={}",
+                m.beta.len(),
+                m.basis.cols()
+            );
+            m
+        }
+        None => {
+            println!(
+                "no --model given: training one in-process first (m={} p={})",
+                s.m, s.nodes
+            );
+            dkm::coordinator::train(&s, &train_ds, Arc::clone(&backend), cost)?.model
+        }
+    };
+    // Serial reference scores for the whole request pool (the test set):
+    // every served reply is checked bit-identical against these.
+    let expected = model.predict(backend.as_ref(), &test_ds.x)?;
+    let session = ServingSession::load(
+        &model,
+        Arc::clone(&backend),
+        s.nodes,
+        s.executor.to_executor(),
+        cost,
+    )?;
+    let clients = args.usize_or("clients", 8)?;
+    let requests = args.usize_or("requests", 512)?;
+    anyhow::ensure!(clients >= 1, "--clients must be >= 1");
+    let cfg = ServeConfig {
+        clients,
+        requests_per_client: requests.div_ceil(clients),
+        mean_think_ms: f64_or(args, "think-ms", 1.0)?,
+        max_batch: args.usize_or("max-batch", 32)?,
+        max_delay_ms: f64_or(args, "max-delay-ms", 2.0)?,
+        slots: args.usize_or("slots", 4)?,
+        queue_cap: args.usize_or("queue-cap", 1024)?,
+        seed: s.seed,
+    };
+    println!(
+        "serving m={} over p={} ({}): {} clients × {} requests, flush at {} rows or {}ms, ≤{} micro-batches/dispatch",
+        session.m(),
+        session.p(),
+        s.executor.name(),
+        cfg.clients,
+        cfg.requests_per_client,
+        cfg.max_batch,
+        cfg.max_delay_ms,
+        cfg.slots,
+    );
+    let report = dkm::serve::run(&session, &test_ds.x, Some(&expected), &cfg)?;
+    print!("{}", report.render());
+    println!("\n== simulated serving ledger ==");
+    print!("{}", session.sim().report());
+    anyhow::ensure!(
+        report.mismatches == 0,
+        "{} replies diverged from the serial reference",
+        report.mismatches
+    );
+    if let Some(path) = args.str_opt("json") {
+        std::fs::write(path, format!("{}\n", report.to_json()))?;
+        println!("report written to {path}");
+    }
     Ok(())
 }
 

@@ -1,0 +1,542 @@
+//! The `dkm serve` loop: a bounded request queue with adaptive
+//! micro-batching in front of a [`ServingSession`].
+//!
+//! Shape of the system (all in-process, like the cluster sim):
+//!
+//! ```text
+//! N closed-loop clients ──submit──▶ bounded queue ──▶ dispatcher
+//!   (exponential think               (blocks when       flush on max-batch
+//!    time ⇒ Poisson-ish               full: back-        OR max-delay, drain
+//!    arrivals)                        pressure)          up to slots·max_batch,
+//!                                                        ONE predict_many)
+//! ```
+//!
+//! The dispatcher is where the two serving knobs meet: it flushes as soon
+//! as `max_batch` requests are waiting (throughput) or the OLDEST waiting
+//! request reaches `max_delay` (latency floor), and each flush drains up
+//! to `slots` micro-batches into a single multi-slot
+//! [`ServingSession::predict_many`] dispatch — so a traffic burst rides
+//! one barrier instead of `slots`. Every reply is checked bit-identical
+//! against the serial reference when one is supplied.
+//!
+//! [`run`] drives the whole loop and returns a [`ServeReport`]: qps and
+//! latency percentiles on the WALL clock, plus the simulated ledger's
+//! view of the same window (Step::Predict seconds, barriers/batch, comm
+//! volume) — the two stories the ROADMAP's serving item asks for.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::Json;
+use crate::coordinator::ServingSession;
+use crate::linalg::Mat;
+use crate::metrics::Step;
+use crate::rng::Rng;
+use crate::Result;
+
+/// Knobs of one serving run.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Closed-loop client threads.
+    pub clients: usize,
+    /// Requests each client issues before exiting.
+    pub requests_per_client: usize,
+    /// Mean exponential think time between a client's requests (0 = none;
+    /// independent exponential thinkers ≈ Poisson arrivals at the queue).
+    pub mean_think_ms: f64,
+    /// Flush as soon as this many requests are waiting…
+    pub max_batch: usize,
+    /// …or as soon as the oldest waiting request is this old.
+    pub max_delay_ms: f64,
+    /// Micro-batches per dispatch: one flush drains up to
+    /// `slots · max_batch` requests into one multi-slot phase.
+    pub slots: usize,
+    /// Queue bound; full-queue submits block (closed-loop backpressure).
+    pub queue_cap: usize,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            clients: 8,
+            requests_per_client: 64,
+            mean_think_ms: 1.0,
+            max_batch: 32,
+            max_delay_ms: 2.0,
+            slots: 4,
+            queue_cap: 1024,
+            seed: 42,
+        }
+    }
+}
+
+/// One in-flight request: a row of the feature pool plus the reply pipe.
+struct Request {
+    row: usize,
+    enqueued: Instant,
+    reply: mpsc::Sender<f32>,
+}
+
+/// Should the dispatcher flush now? Pure so the policy is unit-testable:
+/// flush on a full batch, or on ANY waiting work once the oldest request
+/// has aged past the delay bound (or the queue is closing and this is the
+/// drain).
+fn flush_due(len: usize, oldest_age: Duration, max_batch: usize, max_delay: Duration, closed: bool) -> bool {
+    len >= max_batch || (len > 0 && (closed || oldest_age >= max_delay))
+}
+
+/// Split a drained wave of `n` requests into micro-batch sizes of at most
+/// `max_batch` (full batches first, remainder last).
+fn plan_micro_batches(n: usize, max_batch: usize) -> Vec<usize> {
+    let mut sizes = Vec::new();
+    let mut left = n;
+    while left > 0 {
+        let take = left.min(max_batch);
+        sizes.push(take);
+        left -= take;
+    }
+    sizes
+}
+
+struct QueueState {
+    deque: VecDeque<Request>,
+    closed: bool,
+}
+
+/// Bounded MPSC request queue: submits block while full (the closed-loop
+/// clients ARE the backpressure), the dispatcher blocks until a flush is
+/// due.
+struct RequestQueue {
+    state: Mutex<QueueState>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+impl RequestQueue {
+    fn new(cap: usize) -> RequestQueue {
+        RequestQueue {
+            state: Mutex::new(QueueState {
+                deque: VecDeque::new(),
+                closed: false,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            cap,
+        }
+    }
+
+    fn submit(&self, req: Request) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        while st.deque.len() >= self.cap && !st.closed {
+            st = self.not_full.wait(st).unwrap();
+        }
+        anyhow::ensure!(!st.closed, "request queue is closed");
+        st.deque.push_back(req);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Stop accepting new requests; queued ones still drain.
+    fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    /// Close AND drop everything queued (replies error out) — the unwind
+    /// path when a dispatch fails, so no client blocks forever.
+    fn abort(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        st.deque.clear();
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    /// Block until a flush is due ([`flush_due`]), then drain up to
+    /// `max_wave` requests. An empty return means closed-and-drained.
+    fn next_wave(&self, max_batch: usize, max_delay: Duration, max_wave: usize) -> Vec<Request> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let len = st.deque.len();
+            let oldest = st.deque.front().map(|r| r.enqueued.elapsed());
+            match oldest {
+                Some(age) if flush_due(len, age, max_batch, max_delay, st.closed) => break,
+                Some(age) => {
+                    let left = max_delay.saturating_sub(age);
+                    st = self.not_empty.wait_timeout(st, left).unwrap().0;
+                }
+                None if st.closed => return Vec::new(),
+                None => st = self.not_empty.wait(st).unwrap(),
+            }
+        }
+        let take = st.deque.len().min(max_wave);
+        let wave: Vec<Request> = st.deque.drain(..take).collect();
+        self.not_full.notify_all();
+        wave
+    }
+}
+
+/// The dispatcher: drain due waves, pack them into ≤`max_batch`
+/// micro-batches, score each wave in ONE multi-slot dispatch, reply.
+/// Returns (micro-batches scored, rows scored).
+fn dispatch_loop(
+    session: &ServingSession,
+    pool: &Mat,
+    queue: &RequestQueue,
+    cfg: &ServeConfig,
+) -> Result<(u64, u64)> {
+    let max_delay = Duration::from_secs_f64(cfg.max_delay_ms / 1000.0);
+    let max_wave = cfg.slots.max(1) * cfg.max_batch;
+    let mut batches = 0u64;
+    let mut rows = 0u64;
+    loop {
+        let wave = queue.next_wave(cfg.max_batch, max_delay, max_wave);
+        if wave.is_empty() {
+            return Ok((batches, rows));
+        }
+        let sizes = plan_micro_batches(wave.len(), cfg.max_batch);
+        let mut mats = Vec::with_capacity(sizes.len());
+        let mut at = 0usize;
+        for &sz in &sizes {
+            let mut data = Vec::with_capacity(sz * pool.cols());
+            for req in &wave[at..at + sz] {
+                data.extend_from_slice(pool.row_panel(req.row, req.row + 1));
+            }
+            mats.push(Mat::from_vec(sz, pool.cols(), data));
+            at += sz;
+        }
+        let refs: Vec<&Mat> = mats.iter().collect();
+        let scored = match session.predict_many(&refs) {
+            Ok(s) => s,
+            Err(e) => {
+                queue.abort();
+                return Err(e);
+            }
+        };
+        let mut replies = wave.into_iter();
+        for scores in scored {
+            batches += 1;
+            rows += scores.len() as u64;
+            for score in scores {
+                let req = replies.next().expect("one request per score");
+                // A client that gave up is its own problem; drop the score.
+                let _ = req.reply.send(score);
+            }
+        }
+    }
+}
+
+/// One closed-loop client: think (exponential), pick a pool row, submit,
+/// wait for the score, check it bit-identical to the reference. Returns
+/// the observed submit→reply latencies in milliseconds.
+fn client_loop(
+    queue: &RequestQueue,
+    cfg: &ServeConfig,
+    mut rng: Rng,
+    pool_rows: usize,
+    expected: Option<&[f32]>,
+    mismatches: &AtomicU64,
+) -> Vec<f64> {
+    let mut latencies = Vec::with_capacity(cfg.requests_per_client);
+    for _ in 0..cfg.requests_per_client {
+        if cfg.mean_think_ms > 0.0 {
+            let think_ms = -cfg.mean_think_ms * (1.0 - rng.f64()).ln();
+            std::thread::sleep(Duration::from_secs_f64(think_ms / 1000.0));
+        }
+        let row = rng.below(pool_rows);
+        let (tx, rx) = mpsc::channel();
+        let t0 = Instant::now();
+        let req = Request {
+            row,
+            enqueued: t0,
+            reply: tx,
+        };
+        if queue.submit(req).is_err() {
+            break; // aborted run
+        }
+        match rx.recv() {
+            Ok(score) => {
+                latencies.push(t0.elapsed().as_secs_f64() * 1000.0);
+                if let Some(exp) = expected {
+                    if score.to_bits() != exp[row].to_bits() {
+                        mismatches.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            Err(_) => break, // dispatcher died; run() surfaces its error
+        }
+    }
+    latencies
+}
+
+/// What one [`run`] produced: throughput + latency on the wall clock, and
+/// the same serving window on the simulated ledger.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// Requests answered (== issued unless the run aborted).
+    pub requests: u64,
+    /// Micro-batches scored.
+    pub batches: u64,
+    pub mean_batch_rows: f64,
+    pub wall_secs: f64,
+    pub qps: f64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub max_ms: f64,
+    /// Replies that were not bit-identical to the serial reference
+    /// (always 0 unless something is broken; only counted when a
+    /// reference was supplied).
+    pub mismatches: u64,
+    /// Sim-ledger deltas over the run's window.
+    pub barriers: u64,
+    pub comm_instances: u64,
+    pub comm_bytes: u64,
+    pub sim_predict_secs: f64,
+    /// Barriers ÷ micro-batches: < 1.0 whenever a flush carried more than
+    /// one micro-batch through a single multi-slot dispatch.
+    pub barriers_per_batch: f64,
+    /// Most batches simultaneously in flight in any one dispatch.
+    pub peak_slots_in_flight: u64,
+}
+
+fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted_ms.len() - 1) as f64).round() as usize;
+    sorted_ms[idx.min(sorted_ms.len() - 1)]
+}
+
+impl ServeReport {
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        let mut num = |k: &str, v: f64| {
+            o.insert(k.to_string(), Json::Num(v));
+        };
+        num("requests", self.requests as f64);
+        num("batches", self.batches as f64);
+        num("mean_batch_rows", self.mean_batch_rows);
+        num("wall_secs", self.wall_secs);
+        num("qps", self.qps);
+        num("p50_ms", self.p50_ms);
+        num("p90_ms", self.p90_ms);
+        num("p99_ms", self.p99_ms);
+        num("mean_ms", self.mean_ms);
+        num("max_ms", self.max_ms);
+        num("mismatches", self.mismatches as f64);
+        num("barriers", self.barriers as f64);
+        num("comm_instances", self.comm_instances as f64);
+        num("comm_bytes", self.comm_bytes as f64);
+        num("sim_predict_secs", self.sim_predict_secs);
+        num("barriers_per_batch", self.barriers_per_batch);
+        num("peak_slots_in_flight", self.peak_slots_in_flight as f64);
+        Json::Obj(o)
+    }
+
+    /// Human-readable two-line summary.
+    pub fn render(&self) -> String {
+        format!(
+            "served {} requests in {} micro-batches ({:.1} rows/batch) over {:.2}s — {:.0} qps\n\
+             latency ms: p50 {:.2} p90 {:.2} p99 {:.2} mean {:.2} max {:.2} | mismatches {}\n\
+             sim: {:.4}s predict, {} barriers ({:.2}/batch), {} comm instances, {} bytes, peak {} slots in flight\n",
+            self.requests,
+            self.batches,
+            self.mean_batch_rows,
+            self.wall_secs,
+            self.qps,
+            self.p50_ms,
+            self.p90_ms,
+            self.p99_ms,
+            self.mean_ms,
+            self.max_ms,
+            self.mismatches,
+            self.sim_predict_secs,
+            self.barriers,
+            self.barriers_per_batch,
+            self.comm_instances,
+            self.comm_bytes,
+            self.peak_slots_in_flight,
+        )
+    }
+}
+
+/// Drive one closed-loop serving run: `cfg.clients` threads issuing
+/// requests drawn from the rows of `pool` against `session`, with the
+/// dispatcher micro-batching between them. When `expected` is given
+/// (serial scores aligned with `pool`'s rows), every reply is checked
+/// bit-identical.
+pub fn run(
+    session: &ServingSession,
+    pool: &Mat,
+    expected: Option<&[f32]>,
+    cfg: &ServeConfig,
+) -> Result<ServeReport> {
+    anyhow::ensure!(cfg.clients >= 1, "need at least one client");
+    anyhow::ensure!(cfg.max_batch >= 1, "max_batch must be >= 1");
+    anyhow::ensure!(cfg.queue_cap >= 1, "queue_cap must be >= 1");
+    anyhow::ensure!(pool.rows() > 0, "feature pool is empty");
+    if let Some(exp) = expected {
+        anyhow::ensure!(
+            exp.len() == pool.rows(),
+            "reference scores ({}) must align with the pool rows ({})",
+            exp.len(),
+            pool.rows()
+        );
+    }
+    let queue = RequestQueue::new(cfg.queue_cap);
+    let mismatches = AtomicU64::new(0);
+    let pool_rows = pool.rows();
+    let sim_before = session.sim();
+    let t0 = Instant::now();
+    let (dispatched, mut latencies) = std::thread::scope(|scope| {
+        let dispatcher = {
+            let queue = &queue;
+            scope.spawn(move || dispatch_loop(session, pool, queue, cfg))
+        };
+        let mut seeder = Rng::new(cfg.seed);
+        let clients: Vec<_> = (0..cfg.clients)
+            .map(|c| {
+                let rng = seeder.fork(c as u64);
+                let queue = &queue;
+                let mism = &mismatches;
+                scope.spawn(move || client_loop(queue, cfg, rng, pool_rows, expected, mism))
+            })
+            .collect();
+        let mut latencies = Vec::new();
+        for h in clients {
+            latencies.extend(h.join().expect("client thread panicked"));
+        }
+        queue.close();
+        (dispatcher.join().expect("dispatcher panicked"), latencies)
+    });
+    let wall_secs = t0.elapsed().as_secs_f64();
+    let (batches, rows) = dispatched?;
+    let sim = session.sim();
+
+    latencies.sort_by(f64::total_cmp);
+    let requests = latencies.len() as u64;
+    let mean_ms = if latencies.is_empty() {
+        0.0
+    } else {
+        latencies.iter().sum::<f64>() / latencies.len() as f64
+    };
+    debug_assert_eq!(rows, requests, "every answered request is one scored row");
+    Ok(ServeReport {
+        requests,
+        batches,
+        mean_batch_rows: if batches == 0 { 0.0 } else { rows as f64 / batches as f64 },
+        wall_secs,
+        qps: if wall_secs > 0.0 { requests as f64 / wall_secs } else { 0.0 },
+        p50_ms: percentile(&latencies, 50.0),
+        p90_ms: percentile(&latencies, 90.0),
+        p99_ms: percentile(&latencies, 99.0),
+        mean_ms,
+        max_ms: latencies.last().copied().unwrap_or(0.0),
+        mismatches: mismatches.load(Ordering::Relaxed),
+        barriers: sim.barriers() - sim_before.barriers(),
+        comm_instances: sim.comm_instances() - sim_before.comm_instances(),
+        comm_bytes: sim.comm_bytes() - sim_before.comm_bytes(),
+        sim_predict_secs: sim.step_secs(Step::Predict) - sim_before.step_secs(Step::Predict),
+        barriers_per_batch: if batches == 0 {
+            0.0
+        } else {
+            (sim.barriers() - sim_before.barriers()) as f64 / batches as f64
+        },
+        peak_slots_in_flight: session.peak_slots_in_flight(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{CostModel, Executor};
+    use crate::config::settings::Loss;
+    use crate::coordinator::TrainedModel;
+    use crate::runtime::backend::NativeCompute;
+    use std::sync::Arc;
+
+    #[test]
+    fn micro_batch_plan_covers_everything() {
+        assert_eq!(plan_micro_batches(0, 8), Vec::<usize>::new());
+        assert_eq!(plan_micro_batches(5, 8), vec![5]);
+        assert_eq!(plan_micro_batches(8, 8), vec![8]);
+        assert_eq!(plan_micro_batches(21, 8), vec![8, 8, 5]);
+        assert_eq!(plan_micro_batches(21, 8).iter().sum::<usize>(), 21);
+    }
+
+    #[test]
+    fn flush_policy() {
+        let ms = Duration::from_millis;
+        // Full batch flushes regardless of age.
+        assert!(flush_due(8, ms(0), 8, ms(5), false));
+        // Partial batch waits until the delay bound…
+        assert!(!flush_due(3, ms(1), 8, ms(5), false));
+        assert!(flush_due(3, ms(5), 8, ms(5), false));
+        // …or the queue is closing.
+        assert!(flush_due(1, ms(0), 8, ms(5), true));
+        // Nothing waiting → nothing to flush.
+        assert!(!flush_due(0, ms(9), 8, ms(5), false));
+    }
+
+    #[test]
+    fn percentiles_on_small_samples() {
+        assert_eq!(percentile(&[], 99.0), 0.0);
+        let one = [7.0];
+        assert_eq!(percentile(&one, 50.0), 7.0);
+        assert_eq!(percentile(&one, 99.0), 7.0);
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 99.0), 99.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+    }
+
+    #[test]
+    fn closed_loop_smoke_is_bit_identical() {
+        let mut rng = Rng::new(3);
+        let (m, d) = (40, 5);
+        let model = TrainedModel {
+            basis: Mat::from_fn(m, d, |_, _| rng.normal_f32()),
+            beta: (0..m).map(|_| 0.05 * rng.normal_f32()).collect(),
+            gamma: 0.25,
+            loss: Loss::SqHinge,
+        };
+        let backend = Arc::new(NativeCompute::new());
+        let pool = Mat::from_fn(16, d, |_, _| rng.normal_f32());
+        let expected = model.predict(backend.as_ref(), &pool).unwrap();
+        let session =
+            ServingSession::load(&model, backend, 2, Executor::serial(), CostModel::free())
+                .unwrap();
+        let cfg = ServeConfig {
+            clients: 3,
+            requests_per_client: 5,
+            mean_think_ms: 0.0,
+            max_batch: 4,
+            max_delay_ms: 1.0,
+            slots: 2,
+            queue_cap: 8,
+            seed: 9,
+        };
+        let report = run(&session, &pool, Some(&expected), &cfg).unwrap();
+        assert_eq!(report.requests, 15);
+        assert_eq!(report.mismatches, 0);
+        assert!(report.batches >= 1);
+        // One barrier per dispatch, never more than one per micro-batch.
+        assert!(report.barriers <= report.batches);
+        assert!(report.barriers_per_batch <= 1.0 + 1e-12);
+        assert!(report.qps > 0.0);
+        assert!(report.p99_ms >= report.p50_ms);
+        // Render + JSON shapes hold together.
+        assert!(report.render().contains("qps"));
+        let json = format!("{}", report.to_json());
+        assert!(json.contains("\"p99_ms\""), "{json}");
+    }
+}

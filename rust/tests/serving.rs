@@ -1,0 +1,327 @@
+//! Serving-pipeline contract: a prediction-only [`ServingSession`] and the
+//! multi-slot concurrent dispatch must be BIT-IDENTICAL to the serial
+//! scoring loop (`predict.rs::predict`) and to the training session's
+//! one-phase-per-batch `Session::predict`, per batch, across storage ×
+//! executor — concurrency may reorder work between batches but never the
+//! accumulation inside one. Edge shapes (empty batch, single row, fewer
+//! rows than nodes) go through every path; a β hot-swap tracks a
+//! re-trained model bit-for-bit; the serving ledger pays ONE barrier per
+//! dispatch (however many batches it carries) and never an AllReduce
+//! round-trip; and the closed-loop `dkm serve` queue answers every
+//! request with the serial score.
+//!
+//! Test names end in `serial_exec` / `threads_exec` / `pool_exec`; CI runs
+//! each group explicitly next to the c_storage / fused_eval / session
+//! matrices.
+
+use std::sync::Arc;
+
+use dkm::cluster::{CostModel, Executor};
+use dkm::config::settings::{
+    Backend, BasisSelection, CStorage, EvalPipeline, ExecutorChoice, Loss, Settings,
+};
+use dkm::coordinator::{Session, ServingSession};
+use dkm::data::{synth, Dataset};
+use dkm::linalg::Mat;
+use dkm::metrics::Step;
+use dkm::runtime::make_backend;
+use dkm::runtime::Compute;
+use dkm::serve::{run as serve_run, ServeConfig};
+
+fn settings(
+    m: usize,
+    nodes: usize,
+    storage: CStorage,
+    executor: ExecutorChoice,
+) -> Settings {
+    Settings {
+        dataset: "covtype_like".into(),
+        m,
+        nodes,
+        lambda: 0.01,
+        sigma: 2.0,
+        loss: Loss::SqHinge,
+        basis: BasisSelection::Random,
+        backend: Backend::Native,
+        executor,
+        c_storage: storage,
+        eval_pipeline: EvalPipeline::Fused,
+        c_memory_budget: 256 << 20,
+        max_iters: 40,
+        tol: 1e-3,
+        seed: 42,
+        kmeans_iters: 2,
+        kmeans_max_m: 512,
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+fn data(n: usize, ntest: usize, seed: u64) -> (Dataset, Dataset) {
+    let mut spec = synth::spec("covtype_like");
+    spec.n_train = n;
+    spec.n_test = ntest;
+    synth::generate(&spec, seed)
+}
+
+fn backend() -> Arc<dyn Compute> {
+    make_backend(Backend::Native, "artifacts").unwrap()
+}
+
+/// Copy rows `[r0, r1)` of `x` into a standalone batch.
+fn slice_rows(x: &Mat, r0: usize, r1: usize) -> Mat {
+    Mat::from_vec(r1 - r0, x.cols(), x.row_panel(r0, r1).to_vec())
+}
+
+fn assert_bits(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (a, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(a.to_bits(), w.to_bits(), "{what}: score[{i}] {a} vs {w}");
+    }
+}
+
+/// The core parity matrix: for each storage mode, train once, then score
+/// batches of edge-case sizes (1 row, fewer rows than p, a mid-size
+/// batch, the ragged rest) through FOUR paths — serial `predict.rs` loop,
+/// `Session::predict` (one phase per batch), `ServingSession::
+/// predict_batch` (one slot), and `ServingSession::predict_many` (every
+/// batch one slot of a single concurrent dispatch) — and require the same
+/// bits from all of them.
+fn serving_bit_identical(executor: ExecutorChoice) {
+    let (train_ds, test_ds) = data(1000, 257, 7);
+    let be = backend();
+    let p = 4usize;
+    for storage in [CStorage::Materialized, CStorage::Streaming] {
+        // m = 300 spans a TM tile boundary.
+        let s = settings(300, p, storage, executor);
+        let what = format!("{} exec={}", storage.name(), executor.name());
+        let mut sess = Session::build(&s, &train_ds, Arc::clone(&be), CostModel::free()).unwrap();
+        sess.solve().unwrap();
+        let model = sess.model();
+        let serial = model.predict(be.as_ref(), &test_ds.x).unwrap();
+
+        let serving = ServingSession::load(
+            &model,
+            Arc::clone(&be),
+            p,
+            executor.to_executor(),
+            CostModel::free(),
+        )
+        .unwrap();
+        assert_eq!(serving.p(), p);
+        assert_eq!(serving.m(), 300);
+
+        // 1 row | 3 rows (< p) | 64 | the ragged rest (189, not ÷ p).
+        let mut batches = Vec::new();
+        let mut at = 0usize;
+        for sz in [1usize, 3, 64] {
+            batches.push(slice_rows(&test_ds.x, at, at + sz));
+            at += sz;
+        }
+        batches.push(slice_rows(&test_ds.x, at, test_ds.n()));
+        let refs: Vec<&Mat> = batches.iter().collect();
+
+        let grouped = serving.predict_many(&refs).unwrap();
+        assert_eq!(grouped.len(), refs.len(), "{what}");
+        let mut at = 0usize;
+        for (b, x) in refs.iter().enumerate() {
+            let want = &serial[at..at + x.rows()];
+            at += x.rows();
+            let via_session = sess.predict(x).unwrap();
+            let via_slot = serving.predict_batch(x).unwrap();
+            assert_bits(&via_session, want, &format!("{what} batch {b} Session::predict"));
+            assert_bits(&via_slot, want, &format!("{what} batch {b} predict_batch"));
+            assert_bits(&grouped[b], want, &format!("{what} batch {b} predict_many"));
+        }
+        assert_eq!(at, test_ds.n(), "{what}: batches cover the test set");
+        assert_eq!(serving.rows_served() as usize, 2 * test_ds.n(), "{what}");
+    }
+}
+
+#[test]
+fn serving_bit_identical_serial_exec() {
+    serving_bit_identical(ExecutorChoice::Serial);
+}
+
+#[test]
+fn serving_bit_identical_threads_exec() {
+    serving_bit_identical(ExecutorChoice::Threads { cap: 4 });
+}
+
+#[test]
+fn serving_bit_identical_pool_exec() {
+    serving_bit_identical(ExecutorChoice::Pool { cap: 4 });
+}
+
+/// Degenerate batch shapes through every entry point: an empty dispatch,
+/// an empty batch (0 rows is a valid request), and single-row requests —
+/// all on p = 4 so every shard is ragged or empty.
+fn predict_edge_cases(executor: ExecutorChoice) {
+    let (train_ds, test_ds) = data(900, 64, 5);
+    let be = backend();
+    let s = settings(96, 4, CStorage::Materialized, executor);
+    let mut sess = Session::build(&s, &train_ds, Arc::clone(&be), CostModel::free()).unwrap();
+    sess.solve().unwrap();
+    let model = sess.model();
+    let serial = model.predict(be.as_ref(), &test_ds.x).unwrap();
+    let serving = ServingSession::load(
+        &model,
+        Arc::clone(&be),
+        4,
+        executor.to_executor(),
+        CostModel::free(),
+    )
+    .unwrap();
+    let what = format!("exec={}", executor.name());
+
+    // Empty dispatch and empty batch.
+    assert!(serving.predict_many(&[]).unwrap().is_empty(), "{what}");
+    let empty = Mat::from_vec(0, test_ds.x.cols(), Vec::new());
+    assert!(sess.predict(&empty).unwrap().is_empty(), "{what}");
+    assert!(serving.predict_batch(&empty).unwrap().is_empty(), "{what}");
+
+    // Single-row requests, one per path, plus a 3-row batch (< p) mixed
+    // into one concurrent dispatch with them.
+    let one_a = slice_rows(&test_ds.x, 10, 11);
+    let one_b = slice_rows(&test_ds.x, 63, 64);
+    let under_p = slice_rows(&test_ds.x, 20, 23);
+    assert_bits(&sess.predict(&one_a).unwrap(), &serial[10..11], &format!("{what} 1-row session"));
+    assert_bits(&serving.predict_batch(&one_a).unwrap(), &serial[10..11], &format!("{what} 1-row slot"));
+    assert_bits(&sess.predict(&under_p).unwrap(), &serial[20..23], &format!("{what} 3<p session"));
+    let grouped = serving.predict_many(&[&one_a, &under_p, &one_b]).unwrap();
+    assert_bits(&grouped[0], &serial[10..11], &format!("{what} mixed[0]"));
+    assert_bits(&grouped[1], &serial[20..23], &format!("{what} mixed[1]"));
+    assert_bits(&grouped[2], &serial[63..64], &format!("{what} mixed[2]"));
+}
+
+#[test]
+fn predict_edge_cases_serial_exec() {
+    predict_edge_cases(ExecutorChoice::Serial);
+}
+
+#[test]
+fn predict_edge_cases_pool_exec() {
+    predict_edge_cases(ExecutorChoice::Pool { cap: 4 });
+}
+
+/// β hot-swap: `set_beta` with a re-trained session's coefficients makes
+/// the serving scores bit-identical to the NEW model's serial loop — the
+/// basis stays resident, only β ships.
+#[test]
+fn set_beta_tracks_retrained_model_threads_exec() {
+    let (train_ds, test_ds) = data(900, 100, 3);
+    let be = backend();
+    let s = settings(96, 3, CStorage::Materialized, ExecutorChoice::Threads { cap: 4 });
+    let mut sess = Session::build(&s, &train_ds, Arc::clone(&be), CostModel::free()).unwrap();
+    sess.solve().unwrap();
+    let serving = ServingSession::load(
+        &sess.model(),
+        Arc::clone(&be),
+        3,
+        Executor::threaded(4),
+        CostModel::free(),
+    )
+    .unwrap();
+    let before = sess.model().predict(be.as_ref(), &test_ds.x).unwrap();
+    assert_bits(&serving.predict_batch(&test_ds.x).unwrap(), &before, "before swap");
+
+    // Re-train at a different λ and ship only β.
+    sess.set_lambda(0.002).unwrap();
+    sess.reset_beta();
+    sess.solve().unwrap();
+    serving.set_beta(sess.beta()).unwrap();
+    let after = sess.model().predict(be.as_ref(), &test_ds.x).unwrap();
+    assert_bits(&serving.predict_batch(&test_ds.x).unwrap(), &after, "after swap");
+    // The swap really changed something (different λ ⇒ different β).
+    assert!(
+        before.iter().zip(&after).any(|(a, b)| a.to_bits() != b.to_bits()),
+        "re-solve at a different λ should move the scores"
+    );
+}
+
+/// The serving ledger's shape: one barrier per DISPATCH (however many
+/// batches it carries), scatter/compute/gather priced under
+/// `Step::Predict`, the model broadcast under `Step::BasisBcast`, and —
+/// unlike training — never an AllReduce round-trip. The wall-side barrier
+/// counter mirrors the sim ledger.
+#[test]
+fn serving_meters_one_barrier_per_dispatch_pool_exec() {
+    let (train_ds, test_ds) = data(900, 96, 9);
+    let be = backend();
+    let s = settings(96, 4, CStorage::Materialized, ExecutorChoice::Pool { cap: 4 });
+    let mut sess = Session::build(&s, &train_ds, Arc::clone(&be), CostModel::free()).unwrap();
+    sess.solve().unwrap();
+    let serving = ServingSession::load(
+        &sess.model(),
+        Arc::clone(&be),
+        4,
+        Executor::pooled(4),
+        CostModel::hadoop_crude(),
+    )
+    .unwrap();
+    // Model shipping was priced as a tree broadcast at load.
+    assert!(serving.sim().comm_secs(Step::BasisBcast) > 0.0);
+    assert_eq!(serving.sim().barriers(), 0);
+
+    let batches: Vec<Mat> = (0..3).map(|b| slice_rows(&test_ds.x, b * 32, (b + 1) * 32)).collect();
+    let refs: Vec<&Mat> = batches.iter().collect();
+    serving.predict_many(&refs).unwrap();
+    // ONE barrier for the 3-batch dispatch…
+    assert_eq!(serving.sim().barriers(), 1);
+    assert_eq!(serving.batches_served(), 3);
+    for x in &refs {
+        serving.predict_batch(x).unwrap();
+    }
+    // …and one each on the lockstep path.
+    assert_eq!(serving.sim().barriers(), 4);
+    assert_eq!(serving.wall().barriers(), serving.sim().barriers());
+    // Per-batch comm (row scatter + score gather) was priced on p > 1…
+    assert!(serving.sim().comm_secs(Step::Predict) > 0.0);
+    // …but serving never pays an AllReduce round-trip — prediction is
+    // scatter/gather only.
+    assert_eq!(serving.sim().comm_rounds(), 0);
+    // β swap is priced as a broadcast, not a barrier.
+    let bcast = serving.sim().comm_secs(Step::BasisBcast);
+    serving.set_beta(&vec![0.0; serving.m()]).unwrap();
+    assert!(serving.sim().comm_secs(Step::BasisBcast) > bcast);
+    assert_eq!(serving.sim().barriers(), 4);
+}
+
+/// The whole `dkm serve` loop, in-process: closed-loop clients through
+/// the bounded micro-batching queue on the pool executor — every reply
+/// bit-identical to the serial reference, never more than one barrier per
+/// micro-batch.
+#[test]
+fn serve_closed_loop_bit_identical_pool_exec() {
+    let (train_ds, test_ds) = data(900, 128, 11);
+    let be = backend();
+    let s = settings(96, 4, CStorage::Materialized, ExecutorChoice::Pool { cap: 4 });
+    let mut sess = Session::build(&s, &train_ds, Arc::clone(&be), CostModel::free()).unwrap();
+    sess.solve().unwrap();
+    let model = sess.model();
+    let expected = model.predict(be.as_ref(), &test_ds.x).unwrap();
+    let serving = ServingSession::load(
+        &model,
+        Arc::clone(&be),
+        4,
+        Executor::pooled(4),
+        CostModel::free(),
+    )
+    .unwrap();
+    let cfg = ServeConfig {
+        clients: 4,
+        requests_per_client: 8,
+        mean_think_ms: 0.0,
+        max_batch: 8,
+        max_delay_ms: 0.5,
+        slots: 3,
+        queue_cap: 64,
+        seed: 5,
+    };
+    let report = serve_run(&serving, &test_ds.x, Some(&expected), &cfg).unwrap();
+    assert_eq!(report.requests, 32);
+    assert_eq!(report.mismatches, 0, "served replies diverged from serial");
+    assert!(report.batches >= 1);
+    assert!(report.barriers <= report.batches);
+    assert!(report.barriers_per_batch <= 1.0 + 1e-12);
+    assert!(report.p99_ms >= report.p50_ms);
+}
