@@ -60,13 +60,14 @@ fn main() -> dkm::Result<()> {
     let solve = session.solve()?;
     let train_secs = t0.elapsed().as_secs_f64();
 
-    // Loss curve (every TRON iteration's objective).
+    // Loss curve (every TRON iteration's objective, stamped with the
+    // communication the solve had spent by then).
     println!("\n== loss curve (TRON objective per accepted iteration) ==");
-    for (i, f) in solve.stats.f_history.iter().enumerate() {
-        if i % 10 == 0 || i + 1 == solve.stats.f_history.len() {
+    for (i, pt) in solve.stats.curve.iter().enumerate() {
+        if i % 10 == 0 || i + 1 == solve.stats.curve.len() {
             println!(
-                "iter {i:4}  f = {f:.4e}  |g| = {:.3e}",
-                solve.stats.gnorm_history[i]
+                "iter {i:4}  f = {:.4e}  |g| = {:.3e}  ({} comm rounds in)",
+                pt.f, pt.gnorm, pt.comm_rounds
             );
         }
     }
@@ -107,7 +108,7 @@ fn main() -> dkm::Result<()> {
     println!("TEST ACCURACY: {acc:.4}");
     println!(
         "(objective {:.1} -> {:.1}, converged={})",
-        solve.stats.f_history.first().unwrap(),
+        solve.stats.f0(),
         solve.stats.final_f,
         solve.stats.converged
     );

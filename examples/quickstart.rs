@@ -68,7 +68,7 @@ fn main() -> dkm::Result<()> {
     );
     println!(
         "objective: {:.2} -> {:.2}",
-        solve.stats.f_history.first().unwrap(),
+        solve.stats.f0(),
         solve.stats.final_f
     );
     println!("test accuracy: {acc:.4}");

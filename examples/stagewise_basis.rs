@@ -58,7 +58,7 @@ fn main() -> dkm::Result<()> {
         scoring_secs += t_score.elapsed().as_secs_f64();
         table.row(&[
             m.to_string(),
-            format!("{:.1}", solve.stats.f_history.first().unwrap()),
+            format!("{:.1}", solve.stats.f0()),
             format!("{:.1}", solve.stats.final_f),
             solve.stats.iterations.to_string(),
             format!("{acc:.4}"),

@@ -1,0 +1,127 @@
+//! Solver head-to-head: TRON (one global Newton step per round, m-vector
+//! AllReduce + full-β broadcast per evaluation) versus distributed block
+//! coordinate descent (one β column block per round, O(block) bytes) on
+//! the SAME cluster substrate and the same scaled-Hadoop cost model the
+//! Fig-2 sweep uses.
+//!
+//! The observable is round economics: AllReduce round-trips, barriers and
+//! bytes against objective decrease per simulated second. In the
+//! latency-collapse regime (small local compute, fixed per-round latency)
+//! BCD's cheap rounds buy more objective decrease per round-trip early;
+//! TRON's second-order steps win once near the optimum — the tradeoff
+//! Hsieh et al. (arXiv:1608.02010) build on.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use dkm::cluster::CostModel;
+use dkm::config::settings::SolverChoice;
+use dkm::config::Json;
+use dkm::coordinator::{train, TrainOutput};
+use dkm::metrics::Table;
+
+/// Same scaled crude-Hadoop AllReduce as the Fig-2 bench (DESIGN.md §2).
+fn scaled_hadoop() -> CostModel {
+    CostModel {
+        latency_s: 3e-3,
+        per_byte_s: 1.0 / 100e6,
+    }
+}
+
+struct Row {
+    solver: &'static str,
+    p: usize,
+    out: TrainOutput,
+}
+
+impl Row {
+    /// Simulated seconds the solve itself spent (curve stamps are deltas
+    /// from solve start, so the kernel/basis build is excluded).
+    fn solve_secs(&self) -> f64 {
+        self.out.stats.curve.last().map(|c| c.cum_secs).unwrap_or(0.0)
+    }
+
+    fn decrease_per_sec(&self) -> f64 {
+        (self.out.stats.f0() - self.out.stats.final_f) / self.solve_secs().max(1e-9)
+    }
+}
+
+fn main() {
+    common::header(
+        "SOLVERS — TRON vs distributed block coordinate descent",
+        "round economics on the shared substrate (Hsieh et al. 1608.02010 style BCD)",
+    );
+    let name = "covtype_like";
+    let (train_ds, _) = common::dataset(name, 6_000, 800, 42);
+    let m = common::clamp_m(256, train_ds.n());
+    let backend = common::backend();
+
+    let ps = [4usize, 16];
+    let mut rows = Vec::new();
+    for &p in &ps {
+        let mut st = common::settings(name, m, p);
+        st.tol = 1e-3;
+        let tron = train(&st, &train_ds, Arc::clone(&backend), scaled_hadoop()).unwrap();
+        rows.push(Row { solver: "tron", p, out: tron });
+        println!("  done tron p={p}");
+
+        let mut sb = common::settings(name, m, p);
+        sb.solver = SolverChoice::Bcd { block: 64 };
+        sb.tol = 1e-3;
+        // BCD rounds are much cheaper than TRON iterations; give it a
+        // proportionally larger round budget for a comparable f.
+        sb.max_iters = 600;
+        let bcd = train(&sb, &train_ds, Arc::clone(&backend), scaled_hadoop()).unwrap();
+        rows.push(Row { solver: "bcd", p, out: bcd });
+        println!("  done bcd  p={p}");
+    }
+
+    println!("\n--- {name} (n={}, m={m}, λ/σ per dataset defaults) ---", train_ds.n());
+    let mut table = Table::new(&[
+        "solver",
+        "nodes",
+        "rounds",
+        "reduce_rts",
+        "barriers",
+        "comm_MB",
+        "final_f",
+        "solve_sim_s",
+        "decrease/s",
+    ]);
+    for r in &rows {
+        table.row(&[
+            r.solver.to_string(),
+            r.p.to_string(),
+            r.out.stats.iterations.to_string(),
+            r.out.sim.comm_rounds().to_string(),
+            r.out.sim.barriers().to_string(),
+            format!("{:.2}", r.out.sim.comm_bytes() as f64 / 1e6),
+            format!("{:.2}", r.out.stats.final_f),
+            format!("{:.2}", r.solve_secs()),
+            format!("{:.1}", r.decrease_per_sec()),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "\nreading the table: BCD pays ONE barrier + ONE AllReduce of \
+         block+2 floats per round (the solver suite pins this), TRON one \
+         full-β round-trip per f/g and Hd evaluation — compare decrease/s \
+         at each p to see which round economics win where."
+    );
+
+    let mut o = BTreeMap::new();
+    for r in &rows {
+        let k = |field: &str| format!("{}_p{}_{}", r.solver, r.p, field);
+        o.insert(k("rounds"), Json::Num(r.out.stats.iterations as f64));
+        o.insert(k("reduce_rts"), Json::Num(r.out.sim.comm_rounds() as f64));
+        o.insert(k("barriers"), Json::Num(r.out.sim.barriers() as f64));
+        o.insert(k("comm_bytes"), Json::Num(r.out.sim.comm_bytes() as f64));
+        o.insert(k("final_f"), Json::Num(r.out.stats.final_f));
+        o.insert(k("solve_sim_s"), Json::Num(r.solve_secs()));
+        o.insert(k("decrease_per_s"), Json::Num(r.decrease_per_sec()));
+    }
+    common::write_json("solvers", &Json::Obj(o));
+}

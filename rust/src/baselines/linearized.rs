@@ -24,7 +24,7 @@ use crate::rng::Rng;
 use crate::runtime::native;
 use crate::Result;
 
-use crate::coordinator::tron::{self, Objective, TronOptions, TronStats};
+use crate::coordinator::solver::{tron, Objective, SolveStats, TronOptions};
 
 const EIG_FLOOR: f64 = 1e-10;
 
@@ -38,7 +38,7 @@ pub struct LinearizedOutput {
     pub proj: Mat,
     pub gamma: f32,
     pub loss: Loss,
-    pub stats: TronStats,
+    pub stats: SolveStats,
     /// Kernel (C and W) computation seconds.
     pub kernel_secs: f64,
     /// Eigen-decomposition seconds (the O(m³) part).

@@ -168,6 +168,56 @@ impl EvalPipeline {
     }
 }
 
+/// Default BCD block size when `--solver bcd` is given without `:N`.
+pub const BCD_DEFAULT_BLOCK: usize = 64;
+
+/// Which master-side solver minimizes formulation (4) (the
+/// [`crate::coordinator::solver`] layer). Both run on the same cluster
+/// substrate and sim ledger; they trade communication rounds against
+/// per-round progress differently.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverChoice {
+    /// Trust-region Newton on the master (the paper's Algorithm 1): one
+    /// global step per round, full-β broadcast + m-vector AllReduce per
+    /// evaluation.
+    Tron,
+    /// Distributed parallel block minimization (Hsieh et al.
+    /// arXiv:1608.02010): one β column block of `block` coordinates per
+    /// round, O(block)-float broadcast + AllReduce per round.
+    Bcd { block: usize },
+}
+
+impl SolverChoice {
+    pub fn parse(s: &str) -> Result<SolverChoice> {
+        match s {
+            "tron" => Ok(SolverChoice::Tron),
+            "bcd" => Ok(SolverChoice::Bcd {
+                block: BCD_DEFAULT_BLOCK,
+            }),
+            other => {
+                if let Some(n) = other.strip_prefix("bcd:") {
+                    let block: usize = n
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("bcd block size {n:?}: {e}"))?;
+                    if block == 0 {
+                        anyhow::bail!("bcd block size must be > 0");
+                    }
+                    Ok(SolverChoice::Bcd { block })
+                } else {
+                    anyhow::bail!("unknown solver {other:?} (tron|bcd[:block])")
+                }
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            SolverChoice::Tron => "tron".to_string(),
+            SolverChoice::Bcd { block } => format!("bcd:{block}"),
+        }
+    }
+}
+
 /// How each node stores its kernel row block C_j (the
 /// [`crate::coordinator::cstore`] layer).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -276,9 +326,13 @@ pub struct Settings {
     /// Per-node byte budget for `CStorage::Auto` (materialize C row tiles
     /// while they fit, stream the rest).
     pub c_memory_budget: usize,
-    /// TRON iteration cap (paper: "typically around 300").
+    /// Which master-side solver minimizes formulation (4).
+    pub solver: SolverChoice,
+    /// Solver-scoped outer-round cap: TRON iterations (paper: "typically
+    /// around 300") or BCD block rounds.
     pub max_iters: usize,
-    /// Relative gradient-norm stopping tolerance.
+    /// Solver-scoped relative stopping tolerance on the monitored gradient
+    /// norm (TRON: ‖∇f‖; BCD: the sweep-aggregated block-gradient norm).
     pub tol: f32,
     pub seed: u64,
     /// K-means iterations for basis selection (paper Table 2 used 3).
@@ -309,6 +363,7 @@ impl Default for Settings {
             c_storage: CStorage::Materialized,
             eval_pipeline: EvalPipeline::Fused,
             c_memory_budget: 256 << 20,
+            solver: SolverChoice::Tron,
             max_iters: 300,
             tol: 1e-3,
             seed: 42,
@@ -360,10 +415,15 @@ impl Settings {
                 "c_storage" => self.c_storage = CStorage::parse(v)?,
                 "eval_pipeline" => self.eval_pipeline = EvalPipeline::parse(v)?,
                 "c_memory_budget" => self.c_memory_budget = parse_bytes(v)?,
-                "max_iters" => {
-                    self.max_iters = v.parse().map_err(|e| anyhow::anyhow!("max_iters: {e}"))?
+                "solver" => self.solver = SolverChoice::parse(v)?,
+                // "max_iters"/"tol" are the historical TRON-era spellings,
+                // kept as aliases of the solver-scoped keys.
+                "max_iters" | "solver_max_iters" => {
+                    self.max_iters = v.parse().map_err(|e| anyhow::anyhow!("{k}: {e}"))?
                 }
-                "tol" => self.tol = v.parse().map_err(|e| anyhow::anyhow!("tol: {e}"))?,
+                "tol" | "solver_tol" => {
+                    self.tol = v.parse().map_err(|e| anyhow::anyhow!("{k}: {e}"))?
+                }
                 "seed" => self.seed = v.parse().map_err(|e| anyhow::anyhow!("seed: {e}"))?,
                 "kmeans_iters" => {
                     self.kmeans_iters =
@@ -534,6 +594,50 @@ mod tests {
         kv.insert("eval_pipeline".to_string(), "split".to_string());
         s.apply(&kv).unwrap();
         assert_eq!(s.eval_pipeline, EvalPipeline::Split);
+    }
+
+    #[test]
+    fn solver_parse_and_apply() {
+        assert_eq!(SolverChoice::parse("tron").unwrap(), SolverChoice::Tron);
+        assert_eq!(
+            SolverChoice::parse("bcd").unwrap(),
+            SolverChoice::Bcd {
+                block: BCD_DEFAULT_BLOCK
+            }
+        );
+        assert_eq!(
+            SolverChoice::parse("bcd:32").unwrap(),
+            SolverChoice::Bcd { block: 32 }
+        );
+        assert!(SolverChoice::parse("bcd:0").is_err());
+        assert!(SolverChoice::parse("bcd:x").is_err());
+        assert!(SolverChoice::parse("lbfgs").is_err());
+        assert_eq!(SolverChoice::Tron.name(), "tron");
+        assert_eq!(SolverChoice::Bcd { block: 32 }.name(), "bcd:32");
+        assert_eq!(Settings::default().solver, SolverChoice::Tron);
+        let mut s = Settings::default();
+        let mut kv = BTreeMap::new();
+        kv.insert("solver".to_string(), "bcd:16".to_string());
+        s.apply(&kv).unwrap();
+        assert_eq!(s.solver, SolverChoice::Bcd { block: 16 });
+    }
+
+    #[test]
+    fn solver_scoped_knobs_alias_old_spellings() {
+        let mut s = Settings::default();
+        let mut kv = BTreeMap::new();
+        kv.insert("solver_max_iters".to_string(), "77".to_string());
+        kv.insert("solver_tol".to_string(), "0.05".to_string());
+        s.apply(&kv).unwrap();
+        assert_eq!(s.max_iters, 77);
+        assert_eq!(s.tol, 0.05);
+        // Old spellings still land on the same fields.
+        let mut kv = BTreeMap::new();
+        kv.insert("max_iters".to_string(), "11".to_string());
+        kv.insert("tol".to_string(), "0.5".to_string());
+        s.apply(&kv).unwrap();
+        assert_eq!(s.max_iters, 11);
+        assert_eq!(s.tol, 0.5);
     }
 
     #[test]

@@ -36,7 +36,7 @@ use crate::Result;
 
 use super::cstore::CBlockStore;
 use super::node::{pad_m_tiles, unpad_m_flat, WorkerNode};
-use super::tron::Objective;
+use super::solver::Objective;
 
 /// Leading scalar slots of the fused f/g reduce buffer: `[loss, reg]`.
 const FG_SCALARS: usize = 2;
@@ -156,8 +156,10 @@ impl<'a> DistProblem<'a> {
         Ok(out)
     }
 
-    /// Assemble f from the reduced `[loss, reg, …]` buffer head.
-    fn assemble_f(&self, loss_sum: f32, reg_sum: f32) -> f64 {
+    /// Assemble f from the reduced `[loss, reg, …]` buffer head. Pub so
+    /// every solver assembles the objective from reduced partials the same
+    /// way (TRON's fused f/g buffer, BCD's per-round block buffer).
+    pub fn assemble_f(&self, loss_sum: f32, reg_sum: f32) -> f64 {
         0.5 * self.lambda as f64 * reg_sum as f64 + loss_sum as f64
     }
 }
@@ -165,6 +167,16 @@ impl<'a> DistProblem<'a> {
 impl Objective for DistProblem<'_> {
     fn dim(&self) -> usize {
         self.m
+    }
+
+    /// Ledger snapshot: simulated seconds and AllReduce round-trips spent
+    /// by this problem's cluster so far (solvers stamp curve points with
+    /// deltas from solve start).
+    fn ledger(&self) -> (f64, u64) {
+        (
+            self.cluster.clock.total_secs(),
+            self.cluster.clock.comm_rounds(),
+        )
     }
 
     /// Steps 4a + 4b: broadcast β; nodes compute flat partials; the fused

@@ -8,8 +8,9 @@
 //!   the [`cstore::CBlockStore`] trait, with bit-identical results.
 //! * [`dist`] — the distributed function / gradient / Hessian-vector
 //!   products (steps 4a–4c): node-local tile ops + AllReduce.
-//! * [`tron`] — the trust-region Newton solver (Lin–Weng–Keerthi) run by
-//!   the master.
+//! * [`solver`] — the master-side solver layer behind the `Solver` trait:
+//!   TRON (the paper's trust-region Newton) and distributed block
+//!   coordinate descent, both priced on the same ledger.
 //! * [`basis`] — basis selection: random (paper's large-m default),
 //!   distributed K-means (small m), and the auto policy of §3.2.
 //! * [`session`] — the stateful `Session` handle: ONE owner of the
@@ -32,12 +33,15 @@ pub mod node;
 pub mod predict;
 pub mod serving;
 pub mod session;
+pub mod solver;
 pub mod trainer;
-pub mod tron;
 
 pub use cstore::{make_store, CBlockStore};
 pub use node::WorkerNode;
 pub use serving::ServingSession;
 pub use session::{growth_settings, Session, Solve};
+pub use solver::{
+    make_solver, BcdOptions, BcdSolver, CurvePoint, Objective, SolveStats, Solver, TronOptions,
+    TronSolver,
+};
 pub use trainer::{train, train_stagewise, StageOutput, TrainOutput, TrainedModel};
-pub use tron::{TronOptions, TronStats};

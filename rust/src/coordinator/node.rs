@@ -64,6 +64,13 @@ pub struct WorkerNode {
     /// Prepared feature row tiles, shared with the store (streaming modes
     /// recompute kernel tiles from these).
     pub x_prep: Arc<Vec<Prepared>>,
+    /// BCD scratch (see [`crate::coordinator::solver::bcd`]): cached
+    /// margins `z = C_j β` per row tile, kept in sync from per-round block
+    /// delta broadcasts. Empty unless a BCD solve is active.
+    pub bcd_margins: Vec<Vec<f32>>,
+    /// BCD scratch: this node's replica of β as padded TM tiles, updated
+    /// from the same block deltas (no full-β broadcast per round).
+    pub bcd_beta_tiles: Vec<Vec<f32>>,
 }
 
 impl WorkerNode {
@@ -89,6 +96,8 @@ impl WorkerNode {
             mask_prep: Vec::new(),
             w_prep: Vec::new(),
             x_prep: Arc::new(Vec::new()),
+            bcd_margins: Vec::new(),
+            bcd_beta_tiles: Vec::new(),
         }
     }
 

@@ -45,8 +45,8 @@ use super::cstore::CBlockStore;
 use super::dist::DistProblem;
 use super::node::{pad_m_tiles, WorkerNode};
 use super::predict::score_rows;
+use super::solver::{self, SolveStats};
 use super::trainer::{build_cluster, TrainOutput, TrainedModel};
-use super::tron::{self, TronOptions, TronStats};
 
 /// FLOPs of one RBF kernel-tile computation at padded width `dpad` (the
 /// 2·TB·TM·D inner-product count the micro bench uses).
@@ -54,11 +54,11 @@ fn kernel_tile_flops(dpad: usize) -> u64 {
     2 * (crate::runtime::tiles::TB * TM * dpad) as u64
 }
 
-/// Report of one [`Session::solve`] call: the TRON statistics of THIS
-/// solve plus a snapshot of the session's cumulative ledgers.
+/// Report of one [`Session::solve`] call: the solver-neutral statistics
+/// of THIS solve plus a snapshot of the session's cumulative ledgers.
 #[derive(Clone)]
 pub struct Solve {
-    pub stats: TronStats,
+    pub stats: SolveStats,
     /// f/g and Hd evaluation counts of this solve (4a/4b/4c calls).
     pub fg_evals: usize,
     pub hd_evals: usize,
@@ -220,9 +220,10 @@ impl Session {
         Ok(())
     }
 
-    /// Step 4: TRON from the CURRENT β (zero after build; the previous
-    /// solution after a solve; zero-extended after growth — the paper's
-    /// warm starts). Returns this solve's [`Solve`] report.
+    /// Step 4: run the CONFIGURED solver (`--solver tron|bcd[:block]`)
+    /// from the CURRENT β (zero after build; the previous solution after a
+    /// solve; zero-extended after growth — the paper's warm starts).
+    /// Returns this solve's [`Solve`] report.
     pub fn solve(&mut self) -> Result<Solve> {
         self.check_healthy()?;
         let t0 = Instant::now();
@@ -230,11 +231,7 @@ impl Session {
         debug_assert_eq!(self.beta.len(), m);
         let lambda = self.settings.lambda;
         let loss = self.settings.loss;
-        let opts = TronOptions {
-            tol: self.settings.tol,
-            max_iters: self.settings.max_iters,
-            ..TronOptions::default()
-        };
+        let mut solver = solver::make_solver(&self.settings);
         let (beta, stats, fg, hd) = {
             let mut problem = DistProblem::new(
                 &mut self.cluster,
@@ -244,7 +241,7 @@ impl Session {
                 loss,
             )
             .with_pipeline(self.settings.eval_pipeline);
-            let (beta, stats) = tron::minimize(&mut problem, &self.beta, &opts)?;
+            let (beta, stats) = solver.solve(&mut problem, &self.beta)?;
             (beta, stats, problem.fg_evals, problem.hd_evals)
         };
         self.beta = beta;
@@ -611,13 +608,10 @@ mod tests {
             executor: ExecutorChoice::Serial,
             c_storage: CStorage::Materialized,
             eval_pipeline: EvalPipeline::Fused,
-            c_memory_budget: 256 << 20,
             max_iters: 40,
-            tol: 1e-3,
-            seed: 42,
             kmeans_iters: 2,
             kmeans_max_m: 512,
-            artifacts_dir: "artifacts".into(),
+            ..Settings::default()
         }
     }
 
@@ -638,7 +632,8 @@ mod tests {
         assert_eq!(sess.m(), 64);
         assert_eq!(sess.beta().len(), 64);
         let solve = sess.solve().unwrap();
-        assert!(solve.stats.final_f < solve.stats.f_history[0]);
+        assert_eq!(solve.stats.solver, "tron");
+        assert!(solve.stats.final_f < solve.stats.f0());
         let barriers_before = sess.sim().barriers();
         let acc = sess.accuracy(&test_ds).unwrap();
         assert!(acc > 0.5, "accuracy {acc}");

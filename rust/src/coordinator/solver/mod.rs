@@ -1,0 +1,168 @@
+//! The solver abstraction: step 4 of Algorithm 1 behind a trait.
+//!
+//! The paper runs one solver — TRON on the master, with f/∇f/H·d farmed
+//! out over the AllReduce tree — but the substrate underneath (cluster
+//! phases, the C-block stores, the sim ledger) is solver-agnostic. This
+//! module makes that explicit:
+//!
+//! * [`Objective`] — what a master-side solver needs from the distributed
+//!   problem: f/g and Hd evaluations plus a ledger snapshot for stamping
+//!   convergence-curve points.
+//! * [`Solver`] — the driver interface [`Session::solve`] dispatches on:
+//!   take the distributed problem and a warm start, return β and a
+//!   solver-neutral [`SolveStats`].
+//! * [`tron`] — trust-region Newton (the paper's Algorithm 1): one global
+//!   Newton-ish step per round, every evaluation a full β broadcast and an
+//!   m-vector AllReduce.
+//! * [`bcd`] — distributed parallel block minimization (Hsieh et al.
+//!   arXiv:1608.02010, Tu et al. arXiv:1602.05310): one β column block
+//!   per round, O(block) bytes broadcast per round and one AllReduce of
+//!   `block + 2` floats — the opposite comm/compute tradeoff.
+//!
+//! Both solvers run on the SAME cluster primitives and are priced on the
+//! same ledger, so `benches/solvers.rs` can compare their round economics
+//! (comm_rounds and barriers vs objective decrease per simulated second)
+//! like for like.
+//!
+//! [`Session::solve`]: super::session::Session::solve
+
+pub mod bcd;
+pub mod tron;
+
+use crate::config::settings::{Settings, SolverChoice};
+use crate::Result;
+
+use super::dist::DistProblem;
+
+pub use bcd::{BcdOptions, BcdSolver};
+pub use tron::{minimize, TronOptions, TronSolver};
+
+/// Anything a master-side solver can minimize. Gradients are f32 vectors
+/// (they travel over the AllReduce tree); f accumulates in f64 on the
+/// master.
+pub trait Objective {
+    fn dim(&self) -> usize;
+    fn eval_fg(&mut self, x: &[f32]) -> Result<(f64, Vec<f32>)>;
+    fn eval_hd(&mut self, d: &[f32]) -> Result<Vec<f32>>;
+
+    /// Snapshot of (simulated seconds, AllReduce round-trips) accumulated
+    /// so far by whatever substrate evaluates this objective. Solvers
+    /// stamp [`CurvePoint`]s with deltas from solve start, so the curve is
+    /// comparable across solvers with different per-round comm costs.
+    /// Purely local objectives keep the default zeros — their curves then
+    /// carry only f and ‖g‖.
+    fn ledger(&self) -> (f64, u64) {
+        (0.0, 0)
+    }
+}
+
+/// One point of the solver-neutral convergence curve: where the objective
+/// stood after each accepted round, stamped with the simulated time and
+/// communication the solve had spent by then.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CurvePoint {
+    /// Simulated seconds since solve start (0.0 for local objectives).
+    pub cum_secs: f64,
+    /// AllReduce round-trips since solve start.
+    pub comm_rounds: u64,
+    /// Objective value.
+    pub f: f64,
+    /// Gradient norm: the full ‖∇f‖ for TRON, the current block-gradient
+    /// norm for BCD (the quantity each solver actually monitors).
+    pub gnorm: f64,
+}
+
+/// Solver-neutral statistics of one solve. `curve[0]` is always the
+/// objective at the warm start; one more point per accepted round.
+#[derive(Clone, Debug, Default)]
+pub struct SolveStats {
+    /// Which solver produced this (`"tron"` / `"bcd"`).
+    pub solver: &'static str,
+    /// Accepted outer rounds (TRON: accepted trust-region steps; BCD:
+    /// completed block rounds).
+    pub iterations: usize,
+    /// f/g evaluations (TRON: 4a/4b calls; BCD: one per round + final).
+    pub fg_evals: usize,
+    /// Hd evaluations (BCD never evaluates Hd: 0).
+    pub hd_evals: usize,
+    pub final_f: f64,
+    /// Final monitored gradient norm (see [`CurvePoint::gnorm`]).
+    pub final_gnorm: f64,
+    /// The convergence curve (initial point + one per accepted round).
+    pub curve: Vec<CurvePoint>,
+    pub converged: bool,
+}
+
+impl SolveStats {
+    /// Objective at the warm start (first curve point).
+    pub fn f0(&self) -> f64 {
+        self.curve.first().map(|c| c.f).unwrap_or(self.final_f)
+    }
+
+    /// The f values of the curve (the loss-curve shape callers plot).
+    pub fn f_curve(&self) -> Vec<f64> {
+        self.curve.iter().map(|c| c.f).collect()
+    }
+}
+
+/// A master-side solver over the distributed formulation-(4) objective.
+/// Implementations drive the cluster only through [`DistProblem`] — its
+/// `Objective` evaluations and (for block solvers) its cluster handle —
+/// so every solver is priced on the same ledger.
+pub trait Solver {
+    fn name(&self) -> &'static str;
+
+    /// Minimize from the warm start `x0`. Returns (β*, stats).
+    fn solve(
+        &mut self,
+        problem: &mut DistProblem<'_>,
+        x0: &[f32],
+    ) -> Result<(Vec<f32>, SolveStats)>;
+}
+
+/// Resolve the configured solver: `--solver tron` (default) or
+/// `--solver bcd[:block]`, with the solver-scoped `--tol` / `--max-iters`
+/// knobs applied to whichever is selected.
+pub fn make_solver(settings: &Settings) -> Box<dyn Solver> {
+    match settings.solver {
+        SolverChoice::Tron => Box::new(TronSolver::new(TronOptions {
+            tol: settings.tol,
+            max_iters: settings.max_iters,
+            ..TronOptions::default()
+        })),
+        SolverChoice::Bcd { block } => Box::new(BcdSolver::new(BcdOptions {
+            block,
+            tol: settings.tol,
+            max_rounds: settings.max_iters,
+            verbose: false,
+        })),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn make_solver_respects_choice_and_knobs() {
+        let mut s = Settings::default();
+        assert_eq!(make_solver(&s).name(), "tron");
+        s.solver = SolverChoice::Bcd { block: 32 };
+        assert_eq!(make_solver(&s).name(), "bcd");
+    }
+
+    #[test]
+    fn stats_f0_falls_back_to_final_f() {
+        let mut st = SolveStats {
+            final_f: 7.0,
+            ..SolveStats::default()
+        };
+        assert_eq!(st.f0(), 7.0);
+        st.curve.push(CurvePoint {
+            f: 9.0,
+            ..CurvePoint::default()
+        });
+        assert_eq!(st.f0(), 9.0);
+        assert_eq!(st.f_curve(), vec![9.0]);
+    }
+}

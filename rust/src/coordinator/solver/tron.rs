@@ -10,13 +10,8 @@
 
 use crate::Result;
 
-/// Anything TRON can minimize. Gradients are f32 vectors (they travel over
-/// the AllReduce tree); f accumulates in f64 on the master.
-pub trait Objective {
-    fn dim(&self) -> usize;
-    fn eval_fg(&mut self, x: &[f32]) -> Result<(f64, Vec<f32>)>;
-    fn eval_hd(&mut self, d: &[f32]) -> Result<Vec<f32>>;
-}
+use super::super::dist::DistProblem;
+use super::{CurvePoint, Objective, SolveStats, Solver};
 
 #[derive(Clone, Debug)]
 pub struct TronOptions {
@@ -47,18 +42,32 @@ impl Default for TronOptions {
     }
 }
 
-#[derive(Clone, Debug, Default)]
-pub struct TronStats {
-    /// ACCEPTED outer steps (zero when convergence needed no step).
-    pub iterations: usize,
-    pub fg_evals: usize,
-    pub hd_evals: usize,
-    pub final_f: f64,
-    pub final_gnorm: f64,
-    /// f after each accepted iteration (the loss curve).
-    pub f_history: Vec<f64>,
-    pub gnorm_history: Vec<f64>,
-    pub converged: bool,
+/// TRON behind the [`Solver`] trait: the paper's Algorithm-1 solver as a
+/// peer of [`super::bcd::BcdSolver`]. A thin shell over [`minimize`] — the
+/// numerical path is exactly the standalone function's, so β is
+/// bit-identical to driving `minimize` by hand.
+pub struct TronSolver {
+    pub opts: TronOptions,
+}
+
+impl TronSolver {
+    pub fn new(opts: TronOptions) -> Self {
+        TronSolver { opts }
+    }
+}
+
+impl Solver for TronSolver {
+    fn name(&self) -> &'static str {
+        "tron"
+    }
+
+    fn solve(
+        &mut self,
+        problem: &mut DistProblem<'_>,
+        x0: &[f32],
+    ) -> Result<(Vec<f32>, SolveStats)> {
+        minimize(problem, x0, &self.opts)
+    }
 }
 
 fn dot64(a: &[f32], b: &[f32]) -> f64 {
@@ -69,12 +78,14 @@ fn norm64(a: &[f32]) -> f64 {
     dot64(a, a).sqrt()
 }
 
-/// Minimize `obj` from `x0`. Returns (x*, stats).
+/// Minimize `obj` from `x0`. Returns (x*, stats). Curve points are
+/// stamped from the objective's ledger (deltas from solve start) after
+/// the initial evaluation and each accepted step.
 pub fn minimize(
     obj: &mut dyn Objective,
     x0: &[f32],
     opts: &TronOptions,
-) -> Result<(Vec<f32>, TronStats)> {
+) -> Result<(Vec<f32>, SolveStats)> {
     // Radius update constants (LIBLINEAR).
     const ETA0: f64 = 1e-4;
     const ETA1: f64 = 0.25;
@@ -85,14 +96,25 @@ pub fn minimize(
 
     let n = obj.dim();
     assert_eq!(x0.len(), n);
-    let mut stats = TronStats::default();
+    let (ledger_t0, ledger_r0) = obj.ledger();
+    let mut stats = SolveStats {
+        solver: "tron",
+        ..SolveStats::default()
+    };
+    let stamp = |stats: &mut SolveStats, ledger: (f64, u64), f: f64, gnorm: f64| {
+        stats.curve.push(CurvePoint {
+            cum_secs: ledger.0 - ledger_t0,
+            comm_rounds: ledger.1 - ledger_r0,
+            f,
+            gnorm,
+        });
+    };
     let mut x = x0.to_vec();
     let (mut f, mut g) = obj.eval_fg(&x)?;
     stats.fg_evals += 1;
     let gnorm0 = norm64(&g);
     let mut gnorm = gnorm0;
-    stats.f_history.push(f);
-    stats.gnorm_history.push(gnorm);
+    stamp(&mut stats, obj.ledger(), f, gnorm);
     let mut delta = gnorm;
 
     if gnorm0 == 0.0 {
@@ -101,7 +123,7 @@ pub fn minimize(
         return Ok((x, stats));
     }
 
-    // `accepted` counts successful steps (the f_history curve); `passes`
+    // `accepted` counts successful steps (the convergence curve); `passes`
     // counts EVERY trip through the loop. Bounding passes — not accepts —
     // is what bounds the work: a rejected step still pays a full f/g
     // evaluation, and an objective that rejects forever used to spin here
@@ -159,8 +181,7 @@ pub fn minimize(
             f = f_new;
             g = g_new;
             gnorm = norm64(&g);
-            stats.f_history.push(f);
-            stats.gnorm_history.push(gnorm);
+            stamp(&mut stats, obj.ledger(), f, gnorm);
             accepted += 1;
             if opts.verbose {
                 eprintln!(
@@ -354,12 +375,15 @@ mod tests {
     }
 
     #[test]
-    fn f_history_monotone_nonincreasing() {
+    fn f_curve_monotone_nonincreasing() {
         let mut q = spd_quad(15, 3);
         let (_, stats) = minimize(&mut q, &vec![1.0; 15], &TronOptions::default()).unwrap();
-        for w in stats.f_history.windows(2) {
-            assert!(w[1] <= w[0] + 1e-10, "{:?}", stats.f_history);
+        for w in stats.f_curve().windows(2) {
+            assert!(w[1] <= w[0] + 1e-10, "{:?}", stats.f_curve());
         }
+        // Local objective: the ledger stays at zero, so curve points carry
+        // no simulated time or comm.
+        assert!(stats.curve.iter().all(|c| c.cum_secs == 0.0 && c.comm_rounds == 0));
     }
 
     #[test]
@@ -440,8 +464,9 @@ mod tests {
         let mut q = spd_quad(15, 3);
         let (_, stats) = minimize(&mut q, &vec![1.0; 15], &TronOptions::default()).unwrap();
         assert!(stats.iterations >= 1);
-        assert_eq!(stats.f_history.len(), stats.iterations + 1);
+        assert_eq!(stats.curve.len(), stats.iterations + 1);
         assert!(stats.fg_evals >= stats.iterations + 1);
+        assert_eq!(stats.solver, "tron");
     }
 
     #[test]

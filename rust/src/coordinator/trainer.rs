@@ -20,7 +20,7 @@ use crate::Result;
 
 use super::node::WorkerNode;
 use super::session::{growth_settings, Session};
-use super::tron::TronStats;
+use super::solver::SolveStats;
 
 /// A trained formulation-(4) kernel machine.
 #[derive(Clone)]
@@ -63,7 +63,7 @@ impl TrainedModel {
 /// Everything a training run produces.
 pub struct TrainOutput {
     pub model: TrainedModel,
-    pub stats: TronStats,
+    pub stats: SolveStats,
     /// Wall-clock per Algorithm-1 step (single-core reality).
     pub wall: Metrics,
     /// Simulated p-node ledger (compute max per phase + C + D·B comm).
@@ -117,7 +117,7 @@ pub fn train(
 pub struct StageOutput {
     pub m: usize,
     pub model: TrainedModel,
-    pub stats: TronStats,
+    pub stats: SolveStats,
     pub stage_wall_secs: f64,
     /// Cumulative kernel-tile recomputations across nodes at stage end
     /// (nonzero only for streaming storage).
@@ -189,13 +189,10 @@ mod tests {
             executor: ExecutorChoice::Serial,
             c_storage: CStorage::Materialized,
             eval_pipeline: EvalPipeline::Fused,
-            c_memory_budget: 256 << 20,
             max_iters: 60,
-            tol: 1e-3,
-            seed: 42,
             kmeans_iters: 2,
             kmeans_max_m: 512,
-            artifacts_dir: "artifacts".into(),
+            ..Settings::default()
         }
     }
 
@@ -242,8 +239,8 @@ mod tests {
             CostModel::free(),
         )
         .unwrap();
-        assert!(out.stats.f_history.len() >= 2);
-        assert!(out.stats.final_f < out.stats.f_history[0]);
+        assert!(out.stats.curve.len() >= 2);
+        assert!(out.stats.final_f < out.stats.f0());
         assert!(out.fg_evals >= out.stats.iterations);
         assert!(out.hd_evals >= 1);
         assert!(out.wall.wall_secs(Step::Kernel) > 0.0);

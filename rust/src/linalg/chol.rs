@@ -29,6 +29,14 @@ pub fn cholesky(a: &[f64], n: usize) -> Option<Vec<f64>> {
 pub fn cholesky_solve(a: &[f64], n: usize, b: &[f64]) -> Option<Vec<f64>> {
     assert_eq!(b.len(), n);
     let l = cholesky(a, n)?;
+    Some(cholesky_solve_factored(&l, n, b))
+}
+
+/// Solve A x = b given A's lower Cholesky factor L (from [`cholesky`]) —
+/// factor once, solve many times (the BCD block-step path).
+pub fn cholesky_solve_factored(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    assert_eq!(l.len(), n * n);
+    assert_eq!(b.len(), n);
     // Forward solve L y = b.
     let mut y = vec![0.0f64; n];
     for i in 0..n {
@@ -47,7 +55,7 @@ pub fn cholesky_solve(a: &[f64], n: usize, b: &[f64]) -> Option<Vec<f64>> {
         }
         x[i] = s / l[i * n + i];
     }
-    Some(x)
+    x
 }
 
 #[cfg(test)]
@@ -92,6 +100,19 @@ mod tests {
         for i in 0..n {
             assert!((x[i] - x_true[i]).abs() < 1e-8, "{} vs {}", x[i], x_true[i]);
         }
+    }
+
+    #[test]
+    fn factored_solve_matches_direct() {
+        let a = [4.0, 2.0, 2.0, 3.0];
+        let b = [1.0, -2.0];
+        let l = cholesky(&a, 2).unwrap();
+        let x = cholesky_solve_factored(&l, 2, &b);
+        let direct = cholesky_solve(&a, 2, &b).unwrap();
+        assert_eq!(x, direct);
+        // Residual check: A x = b.
+        assert!((4.0 * x[0] + 2.0 * x[1] - 1.0).abs() < 1e-12);
+        assert!((2.0 * x[0] + 3.0 * x[1] + 2.0).abs() < 1e-12);
     }
 
     #[test]

@@ -45,9 +45,9 @@ fn main() {
 
 const TRAIN_FLAGS: &[&str] = &[
     "dataset", "libsvm", "ntest", "ntrain", "m", "nodes", "lambda", "sigma", "loss", "basis",
-    "backend", "exec", "c-storage", "c-memory-budget", "eval-pipeline", "max-iters", "tol", "seed",
-    "kmeans-iters", "artifacts", "config", "stages", "pack", "epochs", "verbose", "cost",
-    "lambda-sweep", "save-model",
+    "backend", "exec", "c-storage", "c-memory-budget", "eval-pipeline", "solver", "max-iters",
+    "tol", "solver-max-iters", "solver-tol", "seed", "kmeans-iters", "artifacts", "config",
+    "stages", "pack", "epochs", "verbose", "cost", "lambda-sweep", "save-model",
     // serve-only flags
     "model", "clients", "requests", "think-ms", "max-batch", "max-delay-ms", "slots",
     "queue-cap", "json",
@@ -99,10 +99,19 @@ Common flags:
                     that halves it for m > TM, or a budgeted mix —
                     bit-identical results)
   --c-memory-budget per-node byte budget for --c-storage auto (e.g. 256m)
-  --eval-pipeline   fused | split   (TRON evaluation pipeline: one fused
-                    compute+reduce phase per evaluation — one barrier, one
-                    AllReduce round-trip — or the paper's literal compute +
-                    2-reduce sequence; bit-identical results)
+  --eval-pipeline   fused | split   (evaluation pipeline for either solver:
+                    one fused compute+reduce phase per evaluation — one
+                    barrier, one AllReduce round-trip — or the paper's
+                    literal compute + 2-reduce sequence; bit-identical
+                    results)
+  --solver          tron | bcd[:block]   (master-side solver: the paper's
+                    trust-region Newton, or distributed block coordinate
+                    descent updating `block` β coordinates per round with
+                    O(block)-float communication — same substrate, same
+                    ledger)
+  --solver-max-iters / --solver-tol   outer-round cap and relative stopping
+                    tolerance for whichever solver is selected
+                    (--max-iters / --tol are aliases, kept for scripts)
   --cost            free | hadoop | mpi   (simulated comm cost model)
   --stages a,b,c    stage-wise m schedule (stagewise command)
   --lambda-sweep a,b,c   after the main solve, warm re-solve the SAME
@@ -151,8 +160,11 @@ fn settings_from(args: &Args) -> Result<Settings> {
         ("c-storage", "c_storage"),
         ("c-memory-budget", "c_memory_budget"),
         ("eval-pipeline", "eval_pipeline"),
+        ("solver", "solver"),
         ("max-iters", "max_iters"),
         ("tol", "tol"),
+        ("solver-max-iters", "solver_max_iters"),
+        ("solver-tol", "solver_tol"),
         ("seed", "seed"),
         ("kmeans-iters", "kmeans_iters"),
         ("artifacts", "artifacts_dir"),
@@ -213,7 +225,8 @@ fn print_run_report(session: &Session, solve: &Solve, acc: f64, verbose: bool) {
     println!("\n== Simulated p-node ledger (compute max/node + C+D·B comm) ==");
     print!("{}", session.sim().report());
     println!(
-        "tron: {} iterations, {} f/g evals, {} Hd evals, final f {:.6e}, |g| {:.3e}",
+        "solver {}: {} rounds, {} f/g evals, {} Hd evals, final f {:.6e}, |g| {:.3e}",
+        solve.stats.solver,
         solve.stats.iterations,
         solve.fg_evals,
         solve.hd_evals,
@@ -234,7 +247,7 @@ fn print_run_report(session: &Session, solve: &Solve, acc: f64, verbose: bool) {
         solve.recomputed_tiles
     );
     if verbose {
-        println!("loss curve: {:?}", solve.stats.f_history);
+        println!("loss curve: {:?}", solve.stats.f_curve());
     }
     println!("test accuracy: {acc:.4}");
 }
@@ -280,7 +293,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             "\n== λ sweep: warm re-solves on the live session (C computed once, β warm-started) =="
         );
         let mut t = Table::new(&[
-            "lambda", "tron_iters", "fg_evals", "final_f", "accuracy", "solve_secs",
+            "lambda", "iters", "fg_evals", "final_f", "accuracy", "solve_secs",
         ]);
         for lam in lambdas {
             session.set_lambda(lam)?;
@@ -318,7 +331,7 @@ fn cmd_stagewise(args: &Args) -> Result<()> {
     // One session for the whole schedule: grow + warm re-solve in place.
     let staged = growth_settings(&s, &stages)?;
     let mut session = Session::build(&staged, &train_ds, Arc::clone(&backend), cost)?;
-    let mut t = Table::new(&["m", "accuracy", "tron_iters", "fg_evals", "solve_secs"]);
+    let mut t = Table::new(&["m", "accuracy", "iters", "fg_evals", "solve_secs"]);
     for (i, &m) in stages.iter().enumerate() {
         if i > 0 {
             session.grow_basis(m)?;

@@ -10,7 +10,7 @@ use dkm::config::settings::{
 };
 use dkm::coordinator::dist::DistProblem;
 use dkm::coordinator::trainer::{build_cluster, train_stagewise};
-use dkm::coordinator::tron::Objective;
+use dkm::coordinator::solver::Objective;
 use dkm::coordinator::{basis, train};
 use dkm::data::{synth, Dataset};
 use dkm::metrics::Step;
@@ -37,6 +37,7 @@ fn settings(m: usize, nodes: usize) -> Settings {
         kmeans_iters: 2,
         kmeans_max_m: 512,
         artifacts_dir: "artifacts".into(),
+        solver: dkm::config::settings::SolverChoice::Tron,
     }
 }
 
@@ -151,7 +152,7 @@ fn stagewise_warm_start_reduces_initial_objective() {
         train_stagewise(&s, &tr, Arc::clone(&backend), CostModel::free(), &[32, 128]).unwrap();
     // Cold start at m=128 begins at f(0) = L(0, y) = n/2 for sqhinge.
     let cold_f0 = tr.n() as f64 / 2.0;
-    let warm_f0 = stages[1].stats.f_history[0];
+    let warm_f0 = stages[1].stats.curve[0].f;
     assert!(
         warm_f0 < cold_f0 * 0.95,
         "warm f0 {warm_f0} vs cold {cold_f0}"

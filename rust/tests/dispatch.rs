@@ -44,6 +44,7 @@ fn settings(
         kmeans_iters: 2,
         kmeans_max_m: 512,
         artifacts_dir: "artifacts".into(),
+        solver: dkm::config::settings::SolverChoice::Tron,
     }
 }
 

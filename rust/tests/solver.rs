@@ -1,0 +1,380 @@
+//! The solver abstraction contract: TRON behind the `Solver` trait is the
+//! SAME numerical path as before the refactor (pinned as trait-dispatch vs
+//! direct `minimize` bit-identity plus cross-storage / cross-executor
+//! invariance), and the BCD peer holds the substrate's reproducibility
+//! contract — β bit-identical across executors, storage modes and the
+//! fused/split pipelines — while its round economics are metered at
+//! exactly ONE barrier + ONE AllReduce round-trip per outer block round.
+//!
+//! Test names end in `serial_exec` / `threads_exec` / `pool_exec`; CI runs
+//! each group explicitly next to the fused_eval and c_storage matrices.
+
+use std::sync::Arc;
+
+use dkm::cluster::CostModel;
+use dkm::config::settings::{
+    Backend, BasisSelection, CStorage, EvalPipeline, ExecutorChoice, Loss, Settings, SolverChoice,
+};
+use dkm::coordinator::dist::DistProblem;
+use dkm::coordinator::solver::{make_solver, tron, TronOptions};
+use dkm::coordinator::trainer::build_cluster;
+use dkm::coordinator::{basis, train, TrainOutput};
+use dkm::data::{synth, Dataset};
+use dkm::metrics::Step;
+use dkm::runtime::make_backend;
+
+fn settings(
+    m: usize,
+    nodes: usize,
+    executor: ExecutorChoice,
+    solver: SolverChoice,
+) -> Settings {
+    Settings {
+        dataset: "covtype_like".into(),
+        m,
+        nodes,
+        lambda: 0.01,
+        sigma: 2.0,
+        loss: Loss::SqHinge,
+        basis: BasisSelection::Random,
+        backend: Backend::Native,
+        executor,
+        c_storage: CStorage::Materialized,
+        eval_pipeline: EvalPipeline::Fused,
+        c_memory_budget: 256 << 20,
+        max_iters: 40,
+        tol: 1e-3,
+        seed: 42,
+        kmeans_iters: 2,
+        kmeans_max_m: 512,
+        artifacts_dir: "artifacts".into(),
+        solver,
+    }
+}
+
+fn data(n: usize, ntest: usize, seed: u64) -> (Dataset, Dataset) {
+    let mut spec = synth::spec("covtype_like");
+    spec.n_train = n;
+    spec.n_test = ntest;
+    synth::generate(&spec, seed)
+}
+
+fn assert_bit_identical(a: &TrainOutput, b: &TrainOutput, what: &str) {
+    assert_eq!(a.model.beta.len(), b.model.beta.len(), "{what}");
+    for (i, (x, y)) in a.model.beta.iter().zip(&b.model.beta).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: beta[{i}] {x} vs {y}");
+    }
+    assert_eq!(a.stats.iterations, b.stats.iterations, "{what}");
+    assert_eq!(a.fg_evals, b.fg_evals, "{what}");
+    assert_eq!(a.hd_evals, b.hd_evals, "{what}");
+    assert_eq!(
+        a.stats.final_f.to_bits(),
+        b.stats.final_f.to_bits(),
+        "{what}"
+    );
+}
+
+/// Refactored TRON (behind the trait) must produce one β regardless of
+/// C-storage mode — the cross-config pin that the move into
+/// `coordinator/solver/` did not perturb the numerical path.
+#[test]
+fn tron_beta_bit_identical_across_storage_serial_exec() {
+    let (tr, _) = data(1200, 150, 7);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let reference = {
+        let s = settings(96, 5, ExecutorChoice::Serial, SolverChoice::Tron);
+        train(&s, &tr, Arc::clone(&backend), CostModel::free()).unwrap()
+    };
+    assert_eq!(reference.stats.solver, "tron");
+    assert!(reference.stats.final_f < reference.stats.f0());
+    assert_eq!(reference.stats.curve.len(), reference.stats.iterations + 1);
+    for storage in [CStorage::Streaming, CStorage::StreamingRowbuf, CStorage::Auto] {
+        let mut s = settings(96, 5, ExecutorChoice::Serial, SolverChoice::Tron);
+        s.c_storage = storage;
+        let out = train(&s, &tr, Arc::clone(&backend), CostModel::free()).unwrap();
+        assert_bit_identical(&reference, &out, storage.name());
+    }
+}
+
+/// Same pin across the worker-thread executors: spawn-per-phase threads
+/// and the persistent pool must reproduce the serial β bit for bit.
+#[test]
+fn tron_beta_bit_identical_threads_exec() {
+    let (tr, _) = data(1100, 150, 11);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let serial = train(
+        &settings(96, 6, ExecutorChoice::Serial, SolverChoice::Tron),
+        &tr,
+        Arc::clone(&backend),
+        CostModel::free(),
+    )
+    .unwrap();
+    let threads = train(
+        &settings(96, 6, ExecutorChoice::Threads { cap: 4 }, SolverChoice::Tron),
+        &tr,
+        Arc::clone(&backend),
+        CostModel::free(),
+    )
+    .unwrap();
+    assert_bit_identical(&serial, &threads, "tron serial vs threads");
+}
+
+#[test]
+fn tron_beta_bit_identical_pool_exec() {
+    let (tr, _) = data(1100, 150, 11);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let serial = train(
+        &settings(96, 6, ExecutorChoice::Serial, SolverChoice::Tron),
+        &tr,
+        Arc::clone(&backend),
+        CostModel::free(),
+    )
+    .unwrap();
+    let pool = train(
+        &settings(96, 6, ExecutorChoice::Pool { cap: 3 }, SolverChoice::Tron),
+        &tr,
+        Arc::clone(&backend),
+        CostModel::free(),
+    )
+    .unwrap();
+    assert_bit_identical(&serial, &pool, "tron serial vs pool");
+}
+
+/// The trait shell is the standalone function: driving the SAME manually
+/// built distributed problem through `make_solver` (what `Session::solve`
+/// does) and through a direct `tron::minimize` call must agree bit for
+/// bit — the refactor pin that needs no pre-refactor binary.
+#[test]
+fn tron_trait_dispatch_matches_direct_minimize_serial_exec() {
+    let (tr, _) = data(700, 100, 13);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let (m, gamma, lambda, seed) = (48usize, 0.125f32, 0.05f32, 13u64);
+    let dpad = backend.pad_d(tr.d()).unwrap();
+    let build = |tr: &Dataset| {
+        let mut cluster = build_cluster(tr, 4, dpad, CostModel::free());
+        let b = basis::select_random(&mut cluster, m, tr.d(), dpad, seed).unwrap();
+        basis::install_w_shares(&mut cluster, &backend, &b, gamma, dpad).unwrap();
+        let zt = b.z_tiles.clone();
+        let be = Arc::clone(&backend);
+        cluster
+            .try_par_compute(Step::Kernel, |_, n| {
+                n.compute_c_block(be.as_ref(), &zt, m, gamma, 0..1)?;
+                n.prepare_hot(be.as_ref())
+            })
+            .unwrap();
+        cluster
+    };
+
+    let mut s = settings(m, 4, ExecutorChoice::Serial, SolverChoice::Tron);
+    s.tol = 1e-4;
+    s.max_iters = 50;
+
+    let mut c1 = build(&tr);
+    let mut p1 = DistProblem::new(&mut c1, Arc::clone(&backend), m, lambda, Loss::SqHinge);
+    let opts = TronOptions {
+        tol: s.tol,
+        max_iters: s.max_iters,
+        ..TronOptions::default()
+    };
+    let (beta_direct, st_direct) = tron::minimize(&mut p1, &vec![0.0f32; m], &opts).unwrap();
+
+    let mut c2 = build(&tr);
+    let mut p2 = DistProblem::new(&mut c2, Arc::clone(&backend), m, lambda, Loss::SqHinge);
+    let mut solver = make_solver(&s);
+    assert_eq!(solver.name(), "tron");
+    let (beta_trait, st_trait) = solver.solve(&mut p2, &vec![0.0f32; m]).unwrap();
+
+    for (i, (a, b)) in beta_direct.iter().zip(&beta_trait).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "beta[{i}]: {a} vs {b}");
+    }
+    assert_eq!(st_direct.iterations, st_trait.iterations);
+    assert_eq!(st_direct.fg_evals, st_trait.fg_evals);
+    assert_eq!(st_direct.hd_evals, st_trait.hd_evals);
+    assert_eq!(st_direct.final_f.to_bits(), st_trait.final_f.to_bits());
+    assert_eq!(st_direct.f_curve(), st_trait.f_curve());
+}
+
+/// BCD reproducibility on the serial reference executor: fused vs split
+/// pipelines and every C-storage mode yield one β (same fixed-order
+/// per-node math, same tree fold), with the byte volume unchanged by
+/// fusion — the TRON pipeline contract, held by the new peer.
+#[test]
+fn bcd_bit_identical_pipelines_and_storage_serial_exec() {
+    let (tr, _) = data(1000, 120, 17);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let bcd = SolverChoice::Bcd { block: 32 };
+    let run = |pipeline, storage| {
+        let mut s = settings(96, 5, ExecutorChoice::Serial, bcd);
+        s.eval_pipeline = pipeline;
+        s.c_storage = storage;
+        s.max_iters = 24;
+        train(&s, &tr, Arc::clone(&backend), CostModel::hadoop_crude()).unwrap()
+    };
+    let reference = run(EvalPipeline::Fused, CStorage::Materialized);
+    assert_eq!(reference.stats.solver, "bcd");
+    assert_eq!(reference.hd_evals, 0, "BCD never evaluates Hd");
+    assert!(reference.stats.final_f < reference.stats.f0());
+    assert_eq!(reference.stats.curve.len(), reference.stats.iterations + 1);
+    for storage in [
+        CStorage::Materialized,
+        CStorage::Streaming,
+        CStorage::StreamingRowbuf,
+        CStorage::Auto,
+    ] {
+        let fused = run(EvalPipeline::Fused, storage);
+        let split = run(EvalPipeline::Split, storage);
+        assert_bit_identical(&fused, &reference, storage.name());
+        assert_bit_identical(&fused, &split, storage.name());
+        assert_eq!(
+            fused.sim.comm_bytes(),
+            split.sim.comm_bytes(),
+            "{}: fusion must not change the BCD byte volume",
+            storage.name()
+        );
+    }
+}
+
+/// BCD across executors, multi-tile m (two basis column tiles, so block
+/// order crosses a tile boundary and the last block is a remainder).
+#[test]
+fn bcd_bit_identical_multi_tile_threads_exec() {
+    let (tr, _) = data(1200, 150, 19);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let run = |executor| {
+        let mut s = settings(300, 5, executor, SolverChoice::Bcd { block: 64 });
+        s.max_iters = 15;
+        train(&s, &tr, Arc::clone(&backend), CostModel::free()).unwrap()
+    };
+    let serial = run(ExecutorChoice::Serial);
+    let threads = run(ExecutorChoice::Threads { cap: 4 });
+    assert_bit_identical(&serial, &threads, "bcd serial vs threads");
+}
+
+#[test]
+fn bcd_bit_identical_multi_tile_pool_exec() {
+    let (tr, _) = data(1200, 150, 19);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let run = |executor| {
+        let mut s = settings(300, 5, executor, SolverChoice::Bcd { block: 64 });
+        s.max_iters = 15;
+        train(&s, &tr, Arc::clone(&backend), CostModel::free()).unwrap()
+    };
+    let serial = run(ExecutorChoice::Serial);
+    let pool = run(ExecutorChoice::Pool { cap: 4 });
+    assert_bit_identical(&serial, &pool, "bcd serial vs pool");
+}
+
+/// BCD and TRON minimize the SAME objective. With the squared loss the
+/// block majorizer is the exact block Hessian, and with one block
+/// covering all of m the first BCD step IS the Newton step to the global
+/// minimum of the quadratic — so both solvers must land on the same f.
+#[test]
+fn bcd_reaches_tron_objective_serial_exec() {
+    let (tr, _) = data(900, 120, 23);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+
+    // Exact case: squared loss, single block.
+    let mut st = settings(64, 4, ExecutorChoice::Serial, SolverChoice::Tron);
+    st.loss = Loss::Squared;
+    st.tol = 1e-5;
+    st.max_iters = 200;
+    let tron_out = train(&st, &tr, Arc::clone(&backend), CostModel::free()).unwrap();
+    let mut sb = settings(64, 4, ExecutorChoice::Serial, SolverChoice::Bcd { block: 64 });
+    sb.loss = Loss::Squared;
+    sb.tol = 1e-5;
+    sb.max_iters = 50;
+    let bcd_out = train(&sb, &tr, Arc::clone(&backend), CostModel::free()).unwrap();
+    let (ft, fb) = (tron_out.stats.final_f, bcd_out.stats.final_f);
+    assert!(
+        (ft - fb).abs() <= 1e-3 * ft.abs().max(1.0),
+        "squared loss: tron {ft} vs bcd {fb}"
+    );
+    // The first block step already lands on the quadratic's minimum: the
+    // objective after round 1 equals the final objective.
+    assert!(
+        (bcd_out.stats.curve[1].f - fb).abs() <= 1e-3 * fb.abs().max(1.0),
+        "one exact Newton block step: curve[1] {} vs final {fb}",
+        bcd_out.stats.curve[1].f
+    );
+
+    // Majorized case: sqhinge, multiple blocks — same minimum, looser band
+    // (BCD's damped steps converge linearly, not in one shot).
+    let mut st = settings(64, 4, ExecutorChoice::Serial, SolverChoice::Tron);
+    st.tol = 1e-5;
+    st.max_iters = 200;
+    let tron_out = train(&st, &tr, Arc::clone(&backend), CostModel::free()).unwrap();
+    let mut sb = settings(64, 4, ExecutorChoice::Serial, SolverChoice::Bcd { block: 16 });
+    sb.tol = 1e-4;
+    sb.max_iters = 600;
+    let bcd_out = train(&sb, &tr, Arc::clone(&backend), CostModel::free()).unwrap();
+    let (ft, fb) = (tron_out.stats.final_f, bcd_out.stats.final_f);
+    assert!(
+        (fb - ft) <= 0.02 * ft.abs().max(1.0),
+        "sqhinge: tron {ft} vs bcd {fb}"
+    );
+    // The curve BCD reports is (weakly) monotone: majorization means every
+    // block step decreases f — allow f32-rounding slack only.
+    for w in bcd_out.stats.curve.windows(2) {
+        assert!(
+            w[1].f <= w[0].f * (1.0 + 1e-5) + 1e-6,
+            "bcd curve increased: {} -> {}",
+            w[0].f,
+            w[1].f
+        );
+    }
+}
+
+/// The BCD metering acceptance criterion, pinned as a delta between two
+/// runs that differ only in round count (setup and final-flush phases are
+/// per-solve constants and cancel): each extra outer round costs exactly
+/// ONE barrier and ONE AllReduce round-trip on the fused path, and one
+/// f/g-style evaluation — never an Hd.
+#[test]
+fn bcd_metering_one_barrier_one_round_per_round_serial_exec() {
+    let (tr, _) = data(900, 120, 29);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let lat = CostModel {
+        latency_s: 0.01,
+        per_byte_s: 0.0,
+    };
+    let run = |rounds: usize| {
+        let mut s = settings(96, 6, ExecutorChoice::Serial, SolverChoice::Bcd { block: 32 });
+        // tol 0 never converges (a sweep-gradient of exactly zero would be
+        // required), so the solver runs exactly `max_iters` rounds.
+        s.tol = 0.0;
+        s.max_iters = rounds;
+        train(&s, &tr, Arc::clone(&backend), lat).unwrap()
+    };
+    let (r1, r2) = (8usize, 20usize);
+    let a = run(r1);
+    let b = run(r2);
+    assert_eq!(a.stats.iterations, r1);
+    assert_eq!(b.stats.iterations, r2);
+    assert!(!a.stats.converged && !b.stats.converged);
+    let extra = (r2 - r1) as u64;
+    assert_eq!(
+        b.sim.comm_rounds() - a.sim.comm_rounds(),
+        extra,
+        "one AllReduce round-trip per outer round"
+    );
+    assert_eq!(
+        b.sim.barriers() - a.sim.barriers(),
+        extra,
+        "one barrier per outer round"
+    );
+    assert_eq!(b.fg_evals - a.fg_evals, r2 - r1, "one evaluation per round");
+    assert_eq!(a.hd_evals, 0);
+    assert_eq!(b.hd_evals, 0);
+    // The wall-clock metrics mirror the sim ledger counters.
+    assert_eq!(a.wall.comm_rounds(), a.sim.comm_rounds());
+    assert_eq!(a.wall.barriers(), a.sim.barriers());
+    // Each round's AllReduce carries block+2 floats (up + down passes of
+    // the tree) and its delta broadcast block floats (down pass) —
+    // strictly fewer bytes per round than TRON's m-vector rounds; pin the
+    // per-round byte delta exactly against the ledger's pricing model.
+    let per_round_bytes = (b.sim.comm_bytes() - a.sim.comm_bytes()) / extra;
+    let depth = dkm::cluster::Tree::new(6, 2).depth();
+    let block = 32usize;
+    let want = 2 * depth * (block + 2) * 4 + depth * block * 4;
+    assert_eq!(per_round_bytes as usize, want, "per-round byte volume");
+}
