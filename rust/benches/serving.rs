@@ -13,7 +13,11 @@
 //!    bounded micro-batching queue (`dkm serve`'s loop, in-process):
 //!    qps + p50/p99 latency on the wall clock, barriers/batch + predict
 //!    seconds on the simulated ledger, every reply checked bit-identical.
-//! 3. **Machine-readable trajectory.** The headline numbers land in
+//! 3. **Skewed fleet.** One simulated shard-server slowed 4×: static vs
+//!    work-stealing scheduling on the same batches — scores bit-identical,
+//!    ledger bytes/barriers pinned, stolen predict wall under the
+//!    straggler bound.
+//! 4. **Machine-readable trajectory.** The headline numbers land in
 //!    `BENCH_serving.json` so later PRs can diff them.
 //!
 //! Run: cargo bench --bench serving
@@ -25,11 +29,11 @@ mod common;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use dkm::cluster::Executor;
+use dkm::cluster::{Executor, Sched, Skew};
 use dkm::config::Json;
 use dkm::coordinator::{train, ServingSession};
 use dkm::linalg::Mat;
-use dkm::metrics::Table;
+use dkm::metrics::{Step, Table};
 use dkm::serve::{run as serve_run, ServeConfig};
 
 fn main() {
@@ -179,6 +183,57 @@ fn main() {
         report.barriers_per_batch
     );
 
+    // --- section 2.5: skewed fleet — static vs work-stealing serving ---
+    // One simulated shard-server slowed 4× (`--skew 0=4`). Serial executor
+    // so the comparison is a pure ledger experiment: identical scores,
+    // identical bytes/barriers, but the stolen schedule's simulated
+    // predict wall must land well under the static slowest-node bound.
+    let skew = Skew::parse("0=4").expect("skew spec");
+    let mut skew_sessions = Vec::new();
+    for sched in [Sched::Static, Sched::Steal { grain: 4 }] {
+        let sess = ServingSession::load(
+            &model,
+            Arc::clone(&backend),
+            nodes,
+            Executor::serial(),
+            common::free(),
+        )
+        .expect("serving load failed")
+        .with_sched(sched)
+        .with_skew(skew.clone());
+        let scores = sess.predict_many(&refs).expect("predict_many failed");
+        for (b, batch_scores) in scores.iter().enumerate() {
+            for (i, (a, w)) in batch_scores.iter().zip(&lockstep_scores[b]).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    w.to_bits(),
+                    "skewed {} batch {b} row {i} diverged",
+                    sched.name()
+                );
+            }
+        }
+        skew_sessions.push((sched, sess));
+    }
+    let (_, skew_static) = &skew_sessions[0];
+    let (_, skew_steal) = &skew_sessions[1];
+    let (static_sim, steal_sim) = (skew_static.sim(), skew_steal.sim());
+    assert_eq!(static_sim.barriers(), steal_sim.barriers());
+    assert_eq!(static_sim.comm_bytes(), steal_sim.comm_bytes());
+    let static_wall = static_sim.compute_secs(Step::Predict);
+    let steal_wall = steal_sim.compute_secs(Step::Predict);
+    assert!(
+        steal_wall < 0.8 * static_wall,
+        "stealing failed to beat static serving under skew: {steal_wall:.4}s vs {static_wall:.4}s"
+    );
+    println!(
+        "\nskewed fleet ({}, {nodes} shards, serial executor): static predict \
+         {static_wall:.4} sim-s (straggler ratio {:.2}x) vs steal:4 {steal_wall:.4} sim-s ({:.2}x faster), \
+         scores bit-identical",
+        skew.name(),
+        static_sim.straggler_ratio(nodes),
+        static_wall / steal_wall.max(1e-12),
+    );
+
     // --- section 3: machine-readable trajectory ---
     let mut o = BTreeMap::new();
     let mut num = |k: &str, v: f64| {
@@ -196,5 +251,8 @@ fn main() {
     num("grouped_wall_s", grouped_wall);
     num("per_batch_sum_s", per_batch_sum);
     num("mismatches", report.mismatches as f64);
+    num("skew_static_predict_sim_s", static_wall);
+    num("skew_steal_predict_sim_s", steal_wall);
+    num("skew_straggler_ratio", static_sim.straggler_ratio(nodes));
     common::write_json("serving", &Json::Obj(o));
 }

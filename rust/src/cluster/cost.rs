@@ -1,7 +1,13 @@
 //! The paper's communication cost model (§4.4): "Let us write one instance
 //! communication cost in the form C + DB where C is communication latency,
 //! D is the cost of communication per byte after leaving out latency, and B
-//! is the number of bytes transferred."
+//! is the number of bytes transferred." — plus the fleet-heterogeneity half
+//! of the straggler model: deterministic per-node speed multipliers
+//! ([`Skew`], the `--skew` spec) and the work-stealing makespan the ledger
+//! charges under `--sched steal` ([`steal_makespan`] / [`phase_wall`]).
+
+use super::exec::Sched;
+use crate::Result;
 
 /// Per-instance communication cost parameters.
 #[derive(Clone, Copy, Debug)]
@@ -46,6 +52,158 @@ impl CostModel {
     }
 }
 
+/// Deterministic per-node speed multipliers (≥ 1 means SLOWER): the
+/// simulated fleet's heterogeneity. A node's measured compute seconds are
+/// scaled by `multiplier(j)` before the phase wall is charged, so a single
+/// skewed node models exactly the straggler that stalls every AllReduce
+/// barrier in the paper's synchronous design.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Skew {
+    /// Homogeneous fleet: every node at 1× (the default; charging is
+    /// bit-identical to a ledger with no skew model at all).
+    None,
+    /// Explicit `node=factor` overrides; unlisted nodes run at 1×.
+    Explicit(Vec<(usize, f64)>),
+    /// Seeded per-node draw, uniform in [1, max]: the same spec always
+    /// yields the same fleet (splitmix64 of seed and node index — no
+    /// global RNG state, so replays are exact).
+    Random { max: f64, seed: u64 },
+}
+
+impl Skew {
+    pub fn none() -> Skew {
+        Skew::None
+    }
+
+    pub fn is_none(&self) -> bool {
+        matches!(self, Skew::None)
+    }
+
+    /// Parse a `--skew` spec: `none`, a `node=factor[,node=factor...]`
+    /// list (e.g. `0=4` slows node 0 by 4×), or `rand:<max>[:<seed>]`.
+    pub fn parse(s: &str) -> Result<Skew> {
+        if s == "none" {
+            return Ok(Skew::None);
+        }
+        if let Some(rest) = s.strip_prefix("rand:") {
+            let mut it = rest.splitn(2, ':');
+            let max: f64 = it
+                .next()
+                .unwrap_or("")
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad skew max in '{s}' (want rand:<max>[:<seed>])"))?;
+            anyhow::ensure!(max >= 1.0, "skew max must be >= 1, got {max}");
+            let seed: u64 = match it.next() {
+                Some(sd) => sd
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad skew seed in '{s}'"))?,
+                None => 17,
+            };
+            return Ok(Skew::Random { max, seed });
+        }
+        let mut pairs = Vec::new();
+        for part in s.split(',') {
+            let (j, f) = part.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!(
+                    "bad skew spec '{s}' (valid: none, <node>=<factor>[,...], rand:<max>[:<seed>])"
+                )
+            })?;
+            let j: usize = j
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad node index '{j}' in skew spec '{s}'"))?;
+            let f: f64 = f
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad factor '{f}' in skew spec '{s}'"))?;
+            anyhow::ensure!(f >= 1.0, "skew factor must be >= 1, got {f} for node {j}");
+            pairs.push((j, f));
+        }
+        Ok(Skew::Explicit(pairs))
+    }
+
+    /// Round-trippable spec string (`Skew::parse(&skew.name())` is `skew`).
+    pub fn name(&self) -> String {
+        match self {
+            Skew::None => "none".to_string(),
+            Skew::Explicit(pairs) => pairs
+                .iter()
+                .map(|(j, f)| format!("{j}={f}"))
+                .collect::<Vec<_>>()
+                .join(","),
+            Skew::Random { max, seed } => format!("rand:{max}:{seed}"),
+        }
+    }
+
+    /// Speed multiplier of node `j` (1.0 = full speed).
+    pub fn multiplier(&self, j: usize) -> f64 {
+        match self {
+            Skew::None => 1.0,
+            Skew::Explicit(pairs) => pairs
+                .iter()
+                .find(|(node, _)| *node == j)
+                .map(|(_, f)| *f)
+                .unwrap_or(1.0),
+            Skew::Random { max, seed } => {
+                let mut z = seed
+                    .wrapping_add(0x9E3779B97F4A7C15u64.wrapping_mul(j as u64 + 1));
+                z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+                z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+                z ^= z >> 31;
+                let frac = (z >> 11) as f64 / (1u64 << 53) as f64;
+                1.0 + frac * (max - 1.0)
+            }
+        }
+    }
+}
+
+/// Simulated wall of one phase under work stealing: each node's (already
+/// skew-scaled) cost is oversplit into `grain` equal items and the p
+/// simulated workers claim items in flattened node order, each next item
+/// going to the earliest-free worker — the same dynamics as the executors'
+/// claim cursor. Returns the latest finish time. With `grain` = 1 and one
+/// item per worker this degrades to the static max, as it must.
+pub fn steal_makespan(node_secs: &[f64], grain: usize) -> f64 {
+    let p = node_secs.len();
+    if p == 0 {
+        return 0.0;
+    }
+    let g = grain.max(1);
+    let mut free = vec![0.0f64; p];
+    for &t in node_secs {
+        let item = t / g as f64;
+        for _ in 0..g {
+            // Earliest-free worker claims the next item (first index wins
+            // ties — fully deterministic).
+            let w = (0..p)
+                .min_by(|&a, &b| free[a].total_cmp(&free[b]).then(a.cmp(&b)))
+                .unwrap();
+            free[w] += item;
+        }
+    }
+    free.iter().fold(0.0f64, |a, &b| a.max(b))
+}
+
+/// Fold one phase's measured per-node seconds into what the ledger
+/// charges: `(charged wall, max node seconds, summed node seconds)`, all
+/// after skew scaling. Static charges the max (the barrier waits for the
+/// slowest node — bit-identical to the pre-skew ledger when `skew` is
+/// `None`); stealing charges the [`steal_makespan`]. The max/sum pair is
+/// the straggler observable: `max·p / sum` is how much longer the
+/// slowest-node bound is than perfectly balanced work.
+pub fn phase_wall(sched: Sched, skew: &Skew, node_secs: &[f64]) -> (f64, f64, f64) {
+    let scaled: Vec<f64> = node_secs
+        .iter()
+        .enumerate()
+        .map(|(j, s)| s * skew.multiplier(j))
+        .collect();
+    let max = scaled.iter().fold(0.0f64, |a, &b| a.max(b));
+    let sum: f64 = scaled.iter().sum();
+    let wall = match sched {
+        Sched::Static => max,
+        Sched::Steal { grain } => steal_makespan(&scaled, grain),
+    };
+    (wall, max, sum)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -69,5 +227,63 @@ mod tests {
         // ...but not on MPI.
         let m = CostModel::mpi();
         assert!(m.instance(bytes) < h.instance(bytes) / 100.0);
+    }
+
+    #[test]
+    fn skew_parses_round_trips_and_scales() {
+        assert_eq!(Skew::parse("none").unwrap(), Skew::None);
+        let e = Skew::parse("0=4,3=2").unwrap();
+        assert_eq!(e.multiplier(0), 4.0);
+        assert_eq!(e.multiplier(1), 1.0);
+        assert_eq!(e.multiplier(3), 2.0);
+        let r = Skew::parse("rand:3:7").unwrap();
+        assert_eq!(r, Skew::Random { max: 3.0, seed: 7 });
+        // Seeded draws are deterministic, within range, and not constant.
+        let ms: Vec<f64> = (0..16).map(|j| r.multiplier(j)).collect();
+        assert!(ms.iter().all(|&m| (1.0..=3.0).contains(&m)));
+        assert!(ms.iter().any(|&m| (m - ms[0]).abs() > 1e-6));
+        assert_eq!(ms, (0..16).map(|j| r.multiplier(j)).collect::<Vec<_>>());
+        for s in ["none", "0=4,3=2", "rand:3:7"] {
+            let k = Skew::parse(s).unwrap();
+            assert_eq!(Skew::parse(&k.name()).unwrap(), k);
+        }
+        assert!(Skew::parse("0=0.5").is_err(), "speedups are not skew");
+        assert!(Skew::parse("rand:0.5").is_err());
+        assert!(Skew::parse("garbage").is_err());
+    }
+
+    #[test]
+    fn steal_makespan_recovers_straggler_idle_time() {
+        // p=8, node 0 skewed 4×: static pays 4c; stealing with grain 4
+        // spreads node 0's items so the wall lands well under 4c.
+        let mut secs = vec![1.0f64; 8];
+        secs[0] = 4.0;
+        let static_wall = secs.iter().fold(0.0f64, |a, &b| a.max(b));
+        let steal_wall = steal_makespan(&secs, 4);
+        assert!(steal_wall < static_wall * 0.6, "{steal_wall} vs {static_wall}");
+        // Never below the perfectly-balanced bound.
+        assert!(steal_wall >= secs.iter().sum::<f64>() / 8.0 - 1e-12);
+        // Uniform work with one item per worker degrades to the max.
+        let even = vec![2.0f64; 8];
+        assert!((steal_makespan(&even, 1) - 2.0).abs() < 1e-12);
+        assert_eq!(steal_makespan(&[], 4), 0.0);
+    }
+
+    #[test]
+    fn phase_wall_static_no_skew_is_plain_max() {
+        let secs = [0.5f64, 0.25, 1.5, 0.75];
+        let (wall, max, sum) = phase_wall(Sched::Static, &Skew::None, &secs);
+        assert_eq!(wall.to_bits(), 1.5f64.to_bits());
+        assert_eq!(max.to_bits(), 1.5f64.to_bits());
+        assert!((sum - 3.0).abs() < 1e-12);
+        // Skew scales before the fold; stealing charges the makespan.
+        let skew = Skew::parse("2=4").unwrap();
+        let (w2, m2, s2) = phase_wall(Sched::Static, &skew, &secs);
+        assert!((w2 - 6.0).abs() < 1e-12);
+        assert!((m2 - 6.0).abs() < 1e-12);
+        assert!((s2 - 7.5).abs() < 1e-12);
+        let (w3, m3, _) = phase_wall(Sched::Steal { grain: 4 }, &skew, &secs);
+        assert!((m3 - 6.0).abs() < 1e-12);
+        assert!(w3 < w2, "steal {w3} must beat static {w2} under skew");
     }
 }

@@ -34,8 +34,10 @@
 //!    too — only the number of barriers changes.
 //! 3. **Metering is per-node** — each node's wall time is measured around
 //!    its own `f` invocation (inside the worker thread for the threaded
-//!    executor) and the phase is charged the MAX across nodes, the
-//!    synchronous bulk-parallel semantics of the paper.
+//!    executor) and returned per node; the cluster charges the phase the
+//!    MAX across nodes (the synchronous bulk-parallel semantics of the
+//!    paper) or, under `--sched steal`, the work-stealing makespan model
+//!    in [`super::cost`].
 //!
 //! Together 1–3 give the headline guarantee: training output is
 //! bit-identical between executors (verified in `rust/tests/executor.rs`),
@@ -46,6 +48,18 @@
 //! workers exceed cores, shared memory bandwidth); the pooled executor has
 //! the same caveat. Use `serial` for Fig-2/Table-4-grade ledger
 //! experiments, `pool` (or `threads`) for real wall-clock.
+//!
+//! **Scheduling** ([`Sched`]): both parallel executors claim per-node work
+//! through one shared [`NodeQueue`] seam. `static` (the reference) carves
+//! nodes into contiguous chunks of `ceil(p/workers)` exactly as before;
+//! `steal[:grain]` replaces the chunks with a single atomic-cursor claim —
+//! the idiom `run_concurrent` already proves out — so a worker that
+//! finishes early keeps pulling nodes instead of parking behind a
+//! straggler. Results still land in node order, errors still report the
+//! first failing node in node order, and panics still propagate, so β is
+//! bit-identical across schedulers (locked by `rust/tests/scheduling.rs`).
+//! The `grain` only parameterizes the simulated makespan model (a node's
+//! closure is indivisible on a real host); real stealing is node-granular.
 //!
 //! **Multi-slot phases** ([`Executor::run_concurrent`]) extend the model
 //! from lockstep training to overlapping serving work: a phase carries
@@ -69,6 +83,62 @@ use crate::Result;
 /// contract as `Cluster::try_par_compute`).
 pub type ReduceOutcome = std::result::Result<Vec<f32>, (usize, anyhow::Error)>;
 
+/// Default oversplit factor of `--sched steal` (items per node in the
+/// simulated makespan model).
+pub const DEFAULT_STEAL_GRAIN: usize = 4;
+
+/// How a phase's per-node work is handed to the workers (`--sched`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sched {
+    /// Contiguous chunks of `ceil(p/workers)` nodes, one per worker — the
+    /// reference schedule (and the only one the serial executor has).
+    Static,
+    /// Workers race one atomic cursor over the node list, so an early
+    /// finisher keeps claiming nodes instead of idling behind a straggler.
+    /// `grain` oversplits each node into that many equal items in the
+    /// simulated makespan model (see `cost::steal_makespan`); the real
+    /// executors steal whole nodes (a node closure is indivisible).
+    Steal { grain: usize },
+}
+
+impl Default for Sched {
+    fn default() -> Self {
+        Sched::Static
+    }
+}
+
+impl Sched {
+    /// Parse a `--sched` spec: `static`, `steal`, or `steal:<grain>`.
+    pub fn parse(s: &str) -> Result<Sched> {
+        match s {
+            "static" => Ok(Sched::Static),
+            "steal" => Ok(Sched::Steal {
+                grain: DEFAULT_STEAL_GRAIN,
+            }),
+            _ => {
+                if let Some(g) = s.strip_prefix("steal:") {
+                    let grain: usize = g
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad steal grain '{g}' (want an integer)"))?;
+                    anyhow::ensure!(grain >= 1, "steal grain must be >= 1, got {grain}");
+                    Ok(Sched::Steal { grain })
+                } else {
+                    anyhow::bail!(
+                        "unknown scheduler '{s}' (valid: static, steal, steal:<grain>)"
+                    )
+                }
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Sched::Static => "static".to_string(),
+            Sched::Steal { grain } => format!("steal:{grain}"),
+        }
+    }
+}
+
 /// Shared state of one fused compute+reduce phase: per-node result slots,
 /// the countdown of workers still computing, and the finished outcome. The
 /// LAST worker to finish its chunk performs the tree fold right there —
@@ -85,7 +155,7 @@ struct FusedPhase<'t> {
     /// Workers that have not finished their chunk yet.
     pending: AtomicUsize,
     /// Set exactly once, by the finishing worker.
-    out: Mutex<Option<(ReduceOutcome, f64)>>,
+    out: Mutex<Option<(ReduceOutcome, Vec<f64>)>>,
 }
 
 impl<'t> FusedPhase<'t> {
@@ -120,14 +190,14 @@ impl<'t> FusedPhase<'t> {
     fn finish(&self) {
         let mut partials = Vec::with_capacity(self.slots.len());
         let mut first_err: Option<(usize, anyhow::Error)> = None;
-        let mut max_secs = 0.0f64;
+        let mut node_secs = Vec::with_capacity(self.slots.len());
         for (j, slot) in self.slots.iter().enumerate() {
             let (r, secs) = slot
                 .lock()
                 .unwrap()
                 .take()
                 .expect("fused phase filled every slot");
-            max_secs = max_secs.max(secs);
+            node_secs.push(secs);
             match r {
                 Ok(v) => partials.push(v),
                 Err(e) => {
@@ -147,10 +217,10 @@ impl<'t> FusedPhase<'t> {
                 Ok(reduce_sum_tree(self.tree, partials))
             }
         };
-        *self.out.lock().unwrap() = Some((outcome, max_secs));
+        *self.out.lock().unwrap() = Some((outcome, node_secs));
     }
 
-    fn take(self) -> (ReduceOutcome, f64) {
+    fn take(self) -> (ReduceOutcome, Vec<f64>) {
         self.out
             .into_inner()
             .unwrap()
@@ -175,6 +245,9 @@ pub struct SlotResult<T> {
     /// Item outputs in item order — the same deterministic collection
     /// contract as [`Executor::run`]'s node order.
     pub items: Vec<T>,
+    /// Each item's measured wall seconds, in item order (for serving, one
+    /// per shard — what the skewed-fleet model scales per node).
+    pub item_secs: Vec<f64>,
     /// MAX single-item seconds: the slot's metered phase duration under
     /// the synchronous bulk model (comparable to a serial one-slot phase).
     pub max_item_secs: f64,
@@ -255,6 +328,7 @@ impl<T: Send> ConcurrentPhase<T> {
             .zip(self.spans)
             .map(|(cells, span)| {
                 let mut max_item_secs = 0.0f64;
+                let mut item_secs = Vec::with_capacity(cells.len());
                 let items = cells
                     .into_iter()
                     .map(|c| {
@@ -263,12 +337,14 @@ impl<T: Send> ConcurrentPhase<T> {
                             .unwrap()
                             .expect("concurrent phase filled every item");
                         max_item_secs = max_item_secs.max(secs);
+                        item_secs.push(secs);
                         v
                     })
                     .collect();
                 let (started_at, finished_at) = span.into_inner().unwrap().unwrap_or((0.0, 0.0));
                 SlotResult {
                     items,
+                    item_secs,
                     max_item_secs,
                     started_at,
                     finished_at,
@@ -299,30 +375,119 @@ pub fn max_slots_in_flight<T>(results: &[SlotResult<T>]) -> usize {
     peak.max(0) as usize
 }
 
+/// The ONE work-claiming seam shared by `run`/`run_reduce` on both
+/// parallel executors (this replaces the contiguous-chunking boilerplate
+/// that used to be repeated four times): one cell per node hands each
+/// `&mut N` to exactly one worker, drained either as the classic static
+/// chunks of `ceil(p/workers)` or through a single atomic cursor every
+/// worker races (work stealing). Each cell is taken at most once, so the
+/// locks are uncontended except for the cursor race itself.
+struct NodeQueue<'a, N> {
+    cells: Vec<Mutex<Option<&'a mut N>>>,
+    next: AtomicUsize,
+    sched: Sched,
+    /// Requested worker count (the static chunk divisor).
+    workers: usize,
+}
+
+impl<'a, N: Send> NodeQueue<'a, N> {
+    fn new(nodes: &'a mut [N], workers: usize, sched: Sched) -> Self {
+        NodeQueue {
+            cells: nodes.iter_mut().map(|n| Mutex::new(Some(n))).collect(),
+            next: AtomicUsize::new(0),
+            sched,
+            workers,
+        }
+    }
+
+    fn p(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Number of workers that actually receive work (static chunking can
+    /// leave trailing workers with empty chunks; stealing never does).
+    fn spawned(&self) -> usize {
+        match self.sched {
+            Sched::Static => {
+                let chunk = self.p().div_ceil(self.workers);
+                self.p().div_ceil(chunk)
+            }
+            Sched::Steal { .. } => self.workers.min(self.p()),
+        }
+    }
+
+    /// Drain worker `w`'s share of the nodes: its contiguous chunk under
+    /// static scheduling, or whatever the shared cursor hands it under
+    /// stealing. `sink(j, node)` runs each claimed node exactly once.
+    fn drain(&self, w: usize, sink: &impl Fn(usize, &mut N)) {
+        match self.sched {
+            Sched::Static => {
+                let chunk = self.p().div_ceil(self.workers);
+                let first = w * chunk;
+                for j in first..self.p().min(first + chunk) {
+                    self.claim(j, sink);
+                }
+            }
+            Sched::Steal { .. } => loop {
+                let j = self.next.fetch_add(1, Ordering::Relaxed);
+                if j >= self.p() {
+                    return;
+                }
+                self.claim(j, sink);
+            },
+        }
+    }
+
+    fn claim(&self, j: usize, sink: &impl Fn(usize, &mut N)) {
+        let node = self.cells[j]
+            .lock()
+            .unwrap()
+            .take()
+            .expect("node claimed exactly once per phase");
+        sink(j, node);
+    }
+}
+
+/// Collect per-node `(value, seconds)` cells (in node order) into the
+/// `(outputs, per-node seconds)` pair `run` returns.
+fn collect_cells<T>(cells: Vec<Mutex<Option<(T, f64)>>>) -> (Vec<T>, Vec<f64>) {
+    let mut out = Vec::with_capacity(cells.len());
+    let mut secs = Vec::with_capacity(cells.len());
+    for c in cells {
+        let (v, s) = c
+            .into_inner()
+            .unwrap()
+            .expect("worker filled every result cell");
+        out.push(v);
+        secs.push(s);
+    }
+    (out, secs)
+}
+
 /// Runs every node one after another on the calling thread.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct SerialExecutor;
 
 impl SerialExecutor {
-    pub fn run<N, T, F>(&self, nodes: &mut [N], f: &F) -> (Vec<T>, f64)
+    pub fn run<N, T, F>(&self, nodes: &mut [N], f: &F) -> (Vec<T>, Vec<f64>)
     where
         F: Fn(usize, &mut N) -> T,
     {
         let mut out = Vec::with_capacity(nodes.len());
-        let mut max_secs = 0.0f64;
+        let mut secs = Vec::with_capacity(nodes.len());
         for (j, node) in nodes.iter_mut().enumerate() {
             let start = std::time::Instant::now();
             out.push(f(j, node));
-            max_secs = max_secs.max(start.elapsed().as_secs_f64());
+            secs.push(start.elapsed().as_secs_f64());
         }
-        (out, max_secs)
+        (out, secs)
     }
 
     /// Fused compute+reduce, serial reference: every node's flat partial
     /// is computed (and metered) in node order, then tree-folded in place.
     /// One "phase" — the reference semantics the parallel executors must
     /// reproduce bit for bit.
-    pub fn run_reduce<N, F>(&self, tree: &Tree, nodes: &mut [N], f: &F) -> (ReduceOutcome, f64)
+    pub fn run_reduce<N, F>(&self, tree: &Tree, nodes: &mut [N], f: &F) -> (ReduceOutcome, Vec<f64>)
     where
         F: Fn(usize, &mut N) -> Result<Vec<f32>>,
     {
@@ -362,16 +527,24 @@ impl SerialExecutor {
 pub struct ThreadedExecutor {
     /// Maximum number of worker threads (>= 1).
     pub threads: usize,
+    /// How workers claim per-node work (see [`Sched`]).
+    pub sched: Sched,
 }
 
 impl ThreadedExecutor {
     pub fn new(threads: usize) -> Self {
         ThreadedExecutor {
             threads: threads.max(1),
+            sched: Sched::Static,
         }
     }
 
-    pub fn run<N, T, F>(&self, nodes: &mut [N], f: &F) -> (Vec<T>, f64)
+    pub fn with_sched(mut self, sched: Sched) -> Self {
+        self.sched = sched;
+        self
+    }
+
+    pub fn run<N, T, F>(&self, nodes: &mut [N], f: &F) -> (Vec<T>, Vec<f64>)
     where
         N: Send,
         T: Send,
@@ -382,50 +555,33 @@ impl ThreadedExecutor {
         if workers <= 1 {
             return SerialExecutor.run(nodes, f);
         }
-        // Result slots are pre-allocated in node order; each worker fills
-        // the slots of its own contiguous chunk, so no ordering is lost.
-        let mut slots: Vec<Option<(T, f64)>> = Vec::with_capacity(p);
-        slots.resize_with(p, || None);
-        // Contiguous chunks of ceil(p/workers) nodes => at most `workers`
-        // worker threads, one chunk each.
-        let chunk = p.div_ceil(workers);
+        // Result cells are pre-allocated in node order; whichever worker
+        // claims node j fills cell j, so no ordering is lost.
+        let queue = NodeQueue::new(nodes, workers, self.sched);
+        let out: Vec<Mutex<Option<(T, f64)>>> = (0..p).map(|_| Mutex::new(None)).collect();
         std::thread::scope(|scope| {
-            for (w, (node_chunk, slot_chunk)) in nodes
-                .chunks_mut(chunk)
-                .zip(slots.chunks_mut(chunk))
-                .enumerate()
-            {
-                let first = w * chunk;
+            for w in 0..queue.spawned() {
+                let queue = &queue;
+                let out = &out;
                 scope.spawn(move || {
-                    for (i, (node, slot)) in
-                        node_chunk.iter_mut().zip(slot_chunk.iter_mut()).enumerate()
-                    {
+                    queue.drain(w, &|j, node| {
                         // Per-node wall time is measured inside the worker
-                        // thread; the coordinator takes the max afterwards.
+                        // thread; the cluster charges max (or makespan).
                         let start = std::time::Instant::now();
-                        let out = f(first + i, node);
-                        *slot = Some((out, start.elapsed().as_secs_f64()));
-                    }
+                        let v = f(j, node);
+                        *out[j].lock().unwrap() = Some((v, start.elapsed().as_secs_f64()));
+                    });
                 });
             }
         });
-        let mut max_secs = 0.0f64;
-        let out = slots
-            .into_iter()
-            .map(|s| {
-                let (v, secs) = s.expect("worker thread filled every slot");
-                max_secs = max_secs.max(secs);
-                v
-            })
-            .collect();
-        (out, max_secs)
+        collect_cells(out)
     }
 
-    /// Fused compute+reduce on scoped worker threads: same contiguous
-    /// chunking as [`ThreadedExecutor::run`], but the LAST worker to
-    /// finish folds all partials down the tree before the scope joins —
-    /// compute and reduction share one spawn/join cycle.
-    pub fn run_reduce<N, F>(&self, tree: &Tree, nodes: &mut [N], f: &F) -> (ReduceOutcome, f64)
+    /// Fused compute+reduce on scoped worker threads: same claim seam as
+    /// [`ThreadedExecutor::run`], but the LAST worker to finish folds all
+    /// partials down the tree before the scope joins — compute and
+    /// reduction share one spawn/join cycle.
+    pub fn run_reduce<N, F>(&self, tree: &Tree, nodes: &mut [N], f: &F) -> (ReduceOutcome, Vec<f64>)
     where
         N: Send,
         F: Fn(usize, &mut N) -> Result<Vec<f32>> + Sync,
@@ -435,18 +591,18 @@ impl ThreadedExecutor {
         if workers <= 1 {
             return SerialExecutor.run_reduce(tree, nodes, f);
         }
-        let chunk = p.div_ceil(workers);
-        let phase = FusedPhase::new(tree, p, nodes.chunks_mut(chunk).len());
+        let queue = NodeQueue::new(nodes, workers, self.sched);
+        let phase = FusedPhase::new(tree, p, queue.spawned());
         std::thread::scope(|scope| {
-            for (w, node_chunk) in nodes.chunks_mut(chunk).enumerate() {
-                let first = w * chunk;
+            for w in 0..queue.spawned() {
+                let queue = &queue;
                 let phase = &phase;
                 scope.spawn(move || {
-                    for (i, node) in node_chunk.iter_mut().enumerate() {
+                    queue.drain(w, &|j, node| {
                         let start = std::time::Instant::now();
-                        let r = f(first + i, node);
-                        phase.record(first + i, r, start.elapsed().as_secs_f64());
-                    }
+                        let r = f(j, node);
+                        phase.record(j, r, start.elapsed().as_secs_f64());
+                    });
                     phase.worker_done();
                 });
             }
@@ -515,6 +671,18 @@ struct PoolShared {
 }
 
 impl PoolShared {
+    // Wakeup audit (shared-cursor scheduling relies on this): `run_phase`
+    // installs the job, bumps the epoch, and notifies all under the SAME
+    // state mutex this loop waits on, so a worker is either already
+    // waiting (woken by the notify) or about to re-check the epoch before
+    // it can wait — a missed wakeup is impossible. Spurious wakes only
+    // re-run the epoch/participation check. A worker that slept through
+    // entire phases compares against the CURRENT epoch and job, never a
+    // stale one, so it can neither run a finished phase (the job is
+    // cleared under the lock before its epoch is observable as stale) nor
+    // double-run one (`seen` is updated before the job is taken). Locked
+    // by `rapid_phase_alternation_under_stealing_pool_exec` in
+    // rust/tests/scheduling.rs.
     fn worker_loop(&self, index: usize) {
         let mut seen = 0u64;
         loop {
@@ -607,20 +775,25 @@ impl Drop for PoolHandle {
 /// small — the many-small-dispatch shape streaming C storage produces.
 ///
 /// Scheduling is otherwise identical to [`ThreadedExecutor`] (same
-/// contiguous chunks, same in-worker metering, same node-order result
-/// collection), so training output is bit-identical across all executors.
+/// [`Sched`]-driven claim seam, same in-worker metering, same node-order
+/// result collection), so training output is bit-identical across all
+/// executors — and across schedulers.
 /// Worker panics are caught in the worker (the pool survives), and the
 /// first payload in completion order is re-thrown on the dispatching
 /// thread once the phase has fully drained.
 #[derive(Clone)]
 pub struct PooledExecutor {
     pool: Arc<PoolHandle>,
+    /// How workers claim per-node work (per executor handle, not per
+    /// pool: clones share the workers but may schedule differently).
+    pub sched: Sched,
 }
 
 impl std::fmt::Debug for PooledExecutor {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("PooledExecutor")
             .field("threads", &self.pool.threads)
+            .field("sched", &self.sched)
             .finish()
     }
 }
@@ -662,7 +835,13 @@ impl PooledExecutor {
                 threads,
                 handles,
             }),
+            sched: Sched::Static,
         }
+    }
+
+    pub fn with_sched(mut self, sched: Sched) -> Self {
+        self.sched = sched;
+        self
     }
 
     pub fn threads(&self) -> usize {
@@ -712,7 +891,7 @@ impl PooledExecutor {
         }
     }
 
-    pub fn run<N, T, F>(&self, nodes: &mut [N], f: &F) -> (Vec<T>, f64)
+    pub fn run<N, T, F>(&self, nodes: &mut [N], f: &F) -> (Vec<T>, Vec<f64>)
     where
         N: Send,
         T: Send,
@@ -723,48 +902,26 @@ impl PooledExecutor {
         if workers <= 1 {
             return SerialExecutor.run(nodes, f);
         }
-        let mut slots: Vec<Option<(T, f64)>> = Vec::with_capacity(p);
-        slots.resize_with(p, || None);
-        let chunk = p.div_ceil(workers);
+        // Same claim seam as ThreadedExecutor: per-node cells handed out
+        // through the queue (one uncontended lock per node per phase),
+        // results landing in node-order cells.
+        let queue = NodeQueue::new(nodes, workers, self.sched);
+        let out: Vec<Mutex<Option<(T, f64)>>> = (0..p).map(|_| Mutex::new(None)).collect();
         {
-            // Same contiguous chunking as ThreadedExecutor; each worker
-            // claims its own chunk exactly once through the Mutex (the
-            // per-phase cost of handing `&mut` chunks through a shared
-            // closure — one uncontended lock per worker per phase).
-            let chunks: Vec<Mutex<Option<(usize, &mut [N], &mut [Option<(T, f64)>])>>> = nodes
-                .chunks_mut(chunk)
-                .zip(slots.chunks_mut(chunk))
-                .enumerate()
-                .map(|(w, (nc, sc))| Mutex::new(Some((w * chunk, nc, sc))))
-                .collect();
-            let task = |w: usize| {
-                let (first, node_chunk, slot_chunk) = chunks[w]
-                    .lock()
-                    .unwrap()
-                    .take()
-                    .expect("chunk claimed exactly once per phase");
-                for (i, (node, slot)) in
-                    node_chunk.iter_mut().zip(slot_chunk.iter_mut()).enumerate()
-                {
+            let queue = &queue;
+            let out = &out;
+            let task = move |w: usize| {
+                queue.drain(w, &|j, node| {
                     // Per-node wall time is measured inside the worker
-                    // thread; the coordinator takes the max afterwards.
+                    // thread; the cluster charges max (or makespan).
                     let start = std::time::Instant::now();
-                    let out = f(first + i, node);
-                    *slot = Some((out, start.elapsed().as_secs_f64()));
-                }
+                    let v = f(j, node);
+                    *out[j].lock().unwrap() = Some((v, start.elapsed().as_secs_f64()));
+                });
             };
-            self.run_phase(chunks.len(), &task);
+            self.run_phase(queue.spawned(), &task);
         }
-        let mut max_secs = 0.0f64;
-        let out = slots
-            .into_iter()
-            .map(|s| {
-                let (v, secs) = s.expect("pool worker filled every slot");
-                max_secs = max_secs.max(secs);
-                v
-            })
-            .collect();
-        (out, max_secs)
+        collect_cells(out)
     }
 
     /// Fused compute+reduce on the persistent pool: ONE dispatch wakes the
@@ -772,7 +929,7 @@ impl PooledExecutor {
     /// folds them down the tree — all before anyone re-parks. This is the
     /// primitive that turns a TRON evaluation into a single barrier
     /// instead of a compute phase plus separate reductions.
-    pub fn run_reduce<N, F>(&self, tree: &Tree, nodes: &mut [N], f: &F) -> (ReduceOutcome, f64)
+    pub fn run_reduce<N, F>(&self, tree: &Tree, nodes: &mut [N], f: &F) -> (ReduceOutcome, Vec<f64>)
     where
         N: Send,
         F: Fn(usize, &mut N) -> Result<Vec<f32>> + Sync,
@@ -782,30 +939,21 @@ impl PooledExecutor {
         if workers <= 1 {
             return SerialExecutor.run_reduce(tree, nodes, f);
         }
-        let chunk = p.div_ceil(workers);
-        let chunks: Vec<Mutex<Option<(usize, &mut [N])>>> = nodes
-            .chunks_mut(chunk)
-            .enumerate()
-            .map(|(w, nc)| Mutex::new(Some((w * chunk, nc))))
-            .collect();
-        let n_chunks = chunks.len();
-        let phase = FusedPhase::new(tree, p, n_chunks);
+        let queue = NodeQueue::new(nodes, workers, self.sched);
+        let spawned = queue.spawned();
+        let phase = FusedPhase::new(tree, p, spawned);
         {
+            let queue = &queue;
             let phase = &phase;
             let task = move |w: usize| {
-                let (first, node_chunk) = chunks[w]
-                    .lock()
-                    .unwrap()
-                    .take()
-                    .expect("chunk claimed exactly once per phase");
-                for (i, node) in node_chunk.iter_mut().enumerate() {
+                queue.drain(w, &|j, node| {
                     let start = std::time::Instant::now();
-                    let r = f(first + i, node);
-                    phase.record(first + i, r, start.elapsed().as_secs_f64());
-                }
+                    let r = f(j, node);
+                    phase.record(j, r, start.elapsed().as_secs_f64());
+                });
                 phase.worker_done();
             };
-            self.run_phase(n_chunks, &task);
+            self.run_phase(spawned, &task);
         }
         phase.take()
     }
@@ -874,9 +1022,29 @@ impl Executor {
         }
     }
 
+    /// Set how the parallel executors claim per-node work (no-op on the
+    /// serial executor, which has nothing to schedule).
+    pub fn with_sched(self, sched: Sched) -> Executor {
+        match self {
+            Executor::Serial(e) => Executor::Serial(e),
+            Executor::Threaded(e) => Executor::Threaded(e.with_sched(sched)),
+            Executor::Pooled(e) => Executor::Pooled(e.with_sched(sched)),
+        }
+    }
+
+    pub fn sched(&self) -> Sched {
+        match self {
+            Executor::Serial(_) => Sched::Static,
+            Executor::Threaded(e) => e.sched,
+            Executor::Pooled(e) => e.sched,
+        }
+    }
+
     /// Apply `f` to every node; returns the per-node results in node order
-    /// plus the MAX single-node wall time (the simulated phase duration).
-    pub fn run<N, T, F>(&self, nodes: &mut [N], f: &F) -> (Vec<T>, f64)
+    /// plus each node's measured wall seconds (index j = node j). The
+    /// cluster folds these into the simulated phase duration — max under
+    /// static scheduling, the steal makespan model otherwise.
+    pub fn run<N, T, F>(&self, nodes: &mut [N], f: &F) -> (Vec<T>, Vec<f64>)
     where
         N: Send,
         T: Send,
@@ -892,13 +1060,13 @@ impl Executor {
     /// Fused compute+reduce: apply `f` to every node AND tree-sum the flat
     /// f32 partials inside the SAME phase (for the pool: one dispatch, no
     /// re-park between compute and reduction). Returns the reduced vector
-    /// — or the first failing node in node order — plus the MAX per-node
-    /// compute time (the fold is excluded, mirroring the split path where
-    /// the reduction is priced as communication). The fold is the shared
-    /// deterministic bottom-up walk, so the result is bit-identical to
-    /// [`Executor::run`] followed by [`Executor::reduce`] on every
+    /// — or the first failing node in node order — plus the per-node
+    /// compute seconds (the fold is excluded, mirroring the split path
+    /// where the reduction is priced as communication). The fold is the
+    /// shared deterministic bottom-up walk, so the result is bit-identical
+    /// to [`Executor::run`] followed by [`Executor::reduce`] on every
     /// executor.
-    pub fn run_reduce<N, F>(&self, tree: &Tree, nodes: &mut [N], f: &F) -> (ReduceOutcome, f64)
+    pub fn run_reduce<N, F>(&self, tree: &Tree, nodes: &mut [N], f: &F) -> (ReduceOutcome, Vec<f64>)
     where
         N: Send,
         F: Fn(usize, &mut N) -> Result<Vec<f32>> + Sync,
@@ -1373,9 +1541,132 @@ mod tests {
     }
 
     #[test]
+    fn sched_parses_and_names_round_trip() {
+        assert_eq!(Sched::parse("static").unwrap(), Sched::Static);
+        assert_eq!(
+            Sched::parse("steal").unwrap(),
+            Sched::Steal {
+                grain: DEFAULT_STEAL_GRAIN
+            }
+        );
+        assert_eq!(Sched::parse("steal:9").unwrap(), Sched::Steal { grain: 9 });
+        for s in [Sched::Static, Sched::Steal { grain: 7 }] {
+            assert_eq!(Sched::parse(&s.name()).unwrap(), s);
+        }
+        assert!(Sched::parse("steal:0").is_err());
+        assert!(Sched::parse("steal:x").is_err());
+        assert!(Sched::parse("lifo").is_err());
+    }
+
+    #[test]
+    fn stealing_matches_static_results_and_mutations() {
+        let f = |j: usize, n: &mut u64| {
+            *n += 1;
+            (j * 10) as u64 + *n
+        };
+        let steal = Sched::Steal { grain: 1 };
+        for threads in [2usize, 3, 7, 64] {
+            let mut a = vec![5u64; 13];
+            let mut b = vec![5u64; 13];
+            let mut c = vec![5u64; 13];
+            let (ra, _) = SerialExecutor.run(&mut a, &f);
+            let (rb, _) = ThreadedExecutor::new(threads).with_sched(steal).run(&mut b, &f);
+            let (rc, _) = PooledExecutor::new(threads).with_sched(steal).run(&mut c, &f);
+            assert_eq!(ra, rb, "threads={threads}");
+            assert_eq!(ra, rc, "pool={threads}");
+            assert_eq!(a, b);
+            assert_eq!(a, c);
+        }
+    }
+
+    #[test]
+    fn stealing_run_reduce_is_bit_identical_and_orders_errors() {
+        let steal = Sched::Steal { grain: 2 };
+        for p in [2usize, 5, 8, 13] {
+            let tree = Tree::new(p, 2);
+            let partial =
+                |j: usize| -> Vec<f32> { (0..9).map(|i| ((j * 17 + i) as f32).sin()).collect() };
+            let two_step = {
+                let mut nodes: Vec<usize> = (0..p).collect();
+                let (parts, _) = SerialExecutor.run(&mut nodes, &|j, _n: &mut usize| partial(j));
+                reduce_sum_tree(&tree, parts)
+            };
+            for exec in [
+                Executor::threaded(4).with_sched(steal),
+                Executor::pooled(4).with_sched(steal),
+            ] {
+                let mut nodes: Vec<usize> = (0..p).collect();
+                let (out, secs) =
+                    exec.run_reduce(&tree, &mut nodes, &|j, _n: &mut usize| Ok(partial(j)));
+                let got = out.unwrap_or_else(|(j, e)| panic!("node {j}: {e}"));
+                assert_eq!(secs.len(), p, "per-node secs, p={p}");
+                for (a, b) in got.iter().zip(&two_step) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "p={p} exec={}", exec.name());
+                }
+            }
+        }
+        // First error in node order even when a later node fails "first".
+        for exec in [
+            Executor::threaded(3).with_sched(steal),
+            Executor::pooled(3).with_sched(steal),
+        ] {
+            let tree = Tree::new(7, 2);
+            let mut nodes = vec![0u32; 7];
+            let (out, _) = exec.run_reduce(&tree, &mut nodes, &|j, n: &mut u32| {
+                *n += 1;
+                if j == 1 || j == 5 {
+                    anyhow::bail!("node {j} bad");
+                }
+                Ok(vec![j as f32])
+            });
+            let (j, _) = out.expect_err("must fail");
+            assert_eq!(j, 1, "{}: first error in node order", exec.name());
+            assert!(nodes.iter().all(|&n| n == 1));
+        }
+    }
+
+    #[test]
+    fn stealing_pool_panic_propagates_and_pool_survives() {
+        let pool = PooledExecutor::new(3).with_sched(Sched::Steal { grain: 4 });
+        let mut nodes = vec![0u32; 6];
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(&mut nodes, &|j, _: &mut u32| {
+                if j == 4 {
+                    panic!("stolen node exploded");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "panic under stealing must propagate");
+        let mut nodes = vec![0u32; 6];
+        let (out, _) = pool.run(&mut nodes, &|j, n| {
+            *n = 1;
+            j
+        });
+        assert_eq!(out, (0..6).collect::<Vec<_>>());
+        assert!(nodes.iter().all(|&n| n == 1));
+    }
+
+    #[test]
+    fn per_node_secs_are_reported_for_every_node() {
+        for exec in [
+            Executor::serial(),
+            Executor::threaded(4),
+            Executor::pooled(4).with_sched(Sched::Steal { grain: 1 }),
+        ] {
+            let mut nodes = vec![(); 9];
+            let (_, secs) = exec.run(&mut nodes, &|_, _| {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            });
+            assert_eq!(secs.len(), 9, "exec={}", exec.name());
+            assert!(secs.iter().all(|&s| s > 0.0), "exec={}", exec.name());
+        }
+    }
+
+    #[test]
     fn max_slots_in_flight_counts_window_overlap() {
         let slot = |s: f64, e: f64| SlotResult {
             items: vec![0u8],
+            item_secs: vec![e - s],
             max_item_secs: e - s,
             started_at: s,
             finished_at: e,

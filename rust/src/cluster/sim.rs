@@ -23,6 +23,12 @@ pub struct SimClock {
     barriers: u64,
     reduce_round_trips: u64,
     dispatches: u64,
+    /// Σ over phases of the slowest node's (skew-scaled) compute seconds —
+    /// the barrier-synchronized wall a static schedule pays.
+    max_node_secs: f64,
+    /// Σ over phases of ALL nodes' (skew-scaled) compute seconds — the
+    /// total useful work; `max·p / sum` is the straggler ratio.
+    sum_node_secs: f64,
 }
 
 impl SimClock {
@@ -37,6 +43,8 @@ impl SimClock {
             barriers: 0,
             reduce_round_trips: 0,
             dispatches: 0,
+            max_node_secs: 0.0,
+            sum_node_secs: 0.0,
         }
     }
 
@@ -99,6 +107,8 @@ impl SimClock {
         self.barriers += other.barriers;
         self.reduce_round_trips += other.reduce_round_trips;
         self.dispatches += other.dispatches;
+        self.max_node_secs += other.max_node_secs;
+        self.sum_node_secs += other.sum_node_secs;
     }
 
     pub fn compute_secs(&self, step: Step) -> f64 {
@@ -195,6 +205,38 @@ impl SimClock {
         self.recompute_flops
     }
 
+    /// Record one compute phase's straggler observables: the slowest
+    /// node's (skew-scaled) seconds and the sum over all nodes. These are
+    /// accumulated separately from the charged wall so the ledger can show
+    /// both what the straggler bound cost and how much of it a scheduler
+    /// recovered (see `cost::phase_wall`).
+    pub fn add_straggler(&mut self, max_node: f64, sum_nodes: f64) {
+        self.max_node_secs += max_node;
+        self.sum_node_secs += sum_nodes;
+    }
+
+    /// Σ over phases of the slowest node's compute seconds (the static
+    /// straggler bound).
+    pub fn max_node_secs(&self) -> f64 {
+        self.max_node_secs
+    }
+
+    /// Σ over phases of all nodes' compute seconds (total useful work).
+    pub fn sum_node_secs(&self) -> f64 {
+        self.sum_node_secs
+    }
+
+    /// Straggler ratio on a `p`-node fleet: slowest-node bound over the
+    /// perfectly-balanced wall (`max·p / sum`). 1.0 = no idle time; a 4×
+    /// single-node skew at p=8 yields ≈ 2.9. Returns 1.0 before any
+    /// compute has been recorded.
+    pub fn straggler_ratio(&self, p: usize) -> f64 {
+        if self.sum_node_secs <= 0.0 || p == 0 {
+            return 1.0;
+        }
+        self.max_node_secs * p as f64 / self.sum_node_secs
+    }
+
     /// Render a per-step breakdown (Table-4 style).
     pub fn report(&self) -> String {
         let mut t = crate::metrics::Table::new(&["step", "compute_s", "comm_s", "total_s"]);
@@ -213,6 +255,12 @@ impl SimClock {
             out.push_str(&format!(
                 "streaming C recompute: {:.3} GFLOP (inside the compute column)\n",
                 self.recompute_flops as f64 / 1e9
+            ));
+        }
+        if self.sum_node_secs > 0.0 {
+            out.push_str(&format!(
+                "straggler bound: {:.4}s slowest-node wall over {:.4}s total node work\n",
+                self.max_node_secs, self.sum_node_secs
             ));
         }
         out
@@ -329,6 +377,24 @@ mod tests {
         b.meter_broadcast(Step::Predict, &tree, 100);
         assert_eq!(b.comm_instances(), tree.depth() as u64);
         assert_eq!(b.comm_bytes(), 100 * tree.depth() as u64);
+    }
+
+    #[test]
+    fn straggler_observables_accumulate_merge_and_ratio() {
+        let mut c = SimClock::new(CostModel::free());
+        assert_eq!(c.straggler_ratio(8), 1.0, "no compute yet");
+        // Two phases on p=8 with a 4× single-node skew: max 4c, sum 11c.
+        c.add_straggler(4.0, 11.0);
+        c.add_straggler(4.0, 11.0);
+        assert!((c.max_node_secs() - 8.0).abs() < 1e-12);
+        assert!((c.sum_node_secs() - 22.0).abs() < 1e-12);
+        assert!((c.straggler_ratio(8) - 8.0 * 8.0 / 22.0).abs() < 1e-12);
+        let mut d = SimClock::new(CostModel::free());
+        d.add_straggler(1.0, 8.0);
+        c.merge(&d);
+        assert!((c.max_node_secs() - 9.0).abs() < 1e-12);
+        assert!((c.sum_node_secs() - 30.0).abs() < 1e-12);
+        assert!(c.report().contains("straggler bound"));
     }
 
     #[test]

@@ -6,6 +6,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
+use crate::cluster::{Sched, Skew};
 use crate::Result;
 
 /// Which loss / kernel machine to train (paper §2: SVM, KLR, KRR).
@@ -317,6 +318,14 @@ pub struct Settings {
     pub backend: Backend,
     /// How node-local phases execute: serial loop or real worker threads.
     pub executor: ExecutorChoice,
+    /// How phases are scheduled onto executor workers: static contiguous
+    /// chunks (the metering reference) or work stealing via a shared claim
+    /// cursor (`steal[:grain]`, where grain shapes only the simulated
+    /// makespan model).
+    pub sched: Sched,
+    /// Simulated fleet heterogeneity: deterministic per-node speed
+    /// multipliers applied by the ledger (`none`, `0=4,3=2`, `rand:max[:seed]`).
+    pub skew: Skew,
     /// How each node stores its kernel row block C_j.
     pub c_storage: CStorage,
     /// Fused (one barrier + one AllReduce per TRON evaluation) or split
@@ -360,6 +369,8 @@ impl Default for Settings {
                 Backend::Native
             },
             executor: ExecutorChoice::Serial,
+            sched: Sched::Static,
+            skew: Skew::None,
             c_storage: CStorage::Materialized,
             eval_pipeline: EvalPipeline::Fused,
             c_memory_budget: 256 << 20,
@@ -412,6 +423,8 @@ impl Settings {
                 "basis" => self.basis = BasisSelection::parse(v)?,
                 "backend" => self.backend = Backend::parse(v)?,
                 "executor" => self.executor = ExecutorChoice::parse(v)?,
+                "sched" => self.sched = Sched::parse(v)?,
+                "skew" => self.skew = Skew::parse(v)?,
                 "c_storage" => self.c_storage = CStorage::parse(v)?,
                 "eval_pipeline" => self.eval_pipeline = EvalPipeline::parse(v)?,
                 "c_memory_budget" => self.c_memory_budget = parse_bytes(v)?,
@@ -554,6 +567,27 @@ mod tests {
         assert_eq!(s.executor, ExecutorChoice::Threads { cap: 4 });
         let mut kv = BTreeMap::new();
         kv.insert("executor".to_string(), "coroutines".to_string());
+        assert!(s.apply(&kv).is_err());
+    }
+
+    #[test]
+    fn sched_and_skew_settings_apply_from_kv() {
+        let s = Settings::default();
+        assert_eq!(s.sched, Sched::Static);
+        assert_eq!(s.skew, Skew::None);
+        let mut s = Settings::default();
+        let mut kv = BTreeMap::new();
+        kv.insert("sched".to_string(), "steal:2".to_string());
+        kv.insert("skew".to_string(), "0=4".to_string());
+        s.apply(&kv).unwrap();
+        assert_eq!(s.sched, Sched::Steal { grain: 2 });
+        assert_eq!(s.skew.multiplier(0), 4.0);
+        assert_eq!(s.skew.multiplier(1), 1.0);
+        let mut kv = BTreeMap::new();
+        kv.insert("sched".to_string(), "fifo".to_string());
+        assert!(s.apply(&kv).is_err());
+        let mut kv = BTreeMap::new();
+        kv.insert("skew".to_string(), "0=0.25".to_string());
         assert!(s.apply(&kv).is_err());
     }
 

@@ -37,7 +37,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::cluster::{max_slots_in_flight, CostModel, Executor, SimClock, SlotWork, Tree};
+use crate::cluster::{
+    max_slots_in_flight, phase_wall, CostModel, Executor, Sched, SimClock, Skew, SlotWork, Tree,
+};
 use crate::data::shard_rows;
 use crate::linalg::Mat;
 use crate::metrics::{Metrics, Step};
@@ -72,6 +74,11 @@ pub struct ServingSession {
     /// TM×dpad padded basis tiles, resident on every node for the
     /// session's life.
     z_tiles: Vec<Vec<f32>>,
+    /// How the sim prices each batch's node shards: static slowest-shard
+    /// max, or the work-stealing makespan model (`--sched steal[:grain]`).
+    sched: Sched,
+    /// Simulated per-node speed multipliers applied before pricing.
+    skew: Skew,
     /// Live TM-padded β tiles behind an Arc swap (see module docs).
     beta: Mutex<Arc<Vec<Vec<f32>>>>,
     meter: Mutex<ServeMeter>,
@@ -129,6 +136,8 @@ impl ServingSession {
             gamma: model.gamma,
             m,
             col_tiles,
+            sched: Sched::Static,
+            skew: Skew::None,
             z_tiles,
             beta: Mutex::new(beta_tiles),
             meter: Mutex::new(meter),
@@ -136,6 +145,22 @@ impl ServingSession {
             rows: AtomicU64::new(0),
             peak_slots: AtomicU64::new(0),
         })
+    }
+
+    /// Builder: schedule batch node-shards by work stealing (the executor's
+    /// claim cursor) and price each batch's compute with the stealing
+    /// makespan model instead of the static slowest-shard max.
+    pub fn with_sched(mut self, sched: Sched) -> ServingSession {
+        self.sched = sched;
+        self.executor = self.executor.with_sched(sched);
+        self
+    }
+
+    /// Builder: simulated fleet heterogeneity (`--skew`) — node shard
+    /// seconds are scaled by each node's multiplier before pricing.
+    pub fn with_skew(mut self, skew: Skew) -> ServingSession {
+        self.skew = skew;
+        self
     }
 
     /// Score several independent batches in ONE multi-slot executor
@@ -227,9 +252,15 @@ impl ServingSession {
             meter
                 .clock
                 .meter_gather(Step::Predict, &self.tree, max_shard * x.cols() * f32s);
-            // ...the per-batch compute term (synchronous pricing: the
-            // slowest shard; the overlap win is wall-clock + barriers)...
-            meter.clock.add_compute(Step::Predict, slot.max_item_secs);
+            // ...the per-batch compute term: item j is node j's shard, so
+            // the phase-wall model prices it exactly like a training phase
+            // (static slowest-shard max, or the stealing makespan under
+            // `--sched steal`, after skew scaling)...
+            let (wall, max_node, sum_node) = phase_wall(self.sched, &self.skew, &slot.item_secs);
+            meter.clock.add_compute(Step::Predict, wall);
+            meter.clock.add_straggler(max_node, sum_node);
+            meter.wall.bump("max_node_us", (max_node * 1e6) as u64);
+            meter.wall.bump("sum_node_us", (sum_node * 1e6) as u64);
             // ...and the scores gather back up. β does NOT ship per batch:
             // it is resident from load/set_beta — that, plus the shared
             // barrier, is the serving path's whole comm story.
@@ -388,6 +419,51 @@ mod tests {
         let err = s.predict_batch(&wide).unwrap_err();
         assert!(format!("{err:#}").contains("9 features"), "{err:#}");
         assert_eq!(s.batches_served(), 0);
+    }
+
+    #[test]
+    fn skewed_serving_keeps_scores_and_prices_stealing_below_the_straggler_bound() {
+        let model = tiny_model(48, 5);
+        let skew = Skew::parse("0=4").unwrap();
+        let build = |sched: Sched| {
+            ServingSession::load(
+                &model,
+                Arc::new(NativeCompute::new()),
+                8,
+                Executor::serial(),
+                CostModel::free(),
+            )
+            .unwrap()
+            .with_sched(sched)
+            .with_skew(skew.clone())
+        };
+        let st = build(Sched::Static);
+        let sl = build(Sched::Steal { grain: 4 });
+        let mut rng = Rng::new(3);
+        let x = Mat::from_fn(96, 5, |_, _| rng.normal_f32());
+        let a = st.predict_batch(&x).unwrap();
+        let b = sl.predict_batch(&x).unwrap();
+        assert_eq!(a, b, "scores are scheduling-invariant");
+        // The comm story is untouched by the scheduler.
+        assert_eq!(st.sim().barriers(), sl.sim().barriers());
+        assert_eq!(st.sim().comm_bytes(), sl.sim().comm_bytes());
+        // Static charges exactly the slowest (skew-scaled) shard...
+        let st_sim = st.sim();
+        assert_eq!(
+            st_sim.step_secs(Step::Predict).to_bits(),
+            st_sim.max_node_secs().to_bits()
+        );
+        // ...stealing recovers idle time below that straggler bound.
+        let sl_sim = sl.sim();
+        assert!(
+            sl_sim.step_secs(Step::Predict) < 0.9 * sl_sim.max_node_secs(),
+            "steal {} vs straggler bound {}",
+            sl_sim.step_secs(Step::Predict),
+            sl_sim.max_node_secs()
+        );
+        // Straggler observables recorded on the ledger and mirrored.
+        assert!(st_sim.straggler_ratio(8) > 1.5, "{}", st_sim.straggler_ratio(8));
+        assert!((st.wall().max_node_secs() - st_sim.max_node_secs()).abs() < 1e-4);
     }
 
     #[test]

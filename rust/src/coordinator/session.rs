@@ -31,7 +31,7 @@
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::cluster::{Cluster, CostModel, SimClock};
+use crate::cluster::{phase_wall, Cluster, CostModel, SimClock};
 use crate::config::settings::{BasisSelection, Loss, Settings};
 use crate::data::{shard_rows, Dataset};
 use crate::linalg::Mat;
@@ -115,6 +115,9 @@ pub struct Session {
     mirrored_barriers: u64,
     mirrored_rounds: u64,
     mirrored_dispatches: u64,
+    /// Straggler observables (integer microseconds) already mirrored.
+    mirrored_max_node_us: u64,
+    mirrored_sum_node_us: u64,
     /// Set when a growth's C-column install failed part-way: the nodes'
     /// kernel state is inconsistent with the basis, so solve/predict/grow
     /// refuse to run rather than silently use stale C blocks.
@@ -145,6 +148,8 @@ impl Session {
             build_cluster(train_ds, settings.nodes, dpad, cost)
         });
         cluster.set_executor(settings.executor.to_executor());
+        cluster.set_sched(settings.sched);
+        cluster.set_skew(settings.skew.clone());
         for node in cluster.nodes_mut() {
             node.set_c_storage(settings.c_storage, settings.c_memory_budget);
         }
@@ -183,6 +188,8 @@ impl Session {
             mirrored_barriers: 0,
             mirrored_rounds: 0,
             mirrored_dispatches: 0,
+            mirrored_max_node_us: 0,
+            mirrored_sum_node_us: 0,
             poisoned: false,
             predict_meter,
         };
@@ -402,7 +409,7 @@ impl Session {
         // One read-only executor phase over p unit scratch slots (node
         // state is untouched — exactly why this can be `&self`).
         let mut scratch = vec![(); p];
-        let (parts, max_secs) = self.cluster.executor().run(&mut scratch, &|j, _: &mut ()| {
+        let (parts, node_secs) = self.cluster.executor().run(&mut scratch, &|j, _: &mut ()| {
             let shard = if p == 1 { x } else { &per_node[j] };
             score_rows(backend.as_ref(), shard, z_tiles, &beta_tiles, gamma, dpad)
         });
@@ -416,9 +423,14 @@ impl Session {
         meter
             .clock
             .meter_broadcast(Step::Predict, tree, self.basis.m() * std::mem::size_of::<f32>());
-        meter.clock.add_compute(Step::Predict, max_secs);
+        let (wall_secs, max_node, sum_node) =
+            phase_wall(self.cluster.sched(), self.cluster.skew(), &node_secs);
+        meter.clock.add_compute(Step::Predict, wall_secs);
+        meter.clock.add_straggler(max_node, sum_node);
         meter.clock.add_barrier();
         meter.wall.bump("barriers", 1);
+        meter.wall.bump("max_node_us", (max_node * 1e6) as u64);
+        meter.wall.bump("sum_node_us", (sum_node * 1e6) as u64);
         let mut out = Vec::with_capacity(x.rows());
         for (j, part) in parts.into_iter().enumerate() {
             match part {
@@ -530,6 +542,14 @@ impl Session {
         self.mirrored_barriers = b;
         self.mirrored_rounds = r;
         self.mirrored_dispatches = d;
+        // Straggler observables ride the same mirror, quantized to µs so
+        // they fit the integer counter map (monotone, so deltas are safe).
+        let mx = (self.cluster.clock.max_node_secs() * 1e6) as u64;
+        let sm = (self.cluster.clock.sum_node_secs() * 1e6) as u64;
+        self.wall.bump("max_node_us", mx - self.mirrored_max_node_us);
+        self.wall.bump("sum_node_us", sm - self.mirrored_sum_node_us);
+        self.mirrored_max_node_us = mx;
+        self.mirrored_sum_node_us = sm;
     }
 
     /// Consume the session into the one-shot [`TrainOutput`] shape (the
@@ -644,6 +664,16 @@ mod tests {
         // Mirrored counters agree with the ledger.
         assert_eq!(sess.wall().barriers(), sess.sim().barriers());
         assert_eq!(sess.wall().comm_rounds(), sess.sim().comm_rounds());
+        // Straggler observables mirror too (µs quantization tolerance).
+        assert!(sess.sim().max_node_secs() > 0.0);
+        assert!(sess.sim().sum_node_secs() >= sess.sim().max_node_secs());
+        assert!(
+            (sess.wall().max_node_secs() - sess.sim().max_node_secs()).abs() < 1e-4,
+            "wall mirror {} vs ledger {}",
+            sess.wall().max_node_secs(),
+            sess.sim().max_node_secs()
+        );
+        assert!((sess.wall().sum_node_secs() - sess.sim().sum_node_secs()).abs() < 1e-4);
     }
 
     #[test]

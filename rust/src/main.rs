@@ -45,7 +45,7 @@ fn main() {
 
 const TRAIN_FLAGS: &[&str] = &[
     "dataset", "libsvm", "ntest", "ntrain", "m", "nodes", "lambda", "sigma", "loss", "basis",
-    "backend", "exec", "c-storage", "c-memory-budget", "eval-pipeline", "solver", "max-iters",
+    "backend", "exec", "sched", "skew", "c-storage", "c-memory-budget", "eval-pipeline", "solver", "max-iters",
     "tol", "solver-max-iters", "solver-tol", "seed", "kmeans-iters", "artifacts", "config",
     "stages", "pack", "epochs", "verbose", "cost", "lambda-sweep", "save-model",
     // serve-only flags
@@ -93,6 +93,14 @@ Common flags:
                     metered serial loop, OS worker threads spawned per
                     phase, or a persistent worker pool parked across phases
                     — bit-identical results, :N caps the worker count)
+  --sched           static | steal[:grain]   (phase scheduling: fixed
+                    contiguous node chunks per worker, or a shared claim
+                    cursor so idle workers steal remaining nodes —
+                    bit-identical results; grain shapes only the simulated
+                    makespan model, default 4)
+  --skew            none | J=F[,J=F...] | rand:MAX[:SEED]   (simulated
+                    fleet heterogeneity: per-node speed multipliers ≥ 1,
+                    e.g. 0=4 makes node 0 four times slower on the ledger)
   --c-storage       materialized | streaming | streaming:rowbuf | auto
                     (C-block memory model: stored kernel rows, per-dispatch
                     recompute, recompute with a row-scoped tile scratch
@@ -157,6 +165,8 @@ fn settings_from(args: &Args) -> Result<Settings> {
         ("basis", "basis"),
         ("backend", "backend"),
         ("exec", "executor"),
+        ("sched", "sched"),
+        ("skew", "skew"),
         ("c-storage", "c_storage"),
         ("c-memory-budget", "c_memory_budget"),
         ("eval-pipeline", "eval_pipeline"),
@@ -240,6 +250,16 @@ fn print_run_report(session: &Session, solve: &Solve, acc: f64, verbose: bool) {
         session.sim().comm_instances(),
         session.sim().comm_bytes(),
     );
+    let sim = session.sim();
+    if sim.sum_node_secs() > 0.0 {
+        println!(
+            "stragglers: slowest-node bound {:.3}s over {:.3}s total node work (ratio {:.2}× at p={})",
+            sim.max_node_secs(),
+            sim.sum_node_secs(),
+            sim.straggler_ratio(session.p()),
+            session.p(),
+        );
+    }
     println!(
         "c-storage: peak {:.2} MiB of C per node (+ {:.2} MiB W-row cache), {} kernel-tile recomputes",
         solve.peak_c_bytes as f64 / (1 << 20) as f64,
@@ -257,7 +277,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let cost = cost_from(args)?;
     let (train_ds, test_ds) = load_data(args, &s)?;
     println!(
-        "dataset {} n={} d={} ntest={} | m={} p={} λ={} σ={} loss={} backend={:?} exec={} c-storage={} eval-pipeline={}",
+        "dataset {} n={} d={} ntest={} | m={} p={} λ={} σ={} loss={} backend={:?} exec={} sched={} skew={} c-storage={} eval-pipeline={}",
         train_ds.name,
         train_ds.n(),
         train_ds.d(),
@@ -269,6 +289,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         s.loss.name(),
         s.backend,
         s.executor.name(),
+        s.sched.name(),
+        s.skew.name(),
         s.c_storage.name(),
         s.eval_pipeline.name(),
     );
@@ -354,6 +376,16 @@ fn cmd_stagewise(args: &Args) -> Result<()> {
         session.sim().barriers(),
         session.sim().comm_rounds()
     );
+    let sim = session.sim();
+    if sim.sum_node_secs() > 0.0 {
+        println!(
+            "stragglers: slowest-node bound {:.3}s over {:.3}s total node work (ratio {:.2}× at p={})",
+            sim.max_node_secs(),
+            sim.sum_node_secs(),
+            sim.straggler_ratio(session.p()),
+            session.p(),
+        );
+    }
     if let Some(path) = args.str_opt("save-model") {
         session.model().save(path)?;
         println!("model saved to {path}");
@@ -445,7 +477,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         s.nodes,
         s.executor.to_executor(),
         cost,
-    )?;
+    )?
+    .with_sched(s.sched)
+    .with_skew(s.skew.clone());
     let clients = args.usize_or("clients", 8)?;
     let requests = args.usize_or("requests", 512)?;
     anyhow::ensure!(clients >= 1, "--clients must be >= 1");
@@ -474,6 +508,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     print!("{}", report.render());
     println!("\n== simulated serving ledger ==");
     print!("{}", session.sim().report());
+    let sim = session.sim();
+    if sim.sum_node_secs() > 0.0 {
+        println!(
+            "stragglers: slowest-node bound {:.3}s over {:.3}s total node work (ratio {:.2}× at p={})",
+            sim.max_node_secs(),
+            sim.sum_node_secs(),
+            sim.straggler_ratio(session.p()),
+            session.p(),
+        );
+    }
     anyhow::ensure!(
         report.mismatches == 0,
         "{} replies diverged from the serial reference",

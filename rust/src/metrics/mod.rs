@@ -133,6 +133,29 @@ impl Metrics {
         self.counter("dispatches")
     }
 
+    /// Slowest-node compute seconds (the straggler bound every barrier
+    /// waits on) — mirrored from the cluster ledger as integer
+    /// microseconds so the free-form counter map can carry it.
+    pub fn max_node_secs(&self) -> f64 {
+        self.counter("max_node_us") as f64 / 1e6
+    }
+
+    /// Summed per-node compute seconds (total fleet work) — mirrored from
+    /// the cluster ledger as integer microseconds.
+    pub fn sum_node_secs(&self) -> f64 {
+        self.counter("sum_node_us") as f64 / 1e6
+    }
+
+    /// Straggler ratio `max·p / sum`: how much longer the slowest-node
+    /// bound is than perfectly balanced work (1.0 = balanced fleet).
+    pub fn straggler_ratio(&self, p: usize) -> f64 {
+        let sum = self.sum_node_secs();
+        if sum <= 0.0 || p == 0 {
+            return 1.0;
+        }
+        self.max_node_secs() * p as f64 / sum
+    }
+
     pub fn counter(&self, key: &str) -> u64 {
         self.counters.get(key).copied().unwrap_or(0)
     }
@@ -258,6 +281,19 @@ mod tests {
         a.merge(&b);
         assert!((a.wall_secs(Step::Load) - 3.0).abs() < 1e-9);
         assert_eq!(a.counter("calls"), 5);
+    }
+
+    #[test]
+    fn straggler_mirror_reads_back_in_seconds() {
+        let mut m = Metrics::new();
+        assert_eq!(m.straggler_ratio(8), 1.0, "no work yet = balanced");
+        // 4s slowest node over 11s total work at p=8 (microsecond counters).
+        m.bump("max_node_us", 4_000_000);
+        m.bump("sum_node_us", 11_000_000);
+        assert!((m.max_node_secs() - 4.0).abs() < 1e-9);
+        assert!((m.sum_node_secs() - 11.0).abs() < 1e-9);
+        assert!((m.straggler_ratio(8) - 32.0 / 11.0).abs() < 1e-9);
+        assert_eq!(m.straggler_ratio(0), 1.0);
     }
 
     #[test]

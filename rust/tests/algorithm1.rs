@@ -38,6 +38,7 @@ fn settings(m: usize, nodes: usize) -> Settings {
         kmeans_max_m: 512,
         artifacts_dir: "artifacts".into(),
         solver: dkm::config::settings::SolverChoice::Tron,
+        ..Settings::default()
     }
 }
 

@@ -49,6 +49,7 @@ fn settings(
         kmeans_max_m: 512,
         artifacts_dir: "artifacts".into(),
         solver: dkm::config::settings::SolverChoice::Tron,
+        ..Settings::default()
     }
 }
 

@@ -250,6 +250,7 @@ fn end_to_end_training_pjrt_equals_native() {
         kmeans_max_m: 512,
         artifacts_dir: "artifacts".into(),
         solver: dkm::config::settings::SolverChoice::Tron,
+        ..Settings::default()
     };
     let pjrt = make_backend(Backend::Pjrt, "artifacts").unwrap();
     let native = make_backend(Backend::Native, "artifacts").unwrap();

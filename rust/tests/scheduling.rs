@@ -1,0 +1,293 @@
+//! Scheduling equivalence: work-stealing phase scheduling (`--sched
+//! steal[:grain]`) is BIT-IDENTICAL to static chunking — same β bits,
+//! same evaluation counts, same barriers/AllReduce rounds/dispatches/
+//! bytes — across executors × C-storage modes × eval pipelines ×
+//! solvers. Only the wall clocks may move: the real host wall (idle
+//! workers steal leftover nodes) and, under an injected `--skew`, the
+//! simulated wall (the ledger charges the stealing makespan instead of
+//! the slowest-node max). Plus the straggler metering regression and
+//! the error/panic contracts re-proven under the shared claim cursor.
+//!
+//! Test names end in `serial_exec` / `threads_exec` / `pool_exec` so CI
+//! can run the suite per executor group.
+
+use std::sync::Arc;
+
+use dkm::cluster::{Cluster, CostModel, Executor, Sched, Skew, SlotWork, Tree};
+use dkm::config::settings::{
+    Backend, BasisSelection, CStorage, EvalPipeline, ExecutorChoice, Loss, Settings, SolverChoice,
+};
+use dkm::coordinator::train;
+use dkm::data::{synth, Dataset};
+use dkm::metrics::Step;
+use dkm::runtime::make_backend;
+
+fn settings(m: usize, nodes: usize, executor: ExecutorChoice, sched: Sched) -> Settings {
+    Settings {
+        dataset: "covtype_like".into(),
+        m,
+        nodes,
+        lambda: 0.01,
+        sigma: 2.0,
+        loss: Loss::SqHinge,
+        basis: BasisSelection::Random,
+        backend: Backend::Native,
+        executor,
+        sched,
+        max_iters: 12,
+        tol: 1e-3,
+        seed: 42,
+        kmeans_iters: 2,
+        kmeans_max_m: 512,
+        ..Settings::default()
+    }
+}
+
+fn data(n: usize, ntest: usize, seed: u64) -> (Dataset, Dataset) {
+    let mut spec = synth::spec("covtype_like");
+    spec.n_train = n;
+    spec.n_test = ntest;
+    synth::generate(&spec, seed)
+}
+
+/// The tentpole grid: static-serial (the metering reference) vs stealing
+/// on `exec_steal`, across storage × pipeline × solver. β bits, eval
+/// counts and every synchronization counter must be identical.
+fn stealing_matches_static_grid(exec_steal: ExecutorChoice) {
+    let (tr, _) = data(900, 100, 23);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    for c_storage in [CStorage::Materialized, CStorage::Streaming] {
+        for pipeline in [EvalPipeline::Fused, EvalPipeline::Split] {
+            for solver in [SolverChoice::Tron, SolverChoice::Bcd { block: 32 }] {
+                let label = format!(
+                    "steal-exec={} storage={} pipeline={} solver={}",
+                    exec_steal.name(),
+                    c_storage.name(),
+                    pipeline.name(),
+                    solver.name(),
+                );
+                let mut a = settings(96, 8, ExecutorChoice::Serial, Sched::Static);
+                a.c_storage = c_storage;
+                a.eval_pipeline = pipeline;
+                a.solver = solver;
+                let mut b = settings(96, 8, exec_steal, Sched::Steal { grain: 2 });
+                b.c_storage = c_storage;
+                b.eval_pipeline = pipeline;
+                b.solver = solver;
+                let sa = train(&a, &tr, Arc::clone(&backend), CostModel::free()).unwrap();
+                let sb = train(&b, &tr, Arc::clone(&backend), CostModel::free()).unwrap();
+                assert_eq!(sa.model.beta.len(), sb.model.beta.len(), "{label}");
+                for (i, (x, y)) in sa.model.beta.iter().zip(&sb.model.beta).enumerate() {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{label} beta[{i}]: {x} vs {y}");
+                }
+                assert_eq!(sa.fg_evals, sb.fg_evals, "{label}");
+                assert_eq!(sa.hd_evals, sb.hd_evals, "{label}");
+                assert_eq!(sa.stats.iterations, sb.stats.iterations, "{label}");
+                assert_eq!(
+                    sa.stats.final_f.to_bits(),
+                    sb.stats.final_f.to_bits(),
+                    "{label}"
+                );
+                // The whole synchronization ledger is scheduler-independent.
+                assert_eq!(sa.sim.barriers(), sb.sim.barriers(), "{label}");
+                assert_eq!(sa.sim.comm_rounds(), sb.sim.comm_rounds(), "{label}");
+                assert_eq!(sa.sim.dispatches(), sb.sim.dispatches(), "{label}");
+                assert_eq!(sa.sim.comm_bytes(), sb.sim.comm_bytes(), "{label}");
+            }
+        }
+    }
+}
+
+#[test]
+fn stealing_matches_static_training_serial_exec() {
+    // On the serial executor the claim cursor is moot for execution but
+    // the STEAL pricing model is still selected — β and counters must
+    // not notice either way.
+    stealing_matches_static_grid(ExecutorChoice::Serial);
+}
+
+#[test]
+fn stealing_matches_static_training_threads_exec() {
+    stealing_matches_static_grid(ExecutorChoice::Threads { cap: 4 });
+}
+
+#[test]
+fn stealing_matches_static_training_pool_exec() {
+    stealing_matches_static_grid(ExecutorChoice::Pool { cap: 4 });
+}
+
+/// Metering regression: same skewed fleet, static vs stealing — every
+/// synchronization counter pinned equal, β bit-identical, but the
+/// stealing ledger's simulated compute drops well below the static
+/// (slowest-node) charge, and the straggler observables expose the skew.
+fn skew_metering_regression(exec: ExecutorChoice) {
+    let (tr, _) = data(900, 100, 29);
+    let backend = make_backend(Backend::Native, "artifacts").unwrap();
+    let mk = |sched: Sched| {
+        let mut s = settings(96, 8, exec, sched);
+        s.skew = Skew::parse("0=4").unwrap();
+        s
+    };
+    let st = train(&mk(Sched::Static), &tr, Arc::clone(&backend), CostModel::free()).unwrap();
+    let sl = train(
+        &mk(Sched::Steal { grain: 4 }),
+        &tr,
+        Arc::clone(&backend),
+        CostModel::free(),
+    )
+    .unwrap();
+    for (x, y) in st.model.beta.iter().zip(&sl.model.beta) {
+        assert_eq!(x.to_bits(), y.to_bits(), "skew must not touch β");
+    }
+    assert_eq!(st.sim.barriers(), sl.sim.barriers());
+    assert_eq!(st.sim.comm_rounds(), sl.sim.comm_rounds());
+    assert_eq!(st.sim.dispatches(), sl.sim.dispatches());
+    assert_eq!(st.sim.comm_bytes(), sl.sim.comm_bytes());
+    // The simulated TRON wall: static pays node 0's 4× rate on every
+    // phase; stealing spreads the oversplit items across the fleet.
+    let static_secs = st.sim.compute_secs(Step::Tron);
+    let steal_secs = sl.sim.compute_secs(Step::Tron);
+    assert!(
+        steal_secs < 0.8 * static_secs,
+        "stealing must beat the straggler bound: {steal_secs} vs {static_secs}"
+    );
+    // Straggler observables: a 4×-skewed node at p=8 over roughly even
+    // shards sits near 32/11 ≈ 2.9; noise tolerance down to 1.5.
+    assert!(
+        st.sim.straggler_ratio(8) > 1.5,
+        "ratio {}",
+        st.sim.straggler_ratio(8)
+    );
+    // ...and they are mirrored into the wall metrics (µs quantization).
+    assert!(st.wall.max_node_secs() > 0.0);
+    assert!(
+        (st.wall.max_node_secs() - st.sim.max_node_secs()).abs() < 1e-3,
+        "wall mirror {} vs ledger {}",
+        st.wall.max_node_secs(),
+        st.sim.max_node_secs()
+    );
+}
+
+#[test]
+fn skew_drops_sim_wall_with_counters_pinned_serial_exec() {
+    skew_metering_regression(ExecutorChoice::Serial);
+}
+
+#[test]
+fn skew_drops_sim_wall_with_counters_pinned_threads_exec() {
+    skew_metering_regression(ExecutorChoice::Threads { cap: 8 });
+}
+
+/// Node failures under stealing surface the FIRST error in node order —
+/// not claim order, not completion order — exactly like static chunking.
+fn stealing_error_order(exec: Executor) {
+    let name = exec.name();
+    let mut cl = Cluster::new(vec![0u32; 9], 2, CostModel::free())
+        .with_sched(Sched::Steal { grain: 1 })
+        .with_executor(exec);
+    let err = cl
+        .try_par_compute(Step::Kernel, |j, n: &mut u32| {
+            *n += 1;
+            if j == 1 || j == 5 {
+                anyhow::bail!("shard {j} corrupt")
+            }
+            Ok(j)
+        })
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("node 1"), "{name}: {msg}");
+    assert!(msg.contains("shard 1 corrupt"), "{name}: {msg}");
+    // The fused path reports the same node-ordered error.
+    let err = cl
+        .try_par_compute_reduce(Step::Tron, |j, _| {
+            if j >= 4 {
+                anyhow::bail!("partial {j} corrupt")
+            }
+            Ok(vec![j as f32])
+        })
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("node 4"), "{name}: {msg}");
+    // A synchronous phase still ran every node despite the failures.
+    for j in 0..9 {
+        assert_eq!(cl.node(j), &1, "{name}: node {j} skipped");
+    }
+}
+
+#[test]
+fn stealing_reports_first_error_in_node_order_threads_exec() {
+    stealing_error_order(Executor::threaded(3));
+}
+
+#[test]
+fn stealing_reports_first_error_in_node_order_pool_exec() {
+    stealing_error_order(Executor::pooled(3));
+}
+
+/// A worker panic mid-phase under stealing propagates to the caller and
+/// the pool keeps serving later phases — including fused reduces.
+#[test]
+fn stealing_panic_propagates_and_pool_survives_pool_exec() {
+    let mut cl = Cluster::new(vec![0u32; 6], 2, CostModel::free())
+        .with_sched(Sched::Steal { grain: 2 })
+        .with_executor(Executor::pooled(3));
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        cl.par_compute(Step::Kernel, |j, _| {
+            if j == 4 {
+                panic!("worker died on node 4 under stealing");
+            }
+        });
+    }));
+    assert!(caught.is_err(), "worker panic must reach the caller");
+    let out = cl.par_compute_reduce(Step::Tron, |j, n| {
+        *n = j as u32 + 1;
+        vec![1.0f32]
+    });
+    assert_eq!(out, vec![6.0]);
+    assert_eq!(cl.node(5), &6);
+}
+
+/// The wakeup-audit lock (see the worker-loop comment in
+/// `cluster/exec.rs`): rapid alternation of `run`, `run_reduce` and
+/// `run_concurrent` phases on ONE pool under the shared claim cursor.
+/// A missed wakeup would deadlock a phase; a stale-epoch double run
+/// would corrupt node state or the claim-once cells — 500 rounds of
+/// all three phase kinds lock the protocol's behavior.
+#[test]
+fn rapid_phase_alternation_under_stealing_pool_exec() {
+    let exec = Executor::pooled(3).with_sched(Sched::Steal { grain: 1 });
+    let tree = Tree::new(7, 2);
+    let mut nodes: Vec<u64> = vec![0; 7];
+    for round in 0..500u64 {
+        let (out, secs) = exec.run(&mut nodes, &|j, n: &mut u64| {
+            *n += 1;
+            (round, j)
+        });
+        assert_eq!(out, (0..7).map(|j| (round, j)).collect::<Vec<_>>());
+        assert_eq!(secs.len(), 7, "per-node seconds for every node");
+        let (red, _) = exec.run_reduce(&tree, &mut nodes, &|j, n: &mut u64| {
+            *n += 1;
+            Ok(vec![j as f32])
+        });
+        assert_eq!(red.unwrap(), vec![21.0]);
+        let slot_run = |i: usize| i as u64 + round;
+        let slots = [
+            SlotWork {
+                items: 5,
+                run: &slot_run,
+            },
+            SlotWork {
+                items: 3,
+                run: &slot_run,
+            },
+        ];
+        let res = exec.run_concurrent(&slots);
+        assert_eq!(res.len(), 2);
+        assert_eq!(res[0].items, (0..5).map(|i| i + round).collect::<Vec<_>>());
+        assert_eq!(res[1].items, (0..3).map(|i| i + round).collect::<Vec<_>>());
+    }
+    // Every node saw every run AND every run_reduce exactly once.
+    for (j, n) in nodes.iter().enumerate() {
+        assert_eq!(*n, 1000, "node {j} missed or double-ran a phase");
+    }
+}
