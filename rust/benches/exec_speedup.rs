@@ -25,6 +25,12 @@
 //! counter is pinned, but work-stealing's simulated phase wall must drop
 //! well below the static slowest-node bound.
 //!
+//! A fifth section injects random task deaths (`--faults rand:p`) and
+//! measures the resilience subsystem's recovery bill: deaths, re-launches
+//! and the simulated backoff seconds — with β bit-identical to the clean
+//! run and the communication ledger pinned (recovery is retry-only; it
+//! never re-enters a collective).
+//!
 //! Run: cargo bench --bench exec_speedup
 //! (DKM_BENCH_SCALE scales the dataset; DKM_THREADS caps the workers.)
 
@@ -355,6 +361,77 @@ fn main() {
         static_sim / steal_sim.max(1e-12)
     );
 
+    // --- fault recovery: injected task deaths, retries, backoff bill ---
+    // Serial executor again for ledger-grade numbers. The faulty run must
+    // train to the SAME β bits with the SAME communication ledger; its
+    // whole overhead is the re-launch backoff charged as compute.
+    let plans = [
+        ("none", dkm::cluster::FaultPlan::none()),
+        ("rand:0.02", dkm::cluster::FaultPlan::parse("rand:0.02:1234").expect("fault spec")),
+        ("rand:0.10", dkm::cluster::FaultPlan::parse("rand:0.10:1234").expect("fault spec")),
+    ];
+    let mut fault_outs = Vec::new();
+    for (name, plan) in &plans {
+        let mut s = common::settings("covtype_like", m, nodes);
+        s.executor = ExecutorChoice::Serial;
+        s.faults = plan.clone();
+        s.retries = 6;
+        s.retry_backoff = 0.05;
+        let out = train(&s, &train_ds, Arc::clone(&backend), common::free())
+            .expect("training failed under injected faults");
+        fault_outs.push((*name, out));
+    }
+    let (_, fault_clean) = &fault_outs[0];
+    let mut ft = Table::new(&[
+        "faults",
+        "deaths",
+        "retries",
+        "backoff_s",
+        "sim_total_s",
+        "overhead",
+        "barriers",
+        "comm_bytes",
+    ]);
+    let clean_total = fault_clean.sim.total_secs();
+    for (name, out) in &fault_outs {
+        let backoff = out.sim.retries() as f64 * 0.05;
+        ft.row(&[
+            (*name).into(),
+            format!("{}", out.sim.faults()),
+            format!("{}", out.sim.retries()),
+            format!("{backoff:.2}"),
+            format!("{:.3}", out.sim.total_secs()),
+            format!("{:.1}%", (out.sim.total_secs() / clean_total.max(1e-12) - 1.0) * 100.0),
+            format!("{}", out.sim.barriers()),
+            format!("{}", out.sim.comm_bytes()),
+        ]);
+    }
+    println!("\ninjected-fault recovery bill (serial executor, retry backoff 0.05s):");
+    print!("{}", ft.render());
+    let (_, fault_heavy) = &fault_outs[2];
+    let same_fault = fault_clean
+        .model
+        .beta
+        .iter()
+        .zip(&fault_heavy.model.beta)
+        .all(|(a, b)| a.to_bits() == b.to_bits());
+    println!(
+        "β bit-identical clean vs rand:0.10: {}",
+        if same_fault { "YES" } else { "NO (BUG!)" }
+    );
+    assert!(same_fault, "fault recovery moved β");
+    assert!(fault_heavy.sim.faults() > 0, "the 10% plan never fired");
+    assert_eq!(
+        fault_clean.sim.barriers(),
+        fault_heavy.sim.barriers(),
+        "recovery must not add barriers"
+    );
+    assert_eq!(
+        fault_clean.sim.comm_bytes(),
+        fault_heavy.sim.comm_bytes(),
+        "recovery must not move bytes"
+    );
+
     let mut o = std::collections::BTreeMap::new();
     let mut num = |k: &str, v: f64| {
         o.insert(k.to_string(), dkm::config::Json::Num(v));
@@ -374,5 +451,12 @@ fn main() {
     num("skew_steal_sim_s", steal_sim);
     num("skew_steal_speedup", static_sim / steal_sim.max(1e-12));
     num("skew_straggler_ratio", skew_static.sim.straggler_ratio(nodes));
+    num("fault_deaths", fault_heavy.sim.faults() as f64);
+    num("fault_retries", fault_heavy.sim.retries() as f64);
+    num("fault_backoff_s", fault_heavy.sim.retries() as f64 * 0.05);
+    num(
+        "fault_overhead_frac",
+        fault_heavy.sim.total_secs() / clean_total.max(1e-12) - 1.0,
+    );
     common::write_json("exec_speedup", &dkm::config::Json::Obj(o));
 }

@@ -10,7 +10,7 @@ use super::exec::Sched;
 use crate::Result;
 
 /// Per-instance communication cost parameters.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CostModel {
     /// C: latency per communication instance, seconds.
     pub latency_s: f64,

@@ -1,0 +1,254 @@
+//! Deterministic phase-fault injection + the bounded retry policy.
+//!
+//! The source paper runs its AllReduce tree on Hadoop precisely because
+//! MapReduce supplies fault tolerance around long iterative jobs. This
+//! module is the simulated counterpart: a [`FaultPlan`] decides — purely
+//! as a function of (phase index, node id, attempt) — whether a node's
+//! task "dies" at dispatch, and a [`RetryPolicy`] bounds how many times
+//! the cluster re-launches it (charging a simulated backoff to the
+//! ledger) before the phase aborts with the usual
+//! first-error-in-node-order report.
+//!
+//! Faults fire at task ENTRY, before the node closure touches any node
+//! state. That single rule is what makes recovery bit-identical: a
+//! retried task is indistinguishable from one that was dispatched late,
+//! so β and every reduction are unchanged — only the resilience counters
+//! and the backoff seconds on the ledger show that anything happened.
+//!
+//! Spec grammar (`--faults`, comma-separated; `none` = empty plan):
+//!
+//! ```text
+//! node=J@phase=K      one fixed fault: node J's task dies on its first
+//!                     attempt of injectable phase K (a single retry
+//!                     always recovers it)
+//! rand:P[:SEED]       every (phase, node, attempt) dies independently
+//!                     with probability P — seeded, so the same plan
+//!                     replays the same faults (default seed 0x5EED)
+//! ```
+
+use crate::Result;
+
+/// One failure trigger of a [`FaultPlan`].
+#[derive(Clone, Debug, PartialEq)]
+enum Trigger {
+    /// `node=J@phase=K`: fires on attempt 0 only, so one retry recovers.
+    Fixed { node: usize, phase: u64 },
+    /// `rand:P[:SEED]`: each (phase, node, attempt) fails independently
+    /// with probability `p` — retries re-roll, so `rand:1` exhausts any
+    /// retry budget (the graceful-abort path).
+    Random { p: f64, seed: u64 },
+}
+
+const DEFAULT_RAND_SEED: u64 = 0x5EED;
+
+/// A seeded, deterministic plan of injected phase faults.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    triggers: Vec<Trigger>,
+}
+
+impl FaultPlan {
+    /// The empty plan: no faults, zero overhead on every phase.
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.triggers.is_empty()
+    }
+
+    /// Parse a `--faults` spec. See the module docs for the grammar.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "none" {
+            return Ok(FaultPlan::none());
+        }
+        let mut triggers = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if let Some(rest) = part.strip_prefix("rand:") {
+                let mut it = rest.splitn(2, ':');
+                let p: f64 = it
+                    .next()
+                    .unwrap_or("")
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("faults {part:?}: bad probability: {e}"))?;
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&p),
+                    "faults {part:?}: probability must be in [0, 1]"
+                );
+                let seed = match it.next() {
+                    Some(s) => s
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("faults {part:?}: bad seed: {e}"))?,
+                    None => DEFAULT_RAND_SEED,
+                };
+                triggers.push(Trigger::Random { p, seed });
+            } else if let Some(rest) = part.strip_prefix("node=") {
+                let (node, phase) = rest.split_once("@phase=").ok_or_else(|| {
+                    anyhow::anyhow!("faults {part:?}: expected node=J@phase=K")
+                })?;
+                triggers.push(Trigger::Fixed {
+                    node: node
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("faults {part:?}: bad node: {e}"))?,
+                    phase: phase
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("faults {part:?}: bad phase: {e}"))?,
+                });
+            } else {
+                anyhow::bail!(
+                    "unknown fault trigger {part:?} (node=J@phase=K | rand:P[:SEED] | none)"
+                );
+            }
+        }
+        Ok(FaultPlan { triggers })
+    }
+
+    /// Round-trippable display form (`FaultPlan::parse(plan.name())` is
+    /// the same plan).
+    pub fn name(&self) -> String {
+        if self.triggers.is_empty() {
+            return "none".into();
+        }
+        self.triggers
+            .iter()
+            .map(|t| match t {
+                Trigger::Fixed { node, phase } => format!("node={node}@phase={phase}"),
+                Trigger::Random { p, seed } => format!("rand:{p}:{seed}"),
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Does any trigger kill (`phase`, `node`)'s task on this `attempt`?
+    /// Pure and deterministic: the same plan replays the same faults.
+    pub fn fires(&self, phase: u64, node: usize, attempt: u32) -> bool {
+        self.triggers.iter().any(|t| match t {
+            Trigger::Fixed { node: n, phase: k } => {
+                *n == node && *k == phase && attempt == 0
+            }
+            Trigger::Random { p, seed } => {
+                fault_fraction(*seed, phase, node, attempt) < *p
+            }
+        })
+    }
+}
+
+/// SplitMix-style hash of (seed, phase, node, attempt) to a uniform
+/// fraction in [0, 1) — the same finalizer `Skew::Random` uses, so the
+/// per-trial draws are decorrelated and stable across platforms.
+fn fault_fraction(seed: u64, phase: u64, node: usize, attempt: u32) -> f64 {
+    let mut z = seed
+        .wrapping_add(0x9E3779B97F4A7C15u64.wrapping_mul(phase.wrapping_add(1)))
+        .wrapping_add(0xBF58476D1CE4E5B9u64.wrapping_mul(node as u64 + 1))
+        .wrapping_add(0x94D049BB133111EBu64.wrapping_mul(attempt as u64 + 1));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^= z >> 31;
+    (z >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// How the cluster reacts to an injected task death: re-launch up to
+/// `max_retries` times, charging `backoff_secs` of simulated wall per
+/// re-launch to the phase's compute ledger, then give up and surface the
+/// first exhausted node in node order (the coordinator abort path).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    pub max_retries: u32,
+    pub backoff_secs: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 2,
+            backoff_secs: 0.05,
+        }
+    }
+}
+
+/// The error a phase surfaces when a node's retry budget is exhausted.
+/// Carried through anyhow so the existing first-error-in-node-order scan
+/// reports it like any real node failure.
+pub fn exhausted_error(phase: u64, node: usize, attempts: u32) -> anyhow::Error {
+    anyhow::anyhow!(
+        "injected fault: task died {attempts} times in phase {phase} (retries exhausted)"
+    )
+    .context(format!("node {node} lost after {attempts} attempts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_name_round_trips() {
+        for spec in ["none", "node=2@phase=17", "rand:0.25:42", "node=0@phase=3,rand:0.5:7"] {
+            let plan = FaultPlan::parse(spec).unwrap();
+            let again = FaultPlan::parse(&plan.name()).unwrap();
+            assert_eq!(plan, again, "{spec}");
+        }
+        assert_eq!(FaultPlan::parse("none").unwrap().name(), "none");
+        assert!(FaultPlan::parse("none").unwrap().is_empty());
+        // Default seed fills in and round-trips explicitly.
+        let plan = FaultPlan::parse("rand:0.1").unwrap();
+        assert_eq!(plan.name(), format!("rand:0.1:{DEFAULT_RAND_SEED}"));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in ["node=2", "node=2@phase=x", "rand:1.5", "rand:-0.1", "chaos", "node=a@phase=1"] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad} should not parse");
+        }
+    }
+
+    #[test]
+    fn fixed_trigger_fires_once_then_recovers() {
+        let plan = FaultPlan::parse("node=2@phase=17").unwrap();
+        assert!(plan.fires(17, 2, 0));
+        assert!(!plan.fires(17, 2, 1), "one retry recovers a fixed fault");
+        assert!(!plan.fires(16, 2, 0));
+        assert!(!plan.fires(17, 1, 0));
+    }
+
+    #[test]
+    fn random_trigger_is_deterministic_and_rate_roughly_p() {
+        let plan = FaultPlan::parse("rand:0.25:9").unwrap();
+        let again = FaultPlan::parse("rand:0.25:9").unwrap();
+        let mut fires = 0usize;
+        let mut total = 0usize;
+        for phase in 0..200u64 {
+            for node in 0..8usize {
+                assert_eq!(plan.fires(phase, node, 0), again.fires(phase, node, 0));
+                total += 1;
+                if plan.fires(phase, node, 0) {
+                    fires += 1;
+                }
+            }
+        }
+        let rate = fires as f64 / total as f64;
+        assert!((0.18..=0.32).contains(&rate), "rate {rate}");
+        // p=1 fires every attempt (the exhaustion path); p=0 never fires.
+        let always = FaultPlan::parse("rand:1:3").unwrap();
+        let never = FaultPlan::parse("rand:0:3").unwrap();
+        for a in 0..5 {
+            assert!(always.fires(7, 3, a));
+            assert!(!never.fires(7, 3, a));
+        }
+    }
+
+    #[test]
+    fn retries_reroll_independently() {
+        // With p=0.5 some (phase, node) pairs must recover on a later
+        // attempt — i.e. attempt is genuinely part of the draw.
+        let plan = FaultPlan::parse("rand:0.5:11").unwrap();
+        let mut recovered = false;
+        for phase in 0..50u64 {
+            if plan.fires(phase, 0, 0) && !plan.fires(phase, 0, 1) {
+                recovered = true;
+            }
+        }
+        assert!(recovered);
+    }
+}

@@ -12,7 +12,7 @@ use super::cost::CostModel;
 use super::tree::Tree;
 use crate::metrics::Step;
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SimClock {
     cost: CostModel,
     compute: BTreeMap<Step, f64>,
@@ -23,12 +23,38 @@ pub struct SimClock {
     barriers: u64,
     reduce_round_trips: u64,
     dispatches: u64,
+    /// Injected task deaths observed (every fault-plan fire, including
+    /// the ones a retry later recovered).
+    faults: u64,
+    /// Task re-launches after injected deaths; each one charged
+    /// `RetryPolicy::backoff_secs` of simulated wall to its phase.
+    retries: u64,
     /// Σ over phases of the slowest node's (skew-scaled) compute seconds —
     /// the barrier-synchronized wall a static schedule pays.
     max_node_secs: f64,
     /// Σ over phases of ALL nodes' (skew-scaled) compute seconds — the
     /// total useful work; `max·p / sum` is the straggler ratio.
     sum_node_secs: f64,
+}
+
+/// A plain-data image of a [`SimClock`] — every counter and the per-step
+/// second series with f64 bits preserved — so a checkpoint can freeze a
+/// mid-training ledger and resume restores it exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClockSnapshot {
+    pub cost: CostModel,
+    pub compute: Vec<(Step, f64)>,
+    pub comm: Vec<(Step, f64)>,
+    pub comm_instances: u64,
+    pub comm_bytes: u64,
+    pub recompute_flops: u64,
+    pub barriers: u64,
+    pub reduce_round_trips: u64,
+    pub dispatches: u64,
+    pub faults: u64,
+    pub retries: u64,
+    pub max_node_secs: f64,
+    pub sum_node_secs: f64,
 }
 
 impl SimClock {
@@ -43,6 +69,8 @@ impl SimClock {
             barriers: 0,
             reduce_round_trips: 0,
             dispatches: 0,
+            faults: 0,
+            retries: 0,
             max_node_secs: 0.0,
             sum_node_secs: 0.0,
         }
@@ -50,6 +78,45 @@ impl SimClock {
 
     pub fn cost(&self) -> CostModel {
         self.cost
+    }
+
+    /// Freeze the whole ledger into plain data (f64 bits preserved).
+    pub fn snapshot(&self) -> ClockSnapshot {
+        ClockSnapshot {
+            cost: self.cost,
+            compute: self.compute.iter().map(|(s, v)| (*s, *v)).collect(),
+            comm: self.comm.iter().map(|(s, v)| (*s, *v)).collect(),
+            comm_instances: self.comm_instances,
+            comm_bytes: self.comm_bytes,
+            recompute_flops: self.recompute_flops,
+            barriers: self.barriers,
+            reduce_round_trips: self.reduce_round_trips,
+            dispatches: self.dispatches,
+            faults: self.faults,
+            retries: self.retries,
+            max_node_secs: self.max_node_secs,
+            sum_node_secs: self.sum_node_secs,
+        }
+    }
+
+    /// Rebuild a clock from a [`ClockSnapshot`] — the bitwise inverse of
+    /// [`SimClock::snapshot`] (checkpoint resume's ledger restore).
+    pub fn from_snapshot(s: &ClockSnapshot) -> SimClock {
+        SimClock {
+            cost: s.cost,
+            compute: s.compute.iter().cloned().collect(),
+            comm: s.comm.iter().cloned().collect(),
+            comm_instances: s.comm_instances,
+            comm_bytes: s.comm_bytes,
+            recompute_flops: s.recompute_flops,
+            barriers: s.barriers,
+            reduce_round_trips: s.reduce_round_trips,
+            dispatches: s.dispatches,
+            faults: s.faults,
+            retries: s.retries,
+            max_node_secs: s.max_node_secs,
+            sum_node_secs: s.sum_node_secs,
+        }
     }
 
     pub fn add_compute(&mut self, step: Step, secs: f64) {
@@ -107,6 +174,8 @@ impl SimClock {
         self.barriers += other.barriers;
         self.reduce_round_trips += other.reduce_round_trips;
         self.dispatches += other.dispatches;
+        self.faults += other.faults;
+        self.retries += other.retries;
         self.max_node_secs += other.max_node_secs;
         self.sum_node_secs += other.sum_node_secs;
     }
@@ -193,6 +262,29 @@ impl SimClock {
         self.dispatches
     }
 
+    /// Record injected task deaths (fault-plan fires), recovered or not.
+    pub fn add_faults(&mut self, n: u64) {
+        self.faults += n;
+    }
+
+    /// Injected task deaths observed so far.
+    pub fn faults(&self) -> u64 {
+        self.faults
+    }
+
+    /// Record task re-launches after injected deaths. The backoff seconds
+    /// those re-launches cost are charged separately through
+    /// [`SimClock::add_compute`] on the phase's step, so the ledger's
+    /// time and this count stay independently auditable.
+    pub fn add_retries(&mut self, n: u64) {
+        self.retries += n;
+    }
+
+    /// Task re-launches after injected deaths so far.
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
     /// Charge extra FLOPs spent recomputing kernel tiles (the streaming
     /// C-storage tradeoff). The *time* of those FLOPs is already inside the
     /// measured per-phase compute; this keeps the count visible so benches
@@ -261,6 +353,12 @@ impl SimClock {
             out.push_str(&format!(
                 "straggler bound: {:.4}s slowest-node wall over {:.4}s total node work\n",
                 self.max_node_secs, self.sum_node_secs
+            ));
+        }
+        if self.faults > 0 {
+            out.push_str(&format!(
+                "resilience: {} injected task deaths, {} re-launches (backoff inside the compute column)\n",
+                self.faults, self.retries
             ));
         }
         out
@@ -395,6 +493,51 @@ mod tests {
         assert!((c.max_node_secs() - 9.0).abs() < 1e-12);
         assert!((c.sum_node_secs() - 30.0).abs() < 1e-12);
         assert!(c.report().contains("straggler bound"));
+    }
+
+    #[test]
+    fn resilience_counters_accumulate_merge_and_report() {
+        let mut c = SimClock::new(CostModel::free());
+        assert_eq!(c.faults(), 0);
+        assert_eq!(c.retries(), 0);
+        assert!(!c.report().contains("resilience"));
+        c.add_faults(3);
+        c.add_retries(2);
+        let mut d = SimClock::new(CostModel::free());
+        d.add_faults(1);
+        d.add_retries(1);
+        c.merge(&d);
+        assert_eq!(c.faults(), 4);
+        assert_eq!(c.retries(), 3);
+        assert!(c.report().contains("4 injected task deaths"), "{}", c.report());
+    }
+
+    #[test]
+    fn snapshot_round_trips_bitwise() {
+        let mut c = SimClock::new(CostModel {
+            latency_s: 0.01,
+            per_byte_s: 1e-8,
+        });
+        c.add_compute(Step::Kernel, 1.0 / 3.0);
+        c.add_compute(Step::Tron, 0.1234567891234);
+        c.add_reduce(Step::Tron, 4, 640);
+        c.add_comm_rounds(Step::KMeans, 2, 32);
+        c.add_barrier();
+        c.add_dispatches(7);
+        c.add_recompute_flops(99);
+        c.add_faults(2);
+        c.add_retries(1);
+        c.add_straggler(0.5, 1.75);
+        let restored = SimClock::from_snapshot(&c.snapshot());
+        assert_eq!(c, restored);
+        assert_eq!(
+            c.compute_secs(Step::Tron).to_bits(),
+            restored.compute_secs(Step::Tron).to_bits()
+        );
+        assert_eq!(
+            c.comm_secs(Step::Tron).to_bits(),
+            restored.comm_secs(Step::Tron).to_bits()
+        );
     }
 
     #[test]

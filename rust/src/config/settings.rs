@@ -6,7 +6,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use crate::cluster::{Sched, Skew};
+use crate::cluster::{FaultPlan, RetryPolicy, Sched, Skew};
 use crate::Result;
 
 /// Which loss / kernel machine to train (paper §2: SVM, KLR, KRR).
@@ -349,6 +349,25 @@ pub struct Settings {
     /// m threshold below which Auto picks K-means.
     pub kmeans_max_m: usize,
     pub artifacts_dir: String,
+    /// Injected phase faults (`none`, `node=J@phase=K,…`, or
+    /// `rand:p[:seed]`) — the resilience subsystem's deterministic,
+    /// seeded failure source (see [`crate::cluster::fault`]).
+    pub faults: FaultPlan,
+    /// Bounded retries per failed node task before the phase aborts.
+    pub retries: u32,
+    /// Simulated seconds charged to the phase's ledger step per retry
+    /// (the relaunch cost a real cluster would pay).
+    pub retry_backoff: f64,
+    /// Write a resumable mid-training checkpoint every N solver rounds
+    /// (0 = off). Each write atomically overwrites `checkpoint_path`.
+    pub checkpoint_every: usize,
+    /// Where the latest checkpoint lands.
+    pub checkpoint_path: String,
+    /// Record a phase trace from cluster birth (see [`crate::trace`]):
+    /// every ledger-visible event becomes a replayable record. The CLI's
+    /// `--trace PATH` / `dkm trace record` turn this on and save the
+    /// manifest after the solve.
+    pub trace: bool,
 }
 
 impl Default for Settings {
@@ -381,6 +400,12 @@ impl Default for Settings {
             kmeans_iters: 3,
             kmeans_max_m: 2048,
             artifacts_dir: "artifacts".into(),
+            faults: FaultPlan::none(),
+            retries: RetryPolicy::default().max_retries,
+            retry_backoff: RetryPolicy::default().backoff_secs,
+            checkpoint_every: 0,
+            checkpoint_path: "dkm.ckpt".into(),
+            trace: false,
         }
     }
 }
@@ -447,6 +472,22 @@ impl Settings {
                         v.parse().map_err(|e| anyhow::anyhow!("kmeans_max_m: {e}"))?
                 }
                 "artifacts_dir" => self.artifacts_dir = v.clone(),
+                "faults" => self.faults = FaultPlan::parse(v)?,
+                "retries" => {
+                    self.retries = v.parse().map_err(|e| anyhow::anyhow!("retries: {e}"))?
+                }
+                "retry_backoff" => {
+                    self.retry_backoff =
+                        v.parse().map_err(|e| anyhow::anyhow!("retry_backoff: {e}"))?
+                }
+                "checkpoint_every" => {
+                    self.checkpoint_every =
+                        v.parse().map_err(|e| anyhow::anyhow!("checkpoint_every: {e}"))?
+                }
+                "checkpoint_path" => self.checkpoint_path = v.clone(),
+                "trace" => {
+                    self.trace = v.parse().map_err(|e| anyhow::anyhow!("trace: {e}"))?
+                }
                 other => anyhow::bail!("unknown setting {other:?}"),
             }
         }
@@ -466,7 +507,21 @@ impl Settings {
         if self.sigma <= 0.0 {
             anyhow::bail!("sigma must be > 0");
         }
+        if !(self.retry_backoff >= 0.0) {
+            anyhow::bail!("retry_backoff must be >= 0");
+        }
+        if self.checkpoint_every > 0 && self.checkpoint_path.is_empty() {
+            anyhow::bail!("checkpoint_every needs a checkpoint_path");
+        }
         Ok(())
+    }
+
+    /// The retry policy the fault-injection settings resolve to.
+    pub fn retry_policy(&self) -> RetryPolicy {
+        RetryPolicy {
+            max_retries: self.retries,
+            backoff_secs: self.retry_backoff,
+        }
     }
 
     /// Load the per-dataset hyper-parameters from the Table-3 specs.
@@ -683,6 +738,32 @@ mod tests {
         assert!(parse_bytes("lots").is_err());
         // Parses as a number but overflows usize once the suffix applies.
         assert!(parse_bytes("99999999999g").is_err());
+    }
+
+    #[test]
+    fn resilience_settings_apply_from_kv() {
+        let s = Settings::default();
+        assert!(s.faults.is_empty());
+        assert_eq!(s.checkpoint_every, 0);
+        let mut s = Settings::default();
+        let mut kv = BTreeMap::new();
+        kv.insert("faults".to_string(), "node=1@phase=3".to_string());
+        kv.insert("retries".to_string(), "5".to_string());
+        kv.insert("retry_backoff".to_string(), "0.25".to_string());
+        kv.insert("checkpoint_every".to_string(), "4".to_string());
+        kv.insert("checkpoint_path".to_string(), "run.ckpt".to_string());
+        s.apply(&kv).unwrap();
+        assert!(!s.faults.is_empty());
+        assert_eq!(s.retry_policy().max_retries, 5);
+        assert_eq!(s.retry_policy().backoff_secs, 0.25);
+        assert_eq!(s.checkpoint_every, 4);
+        assert_eq!(s.checkpoint_path, "run.ckpt");
+        let mut kv = BTreeMap::new();
+        kv.insert("faults".to_string(), "node=@".to_string());
+        assert!(s.apply(&kv).is_err());
+        let mut kv = BTreeMap::new();
+        kv.insert("retry_backoff".to_string(), "-1.0".to_string());
+        assert!(s.apply(&kv).is_err());
     }
 
     #[test]

@@ -1,0 +1,668 @@
+//! Mid-training checkpoints: persist a [`Session`](super::session::Session)
+//! solve at a round boundary and resume it to a BITWISE-identical end
+//! state — final β, convergence curve, sim-ledger counters and eval
+//! counts all match an uninterrupted run exactly.
+//!
+//! A checkpoint is a dependency-free little-endian binary (same wire
+//! helpers as the phase-trace format, `crate::trace::wire`):
+//!
+//! ```text
+//! magic    8 bytes  b"DKMCKPT1"
+//! version  1 byte   format version (currently 1)
+//! config   fixed    the run fingerprint: m, d, p, λ/γ/tol bits, loss,
+//!                   solver, seed, eval pipeline, max_iters — compared
+//!                   FIELD BY FIELD at resume so a mismatch names the
+//!                   offending flag instead of producing garbage
+//! basis_fp 8 bytes  FNV-1a-64 over the basis f32 bits
+//! clock    var      full [`ClockSnapshot`] of the simulated cluster
+//! evals    32 bytes problem-level and session-level f/g and Hd counters
+//! state    var      tagged [`SolverState`] payload (0 = TRON, 1 = BCD)
+//! ```
+//!
+//! Deliberately NOT in the config fingerprint: `--exec`, `--sched`,
+//! `--skew` and the C-storage policy. Those change how phases are *run*,
+//! not what they compute — every executor is bit-identical by
+//! construction — so a run checkpointed under one executor may resume
+//! under another. (Under streaming C storage the *recompute-flops* ledger
+//! line of a resumed run can differ from the uninterrupted one, because
+//! the rebuild re-materializes tiles the original run had already paid
+//! for; β and every other counter still match.)
+//!
+//! Writes are atomic (temp file + rename), so a crash mid-checkpoint
+//! leaves the previous checkpoint intact.
+
+use std::path::Path;
+
+use crate::cluster::ClockSnapshot;
+use crate::config::settings::{EvalPipeline, Loss, Settings, SolverChoice};
+use crate::trace::wire::{put_clock, read_clock, Reader, Writer};
+use crate::Result;
+
+use super::solver::{BcdState, CurvePoint, SolverState, TronState};
+
+const MAGIC: &[u8; 8] = b"DKMCKPT1";
+
+/// Bumped whenever the payload layout changes; old binaries then reject
+/// new files (and vice versa) instead of silently misreading them.
+const FORMAT_VERSION: u8 = 1;
+
+/// The run fingerprint stored in every checkpoint: everything that shapes
+/// the NUMBERS of a solve. Resume compares each field against the live
+/// settings/dataset and names the first mismatch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointConfig {
+    /// Basis size m.
+    pub m: u64,
+    /// Feature width d.
+    pub d: u64,
+    /// Cluster size p.
+    pub p: u64,
+    pub lambda: f32,
+    pub gamma: f32,
+    pub loss: Loss,
+    pub solver: SolverChoice,
+    pub seed: u64,
+    pub eval_pipeline: EvalPipeline,
+    pub tol: f32,
+    pub max_iters: u64,
+}
+
+impl CheckpointConfig {
+    /// The fingerprint of a live run: its settings plus the dataset's
+    /// feature width.
+    pub fn of(settings: &Settings, d: usize, gamma: f32) -> CheckpointConfig {
+        CheckpointConfig {
+            m: settings.m as u64,
+            d: d as u64,
+            p: settings.nodes as u64,
+            lambda: settings.lambda,
+            gamma,
+            loss: settings.loss,
+            solver: settings.solver,
+            seed: settings.seed,
+            eval_pipeline: settings.eval_pipeline,
+            tol: settings.tol,
+            max_iters: settings.max_iters as u64,
+        }
+    }
+
+    /// Field-by-field comparison (floats by BITS), erroring with the
+    /// specific flag that diverged so the user knows what to fix.
+    pub fn ensure_matches(&self, live: &CheckpointConfig) -> Result<()> {
+        macro_rules! same {
+            ($field:ident, $flag:literal) => {
+                anyhow::ensure!(
+                    self.$field == live.$field,
+                    "checkpoint was taken with {} = {:?}, this run has {:?}",
+                    $flag,
+                    self.$field,
+                    live.$field
+                );
+            };
+        }
+        same!(m, "--m");
+        same!(d, "the dataset feature width");
+        same!(p, "--nodes");
+        anyhow::ensure!(
+            self.lambda.to_bits() == live.lambda.to_bits(),
+            "checkpoint was taken with --lambda = {:?}, this run has {:?}",
+            self.lambda,
+            live.lambda
+        );
+        anyhow::ensure!(
+            self.gamma.to_bits() == live.gamma.to_bits(),
+            "checkpoint was taken with kernel gamma = {:?}, this run has {:?}",
+            self.gamma,
+            live.gamma
+        );
+        same!(loss, "--loss");
+        same!(solver, "--solver");
+        same!(seed, "--seed");
+        same!(eval_pipeline, "--pipeline");
+        anyhow::ensure!(
+            self.tol.to_bits() == live.tol.to_bits(),
+            "checkpoint was taken with --tol = {:?}, this run has {:?}",
+            self.tol,
+            live.tol
+        );
+        same!(max_iters, "--max-iters");
+        Ok(())
+    }
+}
+
+/// One persisted round boundary of a session solve: the run fingerprint,
+/// the basis identity, the full simulated-cluster ledger, the eval
+/// counters of both the in-flight [`DistProblem`] and the owning session,
+/// and the solver's complete resumable loop state.
+///
+/// [`DistProblem`]: super::dist::DistProblem
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub config: CheckpointConfig,
+    /// FNV-1a-64 over the basis f32 bits
+    /// ([`crate::trace::fingerprint_f32s`]): the basis is rebuilt
+    /// deterministically from the seed at resume, and this catches the
+    /// rebuild diverging (different dataset file, code drift).
+    pub basis_fp: u64,
+    /// The simulated cluster clock at the checkpointed round boundary.
+    pub clock: ClockSnapshot,
+    /// `DistProblem::fg_evals` / `hd_evals` at the boundary (the solve in
+    /// flight).
+    pub problem_fg: u64,
+    pub problem_hd: u64,
+    /// `Session::fg_evals` / `hd_evals` at the boundary (completed earlier
+    /// solves; the in-flight solve is merged in only when it finishes).
+    pub session_fg: u64,
+    pub session_hd: u64,
+    /// The solver's resumable loop state.
+    pub state: SolverState,
+}
+
+fn loss_tag(loss: Loss) -> u8 {
+    match loss {
+        Loss::SqHinge => 0,
+        Loss::Logistic => 1,
+        Loss::Squared => 2,
+    }
+}
+
+fn loss_from_tag(tag: u8) -> Result<Loss> {
+    match tag {
+        0 => Ok(Loss::SqHinge),
+        1 => Ok(Loss::Logistic),
+        2 => Ok(Loss::Squared),
+        other => anyhow::bail!("unknown loss tag {other} in checkpoint"),
+    }
+}
+
+fn pipeline_tag(p: EvalPipeline) -> u8 {
+    match p {
+        EvalPipeline::Fused => 0,
+        EvalPipeline::Split => 1,
+    }
+}
+
+fn pipeline_from_tag(tag: u8) -> Result<EvalPipeline> {
+    match tag {
+        0 => Ok(EvalPipeline::Fused),
+        1 => Ok(EvalPipeline::Split),
+        other => anyhow::bail!("unknown eval-pipeline tag {other} in checkpoint"),
+    }
+}
+
+fn put_solver(w: &mut Writer, s: SolverChoice) {
+    match s {
+        SolverChoice::Tron => {
+            w.u8(0);
+            w.u64(0);
+        }
+        SolverChoice::Bcd { block } => {
+            w.u8(1);
+            w.u64(block as u64);
+        }
+    }
+}
+
+fn read_solver(r: &mut Reader) -> Result<SolverChoice> {
+    let tag = r.u8()?;
+    let block = r.u64()? as usize;
+    match tag {
+        0 => Ok(SolverChoice::Tron),
+        1 => Ok(SolverChoice::Bcd { block }),
+        other => anyhow::bail!("unknown solver tag {other} in checkpoint"),
+    }
+}
+
+fn put_curve(w: &mut Writer, curve: &[CurvePoint]) {
+    w.u64(curve.len() as u64);
+    for c in curve {
+        w.f64(c.cum_secs);
+        w.u64(c.comm_rounds);
+        w.f64(c.f);
+        w.f64(c.gnorm);
+    }
+}
+
+fn read_curve(r: &mut Reader) -> Result<Vec<CurvePoint>> {
+    let n = r.len_prefix()?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(CurvePoint {
+            cum_secs: r.f64()?,
+            comm_rounds: r.u64()?,
+            f: r.f64()?,
+            gnorm: r.f64()?,
+        });
+    }
+    Ok(out)
+}
+
+fn put_f64s(w: &mut Writer, xs: &[f64]) {
+    w.u64(xs.len() as u64);
+    for &x in xs {
+        w.f64(x);
+    }
+}
+
+fn read_f64s(r: &mut Reader) -> Result<Vec<f64>> {
+    let n = r.len_prefix()?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(r.f64()?);
+    }
+    Ok(out)
+}
+
+fn put_state(w: &mut Writer, state: &SolverState) {
+    match state {
+        SolverState::Tron(st) => {
+            w.u8(0);
+            w.u64(st.passes);
+            w.u64(st.accepted);
+            w.f64(st.f);
+            w.f64(st.gnorm);
+            w.f64(st.gnorm0);
+            w.f64(st.delta);
+            w.u64(st.fg_evals);
+            w.u64(st.hd_evals);
+            w.f32s(&st.x);
+            w.f32s(&st.g);
+            put_curve(w, &st.curve);
+            w.f64(st.ledger_t0);
+            w.u64(st.ledger_r0);
+        }
+        SolverState::Bcd(st) => {
+            w.u8(1);
+            w.u64(st.rounds);
+            w.u64(st.fg_evals);
+            w.u64(st.pending_block);
+            w.f32s(&st.pending_delta);
+            w.f64(st.sweep_sq);
+            w.u8(st.has_gnorm0 as u8);
+            w.f64(st.gnorm0);
+            w.f64(st.last_gnorm);
+            w.f32s(&st.beta);
+            w.u64(st.factors.len() as u64);
+            for f in &st.factors {
+                put_f64s(w, f);
+            }
+            w.u64(st.node_margins.len() as u64);
+            for node in &st.node_margins {
+                w.u64(node.len() as u64);
+                for tile in node {
+                    w.f32s(tile);
+                }
+            }
+            put_curve(w, &st.curve);
+            w.f64(st.ledger_t0);
+            w.u64(st.ledger_r0);
+        }
+    }
+}
+
+fn read_state(r: &mut Reader) -> Result<SolverState> {
+    match r.u8()? {
+        0 => {
+            let passes = r.u64()?;
+            let accepted = r.u64()?;
+            let f = r.f64()?;
+            let gnorm = r.f64()?;
+            let gnorm0 = r.f64()?;
+            let delta = r.f64()?;
+            let fg_evals = r.u64()?;
+            let hd_evals = r.u64()?;
+            let x = r.f32s()?;
+            let g = r.f32s()?;
+            let curve = read_curve(r)?;
+            Ok(SolverState::Tron(TronState {
+                passes,
+                accepted,
+                x,
+                f,
+                g,
+                gnorm,
+                gnorm0,
+                delta,
+                fg_evals,
+                hd_evals,
+                curve,
+                ledger_t0: r.f64()?,
+                ledger_r0: r.u64()?,
+            }))
+        }
+        1 => {
+            let rounds = r.u64()?;
+            let fg_evals = r.u64()?;
+            let pending_block = r.u64()?;
+            let pending_delta = r.f32s()?;
+            let sweep_sq = r.f64()?;
+            let has_gnorm0 = r.u8()? != 0;
+            let gnorm0 = r.f64()?;
+            let last_gnorm = r.f64()?;
+            let beta = r.f32s()?;
+            let nb = r.len_prefix()?;
+            let mut factors = Vec::with_capacity(nb);
+            for _ in 0..nb {
+                factors.push(read_f64s(r)?);
+            }
+            let p = r.len_prefix()?;
+            let mut node_margins = Vec::with_capacity(p);
+            for _ in 0..p {
+                let rt = r.len_prefix()?;
+                let mut node = Vec::with_capacity(rt);
+                for _ in 0..rt {
+                    node.push(r.f32s()?);
+                }
+                node_margins.push(node);
+            }
+            let curve = read_curve(r)?;
+            Ok(SolverState::Bcd(BcdState {
+                rounds,
+                beta,
+                pending_block,
+                pending_delta,
+                sweep_sq,
+                has_gnorm0,
+                gnorm0,
+                last_gnorm,
+                fg_evals,
+                factors,
+                node_margins,
+                curve,
+                ledger_t0: r.f64()?,
+                ledger_r0: r.u64()?,
+            }))
+        }
+        other => anyhow::bail!("unknown solver-state tag {other} in checkpoint"),
+    }
+}
+
+impl Checkpoint {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.bytes(MAGIC);
+        w.u8(FORMAT_VERSION);
+        let c = &self.config;
+        w.u64(c.m);
+        w.u64(c.d);
+        w.u64(c.p);
+        w.f32(c.lambda);
+        w.f32(c.gamma);
+        w.u8(loss_tag(c.loss));
+        put_solver(&mut w, c.solver);
+        w.u64(c.seed);
+        w.u8(pipeline_tag(c.eval_pipeline));
+        w.f32(c.tol);
+        w.u64(c.max_iters);
+        w.u64(self.basis_fp);
+        put_clock(&mut w, &self.clock);
+        w.u64(self.problem_fg);
+        w.u64(self.problem_hd);
+        w.u64(self.session_fg);
+        w.u64(self.session_hd);
+        put_state(&mut w, &self.state);
+        w.into_bytes()
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Result<Checkpoint> {
+        let mut r = Reader::new(buf);
+        anyhow::ensure!(
+            r.take(8)? == MAGIC,
+            "not a DKM checkpoint file (bad magic)"
+        );
+        let version = r.u8()?;
+        anyhow::ensure!(
+            version == FORMAT_VERSION,
+            "checkpoint format version {version}, this build reads version {FORMAT_VERSION}"
+        );
+        let config = CheckpointConfig {
+            m: r.u64()?,
+            d: r.u64()?,
+            p: r.u64()?,
+            lambda: r.f32()?,
+            gamma: r.f32()?,
+            loss: loss_from_tag(r.u8()?)?,
+            solver: read_solver(&mut r)?,
+            seed: r.u64()?,
+            eval_pipeline: pipeline_from_tag(r.u8()?)?,
+            tol: r.f32()?,
+            max_iters: r.u64()?,
+        };
+        let ck = Checkpoint {
+            config,
+            basis_fp: r.u64()?,
+            clock: read_clock(&mut r)?,
+            problem_fg: r.u64()?,
+            problem_hd: r.u64()?,
+            session_fg: r.u64()?,
+            session_hd: r.u64()?,
+            state: read_state(&mut r)?,
+        };
+        r.done()?;
+        Ok(ck)
+    }
+
+    /// Atomic save: write a sibling temp file, then rename over `path`, so
+    /// a crash mid-write never corrupts the previous checkpoint.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let tmp = path.with_extension("ckpt.tmp");
+        std::fs::write(&tmp, self.to_bytes())
+            .map_err(|e| anyhow::anyhow!("write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path).map_err(|e| {
+            anyhow::anyhow!("rename {} -> {}: {e}", tmp.display(), path.display())
+        })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let path = path.as_ref();
+        let buf = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        Checkpoint::from_bytes(&buf)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{CostModel, SimClock};
+    use crate::metrics::Step;
+
+    fn sample_clock() -> ClockSnapshot {
+        let mut c = SimClock::new(CostModel {
+            latency_s: 1e-3,
+            per_byte_s: 1e-9,
+        });
+        c.add_compute(Step::Tron, 0.125);
+        c.add_reduce(Step::Tron, 4, 4096);
+        c.add_barrier();
+        c.add_faults(2);
+        c.add_retries(1);
+        c.add_straggler(0.5, 1.5);
+        c.snapshot()
+    }
+
+    fn sample_curve() -> Vec<CurvePoint> {
+        vec![
+            CurvePoint {
+                cum_secs: 0.0,
+                comm_rounds: 0,
+                f: 10.0,
+                gnorm: 3.0,
+            },
+            CurvePoint {
+                cum_secs: 0.25,
+                comm_rounds: 7,
+                f: 1.0 / 3.0,
+                gnorm: 0.1,
+            },
+        ]
+    }
+
+    fn sample_config() -> CheckpointConfig {
+        CheckpointConfig {
+            m: 64,
+            d: 9,
+            p: 4,
+            lambda: 1e-3,
+            gamma: 0.37,
+            loss: Loss::SqHinge,
+            solver: SolverChoice::Tron,
+            seed: 42,
+            eval_pipeline: EvalPipeline::Fused,
+            tol: 1e-3,
+            max_iters: 50,
+        }
+    }
+
+    fn tron_checkpoint() -> Checkpoint {
+        Checkpoint {
+            config: sample_config(),
+            basis_fp: 0xDEADBEEFCAFE,
+            clock: sample_clock(),
+            problem_fg: 5,
+            problem_hd: 11,
+            session_fg: 2,
+            session_hd: 3,
+            state: SolverState::Tron(TronState {
+                passes: 4,
+                accepted: 3,
+                x: vec![0.1, -0.2, 1.0 / 3.0],
+                f: 0.625,
+                g: vec![1e-3, -2e-4, 5e-5],
+                gnorm: 0.01,
+                gnorm0: 3.0,
+                delta: 0.75,
+                fg_evals: 5,
+                hd_evals: 11,
+                curve: sample_curve(),
+                ledger_t0: 0.001,
+                ledger_r0: 1,
+            }),
+        }
+    }
+
+    fn bcd_checkpoint() -> Checkpoint {
+        Checkpoint {
+            config: CheckpointConfig {
+                solver: SolverChoice::Bcd { block: 32 },
+                ..sample_config()
+            },
+            basis_fp: 7,
+            clock: sample_clock(),
+            problem_fg: 9,
+            problem_hd: 0,
+            session_fg: 0,
+            session_hd: 0,
+            state: SolverState::Bcd(BcdState {
+                rounds: 9,
+                beta: vec![0.5, -0.25, 0.125, 1.0 / 7.0],
+                pending_block: 1,
+                pending_delta: vec![1e-2, -1e-3],
+                sweep_sq: 0.04,
+                has_gnorm0: true,
+                gnorm0: 2.0,
+                last_gnorm: 0.2,
+                fg_evals: 9,
+                factors: vec![vec![2.0, 0.5, 1.5, 0.0], vec![3.0]],
+                node_margins: vec![
+                    vec![vec![0.1, 0.2], vec![0.3]],
+                    vec![vec![-0.4, 0.5]],
+                ],
+                curve: sample_curve(),
+                ledger_t0: 0.0,
+                ledger_r0: 0,
+            }),
+        }
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("dkm_checkpoint_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn tron_checkpoint_round_trips_bitwise() {
+        let ck = tron_checkpoint();
+        let path = tmp("tron.ckpt");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+        // Spot-check float identity at the bit level (PartialEq would
+        // also pass for -0.0 vs 0.0).
+        let (SolverState::Tron(a), SolverState::Tron(b)) = (&ck.state, &back.state) else {
+            panic!("state variant changed in round trip");
+        };
+        for (x, y) in a.x.iter().zip(&b.x) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(a.f.to_bits(), b.f.to_bits());
+        assert_eq!(a.delta.to_bits(), b.delta.to_bits());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bcd_checkpoint_round_trips_bitwise() {
+        let ck = bcd_checkpoint();
+        let bytes = ck.to_bytes();
+        let back = Checkpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(ck, back);
+        let (SolverState::Bcd(a), SolverState::Bcd(b)) = (&ck.state, &back.state) else {
+            panic!("state variant changed in round trip");
+        };
+        for (fa, fb) in a.factors.iter().zip(&b.factors) {
+            for (x, y) in fa.iter().zip(fb) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        assert_eq!(a.node_margins, b.node_margins);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let bytes = tron_checkpoint().to_bytes();
+
+        // Truncation anywhere.
+        assert!(Checkpoint::from_bytes(&bytes[..bytes.len() - 1]).is_err());
+        assert!(Checkpoint::from_bytes(&bytes[..10]).is_err());
+
+        // Trailing garbage.
+        let mut grown = bytes.clone();
+        grown.push(0);
+        assert!(Checkpoint::from_bytes(&grown).is_err());
+
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        let err = Checkpoint::from_bytes(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("magic"), "{err:#}");
+
+        // Unknown version.
+        let mut bad = bytes.clone();
+        bad[8] = 99;
+        let err = Checkpoint::from_bytes(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("version 99"), "{err:#}");
+    }
+
+    #[test]
+    fn config_mismatch_names_the_flag() {
+        let ck = sample_config();
+        let mut live = sample_config();
+        live.seed = 43;
+        let err = ck.ensure_matches(&live).unwrap_err();
+        assert!(format!("{err:#}").contains("--seed"), "{err:#}");
+
+        let mut live = sample_config();
+        live.solver = SolverChoice::Bcd { block: 16 };
+        let err = ck.ensure_matches(&live).unwrap_err();
+        assert!(format!("{err:#}").contains("--solver"), "{err:#}");
+
+        let mut live = sample_config();
+        live.lambda = 2e-3;
+        assert!(ck.ensure_matches(&live).is_err());
+
+        assert!(ck.ensure_matches(&sample_config()).is_ok());
+    }
+}

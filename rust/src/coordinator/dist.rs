@@ -223,8 +223,7 @@ impl Objective for DistProblem<'_> {
             }
         };
         self.cluster
-            .clock
-            .add_dispatches(backend.call_count().saturating_sub(calls0));
+            .charge_dispatches(backend.call_count().saturating_sub(calls0));
         Ok(out)
     }
 
@@ -255,8 +254,7 @@ impl Objective for DistProblem<'_> {
             }
         };
         self.cluster
-            .clock
-            .add_dispatches(backend.call_count().saturating_sub(calls0));
+            .charge_dispatches(backend.call_count().saturating_sub(calls0));
         Ok(out)
     }
 }

@@ -19,6 +19,10 @@
 //! * [`trainer`] — the one-shot entry points (`train`, `train_stagewise`),
 //!   thin wrappers over a `Session`, plus the `TrainedModel` bundle.
 //! * [`model_io`] — `TrainedModel` persistence (save/load, bit-exact).
+//! * [`checkpoint`] — mid-training checkpoints: a solve's round-boundary
+//!   state (solver loop state, sim ledger, eval counters, basis
+//!   fingerprint) persisted so an interrupted run resumes to a bitwise
+//!   identical end state.
 //! * [`predict`] — serial test-set scoring with a trained model snapshot
 //!   (cluster-resident sessions score through `Session::predict`).
 //! * [`serving`] — prediction-only sessions: a `TrainedModel` loaded onto
@@ -26,6 +30,7 @@
 //!   multi-slot batch scoring with a double-buffered β swap.
 
 pub mod basis;
+pub mod checkpoint;
 pub mod cstore;
 pub mod dist;
 pub mod model_io;
@@ -36,12 +41,13 @@ pub mod session;
 pub mod solver;
 pub mod trainer;
 
+pub use checkpoint::{Checkpoint, CheckpointConfig};
 pub use cstore::{make_store, CBlockStore};
 pub use node::WorkerNode;
 pub use serving::ServingSession;
 pub use session::{growth_settings, Session, Solve};
 pub use solver::{
-    make_solver, BcdOptions, BcdSolver, CurvePoint, Objective, SolveStats, Solver, TronOptions,
-    TronSolver,
+    make_solver, BcdOptions, BcdSolver, BcdState, CurvePoint, Objective, SolveStats, Solver,
+    SolverState, Start, TronOptions, TronSolver, TronState,
 };
 pub use trainer::{train, train_stagewise, StageOutput, TrainOutput, TrainedModel};

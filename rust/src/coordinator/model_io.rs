@@ -6,6 +6,8 @@
 //!
 //! ```text
 //! magic   8 bytes  b"DKMMODL1"
+//! version 1 byte   format version (currently 1); loaders reject other
+//!                  versions with a clear error instead of misparsing
 //! loss    1 byte   0 = sqhinge, 1 = logistic, 2 = squared
 //! gamma   4 bytes  f32 LE
 //! m       8 bytes  u64 LE (basis rows)
@@ -27,6 +29,10 @@ use crate::Result;
 use super::trainer::TrainedModel;
 
 const MAGIC: &[u8; 8] = b"DKMMODL1";
+
+/// Bumped whenever the payload layout changes; old binaries then reject
+/// new files (and vice versa) instead of silently misreading them.
+const FORMAT_VERSION: u8 = 1;
 
 fn loss_tag(loss: Loss) -> u8 {
     match loss {
@@ -55,8 +61,9 @@ pub fn save(model: &TrainedModel, path: impl AsRef<Path>) -> Result<()> {
         model.beta.len(),
         m
     );
-    let mut buf = Vec::with_capacity(8 + 1 + 4 + 16 + 4 * (m * d + m));
+    let mut buf = Vec::with_capacity(8 + 2 + 4 + 16 + 4 * (m * d + m));
     buf.extend_from_slice(MAGIC);
+    buf.push(FORMAT_VERSION);
     buf.push(loss_tag(model.loss));
     buf.extend_from_slice(&model.gamma.to_le_bytes());
     buf.extend_from_slice(&(m as u64).to_le_bytes());
@@ -116,6 +123,12 @@ pub fn load(path: impl AsRef<Path>) -> Result<TrainedModel> {
     anyhow::ensure!(
         r.take(8)? == MAGIC,
         "{} is not a DKM model file (bad magic)",
+        path.display()
+    );
+    let version = r.u8()?;
+    anyhow::ensure!(
+        version == FORMAT_VERSION,
+        "{} has model format version {version}, this build reads version {FORMAT_VERSION}",
         path.display()
     );
     let loss = loss_from_tag(r.u8()?)?;
@@ -236,6 +249,23 @@ mod tests {
         for p in [path, truncated, grown] {
             std::fs::remove_file(p).ok();
         }
+    }
+
+    #[test]
+    fn rejects_unknown_format_version() {
+        let model = sample_model(Loss::Logistic);
+        let path = tmp("version.dkm");
+        model.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Byte 8 is the format version (right after the magic).
+        bytes[8] = 99;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("format version 99"),
+            "{err:#}"
+        );
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

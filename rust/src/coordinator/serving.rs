@@ -38,7 +38,8 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::cluster::{
-    max_slots_in_flight, phase_wall, CostModel, Executor, Sched, SimClock, Skew, SlotWork, Tree,
+    max_slots_in_flight, phase_wall, survive_faults, CostModel, Executor, FaultPlan, RetryPolicy,
+    Sched, SimClock, Skew, SlotWork, Tree,
 };
 use crate::data::shard_rows;
 use crate::linalg::Mat;
@@ -79,6 +80,13 @@ pub struct ServingSession {
     sched: Sched,
     /// Simulated per-node speed multipliers applied before pricing.
     skew: Skew,
+    /// Injected phase faults (`--faults`), sharing the training cluster's
+    /// plan grammar and task-entry semantics (see [`crate::cluster::fault`]).
+    faults: FaultPlan,
+    retry: RetryPolicy,
+    /// Serving-side phase counter: one fault-plan draw index per
+    /// `predict_many` dispatch (the dispatch IS the phase here).
+    fault_seq: AtomicU64,
     /// Live TM-padded β tiles behind an Arc swap (see module docs).
     beta: Mutex<Arc<Vec<Vec<f32>>>>,
     meter: Mutex<ServeMeter>,
@@ -138,6 +146,9 @@ impl ServingSession {
             col_tiles,
             sched: Sched::Static,
             skew: Skew::None,
+            faults: FaultPlan::none(),
+            retry: RetryPolicy::default(),
+            fault_seq: AtomicU64::new(0),
             z_tiles,
             beta: Mutex::new(beta_tiles),
             meter: Mutex::new(meter),
@@ -160,6 +171,17 @@ impl ServingSession {
     /// seconds are scaled by each node's multiplier before pricing.
     pub fn with_skew(mut self, skew: Skew) -> ServingSession {
         self.skew = skew;
+        self
+    }
+
+    /// Builder: inject phase faults into serving dispatches. Each
+    /// `predict_many` dispatch is one fault-plan phase; a fired task dies
+    /// at entry (before scoring anything) and is re-launched under
+    /// `retry`, so recovered replies stay bit-identical — only the
+    /// ledger's fault/retry counters and the backoff seconds move.
+    pub fn with_faults(mut self, plan: FaultPlan, retry: RetryPolicy) -> ServingSession {
+        self.faults = plan;
+        self.retry = retry;
         self
     }
 
@@ -208,6 +230,13 @@ impl ServingSession {
                 }
             })
             .collect();
+        // One fault-plan phase per dispatch: item j of any slot is node
+        // j's task, so a fired (phase, node) draw kills that node's work
+        // across the whole dispatch — the serving analogue of a node dying
+        // mid-phase. Task deaths happen at entry, before scoring anything.
+        let seq = self.fault_seq.fetch_add(1, Ordering::Relaxed);
+        let fires_ctr = AtomicU64::new(0);
+        let relaunches_ctr = AtomicU64::new(0);
         let closures: Vec<Box<dyn Fn(usize) -> Result<Vec<f32>> + Sync + '_>> = batches
             .iter()
             .enumerate()
@@ -215,7 +244,9 @@ impl ServingSession {
                 let x: &Mat = x;
                 let panels = &panels[b];
                 let beta = &beta;
+                let (fires, relaunches) = (&fires_ctr, &relaunches_ctr);
                 Box::new(move |j: usize| {
+                    survive_faults(&self.faults, self.retry, seq, j, fires, relaunches)?;
                     let shard = if p == 1 { x } else { &panels[j] };
                     score_rows(
                         self.backend.as_ref(),
@@ -238,6 +269,8 @@ impl ServingSession {
         let results = self.executor.run_concurrent(&slots);
         self.peak_slots
             .fetch_max(max_slots_in_flight(&results) as u64, Ordering::Relaxed);
+        let fires = fires_ctr.load(Ordering::Relaxed);
+        let relaunches = relaunches_ctr.load(Ordering::Relaxed);
 
         let f32s = std::mem::size_of::<f32>();
         let mut meter = self.meter.lock().unwrap();
@@ -245,6 +278,17 @@ impl ServingSession {
         // carried — vs one per batch on the lockstep path.
         meter.clock.add_barrier();
         meter.wall.bump("barriers", 1);
+        // Resilience counters + simulated re-launch backoff, charged even
+        // when a retry budget was exhausted (the deaths happened either
+        // way) — same ordering as the training cluster's finish_phase.
+        if fires > 0 {
+            meter.clock.add_faults(fires);
+            meter.clock.add_retries(relaunches);
+            let backoff_secs = relaunches as f64 * self.retry.backoff_secs;
+            if backoff_secs > 0.0 {
+                meter.clock.add_compute(Step::Predict, backoff_secs);
+            }
+        }
         for (x, (shards, slot)) in batches.iter().zip(shards_per.iter().zip(&results)) {
             let max_shard = shards.iter().map(|r| r.len()).max().unwrap_or(0);
             // Rows scatter down the tree to their nodes (a scatter transits
@@ -464,6 +508,60 @@ mod tests {
         // Straggler observables recorded on the ledger and mirrored.
         assert!(st_sim.straggler_ratio(8) > 1.5, "{}", st_sim.straggler_ratio(8));
         assert!((st.wall().max_node_secs() - st_sim.max_node_secs()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn injected_faults_recover_bit_identically_or_abort_when_exhausted() {
+        let model = tiny_model(48, 5);
+        let mut rng = Rng::new(19);
+        let x = Mat::from_fn(30, 5, |_, _| rng.normal_f32());
+        let y = Mat::from_fn(12, 5, |_, _| rng.normal_f32());
+        let clean = serving(48, 5, 3);
+        let want = clean.predict_many(&[&x, &y]).unwrap();
+
+        // Dispatch 0 is fault-plan phase 0: node 1's tasks die once and
+        // are re-launched — replies must not move a bit.
+        let faulty = ServingSession::load(
+            &model,
+            Arc::new(NativeCompute::new()),
+            3,
+            Executor::serial(),
+            CostModel::free(),
+        )
+        .unwrap()
+        .with_faults(
+            FaultPlan::parse("node=1@phase=0").unwrap(),
+            RetryPolicy {
+                max_retries: 2,
+                backoff_secs: 0.25,
+            },
+        );
+        let got = faulty.predict_many(&[&x, &y]).unwrap();
+        assert_eq!(got, want, "recovered replies are bit-identical");
+        // Node 1 owned one item per slot: 2 deaths, 2 re-launches, and
+        // the backoff seconds land under the predict step.
+        let sim = faulty.sim();
+        assert_eq!(sim.faults(), 2);
+        assert_eq!(sim.retries(), 2);
+        assert!(sim.step_secs(Step::Predict) >= 2.0 * 0.25);
+        // Phase 1 is past the fixed trigger: clean dispatch, counters hold.
+        assert_eq!(faulty.predict_batch(&x).unwrap(), want[0]);
+        assert_eq!(faulty.sim().faults(), 2);
+
+        // rand:1 dies on every attempt: the budget exhausts and the abort
+        // names the batch and node like any real serving failure.
+        let doomed = serving(48, 5, 3).with_faults(
+            FaultPlan::parse("rand:1:7").unwrap(),
+            RetryPolicy {
+                max_retries: 1,
+                backoff_secs: 0.0,
+            },
+        );
+        let err = doomed.predict_many(&[&x]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("batch 0 node 0"), "{msg}");
+        assert!(msg.contains("retries exhausted"), "{msg}");
+        assert!(doomed.sim().faults() >= 2, "every attempt died");
     }
 
     #[test]

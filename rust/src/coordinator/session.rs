@@ -28,6 +28,7 @@
 //! [`SimClock`] — the serving path the ROADMAP's live-cluster north star
 //! needs, instead of the serial coordinator loop in [`super::predict`].
 
+use std::path::Path;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -41,6 +42,7 @@ use crate::runtime::Compute;
 use crate::Result;
 
 use super::basis::{self, Basis};
+use super::checkpoint::{Checkpoint, CheckpointConfig};
 use super::cstore::CBlockStore;
 use super::dist::DistProblem;
 use super::node::{pad_m_tiles, WorkerNode};
@@ -88,6 +90,17 @@ struct PredictMeter {
     wall: Metrics,
 }
 
+/// A checkpointed mid-solve state waiting to be continued by the next
+/// [`Session::solve`] call (set by [`Session::resume_from`]).
+struct PendingResume {
+    state: solver::SolverState,
+    /// `DistProblem` eval counters at the checkpointed round boundary,
+    /// restored into the resumed problem so the final counts match the
+    /// uninterrupted run.
+    problem_fg: u64,
+    problem_hd: u64,
+}
+
 /// A live training/serving session over the simulated cluster.
 pub struct Session {
     settings: Settings,
@@ -122,6 +135,8 @@ pub struct Session {
     /// kernel state is inconsistent with the basis, so solve/predict/grow
     /// refuse to run rather than silently use stale C blocks.
     poisoned: bool,
+    /// A loaded checkpoint the next [`Session::solve`] continues from.
+    pending_resume: Option<PendingResume>,
     /// Interior-mutability ledger for `&self` predict calls (same cost
     /// model as the cluster clock; folded in by `sim`/`wall`).
     predict_meter: Mutex<PredictMeter>,
@@ -147,18 +162,23 @@ impl Session {
         let mut cluster = wall.time(Step::Load, || {
             build_cluster(train_ds, settings.nodes, dpad, cost)
         });
+        // Tracing must begin before the first ledger charge: `Trace::replay`
+        // re-runs the records against a fresh clock, so a trace that misses
+        // the build-time ingest charge could never verify.
+        if settings.trace {
+            cluster.start_trace();
+        }
         cluster.set_executor(settings.executor.to_executor());
         cluster.set_sched(settings.sched);
         cluster.set_skew(settings.skew.clone());
+        cluster.set_faults(settings.faults.clone(), settings.retry_policy());
         for node in cluster.nodes_mut() {
             node.set_c_storage(settings.c_storage, settings.c_memory_budget);
         }
         // Simulated: each node ingests its n/p shard (disk-bound in the
         // paper; we charge the measured shard-build time as compute).
         let load_wall = wall.wall_secs(Step::Load);
-        cluster
-            .clock
-            .add_compute(Step::Load, load_wall / settings.nodes as f64);
+        cluster.charge_compute(Step::Load, load_wall / settings.nodes as f64);
 
         // Step 2 (+ K-means when configured): basis selection & broadcast.
         let basis_sel = wall.time(Step::BasisBcast, || {
@@ -191,10 +211,77 @@ impl Session {
             mirrored_max_node_us: 0,
             mirrored_sum_node_us: 0,
             poisoned: false,
+            pending_resume: None,
             predict_meter,
         };
         // Step 3: kernel computation (all column tiles dirty on first build).
         session.install_columns(0..col_tiles)?;
+        Ok(session)
+    }
+
+    /// Continue an interrupted run from a checkpoint written by a previous
+    /// process (`--checkpoint-every`): rebuild the cluster/basis/C blocks
+    /// deterministically from `settings` (verifying the checkpoint's run
+    /// fingerprint and basis identity field by field), then adopt the
+    /// checkpointed timeline — β, the full simulated ledger, and the eval
+    /// counters. The next [`Session::solve`] picks the solve up at the
+    /// checkpointed round boundary and finishes BITWISE identical to an
+    /// uninterrupted run: same β, same curve, same ledger counters.
+    ///
+    /// `--exec`, `--sched` and `--skew` may differ from the original run
+    /// (they are not in the fingerprint); under streaming C storage the
+    /// rebuild's recompute-FLOPs line can differ, everything else still
+    /// matches.
+    pub fn resume_from(
+        settings: &Settings,
+        train_ds: &Dataset,
+        backend: Arc<dyn Compute>,
+        cost: CostModel,
+        path: impl AsRef<Path>,
+    ) -> Result<Session> {
+        anyhow::ensure!(
+            !settings.trace,
+            "--trace cannot be combined with --resume: a trace must start at \
+             clock zero, but a resumed ledger embeds the original run's \
+             timeline, so the recorded events could never replay to it"
+        );
+        let ck = Checkpoint::load(path)?;
+        let mut session = Session::build(settings, train_ds, backend, cost)?;
+        let live = CheckpointConfig::of(&session.settings, session.d, session.gamma);
+        ck.config.ensure_matches(&live)?;
+        let basis_fp = crate::trace::fingerprint_f32s(session.basis.z.as_slice());
+        anyhow::ensure!(
+            ck.basis_fp == basis_fp,
+            "checkpoint basis fingerprint {:016x} does not match the rebuilt basis \
+             {basis_fp:016x} — was the training data changed?",
+            ck.basis_fp
+        );
+        // Adopt the checkpointed timeline wholesale: the restored ledger
+        // already carries the build phases' cost from the original run, so
+        // the rebuild's own charges are discarded with the old clock.
+        session.cluster.clock = SimClock::from_snapshot(&ck.clock);
+        session.beta = ck.state.beta().to_vec();
+        session.fg_evals = ck.session_fg as usize;
+        session.hd_evals = ck.session_hd as usize;
+        // Re-baseline the wall-metrics mirror on the restored counters so
+        // the next sync charges only post-resume deltas (the build-phase
+        // bumps above came from a different timeline).
+        session.mirrored_barriers = session.cluster.clock.barriers();
+        session.mirrored_rounds = session.cluster.clock.comm_rounds();
+        session.mirrored_dispatches = session.cluster.clock.dispatches();
+        session.mirrored_max_node_us =
+            (session.cluster.clock.max_node_secs() * 1e6) as u64;
+        session.mirrored_sum_node_us =
+            (session.cluster.clock.sum_node_secs() * 1e6) as u64;
+        // The rebuild's tile counters restart from zero — baseline on what
+        // the fresh stores report, not the checkpointed total.
+        let (_, _, tiles) = session.storage_stats();
+        session.charged_tiles = tiles;
+        session.pending_resume = Some(PendingResume {
+            state: ck.state,
+            problem_fg: ck.problem_fg,
+            problem_hd: ck.problem_hd,
+        });
         Ok(session)
     }
 
@@ -239,6 +326,14 @@ impl Session {
         let lambda = self.settings.lambda;
         let loss = self.settings.loss;
         let mut solver = solver::make_solver(&self.settings);
+        // Checkpoint context, captured BEFORE the cluster borrow below so
+        // the round hook only touches locals + the problem it is handed.
+        let ck_every = self.settings.checkpoint_every as u64;
+        let ck_path = self.settings.checkpoint_path.clone();
+        let ck_config = CheckpointConfig::of(&self.settings, self.d, self.gamma);
+        let basis_fp = crate::trace::fingerprint_f32s(self.basis.z.as_slice());
+        let (session_fg, session_hd) = (self.fg_evals as u64, self.hd_evals as u64);
+        let resume = self.pending_resume.take();
         let (beta, stats, fg, hd) = {
             let mut problem = DistProblem::new(
                 &mut self.cluster,
@@ -248,7 +343,38 @@ impl Session {
                 loss,
             )
             .with_pipeline(self.settings.eval_pipeline);
-            let (beta, stats) = solver.solve(&mut problem, &self.beta)?;
+            let start = match resume.as_ref() {
+                Some(r) => {
+                    problem.fg_evals = r.problem_fg as usize;
+                    problem.hd_evals = r.problem_hd as usize;
+                    solver::Start::Resume(&r.state)
+                }
+                None => solver::Start::Cold(&self.beta),
+            };
+            // Cadence keys off the solver's ABSOLUTE round count, so a
+            // resumed run checkpoints at the same round numbers the
+            // uninterrupted run would have.
+            let mut hook = |problem: &DistProblem<'_>,
+                            state: &solver::SolverState|
+             -> Result<()> {
+                if state.rounds_done() % ck_every != 0 {
+                    return Ok(());
+                }
+                Checkpoint {
+                    config: ck_config.clone(),
+                    basis_fp,
+                    clock: problem.cluster.clock.snapshot(),
+                    problem_fg: problem.fg_evals as u64,
+                    problem_hd: problem.hd_evals as u64,
+                    session_fg,
+                    session_hd,
+                    state: state.clone(),
+                }
+                .save(&ck_path)
+            };
+            let on_round: Option<solver::RoundHook<'_>> =
+                if ck_every > 0 { Some(&mut hook) } else { None };
+            let (beta, stats) = solver.solve_hooked(&mut problem, start, on_round)?;
             (beta, stats, problem.fg_evals, problem.hd_evals)
         };
         self.beta = beta;
@@ -263,8 +389,7 @@ impl Session {
         let (peak_c, peak_w, tiles) = self.storage_stats();
         let fresh = tiles - self.charged_tiles;
         self.cluster
-            .clock
-            .add_recompute_flops(fresh * kernel_tile_flops(self.dpad));
+            .charge_recompute_flops(fresh * kernel_tile_flops(self.dpad));
         self.charged_tiles = tiles;
         self.sync_counters();
 
@@ -452,6 +577,25 @@ impl Session {
         Ok(crate::metrics::accuracy(&scores, &test.y))
     }
 
+    // ---- phase tracing ----
+
+    /// Start recording a phase trace on the underlying cluster (see
+    /// [`crate::trace`]). Any trace already in flight is discarded.
+    pub fn start_trace(&mut self) {
+        self.cluster.start_trace();
+    }
+
+    pub fn tracing(&self) -> bool {
+        self.cluster.tracing()
+    }
+
+    /// Finish the in-flight trace (None if tracing was off). The trace's
+    /// expected ledger is the cluster clock at this moment — `&self`
+    /// predict metering lives on a side ledger and is not part of it.
+    pub fn take_trace(&mut self) -> Option<crate::trace::Trace> {
+        self.cluster.take_trace()
+    }
+
     // ---- introspection ----
 
     /// Cumulative wall clock (Load/BasisBcast/Kernel/Tron/Predict),
@@ -611,7 +755,7 @@ pub fn growth_settings(settings: &Settings, stages: &[usize]) -> Result<Settings
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::settings::{Backend, CStorage, EvalPipeline, ExecutorChoice};
+    use crate::config::settings::{Backend, CStorage, EvalPipeline, ExecutorChoice, SolverChoice};
     use crate::data::synth;
     use crate::runtime::make_backend;
 
@@ -721,6 +865,109 @@ mod tests {
         assert!(format!("{err:#}").contains("kmeans"), "{err:#}");
         assert!(growth_settings(&s, &[]).is_err());
         assert!(growth_settings(&s, &[64, 32]).is_err());
+    }
+
+    fn sim_cost() -> CostModel {
+        CostModel {
+            latency_s: 1e-4,
+            per_byte_s: 1e-9,
+        }
+    }
+
+    #[test]
+    fn checkpoint_resume_matches_the_uninterrupted_run() {
+        let (train_ds, _) = tiny_data();
+        let backend = make_backend(Backend::Native, "artifacts").unwrap();
+        let dir = std::env::temp_dir().join("dkm_session_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        for solver in [SolverChoice::Tron, SolverChoice::Bcd { block: 32 }] {
+            let mut s = tiny_settings(64, 3);
+            s.solver = solver;
+            let mut full =
+                Session::build(&s, &train_ds, Arc::clone(&backend), sim_cost()).unwrap();
+            let full_solve = full.solve().unwrap();
+
+            // Same run, but leaving a checkpoint after every round.
+            let path = dir.join(format!("{}.ckpt", full_solve.stats.solver));
+            let mut ck_settings = s.clone();
+            ck_settings.checkpoint_every = 1;
+            ck_settings.checkpoint_path = path.display().to_string();
+            let mut first =
+                Session::build(&ck_settings, &train_ds, Arc::clone(&backend), sim_cost())
+                    .unwrap();
+            first.solve().unwrap();
+            assert!(path.exists(), "no checkpoint written for {solver:?}");
+
+            // Resume from the last checkpoint as if `first` had died right
+            // after writing it.
+            let mut resumed =
+                Session::resume_from(&s, &train_ds, Arc::clone(&backend), sim_cost(), &path)
+                    .unwrap();
+            let reslv = resumed.solve().unwrap();
+
+            // β, objective and every count match the uninterrupted run
+            // bitwise. (Simulated COMPUTE seconds fold in measured node
+            // times, so only the deterministic counters are compared.)
+            assert_eq!(full.beta().len(), resumed.beta().len());
+            for (a, b) in full.beta().iter().zip(resumed.beta()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{solver:?} β diverged");
+            }
+            assert_eq!(full_solve.stats.final_f.to_bits(), reslv.stats.final_f.to_bits());
+            assert_eq!(
+                full_solve.stats.final_gnorm.to_bits(),
+                reslv.stats.final_gnorm.to_bits()
+            );
+            assert_eq!(full_solve.stats.iterations, reslv.stats.iterations);
+            assert_eq!(full_solve.stats.converged, reslv.stats.converged);
+            assert_eq!(full_solve.fg_evals, reslv.fg_evals);
+            assert_eq!(full_solve.hd_evals, reslv.hd_evals);
+            assert_eq!(full.evals(), resumed.evals());
+            assert_eq!(full_solve.stats.curve.len(), reslv.stats.curve.len());
+            for (a, b) in full_solve.stats.curve.iter().zip(&reslv.stats.curve) {
+                assert_eq!(a.f.to_bits(), b.f.to_bits());
+                assert_eq!(a.gnorm.to_bits(), b.gnorm.to_bits());
+                assert_eq!(a.comm_rounds, b.comm_rounds);
+            }
+            let (a, b) = (full.sim().snapshot(), resumed.sim().snapshot());
+            assert_eq!(a.barriers, b.barriers);
+            assert_eq!(a.reduce_round_trips, b.reduce_round_trips);
+            assert_eq!(a.dispatches, b.dispatches);
+            assert_eq!(a.comm_instances, b.comm_instances);
+            assert_eq!(a.comm_bytes, b.comm_bytes);
+            assert_eq!(a.faults, b.faults);
+            assert_eq!(a.retries, b.retries);
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn resume_rejects_a_mismatched_run() {
+        let (train_ds, _) = tiny_data();
+        let backend = make_backend(Backend::Native, "artifacts").unwrap();
+        let dir = std::env::temp_dir().join("dkm_session_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mismatch.ckpt");
+        let mut s = tiny_settings(64, 2);
+        s.checkpoint_every = 1;
+        s.checkpoint_path = path.display().to_string();
+        let mut sess =
+            Session::build(&s, &train_ds, Arc::clone(&backend), sim_cost()).unwrap();
+        sess.solve().unwrap();
+        assert!(path.exists());
+
+        let mut wrong = s.clone();
+        wrong.lambda = 0.5;
+        let err =
+            Session::resume_from(&wrong, &train_ds, Arc::clone(&backend), sim_cost(), &path)
+                .unwrap_err();
+        assert!(format!("{err:#}").contains("--lambda"), "{err:#}");
+
+        let mut wrong = s.clone();
+        wrong.solver = SolverChoice::Bcd { block: 16 };
+        let err = Session::resume_from(&wrong, &train_ds, backend, sim_cost(), &path)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("--solver"), "{err:#}");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

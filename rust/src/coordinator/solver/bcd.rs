@@ -53,7 +53,7 @@ use crate::Result;
 
 use super::super::dist::DistProblem;
 use super::super::node::{pad_m_tiles, WorkerNode};
-use super::{CurvePoint, Objective, SolveStats, Solver};
+use super::{CurvePoint, Objective, RoundHook, SolveStats, Solver, SolverState, Start};
 use crate::config::settings::EvalPipeline;
 
 /// Leading scalar slots of the per-round reduce buffer: `[loss, reg]`
@@ -140,6 +140,50 @@ impl BcdSolver {
     pub fn new(opts: BcdOptions) -> Self {
         BcdSolver { opts }
     }
+}
+
+/// Sentinel for [`BcdState::pending_block`] when no delta is pending
+/// (only possible before round 1).
+pub const BCD_NO_PENDING: u64 = u64::MAX;
+
+/// BCD's complete resumable loop state, captured at the bottom of a block
+/// round (after the Newton step was computed but before the nodes apply
+/// it). Restoring it bitwise — INCLUDING the per-node incremental margin
+/// caches, which a fresh `C·β` would round differently — makes the
+/// continued run replay the uninterrupted run's remaining rounds exactly.
+/// Counters are u64 so the checkpoint wire format is width-stable.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BcdState {
+    /// Completed block rounds.
+    pub rounds: u64,
+    /// Master β with every applied delta committed (the pending one is
+    /// NOT in it yet — exactly the loop-top invariant).
+    pub beta: Vec<f32>,
+    /// Index (into the deterministic block partition) of the block whose
+    /// delta is pending, or [`BCD_NO_PENDING`].
+    pub pending_block: u64,
+    /// The pending delta itself (`block` floats).
+    pub pending_delta: Vec<f32>,
+    /// Running Σ‖g_b‖² of the current (partial) sweep.
+    pub sweep_sq: f64,
+    /// First-sweep gradient norm, once a full sweep has completed (the
+    /// stopping tolerance is relative to it).
+    pub has_gnorm0: bool,
+    pub gnorm0: f64,
+    pub last_gnorm: f64,
+    pub fg_evals: u64,
+    /// Per-block Cholesky factors of the majorizer `H̄_b` (f64, n×n
+    /// lower-triangular each), computed once at setup — carried in full so
+    /// resume never re-runs the setup phase.
+    pub factors: Vec<Vec<f64>>,
+    /// Per-node cached margins `z_j = C_j β` (row tile × TB), accumulated
+    /// incrementally across rounds.
+    pub node_margins: Vec<Vec<Vec<f32>>>,
+    /// Convergence curve so far (resume appends to it).
+    pub curve: Vec<CurvePoint>,
+    /// Ledger baselines of the ORIGINAL solve start.
+    pub ledger_t0: f64,
+    pub ledger_r0: u64,
 }
 
 /// Initialize the node's BCD scratch (β replica + cached margins) from a
@@ -340,13 +384,13 @@ impl Solver for BcdSolver {
         "bcd"
     }
 
-    fn solve(
+    fn solve_hooked(
         &mut self,
         problem: &mut DistProblem<'_>,
-        x0: &[f32],
+        start: Start<'_>,
+        mut on_round: Option<RoundHook<'_>>,
     ) -> Result<(Vec<f32>, SolveStats)> {
         let m = problem.m;
-        assert_eq!(x0.len(), m);
         let ct = m.div_ceil(TM).max(1);
         let blocks = partition(m, self.opts.block);
         let nb = blocks.len();
@@ -355,40 +399,119 @@ impl Solver for BcdSolver {
         let loss = problem.loss;
         let pipeline = problem.pipeline;
         let backend = Arc::clone(&problem.backend);
-        let (t0, r0) = problem.ledger();
         let mut stats = SolveStats {
             solver: "bcd",
             ..SolveStats::default()
         };
 
-        // ---- setup: full-β broadcast, margins/replica init, per-block
-        // majorizer factors (one fused phase, one-time).
-        let mut beta = x0.to_vec();
-        let beta_tiles = pad_m_tiles(&beta, ct);
-        problem
-            .cluster
-            .broadcast_meter(Step::Tron, m * std::mem::size_of::<f32>());
-        let calls0 = backend.call_count();
-        let reduced = {
-            let backend = backend.as_ref();
-            let blocks = &blocks;
-            let beta_tiles = &beta_tiles;
-            problem.cluster.try_par_compute_reduce(Step::Tron, |_, node| {
-                node_setup(node, backend, beta_tiles, blocks)
-            })?
-        };
-        problem
-            .cluster
-            .clock
-            .add_dispatches(backend.call_count().saturating_sub(calls0));
-        let factors = factor_blocks(&blocks, &reduced, kappa, lambda as f64)?;
+        let mut beta: Vec<f32>;
+        let factors: Vec<Vec<f64>>;
+        let mut pending: Option<(Block, Vec<f32>)>;
+        let mut sweep_sq: f64;
+        let mut gnorm0: Option<f64>;
+        let mut last_gnorm: f64;
+        let mut rounds: usize;
+        let t0: f64;
+        let r0: u64;
+        match start {
+            Start::Cold(x0) => {
+                assert_eq!(x0.len(), m);
+                let (lt0, lr0) = problem.ledger();
+                t0 = lt0;
+                r0 = lr0;
+
+                // ---- setup: full-β broadcast, margins/replica init,
+                // per-block majorizer factors (one fused phase, one-time).
+                beta = x0.to_vec();
+                let beta_tiles = pad_m_tiles(&beta, ct);
+                problem
+                    .cluster
+                    .broadcast_meter(Step::Tron, m * std::mem::size_of::<f32>());
+                let calls0 = backend.call_count();
+                let reduced = {
+                    let backend = backend.as_ref();
+                    let blocks = &blocks;
+                    let beta_tiles = &beta_tiles;
+                    problem.cluster.try_par_compute_reduce(Step::Tron, |_, node| {
+                        node_setup(node, backend, beta_tiles, blocks)
+                    })?
+                };
+                problem
+                    .cluster
+                    .charge_dispatches(backend.call_count().saturating_sub(calls0));
+                factors = factor_blocks(&blocks, &reduced, kappa, lambda as f64)?;
+                pending = None;
+                sweep_sq = 0.0;
+                gnorm0 = None;
+                last_gnorm = 0.0;
+                rounds = 0;
+            }
+            Start::Resume(SolverState::Bcd(st)) => {
+                // ---- resume: restore the master loop state AND the
+                // per-node caches bitwise; the once-factored majorizers
+                // travel in the state, so no setup phase runs (the
+                // restored ledger already paid for the original one).
+                anyhow::ensure!(
+                    st.beta.len() == m,
+                    "bcd resume: checkpoint has {} coordinates, the problem has {m}",
+                    st.beta.len()
+                );
+                anyhow::ensure!(
+                    st.factors.len() == nb,
+                    "bcd resume: checkpoint has {} block factors, the partition has {nb} \
+                     (was --solver bcd:block changed?)",
+                    st.factors.len()
+                );
+                let p = problem.cluster.p();
+                anyhow::ensure!(
+                    st.node_margins.len() == p,
+                    "bcd resume: checkpoint has margin caches for {} nodes, the cluster has {p}",
+                    st.node_margins.len()
+                );
+                beta = st.beta.clone();
+                let beta_tiles = pad_m_tiles(&beta, ct);
+                for (j, node) in problem.cluster.nodes_mut().iter_mut().enumerate() {
+                    anyhow::ensure!(
+                        st.node_margins[j].len() == node.row_tiles(),
+                        "bcd resume: node {j} has {} row tiles, the checkpoint stored {}",
+                        node.row_tiles(),
+                        st.node_margins[j].len()
+                    );
+                    node.bcd_margins = st.node_margins[j].clone();
+                    node.bcd_beta_tiles = beta_tiles.clone();
+                }
+                factors = st.factors.clone();
+                pending = if st.pending_block == BCD_NO_PENDING {
+                    None
+                } else {
+                    let bi = st.pending_block as usize;
+                    anyhow::ensure!(bi < nb, "bcd resume: pending block {bi} out of range");
+                    let b = blocks[bi];
+                    anyhow::ensure!(
+                        st.pending_delta.len() == b.len(),
+                        "bcd resume: pending delta has {} entries, block {bi} has {}",
+                        st.pending_delta.len(),
+                        b.len()
+                    );
+                    Some((b, st.pending_delta.clone()))
+                };
+                sweep_sq = st.sweep_sq;
+                gnorm0 = st.has_gnorm0.then_some(st.gnorm0);
+                last_gnorm = st.last_gnorm;
+                rounds = st.rounds as usize;
+                stats.fg_evals = st.fg_evals as usize;
+                stats.curve = st.curve.clone();
+                t0 = st.ledger_t0;
+                r0 = st.ledger_r0;
+            }
+            Start::Resume(other) => anyhow::bail!(
+                "checkpoint holds {} solver state — rerun with --solver {} to resume it",
+                other.solver_name(),
+                other.solver_name()
+            ),
+        }
 
         // ---- outer block rounds: one barrier + one AllReduce each.
-        let mut pending: Option<(Block, Vec<f32>)> = None;
-        let mut sweep_sq = 0.0f64;
-        let mut gnorm0: Option<f64> = None;
-        let mut last_gnorm = 0.0f64;
-        let mut rounds = 0usize;
         while rounds < self.opts.max_rounds {
             let bi = rounds % nb;
             let block = blocks[bi];
@@ -402,8 +525,7 @@ impl Solver for BcdSolver {
             let reduced = run_phase(problem, &backend, loss, lambda, &pending, Some(block), pipeline)?;
             problem
                 .cluster
-                .clock
-                .add_dispatches(backend.call_count().saturating_sub(calls0));
+                .charge_dispatches(backend.call_count().saturating_sub(calls0));
             problem.fg_evals += 1;
             stats.fg_evals += 1;
             // Master-side commit of the delta the nodes just applied.
@@ -446,6 +568,30 @@ impl Solver for BcdSolver {
             let rhs: Vec<f64> = gb.iter().map(|v| -(*v as f64)).collect();
             let step64 = cholesky_solve_factored(&factors[bi], n, &rhs);
             pending = Some((block, step64.iter().map(|v| *v as f32).collect()));
+            // Round boundary: the convergence check above passed, so the
+            // loop WILL come back around (or stop at the round cap, which
+            // resume re-checks identically). Safe snapshot point.
+            if let Some(h) = on_round.as_mut() {
+                let state = SolverState::Bcd(BcdState {
+                    rounds: rounds as u64,
+                    beta: beta.clone(),
+                    pending_block: bi as u64,
+                    pending_delta: pending.as_ref().map(|(_, d)| d.clone()).unwrap_or_default(),
+                    sweep_sq,
+                    has_gnorm0: gnorm0.is_some(),
+                    gnorm0: gnorm0.unwrap_or(0.0),
+                    last_gnorm,
+                    fg_evals: stats.fg_evals as u64,
+                    factors: factors.clone(),
+                    node_margins: (0..problem.cluster.p())
+                        .map(|j| problem.cluster.node(j).bcd_margins.clone())
+                        .collect(),
+                    curve: stats.curve.clone(),
+                    ledger_t0: t0,
+                    ledger_r0: r0,
+                });
+                h(&*problem, &state)?;
+            }
         }
         stats.iterations = rounds;
 
@@ -460,8 +606,7 @@ impl Solver for BcdSolver {
         let reduced = run_phase(problem, &backend, loss, lambda, &pending, None, pipeline)?;
         problem
             .cluster
-            .clock
-            .add_dispatches(backend.call_count().saturating_sub(calls0));
+            .charge_dispatches(backend.call_count().saturating_sub(calls0));
         problem.fg_evals += 1;
         stats.fg_evals += 1;
         if let Some((pb, d)) = pending.take() {

@@ -24,6 +24,13 @@
 //! (comm_rounds and barriers vs objective decrease per simulated second)
 //! like for like.
 //!
+//! Both solvers are also **resumable**: [`Solver::solve_hooked`] starts
+//! from a [`Start`] — a cold β or a [`SolverState`] snapshotted at a round
+//! boundary — and fires a round hook with the complete loop state after
+//! every round. The checkpoint subsystem
+//! ([`crate::coordinator::checkpoint`]) persists those states; a resumed
+//! run replays the uninterrupted run's remaining rounds bit-identically.
+//!
 //! [`Session::solve`]: super::session::Session::solve
 
 pub mod bcd;
@@ -34,8 +41,8 @@ use crate::Result;
 
 use super::dist::DistProblem;
 
-pub use bcd::{BcdOptions, BcdSolver};
-pub use tron::{minimize, TronOptions, TronSolver};
+pub use bcd::{BcdOptions, BcdSolver, BcdState};
+pub use tron::{minimize, TronOptions, TronSolver, TronState};
 
 /// Anything a master-side solver can minimize. Gradients are f32 vectors
 /// (they travel over the AllReduce tree); f accumulates in f64 on the
@@ -53,6 +60,107 @@ pub trait Objective {
     /// carry only f and ‖g‖.
     fn ledger(&self) -> (f64, u64) {
         (0.0, 0)
+    }
+
+    /// Resumable solvers ask this before cloning their loop state at each
+    /// round boundary; the default `false` keeps round snapshots free for
+    /// plain objectives.
+    fn wants_rounds(&self) -> bool {
+        false
+    }
+
+    /// Round-boundary notification from resumable solvers, carrying the
+    /// complete loop state a later [`Start::Resume`] needs. Only fired
+    /// when [`Objective::wants_rounds`] is true; [`HookedProblem`] routes
+    /// it to the session's checkpoint writer. Default: no-op.
+    fn on_round(&mut self, _state: &SolverState) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Where a solve begins: a cold/warm start from a β vector, or the exact
+/// mid-solve loop state a previous run snapshotted at a round boundary.
+/// Resume restores every number the solver's loop carries bitwise, so the
+/// continued run replays the uninterrupted run's remaining rounds exactly.
+pub enum Start<'a> {
+    Cold(&'a [f32]),
+    Resume(&'a SolverState),
+}
+
+/// A solver's complete resumable loop state, snapshotted at a round
+/// boundary (after the round's bookkeeping, before the next round's first
+/// evaluation). The variant must match the solver that resumes it.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SolverState {
+    Tron(TronState),
+    Bcd(BcdState),
+}
+
+impl SolverState {
+    pub fn solver_name(&self) -> &'static str {
+        match self {
+            SolverState::Tron(_) => "tron",
+            SolverState::Bcd(_) => "bcd",
+        }
+    }
+
+    /// The β the solve had committed when this state was captured.
+    pub fn beta(&self) -> &[f32] {
+        match self {
+            SolverState::Tron(st) => &st.x,
+            SolverState::Bcd(st) => &st.beta,
+        }
+    }
+
+    /// Outer rounds completed when this state was captured (TRON passes /
+    /// BCD block rounds).
+    pub fn rounds_done(&self) -> u64 {
+        match self {
+            SolverState::Tron(st) => st.passes,
+            SolverState::Bcd(st) => st.rounds,
+        }
+    }
+}
+
+/// The round hook [`Solver::solve_hooked`] fires at each round boundary:
+/// a read view of the distributed problem (for ledger/eval-count capture)
+/// plus the solver's resumable state. Checkpoint cadence lives in the
+/// hook, not the solver.
+pub type RoundHook<'h> = &'h mut dyn FnMut(&DistProblem<'_>, &SolverState) -> Result<()>;
+
+/// Adapter wiring a session-level round hook into an [`Objective`]: the
+/// TRON core is generic over objectives and only sees
+/// [`Objective::on_round`]; this routes that to the hook with a read view
+/// of the distributed problem. (BCD owns its problem borrow and calls the
+/// hook directly.)
+pub(crate) struct HookedProblem<'p, 'a, 'h> {
+    pub inner: &'p mut DistProblem<'a>,
+    pub hook: RoundHook<'h>,
+}
+
+impl Objective for HookedProblem<'_, '_, '_> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn eval_fg(&mut self, x: &[f32]) -> Result<(f64, Vec<f32>)> {
+        self.inner.eval_fg(x)
+    }
+
+    fn eval_hd(&mut self, d: &[f32]) -> Result<Vec<f32>> {
+        self.inner.eval_hd(d)
+    }
+
+    fn ledger(&self) -> (f64, u64) {
+        self.inner.ledger()
+    }
+
+    fn wants_rounds(&self) -> bool {
+        true
+    }
+
+    fn on_round(&mut self, state: &SolverState) -> Result<()> {
+        (self.hook)(&*self.inner, state)
     }
 }
 
@@ -117,6 +225,19 @@ pub trait Solver {
         &mut self,
         problem: &mut DistProblem<'_>,
         x0: &[f32],
+    ) -> Result<(Vec<f32>, SolveStats)> {
+        self.solve_hooked(problem, Start::Cold(x0), None)
+    }
+
+    /// Minimize from a [`Start`] (cold β or a resumable mid-solve state),
+    /// firing `on_round` with the complete loop state at every round
+    /// boundary. Cold + no hook is exactly [`Solver::solve`]; a resumed
+    /// run replays the uninterrupted run's remaining rounds bitwise.
+    fn solve_hooked(
+        &mut self,
+        problem: &mut DistProblem<'_>,
+        start: Start<'_>,
+        on_round: Option<RoundHook<'_>>,
     ) -> Result<(Vec<f32>, SolveStats)>;
 }
 

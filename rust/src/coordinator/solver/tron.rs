@@ -11,7 +11,7 @@
 use crate::Result;
 
 use super::super::dist::DistProblem;
-use super::{CurvePoint, Objective, SolveStats, Solver};
+use super::{CurvePoint, HookedProblem, Objective, RoundHook, SolveStats, Solver, SolverState, Start};
 
 #[derive(Clone, Debug)]
 pub struct TronOptions {
@@ -61,13 +61,59 @@ impl Solver for TronSolver {
         "tron"
     }
 
-    fn solve(
+    fn solve_hooked(
         &mut self,
         problem: &mut DistProblem<'_>,
-        x0: &[f32],
+        start: Start<'_>,
+        on_round: Option<RoundHook<'_>>,
     ) -> Result<(Vec<f32>, SolveStats)> {
-        minimize(problem, x0, &self.opts)
+        match on_round {
+            None => minimize_hooked(problem, start, &self.opts),
+            Some(hook) => {
+                let mut hooked = HookedProblem {
+                    inner: problem,
+                    hook,
+                };
+                minimize_hooked(&mut hooked, start, &self.opts)
+            }
+        }
     }
+}
+
+/// TRON's complete resumable loop state, captured at the bottom of an
+/// outer pass (after the radius update, accept/reject and degeneracy
+/// guards). Every field is restored bitwise on [`Start::Resume`], so the
+/// continued run's remaining passes — and everything they charge to the
+/// ledger — replay the uninterrupted run's exactly. Counters are u64 so
+/// the checkpoint wire format is width-stable across platforms.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TronState {
+    /// Total outer passes taken (accepted + rejected).
+    pub passes: u64,
+    /// Accepted trust-region steps (the `iterations` stat).
+    pub accepted: u64,
+    /// Current iterate.
+    pub x: Vec<f32>,
+    /// f and ∇f at `x` (restoring these is what lets resume skip the
+    /// initial evaluation — the uninterrupted run never re-evaluated
+    /// here either).
+    pub f: f64,
+    pub g: Vec<f32>,
+    pub gnorm: f64,
+    /// ‖g₀‖ of the ORIGINAL cold start (the stopping tolerance is
+    /// relative to it, so it must survive the interruption).
+    pub gnorm0: f64,
+    /// Trust-region radius.
+    pub delta: f64,
+    pub fg_evals: u64,
+    pub hd_evals: u64,
+    /// Convergence curve so far (resume appends to it).
+    pub curve: Vec<CurvePoint>,
+    /// Ledger baselines captured at the ORIGINAL solve start; curve points
+    /// are deltas from these, so the resumed curve stays continuous with
+    /// the restored clock.
+    pub ledger_t0: f64,
+    pub ledger_r0: u64,
 }
 
 fn dot64(a: &[f32], b: &[f32]) -> f64 {
@@ -86,6 +132,34 @@ pub fn minimize(
     x0: &[f32],
     opts: &TronOptions,
 ) -> Result<(Vec<f32>, SolveStats)> {
+    minimize_hooked(obj, Start::Cold(x0), opts)
+}
+
+/// One convergence-curve point, stamped as deltas from the solve-start
+/// ledger baselines.
+fn stamp(stats: &mut SolveStats, ledger: (f64, u64), base: (f64, u64), f: f64, gnorm: f64) {
+    stats.curve.push(CurvePoint {
+        cum_secs: ledger.0 - base.0,
+        comm_rounds: ledger.1 - base.1,
+        f,
+        gnorm,
+    });
+}
+
+/// [`minimize`] with a resumable [`Start`]: `Cold` is the classic path,
+/// numerically unchanged; `Resume` restores the full loop state a round
+/// snapshot captured and continues WITHOUT re-evaluating f/g at the
+/// restored iterate — the remaining passes replay the uninterrupted run's
+/// bitwise. When the objective wants round snapshots
+/// ([`Objective::wants_rounds`]), the complete state is pushed through
+/// [`Objective::on_round`] at the bottom of every pass, after all the
+/// guards — i.e. only at points the loop is guaranteed to re-enter, so a
+/// resume never skips a termination check the original run would have hit.
+pub fn minimize_hooked(
+    obj: &mut dyn Objective,
+    start: Start<'_>,
+    opts: &TronOptions,
+) -> Result<(Vec<f32>, SolveStats)> {
     // Radius update constants (LIBLINEAR).
     const ETA0: f64 = 1e-4;
     const ETA1: f64 = 0.25;
@@ -95,41 +169,87 @@ pub fn minimize(
     const SIGMA3: f64 = 4.0;
 
     let n = obj.dim();
-    assert_eq!(x0.len(), n);
-    let (ledger_t0, ledger_r0) = obj.ledger();
     let mut stats = SolveStats {
         solver: "tron",
         ..SolveStats::default()
     };
-    let stamp = |stats: &mut SolveStats, ledger: (f64, u64), f: f64, gnorm: f64| {
-        stats.curve.push(CurvePoint {
-            cum_secs: ledger.0 - ledger_t0,
-            comm_rounds: ledger.1 - ledger_r0,
-            f,
-            gnorm,
-        });
+    let st = match start {
+        Start::Cold(x0) => {
+            assert_eq!(x0.len(), n);
+            let (ledger_t0, ledger_r0) = obj.ledger();
+            let x = x0.to_vec();
+            let (f, g) = obj.eval_fg(&x)?;
+            stats.fg_evals += 1;
+            let gnorm0 = norm64(&g);
+            stamp(
+                &mut stats,
+                obj.ledger(),
+                (ledger_t0, ledger_r0),
+                f,
+                gnorm0,
+            );
+            if gnorm0 == 0.0 {
+                stats.final_f = f;
+                stats.converged = true;
+                return Ok((x, stats));
+            }
+            TronState {
+                passes: 0,
+                accepted: 0,
+                x,
+                f,
+                g,
+                gnorm: gnorm0,
+                gnorm0,
+                delta: gnorm0,
+                fg_evals: stats.fg_evals as u64,
+                hd_evals: 0,
+                curve: std::mem::take(&mut stats.curve),
+                ledger_t0,
+                ledger_r0,
+            }
+        }
+        Start::Resume(SolverState::Tron(st)) => {
+            anyhow::ensure!(
+                st.x.len() == n,
+                "tron resume: checkpoint has {} coordinates, the problem has {n}",
+                st.x.len()
+            );
+            st.clone()
+        }
+        Start::Resume(other) => anyhow::bail!(
+            "checkpoint holds {} solver state — rerun with --solver {} to resume it",
+            other.solver_name(),
+            other.solver_name()
+        ),
     };
-    let mut x = x0.to_vec();
-    let (mut f, mut g) = obj.eval_fg(&x)?;
-    stats.fg_evals += 1;
-    let gnorm0 = norm64(&g);
-    let mut gnorm = gnorm0;
-    stamp(&mut stats, obj.ledger(), f, gnorm);
-    let mut delta = gnorm;
-
-    if gnorm0 == 0.0 {
-        stats.final_f = f;
-        stats.converged = true;
-        return Ok((x, stats));
-    }
+    let TronState {
+        passes,
+        accepted,
+        mut x,
+        mut f,
+        mut g,
+        mut gnorm,
+        gnorm0,
+        mut delta,
+        fg_evals,
+        hd_evals,
+        curve,
+        ledger_t0,
+        ledger_r0,
+    } = st;
+    stats.fg_evals = fg_evals as usize;
+    stats.hd_evals = hd_evals as usize;
+    stats.curve = curve;
+    let base = (ledger_t0, ledger_r0);
 
     // `accepted` counts successful steps (the convergence curve); `passes`
     // counts EVERY trip through the loop. Bounding passes — not accepts —
     // is what bounds the work: a rejected step still pays a full f/g
     // evaluation, and an objective that rejects forever used to spin here
     // until the `delta` underflow guard fired (if it ever did).
-    let mut accepted = 0usize;
-    let mut passes = 0usize;
+    let mut accepted = accepted as usize;
+    let mut passes = passes as usize;
     while passes < opts.max_iters {
         if gnorm <= opts.tol as f64 * gnorm0 {
             stats.converged = true;
@@ -181,7 +301,7 @@ pub fn minimize(
             f = f_new;
             g = g_new;
             gnorm = norm64(&g);
-            stamp(&mut stats, obj.ledger(), f, gnorm);
+            stamp(&mut stats, obj.ledger(), base, f, gnorm);
             accepted += 1;
             if opts.verbose {
                 eprintln!(
@@ -204,6 +324,27 @@ pub fn minimize(
         }
         if delta <= 1e-30 {
             break;
+        }
+        // Round boundary: every guard above passed, so the loop WILL come
+        // back around (or stop at the top-of-loop checks, which resume
+        // re-evaluates identically from this state). Safe snapshot point.
+        if obj.wants_rounds() {
+            let snap = SolverState::Tron(TronState {
+                passes: passes as u64,
+                accepted: accepted as u64,
+                x: x.clone(),
+                f,
+                g: g.clone(),
+                gnorm,
+                gnorm0,
+                delta,
+                fg_evals: stats.fg_evals as u64,
+                hd_evals: stats.hd_evals as u64,
+                curve: stats.curve.clone(),
+                ledger_t0,
+                ledger_r0,
+            });
+            obj.on_round(&snap)?;
         }
     }
     // A run can hit the tolerance exactly on its last permitted pass; the
@@ -467,6 +608,108 @@ mod tests {
         assert_eq!(stats.curve.len(), stats.iterations + 1);
         assert!(stats.fg_evals >= stats.iterations + 1);
         assert_eq!(stats.solver, "tron");
+    }
+
+    /// Wraps an objective to collect every round snapshot, exactly like
+    /// the checkpoint hook does through `HookedProblem`.
+    struct Snapshotting<Q: Objective> {
+        inner: Q,
+        states: Vec<SolverState>,
+    }
+
+    impl<Q: Objective> Objective for Snapshotting<Q> {
+        fn dim(&self) -> usize {
+            self.inner.dim()
+        }
+
+        fn eval_fg(&mut self, x: &[f32]) -> Result<(f64, Vec<f32>)> {
+            self.inner.eval_fg(x)
+        }
+
+        fn eval_hd(&mut self, d: &[f32]) -> Result<Vec<f32>> {
+            self.inner.eval_hd(d)
+        }
+
+        fn wants_rounds(&self) -> bool {
+            true
+        }
+
+        fn on_round(&mut self, s: &SolverState) -> Result<()> {
+            self.states.push(s.clone());
+            Ok(())
+        }
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn round_snapshots_do_not_perturb_the_solve() {
+        let x0 = vec![1.0f32; 15];
+        let (x_plain, st_plain) =
+            minimize(&mut spd_quad(15, 3), &x0, &TronOptions::default()).unwrap();
+        let mut snap = Snapshotting {
+            inner: spd_quad(15, 3),
+            states: Vec::new(),
+        };
+        let (x_snap, st_snap) =
+            minimize_hooked(&mut snap, Start::Cold(&x0), &TronOptions::default()).unwrap();
+        assert_eq!(bits(&x_plain), bits(&x_snap));
+        assert_eq!(st_plain.final_f.to_bits(), st_snap.final_f.to_bits());
+        assert_eq!(st_plain.curve, st_snap.curve);
+        // One snapshot at the bottom of every completed pass (the last
+        // pass may break out of a guard before the snapshot point).
+        assert!(!snap.states.is_empty());
+        assert!(snap.states.len() <= st_snap.fg_evals);
+    }
+
+    #[test]
+    fn resume_from_any_round_is_bit_identical_to_the_full_run() {
+        let x0 = vec![1.0f32; 15];
+        let opts = TronOptions::default();
+        let mut snap = Snapshotting {
+            inner: spd_quad(15, 3),
+            states: Vec::new(),
+        };
+        let (x_full, st_full) = minimize_hooked(&mut snap, Start::Cold(&x0), &opts).unwrap();
+        assert!(snap.states.len() >= 2, "need rounds to resume from");
+        for state in &snap.states {
+            let mut fresh = spd_quad(15, 3);
+            let (x_res, st_res) =
+                minimize_hooked(&mut fresh, Start::Resume(state), &opts).unwrap();
+            assert_eq!(bits(&x_full), bits(&x_res), "resume at {state:?}");
+            assert_eq!(st_full.final_f.to_bits(), st_res.final_f.to_bits());
+            assert_eq!(st_full.final_gnorm.to_bits(), st_res.final_gnorm.to_bits());
+            assert_eq!(st_full.iterations, st_res.iterations);
+            assert_eq!(st_full.fg_evals, st_res.fg_evals);
+            assert_eq!(st_full.hd_evals, st_res.hd_evals);
+            assert_eq!(st_full.curve, st_res.curve);
+            assert_eq!(st_full.converged, st_res.converged);
+        }
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_state() {
+        let mut q = spd_quad(5, 4);
+        let bad = SolverState::Tron(TronState {
+            passes: 1,
+            accepted: 1,
+            x: vec![0.0; 9],
+            f: 0.0,
+            g: vec![0.0; 9],
+            gnorm: 1.0,
+            gnorm0: 1.0,
+            delta: 1.0,
+            fg_evals: 2,
+            hd_evals: 1,
+            curve: Vec::new(),
+            ledger_t0: 0.0,
+            ledger_r0: 0,
+        });
+        let err = minimize_hooked(&mut q, Start::Resume(&bad), &TronOptions::default())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("9 coordinates"), "{err:#}");
     }
 
     #[test]

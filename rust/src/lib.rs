@@ -50,6 +50,13 @@
 //!   prediction-only [`coordinator::serving::ServingSession`], driven by
 //!   closed-loop clients and reported as qps + latency percentiles on
 //!   both the wall clock and the simulated ledger.
+//! * [`cluster::fault`] + [`trace`] + [`coordinator::checkpoint`] — the
+//!   **resilience subsystem**: seeded deterministic phase-fault injection
+//!   with bounded, ledger-charged retries (`--faults`/`--retries`);
+//!   bit-identical mid-training checkpoint/resume of a whole `Session`
+//!   (`--checkpoint-every`/`--resume`); and a phase trace
+//!   recorder/replayer (`--trace`, `dkm trace`) that re-drives the
+//!   simulated ledger exactly from a compact binary manifest.
 //! * [`linalg`], [`rng`], [`data`], [`config`], [`metrics`] — substrates.
 
 // Numeric tile code indexes several parallel buffers per loop and threads
@@ -68,6 +75,7 @@ pub mod metrics;
 pub mod rng;
 pub mod runtime;
 pub mod serve;
+pub mod trace;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

@@ -7,6 +7,7 @@
 //!   ppacksvm    P-packSVM baseline (Zhu et al.)
 //!   serve       Closed-loop serving: micro-batching queue over a
 //!               prediction-only session (load a saved model or train one)
+//!   trace       record | inspect | replay a deterministic phase trace
 //!   info        Show the artifact manifest the runtime would load
 //!
 //! `train` and `stagewise` drive one stateful `Session`: the cluster, the
@@ -34,6 +35,7 @@ use dkm::serve::ServeConfig;
 use dkm::data::{synth, Dataset};
 use dkm::metrics::{Step, Table};
 use dkm::runtime::{make_backend, Manifest};
+use dkm::trace::Trace;
 use dkm::Result;
 
 fn main() {
@@ -48,6 +50,9 @@ const TRAIN_FLAGS: &[&str] = &[
     "backend", "exec", "sched", "skew", "c-storage", "c-memory-budget", "eval-pipeline", "solver", "max-iters",
     "tol", "solver-max-iters", "solver-tol", "seed", "kmeans-iters", "artifacts", "config",
     "stages", "pack", "epochs", "verbose", "cost", "lambda-sweep", "save-model",
+    // resilience flags
+    "faults", "retries", "retry-backoff", "checkpoint-every", "checkpoint", "resume",
+    "trace", "limit",
     // serve-only flags
     "model", "clients", "requests", "think-ms", "max-batch", "max-delay-ms", "slots",
     "queue-cap", "json",
@@ -67,6 +72,7 @@ fn run() -> Result<()> {
         "linearized" => cmd_linearized(&args),
         "ppacksvm" => cmd_ppacksvm(&args),
         "serve" => cmd_serve(&args),
+        "trace" => cmd_trace(&args),
         "info" => cmd_info(&args),
         _ => {
             print!("{}", HELP);
@@ -77,7 +83,7 @@ fn run() -> Result<()> {
 
 const HELP: &str = "dkm — distributed nonlinear kernel machines (Nyström formulation (4) + AllReduce TRON)
 
-USAGE: dkm <train|stagewise|linearized|ppacksvm|serve|info> [--flags]
+USAGE: dkm <train|stagewise|linearized|ppacksvm|serve|trace|info> [--flags]
 
 Common flags:
   --dataset NAME    vehicle_like | covtype_like | ccat_like | mnist8m_like
@@ -130,6 +136,37 @@ Common flags:
                     `stagewise` the final stage's model
   --config FILE     key=value settings file (CLI flags override)
 
+Resilience flags (train/stagewise; every recovery is bit-identical):
+  --faults SPEC     inject phase faults on the simulated cluster:
+                    node=J@phase=K[,node=J@phase=K...] kills node J in
+                    global phase K, rand:P:SEED kills a pseudo-random
+                    node with probability P per phase (deterministic in
+                    SEED); failed phases re-run under --retries
+  --retries N       bounded per-phase retry budget (default 2); an
+                    exhausted budget aborts the run with phase context
+  --retry-backoff X simulated seconds charged to the ledger per retry
+                    (scaled by attempt number; default 0.05)
+  --checkpoint-every N   snapshot the solver state to --checkpoint every
+                    N outer rounds (0 = off); a resumed run finishes
+                    bitwise identical to an uninterrupted one
+  --checkpoint PATH where the latest checkpoint lands (default dkm.ckpt)
+  --resume PATH     continue a `train` run from a checkpoint written by
+                    --checkpoint-every (same data/flags; --exec/--sched/
+                    --skew may differ)
+  --trace PATH      record every ledger-visible event from cluster birth,
+                    verify it replays to the live ledger bitwise, and
+                    save the manifest after the solve (train command; see
+                    `dkm trace`)
+
+Trace subcommands (dkm trace <record|inspect|replay>):
+  dkm trace record OUT [train flags]   run a training session with the
+                    recorder on, verify replay, save the manifest to OUT
+  dkm trace inspect PATH [--limit N]   print the manifest header and the
+                    first N records (default 40)
+  dkm trace replay PATH                re-run the records against a fresh
+                    simulated ledger and check it lands bitwise on the
+                    recorded snapshot
+
 Serve flags (dkm serve; every reply is checked bit-identical to the
 serial scoring loop):
   --model PATH      serve a model saved with --save-model (default: train
@@ -178,6 +215,11 @@ fn settings_from(args: &Args) -> Result<Settings> {
         ("seed", "seed"),
         ("kmeans-iters", "kmeans_iters"),
         ("artifacts", "artifacts_dir"),
+        ("faults", "faults"),
+        ("retries", "retries"),
+        ("retry-backoff", "retry_backoff"),
+        ("checkpoint-every", "checkpoint_every"),
+        ("checkpoint", "checkpoint_path"),
     ] {
         if let Some(v) = args.str_opt(flag) {
             kv.insert(key.to_string(), v.to_string());
@@ -273,7 +315,10 @@ fn print_run_report(session: &Session, solve: &Solve, acc: f64, verbose: bool) {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let s = settings_from(args)?;
+    let mut s = settings_from(args)?;
+    let trace_path = args.str_opt("trace");
+    s.trace = trace_path.is_some();
+    let resume_path = args.str_opt("resume");
     let cost = cost_from(args)?;
     let (train_ds, test_ds) = load_data(args, &s)?;
     println!(
@@ -295,8 +340,28 @@ fn cmd_train(args: &Args) -> Result<()> {
         s.eval_pipeline.name(),
     );
     let backend = make_backend(s.backend, &s.artifacts_dir)?;
-    let mut session = Session::build(&s, &train_ds, Arc::clone(&backend), cost)?;
+    let mut session = match resume_path {
+        Some(ck) => {
+            println!("resuming from checkpoint {ck}");
+            Session::resume_from(&s, &train_ds, Arc::clone(&backend), cost, ck)?
+        }
+        None => Session::build(&s, &train_ds, Arc::clone(&backend), cost)?,
+    };
     let solve = session.solve()?;
+    // The training trace closes here: prediction below meters a side
+    // ledger, a λ sweep would be a second solve on the same clock.
+    if let Some(path) = trace_path {
+        let trace = session
+            .take_trace()
+            .ok_or_else(|| anyhow::anyhow!("--trace was set but no trace was recorded"))?;
+        trace.replay_verified()?;
+        trace.save(path)?;
+        println!(
+            "trace saved to {path}: {} records over p={}, replay verified bitwise",
+            trace.records.len(),
+            trace.p
+        );
+    }
     // Scoring goes through the session: distributed over the live cluster,
     // metered as the `predict` step in both reports below.
     let acc = session.accuracy(&test_ds)?;
@@ -528,6 +593,80 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("report written to {path}");
     }
     Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let sub = args
+        .positional()
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("help");
+    match sub {
+        "record" => {
+            let out = args
+                .positional()
+                .get(2)
+                .cloned()
+                .unwrap_or_else(|| "dkm.trace".to_string());
+            let mut s = settings_from(args)?;
+            s.trace = true;
+            let cost = cost_from(args)?;
+            let (train_ds, _) = load_data(args, &s)?;
+            let backend = make_backend(s.backend, &s.artifacts_dir)?;
+            let mut session = Session::build(&s, &train_ds, Arc::clone(&backend), cost)?;
+            let solve = session.solve()?;
+            let trace = session
+                .take_trace()
+                .ok_or_else(|| anyhow::anyhow!("tracing was enabled but produced no trace"))?;
+            // Prove the manifest is sound before shipping it: replay must
+            // land on the live ledger bit-for-bit.
+            trace.replay_verified()?;
+            trace.save(&out)?;
+            println!(
+                "trace saved to {out}: {} records over p={} (solver {}, {} rounds), replay verified bitwise",
+                trace.records.len(),
+                trace.p,
+                solve.stats.solver,
+                solve.stats.iterations
+            );
+            Ok(())
+        }
+        "inspect" => {
+            let path = path_arg(args, "inspect")?;
+            let trace = Trace::load(&path)?;
+            print!("{}", trace.render(args.usize_or("limit", 40)?));
+            Ok(())
+        }
+        "replay" => {
+            let path = path_arg(args, "replay")?;
+            let trace = Trace::load(&path)?;
+            let clock = trace.replay_verified()?;
+            println!("== replayed ledger ==");
+            print!("{}", clock.report());
+            println!(
+                "replay OK: {} records reproduced the recorded ledger bitwise \
+                 ({} barriers, {} AllReduce round-trips, {} faults, {} retries)",
+                trace.records.len(),
+                clock.barriers(),
+                clock.comm_rounds(),
+                clock.faults(),
+                clock.retries(),
+            );
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown trace subcommand {other:?}: dkm trace <record|inspect|replay> \
+             (record OUT [train flags] | inspect PATH [--limit N] | replay PATH)"
+        ),
+    }
+}
+
+/// The PATH positional of `dkm trace inspect|replay`.
+fn path_arg(args: &Args, sub: &str) -> Result<String> {
+    args.positional()
+        .get(2)
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("dkm trace {sub} PATH: missing trace path"))
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

@@ -46,6 +46,21 @@ impl Step {
         ]
     }
 
+    /// Stable binary tag for serialized ledgers (checkpoints, phase
+    /// traces): the position in [`Step::all`]. New steps must be APPENDED
+    /// to `all()` so existing tags keep their meaning on disk.
+    pub fn tag(&self) -> u8 {
+        Step::all()
+            .iter()
+            .position(|s| s == self)
+            .expect("every step is in Step::all()") as u8
+    }
+
+    /// Inverse of [`Step::tag`]; `None` for tags from a newer format.
+    pub fn from_tag(tag: u8) -> Option<Step> {
+        Step::all().get(tag as usize).copied()
+    }
+
     /// True for the steps of Algorithm 1 proper — prediction is reported
     /// separately and never belongs to a training-time series.
     pub fn is_algorithm1(&self) -> bool {
@@ -294,6 +309,15 @@ mod tests {
         assert!((m.sum_node_secs() - 11.0).abs() < 1e-9);
         assert!((m.straggler_ratio(8) - 32.0 / 11.0).abs() < 1e-9);
         assert_eq!(m.straggler_ratio(0), 1.0);
+    }
+
+    #[test]
+    fn step_tags_round_trip_and_stay_dense() {
+        for (i, s) in Step::all().iter().enumerate() {
+            assert_eq!(s.tag() as usize, i);
+            assert_eq!(Step::from_tag(s.tag()), Some(*s));
+        }
+        assert_eq!(Step::from_tag(Step::all().len() as u8), None);
     }
 
     #[test]

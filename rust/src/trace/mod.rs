@@ -1,0 +1,727 @@
+//! Phase trace recorder / replayer: the post-mortem audit leg of the
+//! resilience subsystem.
+//!
+//! While training runs, the cluster can record every ledger-visible
+//! event — compute phases (step, per-node seconds, charged wall,
+//! injected faults/retries, outcome, a cheap stable fingerprint of the
+//! reduced payload), collectives, broadcast/gather metering, backend
+//! dispatch counts and recompute-FLOP charges — into an in-memory
+//! [`Recorder`]. [`Cluster::take_trace`](crate::cluster::Cluster) turns
+//! that into a [`Trace`]: a compact binary manifest with the tree shape,
+//! the cost model, the record stream, and a full snapshot of the live
+//! ledger at capture time.
+//!
+//! [`Trace::replay`] re-drives a FRESH [`SimClock`] through the exact
+//! same charging calls, in the same order, with the same f64 bits — so a
+//! trace shipped off a production run reproduces its ledger exactly
+//! (`replay_verified` checks it against the embedded snapshot). That
+//! makes "what did this run actually pay, phase by phase?" answerable
+//! offline, from a file, without the data or the model.
+//!
+//! CLI: `dkm trace record|inspect|replay` (see `dkm help`).
+
+pub(crate) mod wire;
+
+use crate::cluster::{ClockSnapshot, CostModel, SimClock, Tree};
+use crate::metrics::Step;
+use crate::Result;
+
+use wire::{put_clock, read_clock, Reader, Writer};
+
+const MAGIC: &[u8; 8] = b"DKMTRAC1";
+const FORMAT_VERSION: u8 = 1;
+
+/// Which executor phase kind a [`Record::Phase`] came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PhaseKind {
+    /// `Executor::run` (split compute; any reductions follow separately).
+    Run,
+    /// `Executor::run_reduce` (fused compute + tree fold, one phase).
+    FusedReduce,
+}
+
+impl PhaseKind {
+    fn tag(self) -> u8 {
+        match self {
+            PhaseKind::Run => 0,
+            PhaseKind::FusedReduce => 1,
+        }
+    }
+
+    fn from_tag(t: u8) -> Result<Self> {
+        match t {
+            0 => Ok(PhaseKind::Run),
+            1 => Ok(PhaseKind::FusedReduce),
+            _ => anyhow::bail!("unknown phase kind tag {t}"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PhaseKind::Run => "run",
+            PhaseKind::FusedReduce => "fused",
+        }
+    }
+}
+
+/// How a recorded phase ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    Ok,
+    /// First failing node in node order (real error or exhausted retries).
+    Failed { node: u32 },
+}
+
+/// One ledger-visible event. Every variant replays as exactly the
+/// charging calls the live path made, in the same order.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Record {
+    /// A dispatched compute phase: one barrier + the scheduled wall +
+    /// straggler observables, plus any injected-fault accounting.
+    Phase {
+        step: Step,
+        kind: PhaseKind,
+        /// Charged phase wall (post skew + scheduler model), and the
+        /// straggler observables that went with it.
+        wall: f64,
+        max_node: f64,
+        sum_node: f64,
+        /// Raw measured per-node seconds (audit only; the charges above
+        /// are what replays).
+        node_secs: Vec<f64>,
+        /// Stable FNV-1a fingerprint of the phase's reduced f32 payload
+        /// (0 when the phase's outputs aren't a flat f32 buffer).
+        fingerprint: u64,
+        outcome: Outcome,
+        faults: u64,
+        retries: u64,
+        /// Total simulated backoff charged for those retries.
+        backoff_secs: f64,
+    },
+    /// A tree reduction: AllReduce (`barrier: true` — its own sync
+    /// point) or the tail of a fused phase (`barrier: false` — the
+    /// barrier was the phase's).
+    Collective {
+        step: Step,
+        barrier: bool,
+        rounds: u32,
+        bytes: u64,
+        fingerprint: u64,
+    },
+    /// Metered one-way broadcast down the tree.
+    Broadcast { step: Step, bytes: u64 },
+    /// Metered gather up the tree (per-level subtree pricing).
+    Gather { step: Step, bytes_per_node: u64 },
+    /// Backend dispatches charged inside evaluation phases.
+    Dispatches { n: u64 },
+    /// Streaming-C recompute FLOPs charged.
+    RecomputeFlops { n: u64 },
+    /// Plain coordinator-side compute seconds charged outside a phase
+    /// (e.g. the simulated per-node data ingest at build).
+    Compute { step: Step, secs: f64 },
+}
+
+/// In-memory event sink the cluster writes to while tracing is on.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    records: Vec<Record>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Recorder::default()
+    }
+
+    pub fn push(&mut self, rec: Record) {
+        self.records.push(rec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn into_records(self) -> Vec<Record> {
+        self.records
+    }
+}
+
+/// A recorded run: tree shape + cost model + the record stream + the
+/// live ledger's snapshot at capture time (the replay oracle).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    pub p: u32,
+    pub arity: u32,
+    pub cost: CostModel,
+    pub records: Vec<Record>,
+    /// The live [`SimClock`] frozen when the trace was taken; replay
+    /// must reproduce it bitwise.
+    pub expected: ClockSnapshot,
+}
+
+impl Trace {
+    /// Re-drive a fresh ledger through every record, in order. Bitwise
+    /// equal to the live clock by construction: each record carries the
+    /// exact f64s the live path charged, and replay applies them through
+    /// the same [`SimClock`] entry points in the same sequence.
+    pub fn replay(&self) -> SimClock {
+        let tree = Tree::new(self.p as usize, self.arity as usize);
+        let mut clock = SimClock::new(self.cost);
+        for rec in &self.records {
+            match rec {
+                Record::Phase {
+                    step,
+                    wall,
+                    max_node,
+                    sum_node,
+                    faults,
+                    retries,
+                    backoff_secs,
+                    ..
+                } => {
+                    clock.add_compute(*step, *wall);
+                    clock.add_straggler(*max_node, *sum_node);
+                    clock.add_barrier();
+                    if *faults > 0 {
+                        clock.add_faults(*faults);
+                        clock.add_retries(*retries);
+                        if *backoff_secs > 0.0 {
+                            clock.add_compute(*step, *backoff_secs);
+                        }
+                    }
+                }
+                Record::Collective {
+                    step,
+                    barrier,
+                    rounds,
+                    bytes,
+                    ..
+                } => {
+                    if *barrier {
+                        clock.add_barrier();
+                    }
+                    clock.add_reduce(*step, *rounds as usize, *bytes as usize);
+                }
+                Record::Broadcast { step, bytes } => {
+                    clock.meter_broadcast(*step, &tree, *bytes as usize);
+                }
+                Record::Gather {
+                    step,
+                    bytes_per_node,
+                } => {
+                    clock.meter_gather(*step, &tree, *bytes_per_node as usize);
+                }
+                Record::Dispatches { n } => clock.add_dispatches(*n),
+                Record::RecomputeFlops { n } => clock.add_recompute_flops(*n),
+                Record::Compute { step, secs } => clock.add_compute(*step, *secs),
+            }
+        }
+        clock
+    }
+
+    /// Replay and check the result against the embedded live-ledger
+    /// snapshot; errors name the first diverging counter.
+    pub fn replay_verified(&self) -> Result<SimClock> {
+        let got = self.replay();
+        let want = SimClock::from_snapshot(&self.expected);
+        anyhow::ensure!(
+            got == want,
+            "trace replay diverged from the recorded ledger:\n replay {got:?}\n   live {want:?}"
+        );
+        Ok(got)
+    }
+
+    // ---- persistence ----
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.bytes(MAGIC);
+        w.u8(FORMAT_VERSION);
+        w.u32(self.p);
+        w.u32(self.arity);
+        w.f64(self.cost.latency_s);
+        w.f64(self.cost.per_byte_s);
+        put_clock(&mut w, &self.expected);
+        w.u64(self.records.len() as u64);
+        for rec in &self.records {
+            match rec {
+                Record::Phase {
+                    step,
+                    kind,
+                    wall,
+                    max_node,
+                    sum_node,
+                    node_secs,
+                    fingerprint,
+                    outcome,
+                    faults,
+                    retries,
+                    backoff_secs,
+                } => {
+                    w.u8(0);
+                    w.u8(step.tag());
+                    w.u8(kind.tag());
+                    w.u32(match outcome {
+                        Outcome::Ok => 0,
+                        Outcome::Failed { node } => 1 + node,
+                    });
+                    w.f64(*wall);
+                    w.f64(*max_node);
+                    w.f64(*sum_node);
+                    w.u64(*fingerprint);
+                    w.u64(*faults);
+                    w.u64(*retries);
+                    w.f64(*backoff_secs);
+                    w.u32(node_secs.len() as u32);
+                    for s in node_secs {
+                        w.f64(*s);
+                    }
+                }
+                Record::Collective {
+                    step,
+                    barrier,
+                    rounds,
+                    bytes,
+                    fingerprint,
+                } => {
+                    w.u8(1);
+                    w.u8(step.tag());
+                    w.u8(*barrier as u8);
+                    w.u32(*rounds);
+                    w.u64(*bytes);
+                    w.u64(*fingerprint);
+                }
+                Record::Broadcast { step, bytes } => {
+                    w.u8(2);
+                    w.u8(step.tag());
+                    w.u64(*bytes);
+                }
+                Record::Gather {
+                    step,
+                    bytes_per_node,
+                } => {
+                    w.u8(3);
+                    w.u8(step.tag());
+                    w.u64(*bytes_per_node);
+                }
+                Record::Dispatches { n } => {
+                    w.u8(4);
+                    w.u64(*n);
+                }
+                Record::RecomputeFlops { n } => {
+                    w.u8(5);
+                    w.u64(*n);
+                }
+                Record::Compute { step, secs } => {
+                    w.u8(6);
+                    w.u8(step.tag());
+                    w.f64(*secs);
+                }
+            }
+        }
+        w.into_bytes()
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Result<Trace> {
+        let mut r = Reader::new(buf);
+        let magic = r.take(MAGIC.len())?;
+        anyhow::ensure!(magic == MAGIC, "not a dkm trace file (bad magic)");
+        let version = r.u8()?;
+        anyhow::ensure!(
+            version == FORMAT_VERSION,
+            "unsupported trace format version {version} (this build reads {FORMAT_VERSION})"
+        );
+        let p = r.u32()?;
+        let arity = r.u32()?;
+        anyhow::ensure!(p >= 1 && arity >= 2, "corrupt trace header: p={p} arity={arity}");
+        let cost = CostModel {
+            latency_s: r.f64()?,
+            per_byte_s: r.f64()?,
+        };
+        let expected = read_clock(&mut r)?;
+        let count = r.len_prefix()?;
+        let mut records = Vec::with_capacity(count);
+        for _ in 0..count {
+            let tag = r.u8()?;
+            records.push(match tag {
+                0 => {
+                    let step = r.step()?;
+                    let kind = PhaseKind::from_tag(r.u8()?)?;
+                    let out = r.u32()?;
+                    let outcome = if out == 0 {
+                        Outcome::Ok
+                    } else {
+                        Outcome::Failed { node: out - 1 }
+                    };
+                    let wall = r.f64()?;
+                    let max_node = r.f64()?;
+                    let sum_node = r.f64()?;
+                    let fingerprint = r.u64()?;
+                    let faults = r.u64()?;
+                    let retries = r.u64()?;
+                    let backoff_secs = r.f64()?;
+                    let n = r.u32()? as usize;
+                    anyhow::ensure!(n <= 1 << 24, "corrupt phase record: {n} nodes");
+                    let mut node_secs = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        node_secs.push(r.f64()?);
+                    }
+                    Record::Phase {
+                        step,
+                        kind,
+                        wall,
+                        max_node,
+                        sum_node,
+                        node_secs,
+                        fingerprint,
+                        outcome,
+                        faults,
+                        retries,
+                        backoff_secs,
+                    }
+                }
+                1 => Record::Collective {
+                    step: r.step()?,
+                    barrier: r.u8()? != 0,
+                    rounds: r.u32()?,
+                    bytes: r.u64()?,
+                    fingerprint: r.u64()?,
+                },
+                2 => Record::Broadcast {
+                    step: r.step()?,
+                    bytes: r.u64()?,
+                },
+                3 => Record::Gather {
+                    step: r.step()?,
+                    bytes_per_node: r.u64()?,
+                },
+                4 => Record::Dispatches { n: r.u64()? },
+                5 => Record::RecomputeFlops { n: r.u64()? },
+                6 => Record::Compute {
+                    step: r.step()?,
+                    secs: r.f64()?,
+                },
+                _ => anyhow::bail!("unknown trace record tag {tag}"),
+            });
+        }
+        r.done()?;
+        Ok(Trace {
+            p,
+            arity,
+            cost,
+            records,
+            expected,
+        })
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_bytes())
+            .map_err(|e| anyhow::anyhow!("writing trace {path}: {e}"))
+    }
+
+    pub fn load(path: &str) -> Result<Trace> {
+        let buf =
+            std::fs::read(path).map_err(|e| anyhow::anyhow!("reading trace {path}: {e}"))?;
+        Trace::from_bytes(&buf).map_err(|e| e.context(format!("loading trace {path}")))
+    }
+
+    // ---- inspection ----
+
+    /// Human-readable manifest: header summary + up to `limit` records.
+    pub fn render(&self, limit: usize) -> String {
+        let mut phases = 0u64;
+        let mut faults = 0u64;
+        let mut retries = 0u64;
+        for rec in &self.records {
+            if let Record::Phase {
+                faults: f,
+                retries: rt,
+                ..
+            } = rec
+            {
+                phases += 1;
+                faults += f;
+                retries += rt;
+            }
+        }
+        let mut out = format!(
+            "trace: p={} arity={} cost C={:.3e} D={:.3e} | {} records ({} phases, {} faults, {} retries)\n",
+            self.p,
+            self.arity,
+            self.cost.latency_s,
+            self.cost.per_byte_s,
+            self.records.len(),
+            phases,
+            faults,
+            retries,
+        );
+        let mut t = crate::metrics::Table::new(&["#", "record", "step", "detail", "fingerprint"]);
+        for (i, rec) in self.records.iter().take(limit).enumerate() {
+            let (name, step, detail, fp) = match rec {
+                Record::Phase {
+                    step,
+                    kind,
+                    wall,
+                    outcome,
+                    faults,
+                    retries,
+                    fingerprint,
+                    node_secs,
+                    ..
+                } => (
+                    format!("phase:{}", kind.name()),
+                    step.name(),
+                    format!(
+                        "{} nodes, wall {:.3e}s{}{}",
+                        node_secs.len(),
+                        wall,
+                        if *faults > 0 {
+                            format!(", {faults} faults/{retries} retries")
+                        } else {
+                            String::new()
+                        },
+                        match outcome {
+                            Outcome::Ok => String::new(),
+                            Outcome::Failed { node } => format!(", FAILED at node {node}"),
+                        }
+                    ),
+                    *fingerprint,
+                ),
+                Record::Collective {
+                    step,
+                    barrier,
+                    rounds,
+                    bytes,
+                    fingerprint,
+                } => (
+                    if *barrier { "allreduce" } else { "fused-reduce" }.to_string(),
+                    step.name(),
+                    format!("{rounds} rounds, {bytes} B"),
+                    *fingerprint,
+                ),
+                Record::Broadcast { step, bytes } => {
+                    ("broadcast".to_string(), step.name(), format!("{bytes} B"), 0)
+                }
+                Record::Gather {
+                    step,
+                    bytes_per_node,
+                } => (
+                    "gather".to_string(),
+                    step.name(),
+                    format!("{bytes_per_node} B/node"),
+                    0,
+                ),
+                Record::Dispatches { n } => {
+                    ("dispatches".to_string(), "-", format!("{n}"), 0)
+                }
+                Record::RecomputeFlops { n } => {
+                    ("recompute".to_string(), "-", format!("{n} FLOP"), 0)
+                }
+                Record::Compute { step, secs } => {
+                    ("compute".to_string(), step.name(), format!("{secs:.3e}s"), 0)
+                }
+            };
+            t.row(&[
+                i.to_string(),
+                name,
+                step.to_string(),
+                detail,
+                if fp == 0 {
+                    "-".to_string()
+                } else {
+                    format!("{fp:016x}")
+                },
+            ]);
+        }
+        out.push_str(&t.render());
+        if self.records.len() > limit {
+            out.push_str(&format!("... {} more records\n", self.records.len() - limit));
+        }
+        out
+    }
+}
+
+/// Cheap stable fingerprint of an f32 buffer: FNV-1a 64 over the
+/// little-endian bit patterns. Platform-independent, order-sensitive —
+/// two phases fingerprint equal iff their payloads are bitwise equal.
+pub fn fingerprint_f32s(xs: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for x in xs {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost() -> CostModel {
+        CostModel {
+            latency_s: 0.01,
+            per_byte_s: 1e-8,
+        }
+    }
+
+    fn sample_trace() -> Trace {
+        let mut rec = Recorder::new();
+        rec.push(Record::Phase {
+            step: Step::Kernel,
+            kind: PhaseKind::Run,
+            wall: 0.125,
+            max_node: 0.125,
+            sum_node: 0.5,
+            node_secs: vec![0.1, 0.125, 0.05, 0.08],
+            fingerprint: 0,
+            outcome: Outcome::Ok,
+            faults: 0,
+            retries: 0,
+            backoff_secs: 0.0,
+        });
+        rec.push(Record::Phase {
+            step: Step::Tron,
+            kind: PhaseKind::FusedReduce,
+            wall: 1.0 / 3.0,
+            max_node: 1.0 / 3.0,
+            sum_node: 1.1,
+            node_secs: vec![0.3, 1.0 / 3.0, 0.2, 0.25],
+            fingerprint: fingerprint_f32s(&[1.5, -2.25]),
+            outcome: Outcome::Ok,
+            faults: 2,
+            retries: 2,
+            backoff_secs: 0.1,
+        });
+        rec.push(Record::Collective {
+            step: Step::Tron,
+            barrier: false,
+            rounds: 4,
+            bytes: 640,
+            fingerprint: fingerprint_f32s(&[1.5, -2.25]),
+        });
+        rec.push(Record::Collective {
+            step: Step::Tron,
+            barrier: true,
+            rounds: 4,
+            bytes: 8,
+            fingerprint: 0,
+        });
+        rec.push(Record::Broadcast {
+            step: Step::BasisBcast,
+            bytes: 4096,
+        });
+        rec.push(Record::Gather {
+            step: Step::KMeans,
+            bytes_per_node: 128,
+        });
+        rec.push(Record::Dispatches { n: 4 });
+        rec.push(Record::RecomputeFlops { n: 1_000_000 });
+        rec.push(Record::Compute {
+            step: Step::Load,
+            secs: 0.375,
+        });
+        // Build the oracle by replaying onto a fresh clock — exactly what
+        // the live path would have charged.
+        let partial = Trace {
+            p: 4,
+            arity: 2,
+            cost: cost(),
+            records: rec.records.clone(),
+            expected: SimClock::new(cost()).snapshot(),
+        };
+        let live = partial.replay();
+        Trace {
+            expected: live.snapshot(),
+            ..partial
+        }
+    }
+
+    #[test]
+    fn replay_matches_recorded_ledger_bitwise() {
+        let trace = sample_trace();
+        let clock = trace.replay_verified().unwrap();
+        assert_eq!(clock.barriers(), 3, "two phases + one allreduce");
+        assert_eq!(clock.comm_rounds(), 2);
+        assert_eq!(clock.dispatches(), 4);
+        assert_eq!(clock.faults(), 2);
+        assert_eq!(clock.retries(), 2);
+        assert_eq!(clock.recompute_flops(), 1_000_000);
+    }
+
+    #[test]
+    fn file_round_trip_preserves_everything() {
+        let trace = sample_trace();
+        let bytes = trace.to_bytes();
+        let back = Trace::from_bytes(&bytes).unwrap();
+        assert_eq!(trace, back);
+        back.replay_verified().unwrap();
+    }
+
+    #[test]
+    fn loader_rejects_corruption() {
+        let trace = sample_trace();
+        let bytes = trace.to_bytes();
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert!(Trace::from_bytes(&bad).unwrap_err().to_string().contains("magic"));
+        // Bad version.
+        let mut bad = bytes.clone();
+        bad[8] = 99;
+        assert!(Trace::from_bytes(&bad)
+            .unwrap_err()
+            .to_string()
+            .contains("version"));
+        // Truncated.
+        assert!(Trace::from_bytes(&bytes[..bytes.len() - 3]).is_err());
+        // Trailing garbage.
+        let mut bad = bytes.clone();
+        bad.push(0);
+        assert!(Trace::from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn replay_detects_a_tampered_ledger() {
+        let mut trace = sample_trace();
+        trace.expected.barriers += 1;
+        assert!(trace.replay_verified().is_err());
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_bit_sensitive() {
+        let a = fingerprint_f32s(&[1.0, 2.0, 3.0]);
+        assert_eq!(a, fingerprint_f32s(&[1.0, 2.0, 3.0]));
+        assert_ne!(a, fingerprint_f32s(&[1.0, 2.0, 3.0000001]));
+        assert_ne!(fingerprint_f32s(&[0.0]), fingerprint_f32s(&[-0.0]));
+        assert_ne!(fingerprint_f32s(&[]), fingerprint_f32s(&[0.0]));
+    }
+
+    #[test]
+    fn render_summarizes_faults_and_outcomes() {
+        let mut trace = sample_trace();
+        trace.records.push(Record::Phase {
+            step: Step::Tron,
+            kind: PhaseKind::Run,
+            wall: 0.0,
+            max_node: 0.0,
+            sum_node: 0.0,
+            node_secs: vec![0.0; 4],
+            fingerprint: 0,
+            outcome: Outcome::Failed { node: 2 },
+            faults: 3,
+            retries: 2,
+            backoff_secs: 0.1,
+        });
+        let s = trace.render(100);
+        assert!(s.contains("5 faults"), "{s}");
+        assert!(s.contains("FAILED at node 2"), "{s}");
+        assert!(s.contains("fused-reduce"), "{s}");
+        let short = trace.render(2);
+        assert!(short.contains("more records"), "{short}");
+    }
+}

@@ -1,0 +1,227 @@
+//! Little-endian byte helpers shared by the binary resilience formats
+//! (phase traces here, training checkpoints in
+//! `coordinator::checkpoint`). f64/f32 values travel as raw bit
+//! patterns, so every round trip is bitwise exact.
+
+use crate::cluster::{ClockSnapshot, CostModel};
+use crate::metrics::Step;
+use crate::Result;
+
+/// Append-only buffer writer.
+#[derive(Default)]
+pub(crate) struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Writer::default()
+    }
+
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32s(&mut self, xs: &[f32]) {
+        self.u64(xs.len() as u64);
+        for x in xs {
+            self.f32(*x);
+        }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Bounds-checked cursor over a byte buffer.
+pub(crate) struct Reader<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, off: 0 }
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.off.checked_add(n).is_some_and(|end| end <= self.buf.len()),
+            "truncated: wanted {n} bytes at offset {}, file has {}",
+            self.off,
+            self.buf.len()
+        );
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.len_prefix()?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+
+    /// A u64 length prefix, sanity-bounded by the bytes actually left so
+    /// a corrupt length can't drive a huge allocation.
+    pub fn len_prefix(&mut self) -> Result<usize> {
+        let n = self.u64()?;
+        anyhow::ensure!(
+            (n as usize) <= self.buf.len().saturating_sub(self.off),
+            "corrupt length prefix: {n} items but only {} bytes remain",
+            self.buf.len() - self.off
+        );
+        Ok(n as usize)
+    }
+
+    pub fn step(&mut self) -> Result<Step> {
+        let tag = self.u8()?;
+        Step::from_tag(tag).ok_or_else(|| anyhow::anyhow!("unknown step tag {tag}"))
+    }
+
+    pub fn done(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.off == self.buf.len(),
+            "{} trailing bytes after the last record",
+            self.buf.len() - self.off
+        );
+        Ok(())
+    }
+}
+
+pub(crate) fn put_clock(w: &mut Writer, s: &ClockSnapshot) {
+    w.f64(s.cost.latency_s);
+    w.f64(s.cost.per_byte_s);
+    for series in [&s.compute, &s.comm] {
+        w.u32(series.len() as u32);
+        for (step, secs) in series {
+            w.u8(step.tag());
+            w.f64(*secs);
+        }
+    }
+    w.u64(s.comm_instances);
+    w.u64(s.comm_bytes);
+    w.u64(s.recompute_flops);
+    w.u64(s.barriers);
+    w.u64(s.reduce_round_trips);
+    w.u64(s.dispatches);
+    w.u64(s.faults);
+    w.u64(s.retries);
+    w.f64(s.max_node_secs);
+    w.f64(s.sum_node_secs);
+}
+
+pub(crate) fn read_clock(r: &mut Reader) -> Result<ClockSnapshot> {
+    let cost = CostModel {
+        latency_s: r.f64()?,
+        per_byte_s: r.f64()?,
+    };
+    let mut series = [Vec::new(), Vec::new()];
+    for s in &mut series {
+        let n = r.u32()?;
+        for _ in 0..n {
+            let step = r.step()?;
+            s.push((step, r.f64()?));
+        }
+    }
+    let [compute, comm] = series;
+    Ok(ClockSnapshot {
+        cost,
+        compute,
+        comm,
+        comm_instances: r.u64()?,
+        comm_bytes: r.u64()?,
+        recompute_flops: r.u64()?,
+        barriers: r.u64()?,
+        reduce_round_trips: r.u64()?,
+        dispatches: r.u64()?,
+        faults: r.u64()?,
+        retries: r.u64()?,
+        max_node_secs: r.f64()?,
+        sum_node_secs: r.f64()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::SimClock;
+
+    #[test]
+    fn clock_wire_round_trips_bitwise() {
+        let mut c = SimClock::new(CostModel {
+            latency_s: 0.01,
+            per_byte_s: 1e-8,
+        });
+        c.add_compute(Step::Tron, 1.0 / 7.0);
+        c.add_reduce(Step::Tron, 4, 123);
+        c.add_barrier();
+        c.add_faults(1);
+        c.add_retries(1);
+        c.add_straggler(0.25, 0.75);
+        let snap = c.snapshot();
+        let mut w = Writer::new();
+        put_clock(&mut w, &snap);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        let back = read_clock(&mut r).unwrap();
+        r.done().unwrap();
+        assert_eq!(snap, back);
+        assert_eq!(SimClock::from_snapshot(&back), c);
+    }
+
+    #[test]
+    fn reader_rejects_truncation_and_bad_lengths() {
+        let mut w = Writer::new();
+        w.u64(10);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes[..4]);
+        assert!(r.u64().is_err());
+        let mut r = Reader::new(&bytes);
+        assert!(r.len_prefix().is_err(), "10 items in 0 remaining bytes");
+    }
+}

@@ -1,0 +1,308 @@
+//! Resilience subsystem acceptance: injected phase faults + bounded
+//! retries, mid-training checkpoint/resume, and the phase trace
+//! recorder/replayer — all bit-identical by construction.
+//!
+//! The contract under test, per `ROADMAP.md` item 5(b):
+//!
+//! * A training run that loses node tasks to injected faults and
+//!   recovers them through retries produces the SAME β bits, the same
+//!   TRON/BCD trajectory and the same communication ledger as a clean
+//!   run — only the fault/retry counters and the simulated backoff
+//!   seconds move. This must hold on every execution layer (tests are
+//!   prefixed `serial_exec_` / `threads_exec_` / `pool_exec_` so CI can
+//!   run each group in isolation).
+//! * An interrupted run resumed from a `--checkpoint-every` snapshot
+//!   finishes bitwise identical to the uninterrupted run — β, objective
+//!   curve and ledger counters — even when the resumed process picks a
+//!   different executor or scheduler.
+//! * A recorded phase trace replays onto a fresh simulated ledger and
+//!   lands exactly on the live clock's frozen snapshot.
+
+use std::sync::Arc;
+
+use dkm::cluster::{CostModel, FaultPlan, Sched, SimClock};
+use dkm::config::settings::{
+    Backend, BasisSelection, CStorage, EvalPipeline, ExecutorChoice, Loss, Settings, SolverChoice,
+};
+use dkm::coordinator::{Session, Solve};
+use dkm::data::{synth, Dataset};
+use dkm::runtime::make_backend;
+use dkm::trace::Record;
+
+fn settings(solver: SolverChoice, exec: ExecutorChoice, c_storage: CStorage) -> Settings {
+    Settings {
+        dataset: "covtype_like".into(),
+        m: 48,
+        nodes: 4,
+        lambda: 0.01,
+        sigma: 2.0,
+        loss: Loss::SqHinge,
+        basis: BasisSelection::Random,
+        backend: Backend::Native,
+        executor: exec,
+        c_storage,
+        eval_pipeline: EvalPipeline::Fused,
+        max_iters: 15,
+        tol: 1e-3,
+        seed: 42,
+        solver,
+        ..Settings::default()
+    }
+}
+
+fn data() -> Dataset {
+    let mut spec = synth::spec("covtype_like");
+    spec.n_train = 800;
+    spec.n_test = 10;
+    synth::generate(&spec, 7).0
+}
+
+fn run(s: &Settings, tr: &Dataset) -> (Vec<f32>, Solve, SimClock) {
+    let backend = make_backend(s.backend, &s.artifacts_dir).unwrap();
+    let mut session = Session::build(s, tr, backend, CostModel::hadoop_crude()).unwrap();
+    let solve = session.solve().unwrap();
+    (session.beta().to_vec(), solve, session.sim())
+}
+
+/// Two fixed task deaths early on (phases 3 and 6 run during any build +
+/// solve of this shape) plus a low-rate seeded random trigger sprayed
+/// over the whole run; the default retry budget recovers everything.
+fn plan() -> FaultPlan {
+    FaultPlan::parse("node=1@phase=3,node=0@phase=6,rand:0.08:77").unwrap()
+}
+
+/// The fault-recovery matrix on one executor: {TRON, BCD} × {materialized,
+/// streaming C}, faulty-vs-clean on the same executor.
+fn fault_recovery_is_bit_identical(exec: ExecutorChoice) {
+    let tr = data();
+    for solver in [SolverChoice::Tron, SolverChoice::Bcd { block: 16 }] {
+        for c_storage in [CStorage::Materialized, CStorage::Streaming] {
+            let tag = format!("{exec:?}/{solver:?}/{c_storage:?}");
+            let clean = settings(solver, exec, c_storage);
+            let mut faulty = clean.clone();
+            faulty.faults = plan();
+            faulty.retries = 4;
+            faulty.retry_backoff = 0.05;
+            let (beta_c, solve_c, sim_c) = run(&clean, &tr);
+            let (beta_f, solve_f, sim_f) = run(&faulty, &tr);
+            assert_eq!(sim_c.faults(), 0, "{tag}: clean run must not fault");
+            assert!(sim_f.faults() >= 2, "{tag}: the fixed triggers must fire");
+            assert_eq!(
+                sim_f.faults(),
+                sim_f.retries(),
+                "{tag}: every death recovered (no exhaustion)"
+            );
+            for (i, (a, b)) in beta_c.iter().zip(&beta_f).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{tag}: beta[{i}] {a} vs {b}");
+            }
+            assert_eq!(solve_c.stats.iterations, solve_f.stats.iterations, "{tag}");
+            assert_eq!(
+                solve_c.stats.final_f.to_bits(),
+                solve_f.stats.final_f.to_bits(),
+                "{tag}"
+            );
+            assert_eq!(solve_c.fg_evals, solve_f.fg_evals, "{tag}");
+            assert_eq!(solve_c.hd_evals, solve_f.hd_evals, "{tag}");
+            // Recovery is invisible to the communication story: the same
+            // barriers, round-trips and bytes as the clean run.
+            assert_eq!(sim_c.barriers(), sim_f.barriers(), "{tag}");
+            assert_eq!(sim_c.comm_rounds(), sim_f.comm_rounds(), "{tag}");
+            assert_eq!(sim_c.comm_bytes(), sim_f.comm_bytes(), "{tag}");
+            // The re-launch backoff is the only compute-side signature.
+            assert!(
+                sim_f.total_secs() > sim_c.total_secs(),
+                "{tag}: backoff seconds must land on the ledger"
+            );
+        }
+    }
+}
+
+#[test]
+fn serial_exec_fault_recovery_is_bit_identical() {
+    fault_recovery_is_bit_identical(ExecutorChoice::Serial);
+}
+
+#[test]
+fn threads_exec_fault_recovery_is_bit_identical() {
+    fault_recovery_is_bit_identical(ExecutorChoice::Threads { cap: 4 });
+}
+
+#[test]
+fn pool_exec_fault_recovery_is_bit_identical() {
+    fault_recovery_is_bit_identical(ExecutorChoice::Pool { cap: 4 });
+}
+
+/// An exhausted retry budget aborts the run with the first lost node in
+/// node order and the phase named in the error chain.
+#[test]
+fn serial_exec_exhausted_retries_abort_with_phase_context() {
+    let tr = data();
+    let mut s = settings(SolverChoice::Tron, ExecutorChoice::Serial, CStorage::Materialized);
+    s.faults = FaultPlan::parse("rand:1:3").unwrap(); // every attempt dies
+    s.retries = 1;
+    s.retry_backoff = 0.0;
+    let backend = make_backend(s.backend, &s.artifacts_dir).unwrap();
+    let err = match Session::build(&s, &tr, backend, CostModel::free()) {
+        Err(e) => e,
+        Ok(mut session) => session.solve().expect_err("every task dies — the run must abort"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("retries exhausted"), "{msg}");
+    assert!(msg.contains("node 0"), "first lost node in node order: {msg}");
+}
+
+/// Kill-and-resume on the threaded executor: a run checkpointed every
+/// round, then resumed from the second checkpoint, lands bitwise on the
+/// uninterrupted run — β, curve, eval counts and ledger counters.
+#[test]
+fn threads_exec_checkpoint_resume_is_bit_identical() {
+    let tr = data();
+    let exec = ExecutorChoice::Threads { cap: 4 };
+    for solver in [SolverChoice::Tron, SolverChoice::Bcd { block: 16 }] {
+        let tag = format!("{solver:?}");
+        let full = settings(solver, exec, CStorage::Materialized);
+        let (beta_full, solve_full, sim_full) = run(&full, &tr);
+
+        let path = std::env::temp_dir().join(format!("dkm_resilience_{tag}.ckpt"));
+        let mut first = full.clone();
+        first.checkpoint_every = 1;
+        first.checkpoint_path = path.to_str().unwrap().to_string();
+        // A build-phase fault (phase 0 is always during build) exercises
+        // recovery on BOTH sides of the kill without desynchronizing the
+        // fault counters between the full and the resumed timelines.
+        first.faults = FaultPlan::parse("node=2@phase=0").unwrap();
+        let backend = make_backend(first.backend, &first.artifacts_dir).unwrap();
+        let mut interrupted =
+            Session::build(&first, &tr, Arc::clone(&backend), CostModel::hadoop_crude()).unwrap();
+        interrupted.solve().unwrap();
+        assert!(path.exists(), "{tag}: no checkpoint was written");
+
+        let mut full_faulty = full.clone();
+        full_faulty.faults = first.faults.clone();
+        let (beta_want, solve_want, sim_want) = run(&full_faulty, &tr);
+        // The build-phase fault itself must not move β.
+        for (a, b) in beta_full.iter().zip(&beta_want) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{tag}");
+        }
+        assert_eq!(solve_full.stats.iterations, solve_want.stats.iterations);
+        assert_eq!(sim_full.comm_bytes(), sim_want.comm_bytes());
+
+        let mut resumed = Session::resume_from(
+            &first,
+            &tr,
+            Arc::clone(&backend),
+            CostModel::hadoop_crude(),
+            &path,
+        )
+        .unwrap();
+        let solve_res = resumed.solve().unwrap();
+        for (i, (a, b)) in beta_want.iter().zip(resumed.beta()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{tag}: beta[{i}]");
+        }
+        assert_eq!(solve_want.stats.iterations, solve_res.stats.iterations, "{tag}");
+        assert_eq!(
+            solve_want.stats.final_f.to_bits(),
+            solve_res.stats.final_f.to_bits(),
+            "{tag}"
+        );
+        let sim_res = resumed.sim();
+        assert_eq!(sim_want.barriers(), sim_res.barriers(), "{tag}");
+        assert_eq!(sim_want.comm_rounds(), sim_res.comm_rounds(), "{tag}");
+        assert_eq!(sim_want.comm_bytes(), sim_res.comm_bytes(), "{tag}");
+        assert_eq!(sim_want.dispatches(), sim_res.dispatches(), "{tag}");
+        assert_eq!(sim_want.faults(), sim_res.faults(), "{tag}");
+        assert_eq!(sim_want.retries(), sim_res.retries(), "{tag}");
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+/// The checkpoint deliberately excludes `--exec` and `--sched` from its
+/// config fingerprint: a resumed process may land on different hardware.
+/// Resuming a serial/static run on the pooled executor with work-stealing
+/// still reproduces the uninterrupted run bit-for-bit.
+#[test]
+fn pool_exec_resume_crosses_executor_and_sched() {
+    let tr = data();
+    let original = settings(SolverChoice::Tron, ExecutorChoice::Serial, CStorage::Materialized);
+    let (beta_want, solve_want, _) = run(&original, &tr);
+
+    let path = std::env::temp_dir().join("dkm_resilience_crossexec.ckpt");
+    let mut first = original.clone();
+    first.checkpoint_every = 1;
+    first.checkpoint_path = path.to_str().unwrap().to_string();
+    let backend = make_backend(first.backend, &first.artifacts_dir).unwrap();
+    let mut interrupted =
+        Session::build(&first, &tr, Arc::clone(&backend), CostModel::hadoop_crude()).unwrap();
+    interrupted.solve().unwrap();
+    assert!(path.exists());
+
+    let mut moved = first.clone();
+    moved.executor = ExecutorChoice::Pool { cap: 4 };
+    moved.sched = Sched::Steal { grain: 2 };
+    let mut resumed = Session::resume_from(
+        &moved,
+        &tr,
+        Arc::clone(&backend),
+        CostModel::hadoop_crude(),
+        &path,
+    )
+    .unwrap();
+    let solve_res = resumed.solve().unwrap();
+    for (i, (a, b)) in beta_want.iter().zip(resumed.beta()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "beta[{i}] after exec/sched move");
+    }
+    assert_eq!(solve_want.stats.iterations, solve_res.stats.iterations);
+    assert_eq!(
+        solve_want.stats.final_f.to_bits(),
+        solve_res.stats.final_f.to_bits()
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+/// Record a faulty training run end-to-end (the trace starts at cluster
+/// birth, before the simulated data-ingest charge) and replay it onto a
+/// fresh ledger: every counter and every f64 must land exactly, and the
+/// manifest must round-trip through its wire format.
+fn trace_replays_bitwise(exec: ExecutorChoice) {
+    let tr = data();
+    let mut s = settings(SolverChoice::Tron, exec, CStorage::Materialized);
+    s.trace = true;
+    s.faults = plan();
+    s.retries = 4;
+    let backend = make_backend(s.backend, &s.artifacts_dir).unwrap();
+    let mut session = Session::build(&s, &tr, backend, CostModel::hadoop_crude()).unwrap();
+    session.solve().unwrap();
+    let sim = session.sim();
+    let trace = session.take_trace().expect("tracing was on");
+    assert!(!session.tracing(), "take_trace ends the recording");
+
+    let replayed = trace.replay_verified().expect("replay must match the live ledger");
+    assert_eq!(replayed.barriers(), sim.barriers());
+    assert_eq!(replayed.faults(), sim.faults());
+    assert!(replayed.faults() >= 2, "the recorded run really faulted");
+    // The build-time ingest charge made it into the record stream — the
+    // reason a whole-session trace can verify at all.
+    assert!(
+        trace.records.iter().any(|r| matches!(r, Record::Compute { .. })),
+        "expected the build's compute charge in the trace"
+    );
+    // Wire round-trip preserves replayability.
+    let back = dkm::trace::Trace::from_bytes(&trace.to_bytes()).unwrap();
+    assert_eq!(back, trace);
+    back.replay_verified().unwrap();
+}
+
+#[test]
+fn serial_exec_trace_record_replays_bitwise() {
+    trace_replays_bitwise(ExecutorChoice::Serial);
+}
+
+#[test]
+fn threads_exec_trace_record_replays_bitwise() {
+    trace_replays_bitwise(ExecutorChoice::Threads { cap: 4 });
+}
+
+#[test]
+fn pool_exec_trace_record_replays_bitwise() {
+    trace_replays_bitwise(ExecutorChoice::Pool { cap: 4 });
+}
